@@ -1,0 +1,114 @@
+"""Shared benchmark machinery: the scaled graph suite + metric collection.
+
+The paper evaluates on 9 benchmark graphs (scale-26 Graph500 + GAPBS) and
+64 weight variants.  This container is a single CPU core, so the suite is
+scale-reduced (default scale 14, ~16k vertices / ~260k edges) but keeps the
+*structure*: four Graph500 Kronecker densities, a Urand analogue, a
+Road analogue, and skewed Kron analogues of Web/Twitter/Kron; the variant
+graphs remap weights with the paper's Eqs. (7)/(8).  ``--scale`` raises the
+size when more time is available.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core.baselines import bellman_ford, delta_stepping, dijkstra_host
+from repro.core.sssp import sssp, normalized_metrics
+from repro.data.generators import kronecker, road_grid, uniform_random
+from repro.data.weights import make_variant
+
+
+def benchmark_graphs(scale: int = 14):
+    """The 9-graph suite (paper Table 1 analogues, scale-reduced)."""
+    n = 1 << scale
+    side = int(np.sqrt(n))
+    return {
+        f"gr{scale}_4": lambda: kronecker(scale, 4, seed=1),
+        f"gr{scale}_8": lambda: kronecker(scale, 8, seed=2),
+        f"gr{scale}_16": lambda: kronecker(scale, 16, seed=3),
+        f"gr{scale}_32": lambda: kronecker(scale, 32, seed=4),
+        "Road": lambda: road_grid(side, seed=5),
+        "Urand": lambda: uniform_random(n, 16 * n, seed=6),
+        "Web": lambda: kronecker(scale, 30, seed=7),
+        "Twitter": lambda: kronecker(scale, 22, seed=8),
+        "Kron": lambda: kronecker(scale, 32, seed=9),
+    }
+
+
+def variant_graphs(scale: int = 13, full: bool = False):
+    """Weight-variant suite (paper §4.2): power/pivot remaps."""
+    base = kronecker(scale, 8, seed=21)
+    powers = [1, 2, 3, 4, 6, 8, 10] if full else [1, 2, 4, 10]
+    pivots = ([0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9] if full
+              else [0.1, 0.5, 0.9])
+    out = {}
+    for p in powers:
+        out[f"gr{scale}_8_pow{p}"] = lambda p=p: make_variant(base, power=p)
+    for pv in pivots:
+        out[f"gr{scale}_8_piv{pv}"] = lambda pv=pv: make_variant(base,
+                                                                 pivot=pv)
+    return out
+
+
+def pick_sources(g, n_sources: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    nz = np.where(g.deg > 0)[0]
+    return rng.choice(nz, min(n_sources, nz.size), replace=False)
+
+
+def run_eic(g, sources, alpha=3.0, beta=0.9):
+    """Average EIC metrics + wall time over sources (compile excluded)."""
+    dg = g.to_device()
+    # warm-up / compile
+    d0, p0, m0 = sssp(dg, int(sources[0]), alpha=alpha, beta=beta)
+    jax.block_until_ready(d0)
+    t_total, mets = 0.0, []
+    for s in sources:
+        t0 = time.perf_counter()
+        dist, parent, metrics = sssp(dg, int(s), alpha=alpha, beta=beta)
+        jax.block_until_ready(dist)
+        t_total += time.perf_counter() - t0
+        mets.append(normalized_metrics(g.deg, np.asarray(dist),
+                                       jax.tree.map(np.asarray, metrics)))
+    avg = {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
+    avg["time_s"] = t_total / len(sources)
+    return avg
+
+
+def run_baseline(kind, g, sources, delta=None):
+    dg = g.to_device()
+    fn = {
+        "bf": lambda s: bellman_ford(dg, int(s)),
+        "delta": lambda s: delta_stepping(dg, int(s), delta),
+    }[kind]
+    d0, _, _ = fn(sources[0])
+    jax.block_until_ready(d0)
+    t_total, mets = 0.0, []
+    for s in sources:
+        t0 = time.perf_counter()
+        dist, parent, metrics = fn(s)
+        jax.block_until_ready(dist)
+        t_total += time.perf_counter() - t0
+        mets.append(normalized_metrics(g.deg, np.asarray(dist),
+                                       jax.tree.map(np.asarray, metrics)))
+    avg = {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
+    avg["time_s"] = t_total / len(sources)
+    return avg
+
+
+def run_dijkstra_host(g, sources):
+    t0 = time.perf_counter()
+    for s in sources:
+        dijkstra_host(g, int(s))
+    return {"time_s": (time.perf_counter() - t0) / len(sources)}
+
+
+def dd_skewness(g):
+    from repro.core import stats
+    import jax.numpy as jnp
+    hd0 = float(stats.high_d(jnp.zeros(g.n), jnp.asarray(g.deg),
+                             jnp.float32(0.0)))
+    return float(np.log2(max(g.deg.max(), 1) / max(hd0, 1)))

@@ -1,0 +1,137 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads the dry-run artifacts (benchmarks/artifacts/dryrun/...) and derives
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs        (s)
+    memory term     = HLO_bytes_per_device / HBM_bw            (s)
+    collective term = collective_bytes_per_device / link_bw    (s)
+
+The SPMD HLO module is the per-device program, so cost_analysis() numbers
+are already per chip.  MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode)
+with N = active params for MoE; the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat/redundancy waste.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+# TPU v5e-like hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def model_flops_per_device(art: dict) -> float | None:
+    meta = art.get("meta", {})
+    n_dev = 1
+    for v in art.get("mesh_shape", {}).values():
+        n_dev *= v
+    tokens = meta.get("tokens")
+    n_active = meta.get("active_params") or meta.get("params")
+    if tokens is None or n_active is None:
+        return None
+    shape = art.get("shape", "")
+    if shape.startswith("train"):
+        return 6.0 * n_active * tokens / n_dev
+    # prefill/decode/serve: forward only
+    return 2.0 * n_active * tokens / n_dev
+
+
+def analyze(art: dict) -> dict:
+    cost = art.get("cost", {})
+    coll = art.get("collectives", {})
+    # cost_analysis (and the HLO text) count scan/while bodies ONCE; the
+    # layer stack / microbatch loop / triplet chunks are scans, so scale by
+    # the static trip product recorded at cell-build time.  This slightly
+    # overcounts the once-per-step tail (embedding, optimizer) — noted in
+    # EXPERIMENTS.md §Methodology.
+    mult = max(int(art.get("meta", {}).get("scan_mult", 1)), 1)
+    flops = cost.get("flops", 0.0) * mult
+    byts = cost.get("bytes accessed", 0.0) * mult
+    cbytes = float(coll.get("total", 0)) * mult
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": cbytes / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    bound_s = terms[dom]
+    mf = model_flops_per_device(art)
+    out = {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": (mf / flops) if (mf and flops) else None,
+        "roofline_fraction": (terms["compute_s"] / bound_s) if bound_s else None,
+        "mem_temp_gb": art.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+        "mem_args_gb": art.get("arg_bytes_per_device", 0) / 1e9,
+        "collect_ring_gb": coll.get("ring_bytes", 0) * (
+            max(int(art.get("meta", {}).get("scan_mult", 1)), 1)) / 1e9,
+        "n_while": art.get("n_while_loops", 0),
+        "scan_mult": max(int(art.get("meta", {}).get("scan_mult", 1)), 1),
+    }
+    return out
+
+
+def load_all(mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        if art.get("ok"):
+            rows.append(analyze(art))
+    return rows
+
+
+def to_markdown(rows):
+    hdr = ("| arch | shape | compute(ms) | memory(ms) | collective(ms) | "
+           "bound | MODEL/HLO | peak-frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "—"
+        rf = f"{r['roofline_fraction']:.2f}" if r["roofline_fraction"] else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {ur} | {rf} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = load_all(args.mesh)
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            print(f"{r['arch']}/{r['shape']}: comp={r['compute_s']*1e3:.2f}ms "
+                  f"mem={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms -> {r['dominant']} "
+                  f"(useful={r['useful_ratio'] or float('nan'):.2f})"
+                  if r['useful_ratio'] else
+                  f"{r['arch']}/{r['shape']}: comp={r['compute_s']*1e3:.2f}ms "
+                  f"mem={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms -> {r['dominant']}")
+    out = args.json_out or os.path.join(
+        os.path.dirname(__file__), "artifacts", f"roofline_{args.mesh}.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {len(rows)} rows -> {out}")
+
+
+if __name__ == "__main__":
+    main()

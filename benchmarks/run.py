@@ -1,0 +1,113 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 14] [--sources 4]
+        [--full-variants] [--sections fig4,fig5,fig6,table3]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per graph x metric) and
+writes benchmarks/artifacts/paper_metrics.json for EXPERIMENTS.md.
+
+Sections:
+  fig4   — nFrontier / nSync on the benchmark suite (paper Fig. 4a/4b)
+           + the weight-variant suite (Fig. 4c/4d)
+  fig5   — nTrav vs |E|/|V| and DD_skewness (paper Fig. 5)
+  fig6   — wall time vs edge traversals (paper Fig. 6)
+  table3 — EIC vs Bellman-Ford / Δ-stepping / host Dijkstra (paper
+           Table 3 / Fig. 7): times, speedups, nFrontier, nSync
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import common  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def emit(rows, name, time_s, **derived):
+    d = ";".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                 for k, v in derived.items())
+    print(f"{name},{time_s * 1e6:.1f},{d}")
+    rows.append({"name": name, "us_per_call": time_s * 1e6, **derived})
+
+
+def fig4_fig5_fig6(rows, scale, n_sources, full_variants):
+    print("# fig4/fig5/fig6: EIC metrics on benchmark + variant graphs")
+    suites = [("bench", common.benchmark_graphs(scale))]
+    suites.append(("variant", common.variant_graphs(max(scale - 1, 10),
+                                                    full=full_variants)))
+    for suite, graphs in suites:
+        for name, make in graphs.items():
+            g = make()
+            srcs = common.pick_sources(g, n_sources)
+            m = common.run_eic(g, srcs)
+            e_over_v = g.m / 2 / g.n
+            emit(rows, f"eic/{suite}/{name}", m["time_s"],
+                 nFrontier=m["nFrontier"], nSync=m["nSync"],
+                 nTrav=m["nTrav"], nTrav_push=m["nTrav_push"],
+                 nTrav_pull=m["nTrav_pull"], steps=m["n_steps"],
+                 E_over_V=e_over_v, dd_skew=common.dd_skewness(g),
+                 trav_reduction=e_over_v - m["nTrav"])
+
+
+def table3(rows, scale, n_sources):
+    print("# table3/fig7: comparison vs baselines")
+    graphs = common.benchmark_graphs(scale)
+    for name in ["Twitter", "Kron", "Web", "Urand", "Road",
+                 f"gr{scale}_16"]:
+        if name not in graphs:
+            continue
+        g = graphs[name]()
+        srcs = common.pick_sources(g, n_sources)
+        eic = common.run_eic(g, srcs)
+        bf = common.run_baseline("bf", g, srcs)
+        best_delta, best = None, None
+        for delta in [0.1 * float(g.max_w), 0.5 * float(g.max_w),
+                      float(g.max_w)]:
+            d = common.run_baseline("delta", g, srcs, delta=delta)
+            if best is None or d["time_s"] < best["time_s"]:
+                best, best_delta = d, delta
+        dj = common.run_dijkstra_host(g, srcs[:2])
+        best_comp = min(bf["time_s"], best["time_s"])
+        emit(rows, f"table3/{name}/eic", eic["time_s"],
+             nFrontier=eic["nFrontier"], nSync=eic["nSync"],
+             nTrav=eic["nTrav"],
+             speedup_vs_best=best_comp / eic["time_s"])
+        emit(rows, f"table3/{name}/bellman_ford", bf["time_s"],
+             nFrontier=bf["nFrontier"], nSync=bf["nSync"],
+             nTrav=bf["nTrav"])
+        emit(rows, f"table3/{name}/delta_stepping", best["time_s"],
+             nFrontier=best["nFrontier"], nSync=best["nSync"],
+             nTrav=best["nTrav"], delta=best_delta)
+        emit(rows, f"table3/{name}/dijkstra_host", dj["time_s"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=13)
+    ap.add_argument("--sources", type=int, default=3)
+    ap.add_argument("--full-variants", action="store_true")
+    ap.add_argument("--sections", default="fig4,table3")
+    args = ap.parse_args()
+
+    os.makedirs(ART, exist_ok=True)
+    rows = []
+    sections = set(args.sections.split(","))
+    print("name,us_per_call,derived")
+    if sections & {"fig4", "fig5", "fig6"}:
+        fig4_fig5_fig6(rows, args.scale, args.sources, args.full_variants)
+    if "table3" in sections:
+        table3(rows, args.scale, args.sources)
+    with open(os.path.join(ART, "paper_metrics.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {len(rows)} rows to benchmarks/artifacts/paper_metrics.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""The paper's technique as a first-class framework feature: EIC SSSP
+distances as GNN positional features (anchor-distance encoding).
+
+Runs the EIC engine from K anchor vertices, attaches the K-dim distance
+profile to each node's features, and trains a GIN classifier — showing the
+graph substrate (CSR, segment message passing) is shared between the SSSP
+core and the GNN model zoo.
+
+    PYTHONPATH=src python examples/gnn_sssp_features.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.sssp import sssp  # noqa: E402
+from repro.data.generators import kronecker  # noqa: E402
+from repro.models.gnn import gin  # noqa: E402
+from repro.models.gnn.common import GraphBatch  # noqa: E402
+from repro.train import loop as train_loop, optimizer as opt_mod  # noqa: E402
+
+
+def anchor_distance_features(g, k_anchors: int = 8, seed: int = 0):
+    """K-dim shortest-path profile per node (exp-decayed, inf -> 0)."""
+    rng = np.random.default_rng(seed)
+    anchors = rng.choice(np.where(g.deg > 0)[0], k_anchors, replace=False)
+    dg = g.to_device()
+    feats = []
+    for a in anchors:
+        dist, _, _ = sssp(dg, int(a))
+        d = np.asarray(dist)
+        feats.append(np.where(np.isfinite(d), np.exp(-d), 0.0))
+    return np.stack(feats, 1).astype(np.float32), anchors
+
+
+def main():
+    g = kronecker(10, 8, seed=3)
+    feats, anchors = anchor_distance_features(g, k_anchors=8)
+    print(f"graph |V|={g.n} |E|={g.m//2}; anchors={list(anchors)}")
+
+    # labels: nearest anchor (a task the distance features solve exactly,
+    # and raw structure alone cannot)
+    labels = feats.argmax(1).astype(np.int32)
+
+    gb = GraphBatch(node_feat=jnp.asarray(feats),
+                    senders=jnp.asarray(g.src), receivers=jnp.asarray(g.dst),
+                    edge_feat=None, graph_ids=jnp.zeros(g.n, jnp.int32),
+                    n_graphs=1, labels=jnp.asarray(labels))
+    cfg = gin.GINConfig(d_in=8, d_hidden=32, n_layers=3, n_classes=8)
+    params = gin.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = opt_mod.AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=60,
+                                  master_weights=False)
+    opt_state = opt_mod.adamw_init(params, opt_cfg)
+    step = jax.jit(train_loop.make_gnn_train_step(gin.forward, cfg, opt_cfg))
+    for i in range(60):
+        params, opt_state, metrics = step(params, opt_state, gb)
+        if i % 10 == 0:
+            print(f"step {i}: loss={float(metrics['loss']):.4f}")
+    logits = gin.forward(cfg, params, gb)
+    acc = float((jnp.argmax(logits, -1) == gb.labels).mean())
+    print(f"final nearest-anchor accuracy: {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

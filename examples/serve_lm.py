@@ -1,0 +1,61 @@
+"""Serving example: batched prefill + decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--batch 4] [--gen 32]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.models.transformer import (LMConfig, decode_step, init_params,
+                                      prefill)  # noqa: E402
+from repro.data.synthetic import LMTokenStream  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = LMConfig(name="serve-demo", n_layers=4, d_model=256, n_heads=4,
+                   n_kv=2, d_ff=1024, vocab=8192, dtype=jnp.float32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    stream = LMTokenStream(cfg.vocab, seed=1)
+    prompts = jnp.asarray(stream.batch(0, args.batch, args.prompt_len))
+
+    s_cache = args.prompt_len + args.gen
+    prefill_j = jax.jit(lambda p, t: prefill(cfg, p, t, s_cache))
+    decode_j = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+
+    t0 = time.perf_counter()
+    cache, logits = prefill_j(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
+          f"{t_prefill*1e3:.1f} ms (incl. compile)")
+
+    toks = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [toks]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, cache = decode_j(params, cache, toks)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    tps = args.batch * (args.gen - 1) / dt
+    print(f"decode: {args.gen - 1} steps x {args.batch} seqs = "
+          f"{tps:.0f} tok/s (CPU, interpret-grade)")
+    gen = jnp.stack(out, 1)
+    print(f"generated shape: {gen.shape}; first row: {gen[0][:16]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Shared LM shape set + spec builders (assigned to all 5 LM archs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "cache": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "cache": 524288, "batch": 1},
+}
+
+SKIP_SHAPES = {"long_500k": "full attention (see DESIGN.md §6)"}
+
+
+def token_struct(batch: int, seq: int, sharding=None):
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32, sharding=sharding)

@@ -1,0 +1,243 @@
+"""The heuristic SSSP algorithm (paper §3.3, Algorithm 2 + Function 1/2).
+
+Single-device, fully jitted reference engine.  The control flow is flattened
+into one ``lax.while_loop`` whose body executes one *round* of edge
+relaxations; when the frontier empties, the same iteration performs the step
+transition (Function 2's ``computeST``, the dynamic-stepping ``gap``, and
+Function 1's ``initFrontiers`` including the pull phase).
+
+TPU-native adaptation (DESIGN.md §2): the MPI worklist becomes a dense
+frontier mask + masked edge-parallel relaxation with a deterministic
+``segment_min`` replacing the CAS; per-round metrics count *logical*
+traversals exactly as the paper defines them (the weight-sorted adjacency +
+binary search of the C implementation touches precisely the edges our masks
+enable).
+
+Two deliberate, documented deviations:
+  * ``nFrontier`` counts successful non-leaf dist updates (every SAP-pushed
+    vertex is popped exactly once per update, and leaf pops are pruned), plus
+    one for the source pop — equal to worklist pops in the MPI original.
+  * Empty-window fast-forward: when a step transition finds no pending path
+    length inside the next window, ``lb`` snaps to the smallest pending
+    length (exact — no shortest path can exist in the skipped range).  This
+    also yields the termination test (no pending candidate ⇒ done), which is
+    equivalent to line 23 of Algorithm 2 but robust to disconnected graphs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import stats, stepping, traversal
+from .graph import DeviceGraph
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+INF = jnp.float32(jnp.inf)
+
+
+class SsspMetrics(NamedTuple):
+    n_rounds: jnp.ndarray      # synchronized relaxation rounds ("nSync" raw)
+    n_steps: jnp.ndarray       # scheduling-threshold pairs constructed
+    n_extended: jnp.ndarray    # extended paths ("nFrontier" raw)
+    n_trav: jnp.ndarray        # edge traversals, push model ("nTrav" raw part)
+    n_pull_trav: jnp.ndarray   # edge traversals, pull model (requests)
+    n_relax: jnp.ndarray       # CAS attempts (created paths)
+    n_updates: jnp.ndarray     # successful CAS (dist improvements)
+
+
+class SsspState(NamedTuple):
+    dist: jnp.ndarray
+    parent: jnp.ndarray
+    frontier: jnp.ndarray
+    lb: jnp.ndarray
+    ub: jnp.ndarray
+    st: jnp.ndarray
+    done: jnp.ndarray
+    iters: jnp.ndarray
+    metrics: SsspMetrics
+
+
+def _zero_metrics() -> SsspMetrics:
+    z = jnp.int32(0)
+    return SsspMetrics(z, z, z, z, z, z, z)
+
+
+def _relax_round(g: DeviceGraph, st_: SsspState) -> SsspState:
+    """One synchronized round of push-model edge relaxations (Algo 2 l.8-17)."""
+    dist, parent = st_.dist, st_.parent
+    # l.8: leaf pruning — paths reaching a leaf are never extended
+    paths = st_.frontier & ((dist <= 0.0) | (g.deg > 1))
+    du = dist[g.src]
+    cand_len = du + g.w
+    in_window = paths[g.src] & (cand_len >= st_.lb) & (cand_len < st_.ub)
+    active = in_window & (g.dst != parent[g.src])
+
+    cand = jnp.where(active, cand_len, INF)
+    best = jax.ops.segment_min(cand, g.dst, num_segments=g.n)
+    improved = best < dist
+    # deterministic parent recovery (min src among winners)
+    win = jnp.where(active & (cand <= best[g.dst]), g.src, INT_MAX)
+    winner = jax.ops.segment_min(win, g.dst, num_segments=g.n)
+    new_dist = jnp.where(improved, best, dist)
+    new_parent = jnp.where(improved, winner, parent)
+
+    # metrics — nFrontier counts worklist pops: every successful update pushes
+    # the vertex into the worklist (SAP) and its later pop extends the path;
+    # leaves are pruned before extension (l.8), so only non-leaf updates count.
+    # With zero repeated relaxations every non-leaf update is final => 1.0.
+    touched = jnp.sum(in_window.astype(jnp.int32))
+    nonleaf_upd = improved & (g.deg > 1)
+    m = st_.metrics
+    metrics = m._replace(
+        n_rounds=m.n_rounds + jnp.where(jnp.any(st_.frontier), 1, 0),
+        n_extended=m.n_extended + jnp.sum(nonleaf_upd.astype(jnp.int32)),
+        n_trav=m.n_trav + touched,
+        n_relax=m.n_relax + jnp.sum(active.astype(jnp.int32)),
+        n_updates=m.n_updates + jnp.sum(improved.astype(jnp.int32)),
+    )
+    return st_._replace(dist=new_dist, parent=new_parent, frontier=improved,
+                        metrics=metrics)
+
+
+def _bootstrap_ub(g: DeviceGraph, st_: SsspState,
+                  high_d0: jnp.ndarray) -> SsspState:
+    """Algo 2 l.18-20: during the first step, tighten ub to the shortest known
+    path linking s to a vertex of degree >= highD(0)."""
+    def tighten(ub):
+        mask = (g.deg.astype(jnp.float32) >= high_d0) & (st_.dist > 0)
+        cand = jnp.min(jnp.where(mask, st_.dist, INF))
+        return jnp.minimum(ub, cand)
+    ub = jax.lax.cond(st_.lb <= 0.0, tighten, lambda ub: ub, st_.ub)
+    return st_._replace(ub=ub)
+
+
+def _init_frontiers(g: DeviceGraph, dist, parent, st, lb, ub, metrics):
+    """Function 1: push band + pull phase + window frontier."""
+    max_w = g.rtow[-1]
+    lb0 = jnp.maximum(0.0, lb - max_w)
+    push_band = (dist >= lb0) & (dist <= st)
+
+    def with_pull(args):
+        dist, parent, metrics = args
+        dv = dist[g.dst]
+        scan = (dist[g.src] > lb) & (g.w < ub - st)     # edges touched by pull
+        valid = scan & (dv >= st) & (dv < lb) & (dv + g.w < ub)
+        cand = jnp.where(valid, dv + g.w, INF)
+        best = jax.ops.segment_min(cand, g.src, num_segments=g.n)
+        improved = best < dist
+        win = jnp.where(valid & (cand <= best[g.src]), g.dst, INT_MAX)
+        winner = jax.ops.segment_min(win, g.src, num_segments=g.n)
+        new_dist = jnp.where(improved, best, dist)
+        new_parent = jnp.where(improved, winner, parent)
+        nonleaf_upd = improved & (g.deg > 1)
+        metrics = metrics._replace(
+            n_pull_trav=metrics.n_pull_trav + jnp.sum(scan.astype(jnp.int32)),
+            n_extended=metrics.n_extended +
+            jnp.sum(nonleaf_upd.astype(jnp.int32)),
+            n_relax=metrics.n_relax + jnp.sum(valid.astype(jnp.int32)),
+            n_updates=metrics.n_updates + jnp.sum(improved.astype(jnp.int32)),
+            n_rounds=metrics.n_rounds + 1,  # the pull phase is a round/sync
+        )
+        return new_dist, new_parent, metrics
+
+    dist, parent, metrics = jax.lax.cond(
+        st < lb, with_pull, lambda a: a, (dist, parent, metrics))
+    frontier = push_band | ((dist >= lb) & (dist < ub))
+    return dist, parent, frontier, metrics
+
+
+def _transition(g: DeviceGraph, st_: SsspState,
+                params: stepping.SteppingParams) -> SsspState:
+    """Step transition (Algo 2 l.22 + Function 1/2 + fast-forward/termination)."""
+    dist, parent = st_.dist, st_.parent
+    lb, ub = st_.lb, st_.ub
+
+    # smallest pending candidate path length (>= ub); inf <=> computation done
+    pend = dist[g.src] + g.w
+    pend = jnp.where(pend >= ub, pend, INF)
+    min_pending = jnp.min(pend)
+    done = ~jnp.isfinite(min_pending)
+
+    st_next = traversal.compute_st(dist, g.deg, g.rtow, g.n_edges2, lb, ub,
+                                   params)
+    lb2 = ub
+    gap2 = stepping.gap(dist, g.deg, g.rtow, g.n_edges2, lb2, params)
+    ub2 = lb2 + gap2
+    # empty-window fast-forward (exact; see module docstring)
+    ffwd = (min_pending >= ub2) & ~done
+    lb2 = jnp.where(ffwd, min_pending, lb2)
+    gap3 = stepping.gap(dist, g.deg, g.rtow, g.n_edges2, lb2, params)
+    ub2 = jnp.where(ffwd, lb2 + gap3, ub2)
+    st_next = jnp.minimum(st_next, lb2)
+
+    dist, parent, frontier, metrics = _init_frontiers(
+        g, dist, parent, st_next, lb2, ub2, st_.metrics)
+    frontier = frontier & ~done
+    metrics = metrics._replace(n_steps=metrics.n_steps + jnp.where(done, 0, 1))
+    return st_._replace(dist=dist, parent=parent, frontier=frontier,
+                        lb=lb2, ub=ub2, st=st_next, done=done,
+                        metrics=metrics)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "alpha", "beta"))
+def sssp(g: DeviceGraph, source: jnp.ndarray, *, max_iters: int = 1_000_000,
+         alpha: float = 3.0, beta: float = 0.9):
+    """Run the heuristic SSSP algorithm from ``source``.
+
+    Returns ``(dist, parent, metrics)``.
+    """
+    params = stepping.SteppingParams(alpha=alpha, beta=beta)
+    n = g.n
+    dist0 = jnp.full((n,), INF, jnp.float32).at[source].set(0.0)
+    parent0 = jnp.full((n,), -1, jnp.int32).at[source].set(source)
+    frontier0 = jnp.zeros((n,), bool).at[source].set(True)
+    high_d0 = stats.high_d(jnp.zeros((n,), jnp.float32), g.deg,
+                           jnp.float32(0.0))
+
+    # the source's own pop is the first extended path
+    metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
+    init = SsspState(dist=dist0, parent=parent0, frontier=frontier0,
+                     lb=jnp.float32(0.0), ub=INF, st=jnp.float32(0.0),
+                     done=jnp.bool_(False), iters=jnp.int32(0),
+                     metrics=metrics0)
+
+    def cond(s: SsspState):
+        return (~s.done) & (s.iters < max_iters)
+
+    def body(s: SsspState):
+        s = _relax_round(g, s)
+        s = _bootstrap_ub(g, s, high_d0)
+        s = jax.lax.cond(jnp.any(s.frontier),
+                         lambda x: x,
+                         lambda x: _transition(g, x, params),
+                         s)
+        return s._replace(iters=s.iters + 1)
+
+    out = jax.lax.while_loop(cond, body, init)
+    return out.dist, out.parent, out.metrics
+
+
+def normalized_metrics(g_deg, dist, metrics: SsspMetrics) -> dict:
+    """Paper §4 normalizations: nFrontier, nSync, nTrav (host-side)."""
+    import numpy as np
+    deg = np.asarray(g_deg)
+    d = np.asarray(dist)
+    reach = np.isfinite(d)
+    n_reach = max(int(reach.sum()), 1)
+    nonleaf = max(int((reach & (deg > 1)).sum()), 1)
+    logn = max(np.log2(max(deg.shape[0], 2)), 1.0)
+    return {
+        "nFrontier": float(metrics.n_extended) / nonleaf,
+        "nSync": float(metrics.n_rounds) / logn,
+        "nTrav": (float(metrics.n_trav) + float(metrics.n_pull_trav)) / n_reach,
+        "nTrav_push": float(metrics.n_trav) / n_reach,
+        "nTrav_pull": float(metrics.n_pull_trav) / n_reach,
+        "n_steps": int(metrics.n_steps),
+        "n_rounds": int(metrics.n_rounds),
+        "n_relax": int(metrics.n_relax),
+        "n_updates": int(metrics.n_updates),
+        "reachable": n_reach,
+    }

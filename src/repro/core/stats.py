@@ -1,0 +1,89 @@
+"""On-device vertex-degree / edge-weight statistics (paper §3, preamble).
+
+Three statistics drive both heuristics:
+
+* ``sumD(x)``   — total degree of ``VS(x) = {u : dist[u] >= x}``.
+* ``highD(x)``  — degree threshold splitting ``VS(x)`` into two halves of
+                  (approximately) equal total degree; computed from a
+                  90-bucket degree histogram (exact for deg < 64, log2 buckets
+                  above — see DESIGN.md §2 for the approximation note).
+* ``maxW(G,r)`` — weight quantile; ``P(w(e) <= maxW(G, r)) = r``; served from
+                  the precomputed ``RtoW`` LUT (paper §4.1).
+
+All functions are jit-safe scalar reductions over the dist/deg arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .graph import RATIO_NUM, N_DEG_BUCKETS, degree_bucket, bucket_representative
+
+_BUCKET_REPS = bucket_representative()
+
+
+def max_w_of(rtow: jnp.ndarray, ratio: jnp.ndarray) -> jnp.ndarray:
+    """``maxW(G, ratio)`` via the RtoW quantile LUT."""
+    idx = jnp.clip(jnp.round(ratio * (RATIO_NUM - 1)).astype(jnp.int32),
+                   0, RATIO_NUM - 1)
+    return rtow[idx]
+
+
+def sum_d(dist: jnp.ndarray, deg: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Total degree of vertices with dist >= x (includes unreached, dist=inf)."""
+    return jnp.sum(jnp.where(dist >= x, deg, 0).astype(jnp.int32))
+
+
+def sum_d_grid(dist: jnp.ndarray, deg: jnp.ndarray,
+               grid: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized ``sumD`` over an ascending grid of thresholds.
+
+    O(V log G + G) via bucketed histogram + suffix sum, instead of O(V * G).
+    ``sumD(grid[i])`` counts vertices with ``dist >= grid[i]``.
+    """
+    return sum_d_grid_from_hist(grid_hist(dist, deg, grid))
+
+
+def grid_hist(dist: jnp.ndarray, deg: jnp.ndarray,
+              grid: jnp.ndarray) -> jnp.ndarray:
+    """Degree mass binned by dist into grid intervals (local partial)."""
+    # bin[i] = index of first grid value > dist  (searchsorted right)
+    bins = jnp.searchsorted(grid, dist, side="right")  # in [0, G]
+    return jax.ops.segment_sum(deg.astype(jnp.int32), bins,
+                               num_segments=grid.shape[0] + 1)
+
+
+def sum_d_grid_from_hist(hist: jnp.ndarray) -> jnp.ndarray:
+    # sumD(grid[i]) = sum of hist[j] for j > i  (dist >= grid[i] <=> bin > i)
+    suffix = jnp.cumsum(hist[::-1])[::-1]
+    return suffix[1:]  # [G]
+
+
+def degree_hist(dist: jnp.ndarray, deg: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    """Degree-mass histogram of VS(x) (local partial in distributed mode)."""
+    mask = dist >= x
+    b = degree_bucket(deg)
+    mass = jnp.where(mask, deg, 0).astype(jnp.int32)
+    return jax.ops.segment_sum(mass, b, num_segments=N_DEG_BUCKETS)
+
+
+def high_d_from_hist(hist: jnp.ndarray) -> jnp.ndarray:
+    """Weighted-median degree from a (possibly psum-reduced) histogram."""
+    total = jnp.sum(hist)
+    cum = jnp.cumsum(hist)
+    # first bucket where cumulative mass reaches half the total
+    half = (total + 1) // 2
+    idx = jnp.argmax(cum >= half)
+    rep = _BUCKET_REPS[idx]
+    # empty VS(x) -> highD := 1 (neutral; gap() then uses maxW path)
+    return jnp.where(total > 0, jnp.maximum(rep, 1.0), 1.0)
+
+
+def high_d(dist: jnp.ndarray, deg: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Degree threshold balancing total degree of VS(x) into two halves.
+
+    Returns the (approximate) weighted-median degree over VS(x); vertices
+    with zero degree never matter (they carry no mass).
+    """
+    return high_d_from_hist(degree_hist(dist, deg, x))

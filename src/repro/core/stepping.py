@@ -1,0 +1,68 @@
+"""Dynamic-stepping heuristic (paper §3.1, Eqs. 1-3).
+
+Given the current scheduling threshold ``x`` (and the latest dist[]), choose
+the window width ``gap(x)`` so the next pair ``<x, x+gap(x)>``:
+
+  * settles roughly half the remaining degree mass per step
+    (``sumD(ub) ~ sumD(lb)/2`` when ``highD(lb) > alpha``), and
+  * makes paths created by repeated relaxations w.h.p. longer than ``ub``.
+
+    prob(x)  = min(beta, max(sumD(x), 2|E| - sumD(x)) / (2|E|))          (1)
+    ratio(x) = 1 - (1 - prob(x)) ** (1 / (prob(x) * highD(x)))           (2)
+    gap(x)   = maxW(G, 1)        if highD(x) <= alpha                    (3)
+               maxW(G, ratio(x)) otherwise
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import stats
+
+
+class SteppingParams(NamedTuple):
+    alpha: float = 3.0   # paper default
+    beta: float = 0.9    # paper default
+
+
+def prob(sum_d_x: jnp.ndarray, n_edges2: jnp.ndarray,
+         beta: float) -> jnp.ndarray:
+    """Eq. (1). ``n_edges2`` is 2|E| (the directed slot count)."""
+    s = sum_d_x.astype(jnp.float32)
+    two_e = n_edges2.astype(jnp.float32)
+    return jnp.minimum(jnp.float32(beta),
+                       jnp.maximum(s, two_e - s) / jnp.maximum(two_e, 1.0))
+
+
+def ratio(prob_x: jnp.ndarray, high_d_x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (2) — computed in log-space for numerical safety."""
+    p = jnp.clip(prob_x, 1e-6, 1.0 - 1e-6)
+    expo = 1.0 / (p * jnp.maximum(high_d_x, 1.0))
+    return 1.0 - jnp.exp(expo * jnp.log1p(-p))
+
+
+def gap_from_stats(sd: jnp.ndarray, hd: jnp.ndarray, rtow: jnp.ndarray,
+                   n_edges2: jnp.ndarray,
+                   params: SteppingParams = SteppingParams()) -> jnp.ndarray:
+    """Eq. (3) given precomputed (possibly psum-reduced) sumD/highD."""
+    p = prob(sd, n_edges2, params.beta)
+    r = ratio(p, hd)
+    g_adaptive = stats.max_w_of(rtow, r)
+    g_full = rtow[-1]
+    g = jnp.where(hd <= params.alpha, g_full, g_adaptive)
+    # A window of width zero (duplicate-heavy weight LUTs can quantize small
+    # ratios to w_min=RtoW[0]=0 on integer-weight variants) would stall the
+    # outer loop; clamp to the smallest positive LUT entry.
+    positive = jnp.where(rtow > 0, rtow, rtow[-1])
+    w_floor = jnp.minimum(jnp.min(positive), g_full)
+    return jnp.maximum(g, jnp.maximum(w_floor, jnp.float32(1e-12)))
+
+
+def gap(dist: jnp.ndarray, deg: jnp.ndarray, rtow: jnp.ndarray,
+        n_edges2: jnp.ndarray, x: jnp.ndarray,
+        params: SteppingParams = SteppingParams()) -> jnp.ndarray:
+    """Eq. (3): window width for the scheduling threshold ``x``."""
+    hd = stats.high_d(dist, deg, x)
+    sd = stats.sum_d(dist, deg, x)
+    return gap_from_stats(sd, hd, rtow, n_edges2, params)

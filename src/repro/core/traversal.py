@@ -1,0 +1,97 @@
+"""Traversal-optimization heuristic (paper §3.2, Eqs. 4-6 + Function 2).
+
+Chooses the selection threshold ``ST(lb, ub) <= lb`` that maximizes the
+estimated number of skipped edge traversals
+
+    profit(x, lb, ub) = pushed(x, lb, ub) - long(x, lb, ub) - pulled(x, lb, ub)
+
+where (with lb0 = max(x, lb - maxW), ub0 = min(ub, lb + maxW),
+ub1 = min(ub, lb0 + maxW)):
+
+    pushed(x, lb, y) = (y - lb) * (sumD(x) - sumD(lb)) / maxW(G, 1)      (4)
+    pulled(x, lb, y) = (y - x) * sumD(lb) / maxW(G, 1)                   (5)
+    long(x, lb, y)   = pulled(x, lb, y) * (sumD(x) - sumD(lb)) / (2|E|)  (6)
+
+``pushed`` counts edges the push model would traverse from the settled band
+``[x, lb)``; ``pulled`` counts the pull requests issued by unsettled vertices;
+``long`` counts the long relevant edges that must still be relaxed either way.
+
+Function 2 (the control flow) is reproduced with one approximation from the
+paper's own implementation section (§4.1): instead of iterating over every
+distinct dist[] value we evaluate profit on an ST_NUM-point grid, matching the
+EIC implementation's ``{x * (st1-st0)/ST_NUM + st0}`` candidate set.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import stats, stepping
+from .graph import ST_NUM
+
+
+def profit_terms(x: jnp.ndarray, lb: jnp.ndarray, y: jnp.ndarray,
+                 sum_d_x: jnp.ndarray, sum_d_lb: jnp.ndarray,
+                 n_edges2: jnp.ndarray, max_w: jnp.ndarray):
+    """Vectorized (pushed, long, pulled) estimates for candidate(s) ``x``.
+
+    ``y`` is the *next-next* threshold ``ub + gap(ub)`` — Function 2 evaluates
+    profit for the upcoming pair ``<ub, y>``; here ``lb`` is that pair's lower
+    bound (i.e. the caller passes lb=ub_current).
+    """
+    max_w = jnp.maximum(max_w, 1e-12)
+    lb0 = jnp.maximum(x, lb - max_w)
+    ub0 = jnp.minimum(y, lb + max_w)
+    ub1 = jnp.minimum(y, lb0 + max_w)
+    sd_x = sum_d_x.astype(jnp.float32)
+    sd_lb = sum_d_lb.astype(jnp.float32)
+    band = jnp.maximum(sd_x - sd_lb, 0.0)  # degree mass of VS(x)\VS(lb)
+    pushed = (ub0 - lb) * band / max_w
+    pulled = (ub0 - x) * sd_lb / max_w
+    long_ = ((ub1 - lb0) * sd_lb / max_w) * band / n_edges2.astype(jnp.float32)
+    return pushed, long_, pulled
+
+
+def compute_st(dist: jnp.ndarray, deg: jnp.ndarray, rtow: jnp.ndarray,
+               n_edges2: jnp.ndarray, lb: jnp.ndarray, ub: jnp.ndarray,
+               params: stepping.SteppingParams = stepping.SteppingParams(),
+               st_num: int = ST_NUM) -> jnp.ndarray:
+    """Function 2: selection threshold for the *next* pair ``<ub, ub+gap(ub)>``.
+
+    Returns ``st in [0, ub]``; ``st == ub`` disables the pull model
+    (``st == lb`` case of Function 1).
+    """
+    sd_ub = stats.sum_d(dist, deg, ub)
+    gap_lb = stepping.gap(dist, deg, rtow, n_edges2, lb, params)
+    gap_ub = stepping.gap(dist, deg, rtow, n_edges2, ub, params)
+    grid = st_grid_points(ub, st_num)
+    sd_grid = stats.sum_d_grid(dist, deg, grid)
+    return compute_st_from_stats(grid, sd_grid, sd_ub, gap_lb, gap_ub,
+                                 rtow, n_edges2, ub)
+
+
+def st_grid_points(ub: jnp.ndarray, st_num: int = ST_NUM) -> jnp.ndarray:
+    """Candidate grid over [0, ub) — the paper's ST_NUM-point candidate set."""
+    return jnp.linspace(0.0, 1.0, st_num, dtype=jnp.float32) * ub
+
+
+def compute_st_from_stats(grid, sd_grid, sd_ub, gap_lb, gap_ub, rtow,
+                          n_edges2, ub) -> jnp.ndarray:
+    """Function 2 core, given (possibly psum-reduced) statistics."""
+    max_w = rtow[-1]
+    n_e = n_edges2.astype(jnp.int32) // 2  # |E|
+
+    # line 2: statistics-extraction shortcut / full-width window => push-only
+    early_push = (sd_ub >= n_e) | (gap_lb >= max_w)
+    # line 5: next window is full-width => st = ub - maxW
+    early_band = gap_ub >= max_w
+
+    y = ub + gap_ub
+    pushed, long_, pulled = profit_terms(
+        grid, ub, y, sd_grid, sd_ub, n_edges2, max_w)
+    profit = pushed - long_ - pulled
+    best = jnp.argmax(profit)
+    st_grid = jnp.where(profit[best] > 0, grid[best], ub)
+
+    st = jnp.where(early_band, jnp.maximum(ub - max_w, 0.0), st_grid)
+    st = jnp.where(early_push, ub, st)
+    return st

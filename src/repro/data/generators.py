@@ -1,0 +1,101 @@
+"""Graph generators (paper §4.2 datasets, scaled to this container).
+
+* :func:`kronecker` — Graph500-style RMAT/Kronecker generator
+  (A=0.57, B=0.19, C=0.19, D=0.05), edge weights uniform in (0, 1].
+* :func:`uniform_random` — Urand-style Erdős–Rényi with fixed edge count.
+* :func:`road_grid`  — 2D lattice with local weights (Road-like: huge
+  diameter, degree <= 4).
+* :func:`molecule_batch` — batched small graphs (GNN `molecule` shape).
+
+All generators return undirected edge lists; build with
+:func:`repro.core.graph.build_csr`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import HostGraph, build_csr
+
+RMAT_A, RMAT_B, RMAT_C, RMAT_D = 0.57, 0.19, 0.19, 0.05
+
+
+def kronecker(scale: int, edge_factor: int, seed: int = 0,
+              weights: str = "uniform") -> HostGraph:
+    """Graph500 Kronecker generator: 2^scale vertices, edge_factor*2^scale edges."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = edge_factor * n
+    u = np.zeros(m, np.int64)
+    v = np.zeros(m, np.int64)
+    ab = RMAT_A + RMAT_B
+    c_norm = RMAT_C / (RMAT_C + RMAT_D)
+    a_norm = RMAT_A / ab
+    for bit in range(scale):
+        r1 = rng.random(m)
+        r2 = rng.random(m)
+        u_bit = r1 > ab
+        v_bit = np.where(u_bit, r2 > c_norm, r2 > a_norm)
+        u |= u_bit.astype(np.int64) << bit
+        v |= v_bit.astype(np.int64) << bit
+    # Graph500 permutes vertex labels to break locality
+    perm = rng.permutation(n)
+    u, v = perm[u], perm[v]
+    mask = u != v  # drop self loops
+    u, v = u[mask], v[mask]
+    w = _gen_weights(rng, u.shape[0], weights)
+    return build_csr(n, u, v, w)
+
+
+def uniform_random(n: int, m: int, seed: int = 0,
+                   weights: str = "uniform") -> HostGraph:
+    """Urand-style: m undirected edges with uniformly random endpoints."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    mask = u != v
+    u, v = u[mask], v[mask]
+    w = _gen_weights(rng, u.shape[0], weights)
+    return build_csr(n, u, v, w)
+
+
+def road_grid(side: int, seed: int = 0, diag: bool = False) -> HostGraph:
+    """2D lattice (Road-like: degree <= 4, diameter ~ 2*side)."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(side * side).reshape(side, side)
+    eu = [idx[:, :-1].ravel(), idx[:-1, :].ravel()]
+    ev = [idx[:, 1:].ravel(), idx[1:, :].ravel()]
+    if diag:
+        eu.append(idx[:-1, :-1].ravel())
+        ev.append(idx[1:, 1:].ravel())
+    u = np.concatenate(eu)
+    v = np.concatenate(ev)
+    w = rng.uniform(0.1, 1.0, u.shape[0])  # road weights: narrow band
+    return build_csr(side * side, u, v, w)
+
+
+def molecule_batch(n_nodes: int = 30, n_edges: int = 64, batch: int = 128,
+                   seed: int = 0):
+    """Batched random small graphs (returns stacked edge lists + node feats).
+
+    Used by the GNN `molecule` shape; returns a dict of numpy arrays shaped
+    [batch, ...] plus 3D coordinates for geometric models (DimeNet).
+    """
+    rng = np.random.default_rng(seed)
+    senders = rng.integers(0, n_nodes, (batch, n_edges))
+    receivers = rng.integers(0, n_nodes, (batch, n_edges))
+    fix = senders == receivers
+    receivers = np.where(fix, (receivers + 1) % n_nodes, receivers)
+    pos = rng.normal(0, 1, (batch, n_nodes, 3)).astype(np.float32)
+    return {
+        "senders": senders.astype(np.int32),
+        "receivers": receivers.astype(np.int32),
+        "pos": pos,
+        "node_mask": np.ones((batch, n_nodes), bool),
+    }
+
+
+def _gen_weights(rng, m, kind: str):
+    if kind == "uniform":
+        # uniform in (0, 1] as Graph500 SSSP specifies
+        return 1.0 - rng.random(m)
+    raise ValueError(f"unknown weight kind {kind}")

@@ -1,0 +1,72 @@
+"""Synthetic data pipelines for the LM / GNN / recsys architectures.
+
+Deterministic (seeded) streams with a step -> sample-offset mapping so a
+restarted job fast-forwards byte-identically (train/failure.py relies on
+this).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class LMTokenStream:
+    """Synthetic token stream: mixture of Zipf unigrams + repeated n-grams
+    (so the loss actually decreases during the example runs)."""
+
+    def __init__(self, vocab: int, seed: int = 0):
+        self.vocab = vocab
+        self.seed = seed
+
+    def batch(self, step: int, batch: int, seq: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        # Zipf-ish unigram distribution
+        base = rng.zipf(1.3, size=(batch, seq)).astype(np.int64)
+        toks = (base - 1) % self.vocab
+        # inject copy structure: second half repeats the first half shifted
+        half = seq // 2
+        toks[:, half:half * 2] = toks[:, :half]
+        return toks.astype(np.int32)
+
+
+class RecsysStream:
+    """User-behavior batches: Zipf item popularity, hist + target."""
+
+    def __init__(self, n_items: int, hist_len: int, seed: int = 0):
+        self.n_items = n_items
+        self.hist_len = hist_len
+        self.seed = seed
+
+    def batch(self, step: int, batch: int):
+        rng = np.random.default_rng((self.seed, step, 7))
+        hist = (rng.zipf(1.2, size=(batch, self.hist_len)) - 1) % self.n_items
+        lengths = rng.integers(self.hist_len // 2, self.hist_len + 1, batch)
+        mask = np.arange(self.hist_len)[None, :] < lengths[:, None]
+        target = (rng.zipf(1.2, size=batch) - 1) % self.n_items
+        return {
+            "hist": hist.astype(np.int32),
+            "hist_mask": mask,
+            "target": target.astype(np.int32),
+        }
+
+
+def gnn_node_classification(n_nodes: int, n_edges: int, d_feat: int,
+                            n_classes: int = 16, seed: int = 0,
+                            with_pos: bool = False):
+    """Random graph + features/labels (full-batch node classification)."""
+    rng = np.random.default_rng(seed)
+    snd = rng.integers(0, n_nodes, n_edges)
+    rcv = rng.integers(0, n_nodes, n_edges)
+    fix = snd == rcv
+    rcv = np.where(fix, (rcv + 1) % n_nodes, rcv)
+    # symmetrize (message passing both ways like the benchmarks)
+    senders = np.concatenate([snd, rcv]).astype(np.int32)
+    receivers = np.concatenate([rcv, snd]).astype(np.int32)
+    out = {
+        "node_feat": rng.normal(0, 1, (n_nodes, d_feat)).astype(np.float32),
+        "senders": senders,
+        "receivers": receivers,
+        "labels": rng.integers(0, n_classes, n_nodes).astype(np.int32),
+    }
+    if with_pos:
+        out["pos"] = rng.normal(0, 1, (n_nodes, 3)).astype(np.float32)
+    return out

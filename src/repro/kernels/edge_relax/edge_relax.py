@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the EIC windowed edge relaxation (paper Algo 2 l.10-17).
+
+One grid step processes one (edge tile x destination block) pair:
+
+    cand[e] = dist[src[e]] + w[e]          if frontier[src[e]] and
+                                              lb <= cand[e] < ub
+    out[j]  = min over e with dst[e] == j  of cand[e]
+
+TPU adaptation (DESIGN.md §2/§5): the MPI CAS loop becomes a dense masked
+min-reduction.  Edges arrive pre-bucketed by (src block, dst block) — the
+2-D partition of the distributed engine — so the source-distance block and
+the destination output block both fit in VMEM.  The scatter is expressed as
+a broadcast-compare reduce over the (TILE_E x BLOCK_V) plane, which is
+VPU-shaped (8x128 lanes), avoiding data-dependent writes entirely; the
+per-tile partial mins are min-combined across the grid's edge-tile axis by
+the output BlockSpec revisiting scheme.
+
+Grid: (n_dst_blocks, n_edge_tiles); edge tiles revisit the same output
+block, so the kernel accumulates min in-place (output initialized at +inf
+on the first visit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_E = 512
+DEFAULT_BLOCK_V = 512
+NEG = jnp.float32(jnp.inf)
+
+
+def _kernel(dist_ref, frontier_ref, src_ref, dst_ref, w_ref, lbub_ref,
+            out_ref, *, block_v: int):
+    t = pl.program_id(1)
+    lb = lbub_ref[0]
+    ub = lbub_ref[1]
+    src = src_ref[...]
+    dst = dst_ref[...]
+    w = w_ref[...]
+    d_src = dist_ref[src]                       # VMEM gather (src block local)
+    front = frontier_ref[src]
+    cand = d_src + w
+    ok = (front > 0) & (cand >= lb) & (cand < ub)
+    cand = jnp.where(ok, cand, jnp.inf)
+    # dense scatter-min: [TILE_E, BLOCK_V] compare plane
+    cols = jax.lax.broadcasted_iota(jnp.int32, (src.shape[0], block_v), 1)
+    plane = jnp.where(dst[:, None] == cols, cand[:, None], jnp.inf)
+    tile_min = jnp.min(plane, axis=0)           # [BLOCK_V]
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+    out_ref[...] = jnp.minimum(out_ref[...], tile_min)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "tile_e",
+                                             "interpret"))
+def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
+               lb, ub, *, block_v: int = DEFAULT_BLOCK_V,
+               tile_e: int = DEFAULT_TILE_E, interpret: bool = True):
+    """Relax one (src block, dst block) edge bucket.
+
+    dist_block/frontier_block: [Bs] f32 / int8 (src block local).
+    src_local/dst_local/w: [E] edge slabs (dst_local indexes the dst block;
+    padding edges carry w=+inf).  Returns per-dst-block min candidates
+    [n_dst_blocks * block_v] where n_dst_blocks = ceil(max_dst / block_v).
+    """
+    e = src_local.shape[0]
+    e_pad = -(-e // tile_e) * tile_e
+    src_local = jnp.pad(src_local, (0, e_pad - e))
+    dst_local = jnp.pad(dst_local, (0, e_pad - e))
+    w = jnp.pad(w, (0, e_pad - e), constant_values=jnp.inf)
+    n_tiles = e_pad // tile_e
+    lbub = jnp.stack([jnp.float32(lb), jnp.float32(ub)])
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_v=block_v),
+        grid=(1, n_tiles),
+        in_specs=[
+            pl.BlockSpec(dist_block.shape, lambda b, t: (0,)),
+            pl.BlockSpec(frontier_block.shape, lambda b, t: (0,)),
+            pl.BlockSpec((tile_e,), lambda b, t: (t,)),
+            pl.BlockSpec((tile_e,), lambda b, t: (t,)),
+            pl.BlockSpec((tile_e,), lambda b, t: (t,)),
+            pl.BlockSpec(lbub.shape, lambda b, t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_v,), lambda b, t: (b,)),
+        out_shape=jax.ShapeDtypeStruct((block_v,), jnp.float32),
+        interpret=interpret,
+    )(dist_block, frontier_block.astype(jnp.int8), src_local, dst_local,
+      w, lbub)
+    return out

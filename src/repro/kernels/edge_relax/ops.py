@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the edge_relax Pallas kernel.
+
+On this CPU container the kernel always runs with interpret=True (the body
+executes in Python/XLA for validation); on TPU set interpret=False.
+"""
+from __future__ import annotations
+
+import jax
+
+from .edge_relax import edge_relax
+from .ref import edge_relax_ref
+
+__all__ = ["edge_relax", "edge_relax_ref", "relax_bucket"]
+
+
+def relax_bucket(dist_block, frontier_block, src_local, dst_local, w, lb,
+                 ub, *, block_v: int = 512, use_kernel: bool = True,
+                 interpret: bool = True):
+    """Dispatch: Pallas kernel (TPU hot path) or jnp reference fallback."""
+    if use_kernel:
+        return edge_relax(dist_block, frontier_block, src_local, dst_local,
+                          w, lb, ub, block_v=block_v, interpret=interpret)
+    return edge_relax_ref(dist_block, frontier_block, src_local, dst_local,
+                          w, lb, ub, block_v=block_v)

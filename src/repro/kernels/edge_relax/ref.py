@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the edge_relax kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_relax_ref(dist_block, frontier_block, src_local, dst_local, w,
+                   lb, ub, *, block_v: int = 512):
+    cand = dist_block[src_local] + w
+    ok = (frontier_block[src_local] > 0) & (cand >= lb) & (cand < ub)
+    cand = jnp.where(ok, cand, jnp.inf)
+    return jax.ops.segment_min(cand, dst_local, num_segments=block_v)

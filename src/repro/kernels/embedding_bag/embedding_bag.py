@@ -1,0 +1,74 @@
+"""Pallas TPU EmbeddingBag kernel — the recsys hot path (DESIGN.md §5).
+
+TPU pattern: scalar-prefetched lookup indices drive the *BlockSpec index
+map*, so each grid step DMAs exactly one embedding-table row block from
+HBM into VMEM (the splash-attention block-table idiom; no dense one-hot,
+no full-table streaming).  The grid iterates all B*L lookups; the output
+bag block is revisited for the L lookups of one bag and accumulated
+in-place (sum or weighted-sum; mean finalized on the last lookup).
+
+Production note: on a 256-chip pod the table rows are sharded over the
+``model`` axis; each shard runs this kernel over the lookups routed to it
+(ids bucketing happens in repro/models/recsys via the same sort-dispatch
+the MoE layer uses).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+
+def _kernel(ids_ref, w_ref, row_ref, out_ref, *, l: int, mode: str):
+    i = pl.program_id(0)
+    li = i % l
+
+    @pl.when(li == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    weight = w_ref[i]
+    out_ref[...] += row_ref[...].astype(jnp.float32) * weight
+
+    if mode == "mean":
+        @pl.when(li == l - 1)
+        def _fin():
+            total = w_ref[pl.ds((i // l) * l, l)].sum()
+            out_ref[...] = out_ref[...] / jnp.maximum(total, 1e-9)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(table, ids, weights=None, *, mode: str = "sum",
+                  interpret: bool = True):
+    """table [V, D]; ids [B, L] int32; weights [B, L] or None -> [B, D]."""
+    b, l = ids.shape
+    v, d = table.shape
+    flat_ids = ids.reshape(-1)
+    if weights is None:
+        weights = jnp.ones((b * l,), jnp.float32)
+    else:
+        weights = weights.reshape(-1).astype(jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # ids, weights
+        grid=(b * l,),
+        in_specs=[
+            # one table row per step, row index from the prefetched ids
+            pl.BlockSpec((1, d), lambda i, ids_p, w_p: (ids_p[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids_p, w_p: (i // l, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, l=l, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(flat_ids, weights, table)
+    return out

@@ -1,0 +1,7 @@
+"""jit'd public wrapper for the embedding_bag kernel."""
+from __future__ import annotations
+
+from .embedding_bag import embedding_bag
+from .ref import embedding_bag_ref
+
+__all__ = ["embedding_bag", "embedding_bag_ref"]

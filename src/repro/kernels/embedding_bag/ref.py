@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for embedding_bag (take + weighted segment sum)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights=None, *, mode: str = "sum"):
+    b, l = ids.shape
+    vecs = jnp.take(table, ids.reshape(-1), axis=0).reshape(b, l, -1)
+    vecs = vecs.astype(jnp.float32)
+    if weights is None:
+        weights = jnp.ones((b, l), jnp.float32)
+    out = jnp.einsum("bld,bl->bd", vecs, weights.astype(jnp.float32))
+    if mode == "mean":
+        out = out / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return out

@@ -1,0 +1,116 @@
+"""Pallas TPU flash attention (forward), FA-2 schedule — arXiv:2307.08691.
+
+Grid (B, H, n_q_blocks, n_kv_blocks); the kv axis is innermost and
+sequential, carrying the online-softmax state (running max m, running sum
+l, weighted accumulator acc) in VMEM scratch.  Blocks are MXU-aligned
+((block_q x head_dim) @ (head_dim x block_k) contractions).  GQA maps
+query head h to kv head h // (H // H_kv) inside the k/v BlockSpec index
+maps, so grouped heads stream the same kv tiles.
+
+Used by the 32k prefill/serving path on TPU (interpret=True on this CPU
+container, asserted against ref.py across shapes/dtypes in
+tests/test_kernels.py).  Causal and sliding-window masks supported.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch memory spaces (interpret mode accepts them too)
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            window: int, n_k: int, t_real: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)          # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < t_real          # padded keys never attend
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q [B,H,S,D]; k,v [B,Hkv,T,D] -> out [B,H,S,D] (GQA-aware)."""
+    b, h, s, d = q.shape
+    _, h_kv, t, _ = k.shape
+    group = h // h_kv
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    s_pad = -(-s // bq) * bq
+    t_pad = -(-t // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    n_q, n_k = s_pad // bq, t_pad // bk
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=bq, block_k=bk, causal=causal,
+        window=window, n_k=n_k, t_real=t)
+    scratch = [_VMEM((bq,), jnp.float32), _VMEM((bq,), jnp.float32),
+               _VMEM((bq, d), jnp.float32)] if _VMEM is not None else []
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :s]

@@ -1,0 +1,7 @@
+"""jit'd public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+from .flash_attn import flash_attention
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention", "flash_attention_ref"]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (dense fp32 softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    b, h, s, d = q.shape
+    _, h_kv, t, _ = k.shape
+    group = h // h_kv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.any(mask, -1)[None, None, :, None], probs, 0.0)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32)
+                      ).astype(q.dtype)

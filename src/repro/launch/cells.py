@@ -1,0 +1,293 @@
+"""Per-(architecture x input-shape) cell builders for the dry-run.
+
+``build_cell(arch, shape, mesh)`` returns ``(fn, args, meta)`` where
+``args`` are ShapeDtypeStructs with NamedShardings attached — so
+``jax.jit(fn).lower(*args)`` compiles the full distributed step without
+allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..models import transformer
+from ..models.gnn import common as gnn_common, dimenet as dimenet_mod
+from ..models.gnn import gin as gin_mod, pna as pna_mod
+from ..models.gnn import gatedgcn as gatedgcn_mod
+from ..models.recsys import mind as mind_mod
+from ..parallel import sharding as shr
+from ..train import loop as train_loop
+from ..train import optimizer as opt_mod
+
+GNN_FWD = {"gin": (gin_mod, gin_mod.forward),
+           "pna": (pna_mod, pna_mod.forward),
+           "gatedgcn": (gatedgcn_mod, gatedgcn_mod.forward),
+           "dimenet": (dimenet_mod, dimenet_mod.forward)}
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _attach(struct_tree, shard_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree, shard_tree)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def build_cell(arch: str, shape: str, mesh):
+    """Returns (fn, arg_structs, meta, out_shardings-or-None)."""
+    mod = configs.get(arch)
+    if mod.FAMILY == "lm":
+        return _lm_cell(mod, shape, mesh)
+    if mod.FAMILY == "gnn":
+        return _gnn_cell(mod, shape, mesh)
+    if mod.FAMILY == "recsys":
+        return _mind_cell(mod, shape, mesh)
+    raise ValueError(mod.FAMILY)
+
+
+# --- LM ---------------------------------------------------------------------
+
+def _lm_cell(mod, shape_name: str, mesh):
+    cfg = mod.make_config()
+    sh = mod.SHAPES[shape_name]
+    dp = shr.dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    msz = mesh.shape.get("model", 1)
+    vshard = "model" if cfg.vocab % msz == 0 else None
+    pspecs = shr.lm_param_specs(cfg, mesh)
+    pshard = shr.tree_shardings(mesh, pspecs)
+    params_s = _attach(
+        jax.eval_shape(lambda k: transformer.init_params(cfg, k),
+                       jax.random.PRNGKey(0)), pshard)
+    act_spec = NamedSharding(mesh, shr.lm_act_spec(cfg, mesh))
+    meta = {"arch": cfg.name, "shape": shape_name,
+            "params": cfg.param_count(),
+            "active_params": _lm_active_params(cfg)}
+
+    if sh["kind"] == "train":
+        opt_cfg = opt_mod.AdamWConfig()
+        ospecs = shr.opt_state_specs(pspecs)
+        oshard = shr.tree_shardings(mesh, ospecs)
+        opt_s = _attach(jax.eval_shape(
+            functools.partial(opt_mod.adamw_init, cfg=opt_cfg), params_s),
+            oshard)
+        mb = getattr(mod, "MICROBATCHES", {}).get(shape_name, 1)
+        step = train_loop.make_lm_train_step(cfg, opt_cfg, act_spec,
+                                             microbatches=mb)
+        batch_s = {"tokens": _sds((sh["batch"], sh["seq"]), jnp.int32,
+                                  mesh, P(dp, None))}
+        meta["microbatches"] = mb
+        meta["tokens"] = sh["batch"] * sh["seq"]
+        # cost_analysis counts scan/while bodies ONCE; the layer stack and
+        # the microbatch accumulator are both scans -> static multiplier
+        meta["scan_mult"] = cfg.n_layers * mb
+        out_sh = (jax.tree.map(lambda s: s.sharding, params_s),
+                  jax.tree.map(lambda s: s.sharding, opt_s), None)
+        return step, (params_s, opt_s, batch_s), meta, out_sh
+
+    if sh["kind"] == "prefill":
+        chunks = getattr(mod, "PREFILL_CHUNKS", {}).get(shape_name, 1)
+
+        def fn(params, tokens):
+            return transformer.prefill(cfg, params, tokens, sh["seq"],
+                                       act_spec, batch_chunks=chunks)
+        toks = _sds((sh["batch"], sh["seq"]), jnp.int32, mesh, P(dp, None))
+        meta["tokens"] = sh["batch"] * sh["seq"]
+        meta["prefill_chunks"] = chunks
+        meta["scan_mult"] = cfg.n_layers * chunks
+        cspecs = shr.lm_cache_specs(cfg, mesh, shard_seq=True)
+        out_sh = (shr.tree_shardings(mesh, cspecs),
+                  NamedSharding(mesh, P(dp, vshard)))
+        return fn, (params_s, toks), meta, out_sh
+
+    if sh["kind"] == "decode":
+        cspecs = shr.lm_cache_specs(cfg, mesh, shard_seq=True,
+                                    batch=sh["batch"])
+        cshard = shr.tree_shardings(mesh, cspecs)
+        cache_s = _attach(jax.eval_shape(
+            lambda: transformer.init_cache(cfg, sh["batch"], sh["cache"])),
+            cshard)
+
+        def fn(params, cache, tok):
+            return transformer.decode_step(cfg, params, cache, tok, act_spec)
+        bd = dp if sh["batch"] % max(dp_size, 1) == 0 else None
+        tok = _sds((sh["batch"],), jnp.int32, mesh, P(bd))
+        meta["tokens"] = sh["batch"]
+        meta["kv_cache"] = sh["cache"]
+        meta["scan_mult"] = cfg.n_layers
+        logits_sh = NamedSharding(mesh, P(bd, vshard))
+        out_sh = (logits_sh, jax.tree.map(lambda s: s.sharding, cache_s))
+        return fn, (params_s, cache_s, tok), meta, out_sh
+
+    raise ValueError(sh["kind"])
+
+
+def _lm_active_params(cfg: transformer.LMConfig) -> int:
+    """Per-token active parameters (MoE: shared + top_k experts)."""
+    if not cfg.moe:
+        return cfg.param_count()
+    d = cfg.d_model
+    nmat = 3 if cfg.mlp == "swiglu" else 2
+    e_ff = nmat * d * cfg.d_ff
+    attn = d * cfg.n_heads * cfg.hd + 2 * d * cfg.n_kv * cfg.hd + \
+        cfg.n_heads * cfg.hd * d
+    per_layer = attn + (cfg.top_k + cfg.n_shared) * e_ff + d * cfg.n_experts
+    return cfg.n_layers * per_layer + 2 * cfg.vocab * d
+
+
+# --- GNN --------------------------------------------------------------------
+
+def _gnn_cell(mod, shape_name: str, mesh):
+    sh = mod.SHAPES[shape_name]
+    ndev = int(np.prod(list(mesh.shape.values())))
+    flat = tuple(mesh.axis_names)
+    model_name = mod.MODEL
+    _, fwd = GNN_FWD[model_name]
+    graph_level = sh["kind"] == "train_graphs"
+
+    if sh["kind"] == "train_sampled":
+        n_nodes, n_edges = sh["sub_nodes"], sh["sub_edges"]
+    elif sh["kind"] == "train_graphs":
+        n_nodes = sh["n_nodes"] * sh["batch"]
+        n_edges = 2 * sh["n_edges"] * sh["batch"]
+    else:
+        n_nodes, n_edges = sh["n_nodes"], 2 * sh["n_edges"]
+    n_pad = _pad_to(n_nodes, ndev)
+    e_pad = _pad_to(n_edges, ndev)
+
+    kw = {"remat": sh["kind"] != "train_graphs"}
+    if n_nodes >= 1_000_000:
+        # million-node full-batch cells compute in bf16 (fp32 loss/stats);
+        # halves every gather/reduce buffer — see EXPERIMENTS.md §Perf
+        kw["dtype"] = jnp.bfloat16
+    if model_name == "dimenet":
+        kw["triplet_chunks"] = sh.get("dimenet_chunks", 1)
+    cfg = mod.make_config(d_in=sh["d_feat"], n_classes=sh["n_classes"],
+                          graph_level=graph_level, **kw)
+    params_s = jax.eval_shape(
+        lambda k: GNN_FWD[model_name][0].init_params(cfg, k),
+        jax.random.PRNGKey(0))
+    rep = NamedSharding(mesh, P())
+    params_s = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep),
+        params_s)
+    opt_cfg = opt_mod.AdamWConfig(master_weights=False)
+    opt_s = jax.eval_shape(
+        functools.partial(opt_mod.adamw_init, cfg=opt_cfg), params_s)
+    opt_s = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep),
+        opt_s)
+
+    n_graphs = sh.get("batch", 1)
+    gb_s = gnn_common.GraphBatch(
+        node_feat=_sds((n_pad, sh["d_feat"]), jnp.float32, mesh, P(flat)),
+        senders=_sds((e_pad,), jnp.int32, mesh, P(flat)),
+        receivers=_sds((e_pad,), jnp.int32, mesh, P(flat)),
+        edge_feat=None,
+        graph_ids=_sds((n_pad,), jnp.int32, mesh, P(flat)),
+        n_graphs=n_graphs,
+        labels=_sds((n_graphs,) if graph_level else (n_pad,),
+                    jnp.float32 if graph_level else jnp.int32, mesh,
+                    P() if graph_level else P(flat)),
+        edge_mask=_sds((e_pad,), jnp.bool_, mesh, P(flat)),
+        shard_ctx=(mesh, flat),
+    )
+    if model_name == "dimenet":
+        t_pad = _pad_to(e_pad * sh["triplet_cap"],
+                        ndev * max(sh.get("dimenet_chunks", 1), 1))
+        gb_s = gb_s._replace(
+            pos=_sds((n_pad, 3), jnp.float32, mesh, P(flat)),
+            triplet_kj=_sds((t_pad,), jnp.int32, mesh, P(flat)),
+            triplet_ji=_sds((t_pad,), jnp.int32, mesh, P(flat)),
+            triplet_mask=_sds((t_pad,), jnp.bool_, mesh, P(flat)))
+
+    if graph_level:
+        step = train_loop.make_gnn_regression_step(fwd, cfg, opt_cfg)
+    else:
+        step = train_loop.make_gnn_train_step(fwd, cfg, opt_cfg)
+    # scan trip products per model: gin/pna scan n_layers-1 (layer0 is
+    # unrolled), gatedgcn scans all layers, dimenet scans n_blocks blocks
+    # each containing a triplet-chunk scan
+    chunks = max(kw.get("triplet_chunks", 1), 1)
+    if model_name == "dimenet":
+        scan_mult = cfg.n_blocks * chunks
+    elif model_name == "gatedgcn":
+        scan_mult = cfg.n_layers
+    else:
+        scan_mult = max(cfg.n_layers - 1, 1)
+    meta = {"arch": cfg.name, "shape": shape_name, "nodes": n_pad,
+            "edges": e_pad, "scan_mult": scan_mult,
+            "params": int(sum(np.prod(s.shape)
+                              for s in jax.tree.leaves(params_s)))}
+    out_sh = (jax.tree.map(lambda s: s.sharding, params_s),
+              jax.tree.map(lambda s: s.sharding, opt_s), None)
+    return step, (params_s, opt_s, gb_s), meta, out_sh
+
+
+# --- recsys (MIND) ----------------------------------------------------------
+
+def _mind_cell(mod, shape_name: str, mesh):
+    cfg = mod.make_config()
+    sh = mod.SHAPES[shape_name]
+    dp = shr.dp_axes(mesh)
+    flat = tuple(mesh.axis_names)
+    pspecs = shr.mind_param_specs(mesh)
+    pshard = shr.tree_shardings(mesh, pspecs)
+    params_s = _attach(jax.eval_shape(
+        lambda k: mind_mod.init_params(cfg, k), jax.random.PRNGKey(0)),
+        pshard)
+    meta = {"arch": cfg.name, "shape": shape_name,
+            "params": cfg.n_items * cfg.embed_dim + cfg.embed_dim ** 2}
+
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def batch_structs(b):
+        bd = dp if b % max(dp_size, 1) == 0 else None
+        return {"hist": _sds((b, cfg.hist_len), jnp.int32, mesh, P(bd, None)),
+                "hist_mask": _sds((b, cfg.hist_len), jnp.bool_, mesh,
+                                  P(bd, None)),
+                "target": _sds((b,), jnp.int32, mesh, P(bd))}
+
+    if sh["kind"] == "train":
+        opt_cfg = opt_mod.AdamWConfig(master_weights=False)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        oshard = shr.tree_shardings(mesh, ospecs)
+        opt_s = _attach(jax.eval_shape(
+            functools.partial(opt_mod.adamw_init, cfg=opt_cfg), params_s),
+            oshard)
+        mb = getattr(mod, "MICROBATCHES", {}).get(shape_name, 1)
+        step = train_loop.make_mind_train_step(cfg, opt_cfg, microbatches=mb)
+        meta["microbatches"] = mb
+        meta["scan_mult"] = mb
+        out_sh = (jax.tree.map(lambda s: s.sharding, params_s),
+                  jax.tree.map(lambda s: s.sharding, opt_s), None)
+        return step, (params_s, opt_s, batch_structs(sh["batch"])), meta, out_sh
+
+    if sh["kind"] == "serve":
+        def fn(params, batch):
+            return mind_mod.serve_interests(cfg, params, batch)
+        return fn, (params_s, batch_structs(sh["batch"])), meta, None
+
+    if sh["kind"] == "retrieval":
+        def fn(params, batch, cand_ids):
+            ints = mind_mod.serve_interests(cfg, params, batch)
+            return mind_mod.retrieval_scores(cfg, params, ints[0], cand_ids)
+        ndev = int(np.prod(list(mesh.shape.values())))
+        n_cand = -(-sh["n_candidates"] // ndev) * ndev  # pad to mesh size
+        cand = _sds((n_cand,), jnp.int32, mesh, P(flat))
+        return fn, (params_s, batch_structs(sh["batch"]), cand), meta, None
+
+    raise ValueError(sh["kind"])

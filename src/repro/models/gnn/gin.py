@@ -1,0 +1,76 @@
+"""GIN (Graph Isomorphism Network) — arXiv:1810.00826.
+
+``h_v' = MLP((1 + eps) h_v + sum_{u in N(v)} h_u)`` with learnable eps
+(GIN-eps).  Assigned config (gin-tu): 5 layers, d_hidden=64, sum aggregator.
+
+Layer 0 (d_in -> d_hidden) is separate; the remaining uniform layers run as
+``lax.scan`` over stacked parameters — constant activation memory in depth
+(XLA reuses the scan body's collective buffers; a python loop over
+shard_map layers does not — see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import (GraphBatch, mlp_apply, mlp_init, masked_edges,
+                     seg_sum, shard0)
+from .sharded_ops import gather0, scatter_sum0
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_in: int = 64
+    n_classes: int = 16
+    graph_level: bool = False
+    dtype: object = jnp.float32
+    remat: bool = False
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: GINConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layer0 = {
+        "mlp": mlp_init(ks[0], [cfg.d_in, cfg.d_hidden, cfg.d_hidden],
+                        cfg.dtype),
+        "eps": jnp.zeros((), cfg.dtype),
+    }
+    rest = [{
+        "mlp": mlp_init(ks[i], [cfg.d_hidden, cfg.d_hidden, cfg.d_hidden],
+                        cfg.dtype),
+        "eps": jnp.zeros((), cfg.dtype),
+    } for i in range(1, cfg.n_layers)]
+    head = mlp_init(ks[-1], [cfg.d_hidden, cfg.n_classes], cfg.dtype)
+    return {"layer0": layer0, "layers": _stack(rest), "head": head}
+
+
+def forward(cfg: GINConfig, params, gb: GraphBatch):
+    h = gb.node_feat.astype(cfg.dtype)
+    n = h.shape[0]
+
+    def layer(h, lp):
+        msg = masked_edges(gb, gather0(gb.shard_ctx, h, gb.senders))
+        agg = scatter_sum0(gb.shard_ctx, msg, gb.receivers, n)
+        return shard0(gb, mlp_apply(lp["mlp"],
+                                    (1.0 + lp["eps"]) * h + agg))
+
+    h = layer(h, params["layer0"])
+
+    def body(h, lp):
+        if cfg.remat:
+            return jax.checkpoint(layer, prevent_cse=False)(h, lp), None
+        return layer(h, lp), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    if cfg.graph_level:
+        pooled = seg_sum(h, gb.graph_ids, gb.n_graphs)
+        return mlp_apply(params["head"], pooled)
+    return mlp_apply(params["head"], h)

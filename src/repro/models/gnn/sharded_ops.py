@@ -1,0 +1,104 @@
+"""Manually-sharded gather / segment-reduce primitives for full-batch GNNs.
+
+XLA's SPMD partitioner cannot partition a gather/scatter with arbitrary
+indices — it replicates the node operand, which at ogbn-products scale
+(2.45M x 70 fp32 = 0.69 GB x ~90 live buffers) blows per-device HBM.
+These primitives wrap the ops in ``shard_map`` so state stays sharded:
+
+* ``gather0``      — all-gather the (small) node table once, index locally:
+                     transient = one full node table per device.
+* ``scatter_sum0`` — local full-size accumulation + ``psum_scatter``:
+                     returns a node-sharded result, transient = one full
+                     node table.
+* ``scatter_max0/min0`` — same pattern via all_to_all reduce (the SSSP v2
+                     exchange — the paper's engine reused for GNN
+                     aggregation).
+
+All are differentiable (collectives have registered transposes).  When
+``gb.shard_ctx is None`` (single-device smoke tests) they reduce to plain
+jnp ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _nshards(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def gather0(ctx, table, idx):
+    """table [N, F] (dim0-sharded), idx [M] (dim0-sharded) -> [M, F]."""
+    if ctx is None:
+        return table[idx]
+    mesh, axes = ctx
+
+    def body(tbl, ix):
+        full = jax.lax.all_gather(tbl, axes, tiled=True)
+        return full[ix]
+
+    spec2 = P(axes, *([None] * (table.ndim - 1)))
+    return shard_map(body, mesh=mesh, in_specs=(spec2, P(axes)),
+                     out_specs=P(axes, *([None] * (table.ndim - 1))),
+                     check_rep=False)(table, idx)
+
+
+def scatter_sum0(ctx, values, idx, n):
+    """values [M, F] + idx [M] -> [n, F], all dim0-sharded."""
+    if ctx is None:
+        return jax.ops.segment_sum(values, idx, num_segments=n)
+    mesh, axes = ctx
+
+    def body(v, ix):
+        full = jax.ops.segment_sum(v, ix, num_segments=n)
+        return jax.lax.psum_scatter(full, axes, scatter_dimension=0,
+                                    tiled=True)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axes, *([None] * (values.ndim - 1))),
+                               P(axes)),
+                     out_specs=P(axes, *([None] * (values.ndim - 1))),
+                     check_rep=False)(values, idx)
+
+
+def _scatter_extreme(ctx, values, idx, n, kind):
+    """Reduce-scatter-{max,min} via a *hierarchical* per-axis all_to_all:
+    one k-way exchange per mesh axis (outermost first) instead of a single
+    P-way exchange — topology-aware (cross-pod traffic shrinks by the
+    already-reduced factor) and far cheaper to lower for 512-way meshes."""
+    if ctx is None:
+        op = jax.ops.segment_max if kind == "max" else jax.ops.segment_min
+        return op(values, idx, num_segments=n)
+    mesh, axes = ctx
+
+    def body(v, ix):
+        op = jax.ops.segment_max if kind == "max" else jax.ops.segment_min
+        part = op(v, ix, num_segments=n)              # [n, F] local partial
+        for a in axes:                                 # row-major = P(axes)
+            k = mesh.shape[a]
+            rows = part.reshape(k, part.shape[0] // k, *part.shape[1:])
+            recv = jax.lax.all_to_all(rows, a, split_axis=0, concat_axis=0,
+                                      tiled=False)
+            part = (jnp.max(recv, axis=0) if kind == "max"
+                    else jnp.min(recv, axis=0))
+        return part
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axes, *([None] * (values.ndim - 1))),
+                               P(axes)),
+                     out_specs=P(axes, *([None] * (values.ndim - 1))),
+                     check_rep=False)(values, idx)
+
+
+def scatter_max0(ctx, values, idx, n):
+    return _scatter_extreme(ctx, values, idx, n, "max")
+
+
+def scatter_min0(ctx, values, idx, n):
+    return _scatter_extreme(ctx, values, idx, n, "min")

@@ -1,0 +1,82 @@
+"""Shared neural-net building blocks (pure JAX, no flax).
+
+Parameters are plain dict pytrees; every init function takes an explicit
+``jax.random`` key and returns arrays in the requested dtype.  Compute is
+performed in ``compute_dtype`` (bf16 by default) with fp32 normalization
+statistics — the usual large-scale training recipe.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM codebases)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                        jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    """RMSNorm with fp32 statistics."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    """Rotary embedding inverse frequencies [head_dim//2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """Apply rotary embedding.  x: [..., seq, n_heads, head_dim],
+    positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv    # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_up, w_down):
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(u), w_down)
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Stable CE with fp32 logsumexp; labels [..., ] int; logits [..., V]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return loss

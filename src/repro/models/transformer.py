@@ -1,0 +1,528 @@
+"""Decoder-only transformer LM (dense + MoE) in pure JAX.
+
+Features required by the assigned architecture pool:
+  * GQA / MQA / MHA (``n_kv``), explicit ``head_dim`` (Qwen3 uses 128 with
+    d_model=1024), RoPE, optional qk-norm (Qwen3), SwiGLU or GELU MLP
+    (granite-34b uses the 2-matrix GELU MLP of gpt_bigcode).
+  * MoE layers with shared + routed experts, top-k routing, capacity-based
+    sort dispatch (DeepSeekMoE, granite-MoE) and a load-balance aux loss.
+  * Layer stack as ``lax.scan`` over stacked parameters (keeps HLO size and
+    compile time O(1) in depth — essential for the 88-layer dry-run) with
+    per-layer ``jax.checkpoint`` (remat).
+  * Optional sliding-window attention (bonus ``qwen3-0.6b-swa`` config for
+    the long-context cell) and sequence-sharded residual stream (Megatron
+    SP) via sharding constraints injected by ``repro.parallel``.
+
+Decode uses a KV cache ([L, B, S_cache, Kv, Dh] per K/V) updated at
+per-sequence positions; RoPE is applied pre-cache (absolute positions), so a
+ring buffer works for SWA decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import (apply_rope, dense_init, embed_init, gelu_mlp, rms_norm,
+                     softmax_cross_entropy, swiglu)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 => d_model // n_heads
+    mlp: str = "swiglu"               # "swiglu" | "gelu"
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0                 # shared (always-on) experts
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # attention
+    attn_window: int = 0              # 0 => full causal
+    tied_embed: bool = False          # lm_head = embed.T (qwen3, phi4)
+    # numerics
+    dtype: Any = jnp.bfloat16
+    # distribution
+    seq_shard: bool = False           # Megatron-SP residual stream
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def param_count(self) -> int:
+        d, hd, h, kv = self.d_model, self.hd, self.n_heads, self.n_kv
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        if self.moe:
+            e_ff = (3 if self.mlp == "swiglu" else 2) * d * self.d_ff
+            mlp = (self.n_experts + self.n_shared) * e_ff + d * self.n_experts
+        else:
+            mlp = (3 if self.mlp == "swiglu" else 2) * d * self.d_ff
+        per_layer = attn + mlp + 2 * d
+        n_embed = (1 if self.tied_embed else 2) * self.vocab * d
+        return (self.n_layers * per_layer + n_embed + d +
+                (2 * self.n_layers * hd if self.qk_norm else 0))
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key) -> dict:
+    d, hd, h, kv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    L = cfg.n_layers
+    keys = jax.random.split(key, 16)
+    dt = cfg.dtype
+
+    def stack(fn, key, *shape_args):
+        ks = jax.random.split(key, L)
+        return jnp.stack([fn(k, *shape_args) for k in ks])
+
+    # attention — init per-layer then stack (cheap at init time; the arrays
+    # are created once on host)
+    layer = {
+        "ln1": jnp.ones((L, d), dt),
+        "ln2": jnp.ones((L, d), dt),
+        "wq": stack(dense_init, keys[0], d, h * hd, dt),
+        "wk": stack(dense_init, keys[1], d, kv * hd, dt),
+        "wv": stack(dense_init, keys[2], d, kv * hd, dt),
+        "wo": stack(lambda k, a, b, t: dense_init(k, a, b, t,
+                    scale=1.0 / (a ** 0.5 * (2 * L) ** 0.5)),
+                    keys[3], h * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        layer["q_norm"] = jnp.ones((L, hd), dt)
+        layer["k_norm"] = jnp.ones((L, hd), dt)
+
+    if cfg.moe:
+        e = cfg.n_experts
+        f = cfg.d_ff
+
+        def estack(key, d_in, d_out, scale=None):
+            ks = jax.random.split(key, L * e).reshape(L, e, 2)
+            return jnp.stack([
+                jnp.stack([dense_init(ks[l, i], d_in, d_out, dt, scale)
+                           for i in range(e)]) for l in range(L)])
+
+        layer["router"] = stack(lambda k, a, b, t: dense_init(k, a, b, t),
+                                keys[4], d, e, jnp.float32)
+        layer["e_up"] = estack(keys[5], d, f)
+        layer["e_down"] = estack(keys[6], f, d,
+                                 scale=1.0 / (f ** 0.5 * (2 * L) ** 0.5))
+        if cfg.mlp == "swiglu":
+            layer["e_gate"] = estack(keys[7], d, f)
+        if cfg.n_shared:
+            fs = f * cfg.n_shared
+            layer["s_up"] = stack(dense_init, keys[8], d, fs, dt)
+            layer["s_down"] = stack(lambda k, a, b, t: dense_init(
+                k, a, b, t, scale=1.0 / (a ** 0.5 * (2 * L) ** 0.5)),
+                keys[9], fs, d, dt)
+            if cfg.mlp == "swiglu":
+                layer["s_gate"] = stack(dense_init, keys[10], d, fs, dt)
+    else:
+        layer["w_up"] = stack(dense_init, keys[4], d, cfg.d_ff, dt)
+        layer["w_down"] = stack(lambda k, a, b, t: dense_init(
+            k, a, b, t, scale=1.0 / (a ** 0.5 * (2 * L) ** 0.5)),
+            keys[5], cfg.d_ff, d, dt)
+        if cfg.mlp == "swiglu":
+            layer["w_gate"] = stack(dense_init, keys[6], d, cfg.d_ff, dt)
+
+    out = {
+        "embed": embed_init(keys[11], cfg.vocab, d, dt),
+        "layers": layer,
+        "ln_f": jnp.ones((d,), dt),
+    }
+    if not cfg.tied_embed:
+        out["lm_head"] = dense_init(keys[12], d, cfg.vocab, dt)
+    return out
+
+
+def _logits(cfg: LMConfig, params, x, two_d: bool = False):
+    if cfg.tied_embed:
+        eq = "bd,vd->bv" if two_d else "bsd,vd->bsv"
+        return jnp.einsum(eq, x, params["embed"])
+    eq = "bd,dv->bv" if two_d else "bsd,dv->bsv"
+    return jnp.einsum(eq, x, params["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# attention / mlp / moe blocks
+# ---------------------------------------------------------------------------
+
+def _constrain(x, spec: Optional[P]):
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # outside a mesh context (single-device smoke tests)
+
+
+def _sdpa_dense(cfg: LMConfig, q, k_all, v_all, positions, t_pos, causal):
+    """Materialized-scores attention (small S only / smoke tests)."""
+    hd = cfg.hd
+    scores = jnp.einsum("bskhd,btkd->bskht", q, k_all).astype(jnp.float32)
+    scores = scores / (hd ** 0.5)
+    qp = positions[:, :, None, None, None]
+    tp = t_pos[:, None, None, None, :]
+    mask = jnp.ones_like(scores, bool)
+    if causal:
+        mask &= tp <= qp
+    if cfg.attn_window:
+        mask &= tp > qp - cfg.attn_window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (padding) produce NaN; zero them
+    probs = jnp.where(jnp.any(mask, axis=-1, keepdims=True), probs, 0.0)
+    return jnp.einsum("bskht,btkd->bskhd", probs.astype(q.dtype), v_all)
+
+
+def _sdpa_blockwise(cfg: LMConfig, q, k_all, v_all, positions, t_pos, causal,
+                    block_q: int = 512, block_k: int = 1024):
+    """Online-softmax blockwise attention (the XLA 'flash' fallback; the
+    Pallas kernel in repro/kernels/flash_attn implements the same schedule
+    for TPU).  Never materializes the S x T score matrix: peak extra memory
+    is one (block_q x block_k) tile per head group."""
+    b, s, kv, hg, hd = q.shape
+    t = k_all.shape[1]
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    nq, nk = -(-s // bq), -(-t // bk)
+    pad_q, pad_k = nq * bq - s, nk * bk - t
+    qp = jnp.pad(positions, ((0, 0), (0, pad_q)))
+    tp = jnp.pad(t_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    qb = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kb = jnp.pad(k_all, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vb = jnp.pad(v_all, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qb = qb.reshape(b, nq, bq, kv, hg, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = kb.reshape(b, nk, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = vb.reshape(b, nk, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    qp = qp.reshape(b, nq, bq).transpose(1, 0, 2)
+    tp = tp.reshape(b, nk, bk).transpose(1, 0, 2)
+    scale = 1.0 / (hd ** 0.5)
+
+    def q_block(args):
+        qi, qpi = args                            # [B,bq,KV,HG,HD], [B,bq]
+
+        def kv_step(carry, kv_args):
+            m, l, acc = carry
+            ki, vi, tpi = kv_args
+            sc = jnp.einsum("bskhd,btkd->bskht", qi, ki
+                            ).astype(jnp.float32) * scale
+            msk = tpi[:, None, None, None, :] >= 0
+            if causal:
+                msk &= tpi[:, None, None, None, :] <= \
+                    qpi[:, :, None, None, None]
+            if cfg.attn_window:
+                msk &= tpi[:, None, None, None, :] > \
+                    qpi[:, :, None, None, None] - cfg.attn_window
+            sc = jnp.where(msk, sc, -jnp.inf)
+            m2 = jnp.maximum(m, jnp.max(sc, axis=-1))
+            m2s = jnp.where(jnp.isfinite(m2), m2, 0.0)
+            p = jnp.exp(sc - m2s[..., None])
+            p = jnp.where(msk, p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m2s, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            l2 = l * corr + jnp.sum(p, axis=-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bskht,btkd->bskhd", p.astype(qi.dtype), vi
+            ).astype(jnp.float32)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((b, bq, kv, hg), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, bq, kv, hg), jnp.float32)
+        a0 = jnp.zeros((b, bq, kv, hg, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, tp))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(q_block, (qb, qp))          # [nq, B, bq, KV, HG, HD]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * bq, kv, hg, hd)
+    return out[:, :s].astype(q.dtype)
+
+
+def attention(cfg: LMConfig, lp: dict, x, positions, kv_positions=None,
+              k_cache=None, v_cache=None, causal=True):
+    """Attention dispatcher.  x: [B, S, D].  If k_cache/v_cache are given
+    they are the *full* key/value set (decode); otherwise self-attention.
+    Large S*T uses the blockwise online-softmax path (never materializes
+    S x T scores)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, lp["wq"]).reshape(b, s, kv, h // kv, hd)
+    k = jnp.einsum("bsd,de->bse", x, lp["wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,de->bse", x, lp["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    # RoPE (positions: [B, S])
+    q = apply_rope(q.reshape(b, s, kv * (h // kv), hd), positions,
+                   cfg.rope_theta).reshape(b, s, kv, h // kv, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if k_cache is not None:
+        k_all, v_all = k_cache, v_cache          # [B, T, KV, HD]
+        t_pos = kv_positions                     # [B, T]
+    else:
+        k_all, v_all, t_pos = k, v, positions
+
+    t = k_all.shape[1]
+    if s * t > (1 << 21):
+        out = _sdpa_blockwise(cfg, q, k_all, v_all, positions, t_pos, causal)
+    else:
+        out = _sdpa_dense(cfg, q, k_all, v_all, positions, t_pos, causal)
+    out = out.reshape(b, s, h * hd)
+    return jnp.einsum("bse,ed->bsd", out, lp["wo"]), k, v
+
+
+def moe_block(cfg: LMConfig, lp: dict, x):
+    """Top-k routed experts with capacity-based sort dispatch + shared experts.
+
+    Returns (y, aux_loss).  x: [B, S, D] -> flattened token dispatch.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(b * s, d)
+    t = b * s
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), lp["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                    # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): e * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean((jax.nn.one_hot(idx, e).sum(1)), axis=0)
+    aux = cfg.aux_loss_coef * e * jnp.sum(me * ce)
+
+    cap = max(int(t * k / e * cfg.capacity_factor), 8)
+    # sort token-choice pairs by expert; rank within expert via searchsorted
+    flat_e = idx.reshape(-1)                               # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sg = flat_e[order], flat_t[order], flat_g[order]
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(t * k, dtype=jnp.int32) - first
+    keep = rank < cap
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, se, 0),
+                 jnp.where(keep, rank, 0)].add(
+        jnp.where(keep[:, None], xt[st_], 0.0))
+
+    act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+    if cfg.mlp == "swiglu":
+        gph = jnp.einsum("ecd,edf->ecf", buf, lp["e_gate"])
+        up = jnp.einsum("ecd,edf->ecf", buf, lp["e_up"])
+        hidden = act(gph) * up
+    else:
+        hidden = act(jnp.einsum("ecd,edf->ecf", buf, lp["e_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", hidden, lp["e_down"])
+
+    y_tok = out_buf[se, jnp.minimum(rank, cap - 1)]        # [T*k, D]
+    y_tok = jnp.where(keep[:, None], y_tok, 0.0) * sg[:, None].astype(x.dtype)
+    y = jax.ops.segment_sum(y_tok, st_, num_segments=t)
+
+    if cfg.n_shared:
+        if cfg.mlp == "swiglu":
+            y = y + swiglu(xt, lp["s_gate"], lp["s_up"], lp["s_down"])
+        else:
+            y = y + gelu_mlp(xt, lp["s_up"], lp["s_down"])
+    return y.reshape(b, s, d), aux
+
+
+def mlp_block(cfg: LMConfig, lp: dict, x):
+    if cfg.moe:
+        return moe_block(cfg, lp, x)
+    if cfg.mlp == "swiglu":
+        return swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"]), 0.0
+    return gelu_mlp(x, lp["w_up"], lp["w_down"]), 0.0
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: LMConfig, act_spec):
+    def body(x, lp, positions):
+        a, _, _ = attention(cfg, lp, rms_norm(x, lp["ln1"]), positions)
+        x = _constrain(x + a, act_spec)
+        m, aux = mlp_block(cfg, lp, rms_norm(x, lp["ln2"]))
+        x = _constrain(x + m, act_spec)
+        return x, aux
+    return body
+
+
+def forward(cfg: LMConfig, params: dict, tokens, act_spec: Optional[P] = None):
+    """Training/prefill forward: tokens [B, S] -> logits [B, S, V]."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = _constrain(x, act_spec)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    body = _layer_fwd(cfg, act_spec)
+
+    def scan_body(carry, lp):
+        x, aux = carry
+        if cfg.remat:
+            x2, a = jax.checkpoint(
+                lambda x_, lp_: body(x_, lp_, positions),
+                prevent_cse=False)(x, lp)
+        else:
+            x2, a = body(x, lp, positions)
+        return (x2, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0.0)),
+                               params["layers"])
+    x = rms_norm(x, params["ln_f"])
+    logits = _logits(cfg, params, x)
+    return logits, aux / cfg.n_layers
+
+
+def loss_fn(cfg: LMConfig, params: dict, batch: dict,
+            act_spec: Optional[P] = None):
+    logits, aux = forward(cfg, params, batch["tokens"], act_spec)
+    loss = softmax_cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    mask = batch.get("mask")
+    if mask is not None:
+        loss = (loss * mask[:, 1:]).sum() / jnp.maximum(mask[:, 1:].sum(), 1)
+    else:
+        loss = loss.mean()
+    return loss + aux, {"loss": loss, "aux": aux}
+
+
+# --- serving ---------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, s_cache: int):
+    hd, kv, L = cfg.hd, cfg.n_kv, cfg.n_layers
+    shape = (L, batch, s_cache, kv, hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(cfg: LMConfig, params: dict, tokens, s_cache: int,
+            act_spec: Optional[P] = None, batch_chunks: int = 1):
+    """Run the prompt, return (cache, last_logits).
+
+    ``batch_chunks > 1`` processes the request batch in sequential groups
+    (lax.map) — chunked prefill in the batch dimension, bounding the MoE
+    dispatch buffers and attention working set to one group at a time.
+    """
+    if batch_chunks > 1:
+        b, s = tokens.shape
+        g = b // batch_chunks
+        tok_g = tokens.reshape(batch_chunks, g, s)
+
+        def one(tg):
+            return prefill(cfg, params, tg, s_cache, act_spec, 1)
+
+        cache_g, logits_g = jax.lax.map(one, tok_g)
+        cache = {
+            "k": jnp.moveaxis(cache_g["k"], 0, 1).reshape(
+                cfg.n_layers, b, s_cache, cfg.n_kv, cfg.hd),
+            "v": jnp.moveaxis(cache_g["v"], 0, 1).reshape(
+                cfg.n_layers, b, s_cache, cfg.n_kv, cfg.hd),
+            "pos": cache_g["pos"].reshape(b),
+        }
+        return cache, logits_g.reshape(b, -1)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = _constrain(x, act_spec)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def scan_body(x, lp):
+        a, k, v = attention(cfg, lp, rms_norm(x, lp["ln1"]), positions)
+        x = _constrain(x + a, act_spec)
+        m, _ = mlp_block(cfg, lp, rms_norm(x, lp["ln2"]))
+        x = _constrain(x + m, act_spec)
+        kk = k.reshape(b, s, cfg.n_kv, cfg.hd)
+        vv = v.reshape(b, s, cfg.n_kv, cfg.hd)
+        return x, (kk, vv)
+
+    body = jax.checkpoint(scan_body, prevent_cse=False) if cfg.remat \
+        else scan_body
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["ln_f"])
+    logits = _logits(cfg, params, x[:, -1], two_d=True)
+    pad = s_cache - s
+    if pad < 0:
+        raise ValueError("cache smaller than prompt")
+    k_cache = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v_cache = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k_cache, "v": v_cache,
+             "pos": jnp.full((b,), s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict, tok,
+                act_spec: Optional[P] = None):
+    """One decode step.  tok: [B] int32.  Returns (logits [B, V], cache)."""
+    b = tok.shape[0]
+    s_cache = cache["k"].shape[2]
+    pos = cache["pos"]                                   # [B]
+    x = params["embed"][tok][:, None, :].astype(cfg.dtype)   # [B, 1, D]
+    kv_pos_base = jnp.arange(s_cache, dtype=jnp.int32)
+
+    if cfg.attn_window and s_cache == cfg.attn_window:
+        write_at = pos % s_cache                          # ring buffer
+        # absolute position of each cache slot given the ring write pattern:
+        # slots <= pos%S were (re)written this lap (incl. the new token),
+        # slots beyond hold the previous lap; negatives (= never written in
+        # lap 0) are masked out by the tp >= 0 test in the attention mask.
+        laps = (pos[:, None] // s_cache) * s_cache + kv_pos_base[None, :]
+        kv_positions = jnp.where(kv_pos_base[None, :] <= (pos[:, None] %
+                                 s_cache), laps, laps - s_cache)
+    else:
+        write_at = pos
+        kv_positions = jnp.broadcast_to(kv_pos_base, (b, s_cache))
+
+    def scan_body(x, xs):
+        lp, kc, vc = xs                                   # kc: [B, T, KV, HD]
+        xn = rms_norm(x, lp["ln1"])
+        # project new k/v, write into cache, attend over the full cache
+        q = jnp.einsum("bsd,de->bse", xn, lp["wq"]).reshape(
+            b, 1, cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.hd)
+        k = jnp.einsum("bsd,de->bse", xn, lp["wk"]).reshape(b, 1, cfg.n_kv,
+                                                            cfg.hd)
+        v = jnp.einsum("bsd,de->bse", xn, lp["wv"]).reshape(b, 1, cfg.n_kv,
+                                                            cfg.hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k = rms_norm(k, lp["k_norm"])
+        q = apply_rope(q.reshape(b, 1, -1, cfg.hd), pos[:, None],
+                       cfg.rope_theta).reshape(q.shape)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        kc = kc.at[jnp.arange(b), write_at].set(k[:, 0])
+        vc = vc.at[jnp.arange(b), write_at].set(v[:, 0])
+        scores = jnp.einsum("bskhd,btkd->bskht", q, kc).astype(jnp.float32)
+        scores = scores / (cfg.hd ** 0.5)
+        tp = kv_positions[:, None, None, None, :]
+        qp = pos[:, None, None, None, None]
+        mask = (tp <= qp) & (tp >= 0)
+        if cfg.attn_window:
+            mask &= tp > qp - cfg.attn_window
+        scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = jnp.where(jnp.any(mask, -1, keepdims=True), probs, 0.0)
+        out = jnp.einsum("bskht,btkd->bskhd", probs.astype(x.dtype), vc)
+        out = out.reshape(b, 1, cfg.n_heads * cfg.hd)
+        x = x + jnp.einsum("bse,ed->bsd", out, lp["wo"])
+        m, _ = mlp_block(cfg, lp, rms_norm(x, lp["ln2"]))
+        return x + m, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(scan_body, x, (params["layers"], cache["k"],
+                                              cache["v"]))
+    x = rms_norm(x, params["ln_f"])
+    logits = _logits(cfg, params, x[:, 0], two_d=True)
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,157 @@
+"""Sharding rules: parameter / batch / activation PartitionSpecs per family.
+
+Axis conventions (launch/mesh.py):
+  single-pod mesh (16, 16)  -> ("data", "model")
+  multi-pod  mesh (2,16,16) -> ("pod", "data", "model")
+
+DP = batch over ("pod","data"); TP = heads/ffn/vocab over "model";
+FSDP = parameter d_model dims over "data"; EP = experts over "model"
+(falling back to expert-TP when n_experts doesn't divide the axis, e.g.
+granite-moe's 40 experts on a 16-wide axis); SP = optional residual-stream
+sequence sharding over "model" (Megatron-SP) for the deep 34B config.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..models.transformer import LMConfig
+
+
+def dp_axes(mesh) -> tuple:
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def lm_param_specs(cfg: LMConfig, mesh, fsdp: bool = True):
+    """PartitionSpec tree matching ``transformer.init_params`` output."""
+    model = "model" if "model" in mesh.axis_names else None
+    msz = mesh.shape.get("model", 1)
+    data = "data" if fsdp and "data" in mesh.axis_names else None
+    dsz = mesh.shape.get("data", 1) if data else 1
+    d_ok = _div(cfg.d_model, max(dsz, 1))
+    dshard = data if d_ok else None
+
+    def tp(dim_model_sz: int):
+        return model if _div(dim_model_sz, msz) else None
+
+    hd_all = cfg.n_heads * cfg.hd
+    kv_all = cfg.n_kv * cfg.hd
+    layer = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "wq": P(None, dshard, tp(hd_all)),
+        "wk": P(None, dshard, tp(kv_all)),
+        "wv": P(None, dshard, tp(kv_all)),
+        "wo": P(None, tp(hd_all), dshard),
+    }
+    if cfg.qk_norm:
+        layer["q_norm"] = P(None, None)
+        layer["k_norm"] = P(None, None)
+    if cfg.moe:
+        ep = _div(cfg.n_experts, msz)          # expert-parallel possible?
+        if ep:
+            layer["router"] = P(None, None, None)
+            layer["e_up"] = P(None, model, dshard, None)
+            layer["e_down"] = P(None, model, None, dshard)
+            if cfg.mlp == "swiglu":
+                layer["e_gate"] = P(None, model, dshard, None)
+        else:                                   # expert-TP fallback
+            layer["router"] = P(None, None, None)
+            layer["e_up"] = P(None, None, dshard, tp(cfg.d_ff))
+            layer["e_down"] = P(None, None, tp(cfg.d_ff), dshard)
+            if cfg.mlp == "swiglu":
+                layer["e_gate"] = P(None, None, dshard, tp(cfg.d_ff))
+        if cfg.n_shared:
+            fs = cfg.d_ff * cfg.n_shared
+            layer["s_up"] = P(None, dshard, tp(fs))
+            layer["s_down"] = P(None, tp(fs), dshard)
+            if cfg.mlp == "swiglu":
+                layer["s_gate"] = P(None, dshard, tp(fs))
+    else:
+        layer["w_up"] = P(None, dshard, tp(cfg.d_ff))
+        layer["w_down"] = P(None, tp(cfg.d_ff), dshard)
+        if cfg.mlp == "swiglu":
+            layer["w_gate"] = P(None, dshard, tp(cfg.d_ff))
+
+    out = {
+        "embed": P(tp(cfg.vocab), dshard),
+        "layers": layer,
+        "ln_f": P(None),
+    }
+    if not cfg.tied_embed:
+        out["lm_head"] = P(dshard, tp(cfg.vocab))
+    return out
+
+
+def lm_batch_specs(mesh):
+    dp = dp_axes(mesh)
+    return {"tokens": P(dp, None)}
+
+
+def lm_act_spec(cfg: LMConfig, mesh) -> Optional[P]:
+    dp = dp_axes(mesh)
+    if cfg.seq_shard and "model" in mesh.axis_names:
+        return P(dp, "model", None)
+    return P(dp, None, None)
+
+
+def lm_cache_specs(cfg: LMConfig, mesh, shard_seq: bool = False,
+                   batch: int = 0):
+    """KV cache [L, B, S, KV, HD].  ``batch``: guard divisibility (0=skip)."""
+    dp = dp_axes(mesh)
+    if batch:
+        dsz = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        if batch % max(dsz, 1) != 0:
+            dp = None
+    seq = "model" if shard_seq and "model" in mesh.axis_names else None
+    kv = None
+    if not shard_seq and _div(cfg.n_kv, mesh.shape.get("model", 1)):
+        kv = "model"
+    return {"k": P(None, dp, seq, kv, None),
+            "v": P(None, dp, seq, kv, None),
+            "pos": P(dp)}
+
+
+def opt_state_specs(param_specs: dict) -> dict:
+    """AdamW state mirrors param sharding (m, v, master)."""
+    return {"m": param_specs, "v": param_specs, "step": P(),
+            "master": param_specs}
+
+
+def tree_shardings(mesh, spec_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# --- GNN -------------------------------------------------------------------
+
+def gnn_full_graph_specs(mesh):
+    """Full-batch node/edge arrays sharded over every mesh axis."""
+    flat = tuple(n for n in mesh.axis_names)
+    return {
+        "node_feat": P(flat, None), "senders": P(flat), "receivers": P(flat),
+        "labels": P(flat), "pos": P(flat, None),
+        "triplet": P(flat),
+    }
+
+
+# --- recsys ----------------------------------------------------------------
+
+def mind_param_specs(mesh):
+    model = "model" if "model" in mesh.axis_names else None
+    return {"item_embed": P(model, None), "s_map": P(None, None)}
+
+
+def mind_batch_specs(mesh):
+    dp = dp_axes(mesh)
+    return {"hist": P(dp, None), "hist_mask": P(dp, None), "target": P(dp)}

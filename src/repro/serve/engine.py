@@ -1,0 +1,105 @@
+"""Batched serving engine: continuous batching over prefill/decode steps.
+
+Production pattern on top of the transformer serving primitives
+(repro.models.transformer.prefill / decode_step):
+
+* a slot-based KV cache: ``max_batch`` sequences decode in lock-step;
+  finished slots are refilled from the request queue (continuous
+  batching, vLLM-style at the granularity XLA likes — fixed shapes).
+* prefill runs per admitted request (padded to ``prompt_pad``) and its
+  KV rows are scattered into the decode cache slots.
+
+Single-host reference implementation; the decode step itself is the
+distributed object (the decode_32k dry-run cells lower exactly this fn).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [L] int32
+    max_new: int
+    out: Optional[list] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: T.LMConfig, params, *, max_batch: int = 8,
+                 s_cache: int = 256, prompt_pad: int = 64,
+                 eos_id: int = -1):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.s_cache = s_cache
+        self.prompt_pad = prompt_pad
+        self.eos = eos_id
+        self.cache = T.init_cache(cfg, max_batch, s_cache)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_remaining = np.zeros(max_batch, np.int64)
+        self.cur_tok = jnp.zeros((max_batch,), jnp.int32)
+        self.queue: List[Request] = []
+        self._prefill = jax.jit(
+            lambda p, t: T.prefill(cfg, p, t, s_cache))
+        self._decode = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t))
+
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            pad = self.prompt_pad - len(req.prompt) % self.prompt_pad
+            pad = pad % self.prompt_pad
+            prompt = np.pad(req.prompt, (pad, 0))[None, :]  # left pad
+            cache, logits = self._prefill(self.params, jnp.asarray(prompt))
+            # scatter the prefilled KV rows into this slot
+            self.cache["k"] = self.cache["k"].at[:, slot].set(cache["k"][:, 0])
+            self.cache["v"] = self.cache["v"].at[:, slot].set(cache["v"][:, 0])
+            self.cache["pos"] = self.cache["pos"].at[slot].set(
+                cache["pos"][0])
+            tok = jnp.argmax(logits[0]).astype(jnp.int32)
+            self.cur_tok = self.cur_tok.at[slot].set(tok)
+            req.out.append(int(tok))
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new - 1
+
+    def step(self):
+        """One lock-step decode over all active slots."""
+        self._admit()
+        if all(r is None for r in self.slot_req):
+            return False
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.cur_tok)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.cur_tok = nxt
+        nxt_np = np.asarray(nxt)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.out.append(int(nxt_np[slot]))
+            self.slot_remaining[slot] -= 1
+            done = (self.slot_remaining[slot] <= 0 or
+                    int(nxt_np[slot]) == self.eos)
+            if done:
+                self.slot_req[slot] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

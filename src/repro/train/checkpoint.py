@@ -1,0 +1,125 @@
+"""Checkpoint / restore with elastic resharding.
+
+Layout (one directory per step, atomic rename on completion):
+
+    <dir>/step_000123/
+        manifest.json      {keypath: {file, shape, dtype}}, step, meta
+        <keypath>.npy      one file per pytree leaf
+
+Leaves are written from fully-gathered host copies (single-process
+container); the manifest schema carries a ``shards`` field so a multi-host
+deployment writes per-host shard files under the same contract.  Restore
+rebuilds the pytree from keypaths and ``device_put``s each leaf with the
+*target* sharding — which may belong to a different mesh shape than the one
+that saved it (elastic restart).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"[{p.idx}]")
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def save(directory: str, step: int, tree: Any, meta: Optional[dict] = None,
+         blocking: bool = True):
+    """Write a checkpoint; returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    host = []
+    for p, x in flat:
+        arr = np.asarray(jax.device_get(x))
+        dt = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:   # np.save can't round-trip ml_dtypes
+            arr = arr.astype(np.float32)
+        host.append((_path_str(p), arr, dt))
+
+    def write():
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "meta": meta or {}, "shards": 1,
+                    "leaves": {}}
+        for name, arr, dt in host:
+            fn = name.replace("/", "_") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][name] = {
+                "file": fn, "shape": list(arr.shape), "dtype": dt}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+        return final
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return final, t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: Optional[int] = None,
+            target_tree: Any = None, shardings: Any = None):
+    """Load a checkpoint.
+
+    If ``target_tree`` is given, the loaded leaves are arranged into its
+    structure (and dtypes are cast to match); ``shardings`` (a matching
+    pytree of jax.sharding.Sharding or None) reshards onto the current mesh
+    — this is the elastic-restart path: the checkpoint does not remember
+    the old mesh, so any new mesh works.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {}
+    for name, info in manifest["leaves"].items():
+        by_name[name] = np.load(os.path.join(path, info["file"]))
+
+    if target_tree is None:
+        return by_name, manifest
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (p, ref), sh in zip(flat, shard_flat):
+        name = _path_str(p)
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = by_name[name]
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{arr.shape} vs {ref.shape}")
+        arr = jnp.asarray(arr).astype(ref.dtype)  # jnp handles bf16 casts
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest

@@ -1,0 +1,117 @@
+"""Train-step builders (per architecture family) + microbatch accumulation.
+
+``make_*_train_step`` returns a pure function suitable for ``jax.jit`` with
+donated (params, opt_state); gradient accumulation over microbatches is a
+``lax.scan`` so memory stays O(1 microbatch).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from ..models.gnn import common as gnn_common
+from ..models.recsys import mind as mind_mod
+from . import optimizer as opt_mod
+
+
+def _accumulate(loss_fn, params, batch, microbatches: int):
+    """Mean-gradient accumulation over leading-dim splits of ``batch``."""
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+    mb = jax.tree.map(split, batch)
+
+    def body(carry, mb_i):
+        acc, loss_acc = carry
+        (loss, _), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb_i)
+        acc = jax.tree.map(jnp.add, acc, grads)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), mb)
+    grads = jax.tree.map(lambda g: g / microbatches, grads)
+    loss = loss_sum / microbatches
+    return loss, {"loss": loss}, grads
+
+
+def make_lm_train_step(cfg: transformer.LMConfig,
+                       opt_cfg: opt_mod.AdamWConfig,
+                       act_spec=None, microbatches: int = 1):
+    def loss_fn(params, batch):
+        return transformer.loss_fn(cfg, params, batch, act_spec)
+
+    def step(params, opt_state, batch):
+        loss, metrics, grads = _accumulate(loss_fn, params, batch,
+                                           microbatches)
+        params, opt_state, om = opt_mod.adamw_update(params, grads,
+                                                     opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return step
+
+
+def make_gnn_train_step(forward: Callable, cfg, opt_cfg,
+                        graph_level: bool = False, microbatches: int = 1):
+    """``forward(cfg, params, gb) -> logits`` + CE on labels."""
+
+    def loss_fn(params, gb):
+        logits = forward(cfg, params, gb)
+        if graph_level:
+            labels = gb.labels
+            loss = gnn_common.node_ce_loss(logits, labels)
+        else:
+            loss = gnn_common.node_ce_loss(logits, gb.labels)
+        return loss, {"loss": loss}
+
+    def step(params, opt_state, gb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, gb)
+        params, opt_state, om = opt_mod.adamw_update(params, grads,
+                                                     opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return step
+
+
+def make_gnn_regression_step(forward: Callable, cfg, opt_cfg):
+    """Graph-level regression (molecule shapes)."""
+
+    def loss_fn(params, gb):
+        pred = forward(cfg, params, gb)
+        loss = jnp.mean((pred.reshape(-1) -
+                         gb.labels.astype(jnp.float32).reshape(-1)) ** 2)
+        return loss, {"loss": loss}
+
+    def step(params, opt_state, gb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, gb)
+        params, opt_state, om = opt_mod.adamw_update(params, grads,
+                                                     opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return step
+
+
+def make_mind_train_step(cfg: mind_mod.MINDConfig, opt_cfg,
+                         microbatches: int = 1):
+    def loss_fn(params, batch):
+        return mind_mod.train_loss(cfg, params, batch)
+
+    def step(params, opt_state, batch):
+        loss, metrics, grads = _accumulate(loss_fn, params, batch,
+                                           microbatches)
+        params, opt_state, om = opt_mod.adamw_update(params, grads,
+                                                     opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return step

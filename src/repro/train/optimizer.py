@@ -1,0 +1,125 @@
+"""Optimizers in pure JAX (no optax in this container — built from scratch).
+
+AdamW with:
+  * fp32 first/second moments and optional fp32 master weights (params may
+    be bf16 — the standard mixed-precision recipe),
+  * global-norm gradient clipping,
+  * linear-warmup + cosine-decay schedule.
+
+States are pytrees mirroring the parameter tree, so the same PartitionSpecs
+shard them (FSDP keeps optimizer state fully sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    master_weights: bool = True
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"m": zeros,
+             "v": jax.tree.map(jnp.zeros_like, zeros),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else 1.0
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    ref = state.get("master", params)
+
+    def upd(p_ref, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        p32 = p_ref.astype(jnp.float32)
+        p2 = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                         + cfg.weight_decay * p32)
+        return p2, m2, v2
+
+    flat_ref, treedef = jax.tree.flatten(ref)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    outs = [upd(*args) for args in zip(flat_ref, flat_g, flat_m, flat_v)]
+    new_ref = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+
+    pdtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda p32, dt: p32.astype(dt), new_ref,
+                              pdtypes)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_ref
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.1
+    momentum: float = 0.9
+    clip_norm: float = 0.0
+
+
+def sgd_init(params, cfg: SGDConfig):
+    return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(params, grads, state, cfg: SGDConfig):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else 1.0
+    new_mom = jax.tree.map(
+        lambda m, g: cfg.momentum * m + g.astype(jnp.float32) * scale,
+        state["mom"], grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - cfg.lr * m).astype(p.dtype),
+        params, new_mom)
+    return new_params, {"mom": new_mom, "step": state["step"] + 1}, {
+        "grad_norm": gnorm}

@@ -1,0 +1,33 @@
+"""Baseline SSSP implementations agree with the Dijkstra oracle."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import bellman_ford, delta_stepping, dijkstra_host
+from repro.data.generators import kronecker, road_grid
+
+
+@pytest.fixture(scope="module", params=["kron", "road"])
+def graph(request):
+    if request.param == "kron":
+        return kronecker(10, 8, seed=11)
+    return road_grid(24, seed=12)
+
+
+def test_bellman_ford(graph):
+    src = int(np.argmax(graph.deg))
+    dist, _, m = bellman_ford(graph.to_device(), src)
+    dref, _ = dijkstra_host(graph, src)
+    np.testing.assert_allclose(
+        np.where(np.isfinite(dist), dist, -1),
+        np.where(np.isfinite(dref), dref, -1), rtol=1e-4, atol=1e-5)
+    assert int(m.n_rounds) > 0
+
+
+@pytest.mark.parametrize("delta", [0.1, 0.3, 1.0])
+def test_delta_stepping(graph, delta):
+    src = int(np.argmax(graph.deg))
+    dist, _, m = delta_stepping(graph.to_device(), src, delta)
+    dref, _ = dijkstra_host(graph, src)
+    np.testing.assert_allclose(
+        np.where(np.isfinite(dist), dist, -1),
+        np.where(np.isfinite(dref), dref, -1), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,79 @@
+"""Data pipeline: generators, weight variants, sampler, determinism."""
+import numpy as np
+import pytest
+
+from repro.data.generators import kronecker, road_grid, uniform_random
+from repro.data.sampler import NeighborSampler
+from repro.data.synthetic import LMTokenStream, RecsysStream
+from repro.data.triplets import build_triplets
+from repro.data.weights import discretize, converge, make_variant
+
+
+def test_kronecker_shapes():
+    g = kronecker(8, 4, seed=0)
+    assert g.n == 256
+    assert g.m <= 2 * 4 * 256
+    assert (g.w > 0).all() and (g.w <= 1).all()
+    # CSR rows sorted by weight (paper preprocessing)
+    for u in range(0, g.n, 37):
+        row = g.w[g.row_ptr[u]:g.row_ptr[u + 1]]
+        assert np.all(np.diff(row) >= 0)
+
+
+def test_weight_variants():
+    w = np.random.default_rng(0).random(10000)
+    for power in [1, 2, 4, 10]:
+        d = discretize(w, power)
+        assert d.min() >= 1 and d.max() <= 2 ** power - 1
+    for pivot in [0.1, 0.5, 0.9]:
+        c = converge(w, pivot)
+        assert (c >= 0).all() and (c <= 1).all()
+        # half of the new weights are below the pivot (paper §4.2)
+        assert abs((c < pivot).mean() - 0.5) < 0.05
+
+
+def test_make_variant_graph():
+    g = kronecker(8, 4, seed=1)
+    gv = make_variant(g, power=3)
+    assert gv.m == g.m
+    assert gv.max_w <= 7
+    gv2 = make_variant(g, pivot=0.3)
+    assert 0 <= gv2.w.min() and gv2.w.max() <= 1
+
+
+def test_neighbor_sampler_fanout():
+    g = kronecker(10, 8, seed=2)
+    s = NeighborSampler(g.row_ptr, g.dst, fanouts=(15, 10), seed=0)
+    seeds = np.where(g.deg > 0)[0][:64]
+    batch = s.sample(seeds)
+    assert len(batch.blocks) == 2
+    b0 = batch.blocks[0]
+    assert b0.senders.shape[0] == 64 * 15
+    # sampled neighbors are real neighbors
+    for i in range(0, 64 * 15, 97):
+        if not b0.edge_mask[i]:
+            continue
+        src_g = b0.src_nodes[b0.senders[i]]
+        dst_g = b0.dst_nodes[b0.receivers[i]]
+        row = g.dst[g.row_ptr[dst_g]:g.row_ptr[dst_g + 1]]
+        assert src_g in row
+
+
+def test_triplets_share_pivot_vertex():
+    g = uniform_random(50, 200, seed=3)
+    tkj, tji, mask = build_triplets(g.src, g.dst, cap=4)
+    idx = np.where(mask)[0]
+    # edge (k->j) feeds edge (j->i): receiver of kj == sender of ji, k != i
+    assert np.all(g.dst[tkj[idx]] == g.src[tji[idx]])
+    assert np.all(g.src[tkj[idx]] != g.dst[tji[idx]])
+
+
+def test_streams_deterministic():
+    s = LMTokenStream(1000, seed=5)
+    a = s.batch(3, 4, 32)
+    b = s.batch(3, 4, 32)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, s.batch(4, 4, 32))
+    r = RecsysStream(1000, 10, seed=5)
+    np.testing.assert_array_equal(r.batch(2, 8)["hist"],
+                                  r.batch(2, 8)["hist"])

@@ -1,0 +1,51 @@
+"""Distributed SSSP (shard_map) vs oracle — runs in a subprocess with 8
+forced host devices (the main test process keeps 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np, jax
+from repro.data.generators import kronecker, road_grid
+from repro.core.distributed import shard_graph, sssp_distributed
+from repro.core.baselines import dijkstra_host
+
+mesh = jax.make_mesh((8,), ("graph",))
+failures = []
+for name, g in [("kron", kronecker(9, 8, seed=1)),
+                ("road", road_grid(20, seed=2))]:
+    sg = shard_graph(g, 8)
+    src = int(np.argmax(g.deg))
+    dref, _ = dijkstra_host(g, src)
+    for ver, fused in [("v1", 0), ("v2", 0), ("v2", 8), ("v3", 0)]:
+        dist, parent, metrics = sssp_distributed(sg, src, mesh, ("graph",),
+                                                 version=ver,
+                                                 fused_rounds=fused)
+        dist = np.asarray(dist)[:g.n]
+        ok = np.allclose(np.where(np.isfinite(dist), dist, -1),
+                         np.where(np.isfinite(dref), dref, -1),
+                         rtol=1e-4, atol=1e-5)
+        print(f"{name}/{ver}/fused={fused}: ok={ok} "
+              f"exchanges={int(metrics.n_rounds)}")
+        if not ok:
+            failures.append((name, ver, fused))
+assert not failures, failures
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_matches_oracle():
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT, src_dir],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    assert "DISTRIBUTED_OK" in proc.stdout, \
+        f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-2000:]}"

@@ -1,0 +1,105 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs ref oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.edge_relax.ops import edge_relax, edge_relax_ref
+from repro.kernels.flash_attn.ops import flash_attention, flash_attention_ref
+from repro.kernels.embedding_bag.ops import embedding_bag, embedding_bag_ref
+
+
+# --- edge_relax -------------------------------------------------------------
+
+@pytest.mark.parametrize("bs,bv,e", [(256, 256, 500), (512, 512, 2000),
+                                     (128, 512, 64), (512, 128, 1)])
+@pytest.mark.parametrize("window", [(0.0, np.inf), (0.3, 0.9)])
+def test_edge_relax_shapes(bs, bv, e, window):
+    rng = np.random.default_rng(bs + e)
+    dist = np.where(rng.random(bs) < 0.6,
+                    rng.random(bs).astype(np.float32), np.inf)
+    front = (rng.random(bs) < 0.4).astype(np.int8)
+    src = rng.integers(0, bs, e).astype(np.int32)
+    dst = rng.integers(0, bv, e).astype(np.int32)
+    w = rng.random(e).astype(np.float32)
+    lb, ub = window
+    out = edge_relax(jnp.asarray(dist), jnp.asarray(front), jnp.asarray(src),
+                     jnp.asarray(dst), jnp.asarray(w), lb, ub, block_v=bv)
+    ref = edge_relax_ref(jnp.asarray(dist), jnp.asarray(front),
+                         jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                         lb, ub, block_v=bv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_edge_relax_property(seed):
+    rng = np.random.default_rng(seed)
+    bs = int(rng.integers(8, 300))
+    bv = int(rng.integers(8, 300))
+    e = int(rng.integers(1, 800))
+    dist = np.where(rng.random(bs) < 0.7,
+                    (rng.random(bs) * 3).astype(np.float32), np.inf)
+    front = (rng.random(bs) < 0.5).astype(np.int8)
+    src = rng.integers(0, bs, e).astype(np.int32)
+    dst = rng.integers(0, bv, e).astype(np.int32)
+    w = (rng.random(e) * 2).astype(np.float32)
+    lb = float(rng.random() * 2)
+    ub = lb + float(rng.random() * 2) + 1e-3
+    args = (jnp.asarray(dist), jnp.asarray(front), jnp.asarray(src),
+            jnp.asarray(dst), jnp.asarray(w), lb, ub)
+    np.testing.assert_allclose(
+        np.asarray(edge_relax(*args, block_v=bv)),
+        np.asarray(edge_relax_ref(*args, block_v=bv)))
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [
+    (2, 4, 2, 200, 32), (1, 8, 8, 130, 64), (2, 2, 1, 64, 128),
+    (1, 4, 4, 257, 16),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 31),
+                                           (False, 0)])
+def test_flash_attention_shapes(b, h, hkv, s, d, causal, window):
+    rng = np.random.default_rng(s + d)
+    q = jnp.asarray(rng.normal(0, 1, (b, h, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, s, d)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(0, 1, (1, 4, 128, 64))).astype(dtype)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64))).astype(dtype)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64))).astype(dtype)
+    out = flash_attention(q, k, v, causal=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --- embedding bag ------------------------------------------------------------
+
+@pytest.mark.parametrize("v,d,b,l", [(64, 16, 4, 3), (300, 32, 8, 7),
+                                     (1000, 64, 2, 20)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_embedding_bag_shapes(v, d, b, l, mode, weighted):
+    rng = np.random.default_rng(v + l)
+    table = jnp.asarray(rng.normal(0, 1, (v, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, v, (b, l)).astype(np.int32))
+    w = jnp.asarray(rng.random((b, l)).astype(np.float32)) if weighted \
+        else None
+    out = embedding_bag(table, ids, w, mode=mode)
+    ref = embedding_bag_ref(table, ids, w, mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,151 @@
+"""Optimizer / checkpoint / fault-tolerance substrate tests."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train import failure
+from repro.train import optimizer as opt_mod
+
+
+def test_adamw_converges_quadratic():
+    cfg = opt_mod.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                              total_steps=200, min_lr_frac=1.0)
+    params = {"x": jnp.asarray([5.0, -3.0]), "y": jnp.asarray(2.0)}
+    state = opt_mod.adamw_init(params, cfg)
+
+    def loss_fn(p):
+        return jnp.sum(p["x"] ** 2) + (p["y"] - 1.0) ** 2
+
+    for _ in range(150):
+        g = jax.grad(loss_fn)(params)
+        params, state, _ = opt_mod.adamw_update(params, g, state, cfg)
+    assert float(loss_fn(params)) < 1e-2
+
+
+def test_adamw_master_weights_bf16():
+    cfg = opt_mod.AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                              min_lr_frac=1.0)
+    params = {"w": jnp.asarray([1.0, 2.0], jnp.bfloat16)}
+    state = opt_mod.adamw_init(params, cfg)
+    assert state["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.asarray([1e-3, 1e-3], jnp.bfloat16)}
+    p1 = params
+    for _ in range(20):
+        p1, state, _ = opt_mod.adamw_update(p1, g, state, cfg)
+    # tiny updates accumulate in fp32 master even when bf16 would stall
+    assert float(state["master"]["w"][0]) < 1.0
+    assert p1["w"].dtype == jnp.bfloat16
+
+
+def test_grad_clipping():
+    cfg = opt_mod.AdamWConfig(clip_norm=1.0, warmup_steps=0)
+    g = {"a": jnp.full((100,), 100.0)}
+    params = {"a": jnp.zeros((100,))}
+    state = opt_mod.adamw_init(params, cfg)
+    _, _, metrics = opt_mod.adamw_update(params, g, state, cfg)
+    assert float(metrics["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "nested": {"b": jnp.ones((3, 4), jnp.bfloat16)},
+            "lst": [jnp.zeros(2), jnp.ones(3)]}
+    ckpt.save(str(tmp_path), 7, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    restored, manifest = ckpt.restore(str(tmp_path), target_tree=tree)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_restart_byte_identical(tmp_path):
+    """Train 10 steps straight == train 5, checkpoint, restore, train 5."""
+    cfg = opt_mod.AdamWConfig(lr=0.05, warmup_steps=0, min_lr_frac=1.0,
+                              weight_decay=0.0)
+
+    def make_batch(step):
+        rng = np.random.default_rng(step)
+        return jnp.asarray(rng.normal(0, 1, (4,)).astype(np.float32))
+
+    def step_fn(params, opt_state, batch):
+        def loss(p):
+            return jnp.sum((p["w"] - batch) ** 2)
+        g = jax.grad(loss)(params)
+        params, opt_state, _ = opt_mod.adamw_update(params, g, opt_state,
+                                                    cfg)
+        return params, opt_state, {"loss": loss(params)}
+
+    p0 = {"w": jnp.zeros(4)}
+    s0 = opt_mod.adamw_init(p0, cfg)
+    # straight run
+    p, s = p0, s0
+    for i in range(10):
+        p, s, _ = step_fn(p, s, make_batch(i))
+    # interrupted run
+    p2, s2 = p0, s0
+    for i in range(5):
+        p2, s2, _ = step_fn(p2, s2, make_batch(i))
+    ckpt.save(str(tmp_path), 5, (p2, s2))
+    (p3, s3), _ = ckpt.restore(str(tmp_path), target_tree=(p2, s2))
+    for i in range(5, 10):
+        p3, s3, _ = step_fn(p3, s3, make_batch(i))
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(p3["w"]),
+                               rtol=1e-6)
+
+
+def test_run_restartable_resumes(tmp_path):
+    cfg = opt_mod.AdamWConfig(lr=0.05, warmup_steps=0)
+
+    def make_batch(step):
+        return jnp.float32(step)
+
+    def step_fn(params, opt_state, batch):
+        g = {"w": params["w"] - batch}
+        params, opt_state, m = opt_mod.adamw_update(params, g, opt_state,
+                                                    cfg)
+        return params, opt_state, {"loss": jnp.float32(0.0), **m}
+
+    p0 = {"w": jnp.zeros(())}
+    s0 = opt_mod.adamw_init(p0, cfg)
+    state, last, pre = failure.run_restartable(
+        step_fn, make_batch, (p0, s0), n_steps=6, ckpt_dir=str(tmp_path),
+        ckpt_every=2, log_every=0, log_fn=lambda *_: None)
+    assert last == 6 and not pre
+    # resume continues from the stored checkpoint
+    state2, last2, _ = failure.run_restartable(
+        step_fn, make_batch, (p0, s0), n_steps=8, ckpt_dir=str(tmp_path),
+        ckpt_every=2, log_every=0, log_fn=lambda *_: None)
+    assert last2 == 8
+
+
+def test_straggler_monitor():
+    mon = failure.StragglerMonitor(window=16, threshold=2.0)
+    for i in range(10):
+        assert not mon.record(i, 0.1)
+    assert mon.record(10, 0.5)
+    assert mon.flagged and mon.flagged[0][0] == 10
+
+
+def test_gradient_compression_error_feedback():
+    from repro.parallel.compress import quantize, dequantize
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 0.1, (1000,)).astype(np.float32))
+    q, scale = quantize(g)
+    deq = dequantize(q, scale)
+    # int8 quantization error bounded by scale/2 per element
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(scale) * 0.51
+    # error feedback drives cumulative error to zero on a constant gradient
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(50):
+        q, scale = quantize(g + err)
+        deq = dequantize(q, scale)
+        err = (g + err) - deq
+        acc = acc + deq
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g),
+                               atol=float(scale))
