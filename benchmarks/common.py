@@ -15,8 +15,10 @@ import time
 import numpy as np
 import jax
 
+from repro.core import relax
 from repro.core.baselines import bellman_ford, delta_stepping, dijkstra_host
-from repro.core.sssp import sssp, normalized_metrics
+from repro.core.distributed import shard_graph, sssp_distributed
+from repro.core.sssp import sssp, sssp_batch, normalized_metrics
 from repro.data.generators import kronecker, road_grid, uniform_random
 from repro.data.weights import make_variant
 
@@ -59,22 +61,75 @@ def pick_sources(g, n_sources: int, seed: int = 0):
     return rng.choice(nz, min(n_sources, nz.size), replace=False)
 
 
-def run_eic(g, sources, alpha=3.0, beta=0.9):
+def run_eic(g, sources, alpha=3.0, beta=0.9, backend="segment_min"):
     """Average EIC metrics + wall time over sources (compile excluded)."""
     dg = g.to_device()
+    be = relax.get_backend(backend)
+    layout = be.prepare(dg)
     # warm-up / compile
-    d0, p0, m0 = sssp(dg, int(sources[0]), alpha=alpha, beta=beta)
+    d0, p0, m0 = sssp(dg, int(sources[0]), alpha=alpha, beta=beta,
+                      backend=be, layout=layout)
     jax.block_until_ready(d0)
     t_total, mets = 0.0, []
     for s in sources:
         t0 = time.perf_counter()
-        dist, parent, metrics = sssp(dg, int(s), alpha=alpha, beta=beta)
+        dist, parent, metrics = sssp(dg, int(s), alpha=alpha, beta=beta,
+                                     backend=be, layout=layout)
         jax.block_until_ready(dist)
         t_total += time.perf_counter() - t0
         mets.append(normalized_metrics(g.deg, np.asarray(dist),
                                        jax.tree.map(np.asarray, metrics)))
     avg = {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
     avg["time_s"] = t_total / len(sources)
+    return avg
+
+
+def run_eic_batch(g, sources, alpha=3.0, beta=0.9, backend="segment_min"):
+    """One fused multi-source batch (sssp_batch); per-source wall time."""
+    dg = g.to_device()
+    be = relax.get_backend(backend)
+    layout = be.prepare(dg)
+    srcs = np.asarray(sources, np.int32)
+    d0, _, _ = sssp_batch(dg, srcs, alpha=alpha, beta=beta, backend=be,
+                          layout=layout)     # warm-up / compile
+    jax.block_until_ready(d0)
+    t0 = time.perf_counter()
+    dist, parent, metrics = sssp_batch(dg, srcs, alpha=alpha, beta=beta,
+                                       backend=be, layout=layout)
+    jax.block_until_ready(dist)
+    elapsed = time.perf_counter() - t0
+    mets = [normalized_metrics(g.deg, np.asarray(dist[i]),
+                               jax.tree.map(lambda x: np.asarray(x[i]),
+                                            metrics))
+            for i in range(srcs.size)]
+    avg = {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
+    avg["time_s"] = elapsed / srcs.size
+    avg["batch"] = int(srcs.size)
+    return avg
+
+
+def run_distributed(g, sources, alpha=3.0, beta=0.9, version="v2"):
+    """Distributed engine over every available local device."""
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("graph",))
+    sg = shard_graph(g, n_dev)
+    d0, _, _ = sssp_distributed(sg, int(sources[0]), mesh, ("graph",),
+                                version=version, alpha=alpha, beta=beta)
+    jax.block_until_ready(d0)
+    t_total, mets = 0.0, []
+    for s in sources:
+        t0 = time.perf_counter()
+        dist, parent, metrics = sssp_distributed(
+            sg, int(s), mesh, ("graph",), version=version, alpha=alpha,
+            beta=beta)
+        jax.block_until_ready(dist)
+        t_total += time.perf_counter() - t0
+        mets.append(normalized_metrics(
+            g.deg, np.asarray(dist)[:g.n],
+            jax.tree.map(np.asarray, metrics)))
+    avg = {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
+    avg["time_s"] = t_total / len(sources)
+    avg["n_devices"] = n_dev
     return avg
 
 

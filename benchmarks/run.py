@@ -1,18 +1,27 @@
 """Benchmark harness — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--scale 14] [--sources 4]
-        [--full-variants] [--sections fig4,fig5,fig6,table3]
+        [--backend segment_min|blocked_pallas] [--batch 4]
+        [--full-variants] [--sections fig4,fig5,fig6,table3,backends]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per graph x metric) and
 writes benchmarks/artifacts/paper_metrics.json for EXPERIMENTS.md.
 
 Sections:
-  fig4   — nFrontier / nSync on the benchmark suite (paper Fig. 4a/4b)
-           + the weight-variant suite (Fig. 4c/4d)
-  fig5   — nTrav vs |E|/|V| and DD_skewness (paper Fig. 5)
-  fig6   — wall time vs edge traversals (paper Fig. 6)
-  table3 — EIC vs Bellman-Ford / Δ-stepping / host Dijkstra (paper
-           Table 3 / Fig. 7): times, speedups, nFrontier, nSync
+  fig4     — nFrontier / nSync on the benchmark suite (paper Fig. 4a/4b)
+             + the weight-variant suite (Fig. 4c/4d)
+  fig5     — nTrav vs |E|/|V| and DD_skewness (paper Fig. 5)
+  fig6     — wall time vs edge traversals (paper Fig. 6)
+  table3   — EIC vs Bellman-Ford / Δ-stepping / host Dijkstra (paper
+             Table 3 / Fig. 7): times, speedups, nFrontier, nSync
+  backends — relaxation-backend head-to-head on the same graphs/sources:
+             segment_min vs blocked_pallas (interpret mode on CPU) vs the
+             distributed engine, plus the fused multi-source sssp_batch
+             at ``--batch`` sources per call
+
+``--backend`` selects the relaxation backend used by the paper-metric
+sections (fig4/5/6, table3); the ``backends`` section always sweeps all
+of them head-to-head.
 """
 from __future__ import annotations
 
@@ -37,7 +46,7 @@ def emit(rows, name, time_s, **derived):
     rows.append({"name": name, "us_per_call": time_s * 1e6, **derived})
 
 
-def fig4_fig5_fig6(rows, scale, n_sources, full_variants):
+def fig4_fig5_fig6(rows, scale, n_sources, full_variants, backend):
     print("# fig4/fig5/fig6: EIC metrics on benchmark + variant graphs")
     suites = [("bench", common.benchmark_graphs(scale))]
     suites.append(("variant", common.variant_graphs(max(scale - 1, 10),
@@ -46,7 +55,7 @@ def fig4_fig5_fig6(rows, scale, n_sources, full_variants):
         for name, make in graphs.items():
             g = make()
             srcs = common.pick_sources(g, n_sources)
-            m = common.run_eic(g, srcs)
+            m = common.run_eic(g, srcs, backend=backend)
             e_over_v = g.m / 2 / g.n
             emit(rows, f"eic/{suite}/{name}", m["time_s"],
                  nFrontier=m["nFrontier"], nSync=m["nSync"],
@@ -56,7 +65,7 @@ def fig4_fig5_fig6(rows, scale, n_sources, full_variants):
                  trav_reduction=e_over_v - m["nTrav"])
 
 
-def table3(rows, scale, n_sources):
+def table3(rows, scale, n_sources, backend):
     print("# table3/fig7: comparison vs baselines")
     graphs = common.benchmark_graphs(scale)
     for name in ["Twitter", "Kron", "Web", "Urand", "Road",
@@ -65,7 +74,7 @@ def table3(rows, scale, n_sources):
             continue
         g = graphs[name]()
         srcs = common.pick_sources(g, n_sources)
-        eic = common.run_eic(g, srcs)
+        eic = common.run_eic(g, srcs, backend=backend)
         bf = common.run_baseline("bf", g, srcs)
         best_delta, best = None, None
         for delta in [0.1 * float(g.max_w), 0.5 * float(g.max_w),
@@ -88,22 +97,63 @@ def table3(rows, scale, n_sources):
         emit(rows, f"table3/{name}/dijkstra_host", dj["time_s"])
 
 
+def backends(rows, scale, n_sources, batch):
+    """Relaxation-backend head-to-head (see core/relax.py)."""
+    print("# backends: segment_min vs blocked_pallas vs distributed"
+          f" (+ sssp_batch x{batch})")
+    graphs = common.benchmark_graphs(scale)
+    for name in [f"gr{scale}_8", "Road", "Urand"]:
+        if name not in graphs:
+            continue
+        g = graphs[name]()
+        srcs = common.pick_sources(g, max(n_sources, 2))
+        base = None
+        for be in ["segment_min", "blocked_pallas"]:
+            m = common.run_eic(g, srcs, backend=be)
+            base = base or m["time_s"]
+            emit(rows, f"backends/{name}/{be}", m["time_s"],
+                 nTrav=m["nTrav"], nSync=m["nSync"],
+                 rel_time=m["time_s"] / base)
+        d = common.run_distributed(g, srcs, version="v2")
+        emit(rows, f"backends/{name}/distributed_v2", d["time_s"],
+             nTrav=d["nTrav"], nSync=d["nSync"],
+             n_devices=d["n_devices"], rel_time=d["time_s"] / base)
+        bsrcs = common.pick_sources(g, batch, seed=1)
+        b = common.run_eic_batch(g, bsrcs)
+        emit(rows, f"backends/{name}/sssp_batch", b["time_s"],
+             batch=b["batch"], nTrav=b["nTrav"],
+             rel_time=b["time_s"] / base)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=13)
     ap.add_argument("--sources", type=int, default=3)
+    ap.add_argument("--backend", default="segment_min",
+                    choices=common.relax.available_backends(),
+                    help="relaxation backend for the paper-metric sections")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="sources per fused sssp_batch call (backends "
+                         "section)")
     ap.add_argument("--full-variants", action="store_true")
-    ap.add_argument("--sections", default="fig4,table3")
+    ap.add_argument("--sections", default="fig4,table3,backends")
     args = ap.parse_args()
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
+    if args.sources < 1:
+        ap.error("--sources must be >= 1")
 
     os.makedirs(ART, exist_ok=True)
     rows = []
     sections = set(args.sections.split(","))
     print("name,us_per_call,derived")
     if sections & {"fig4", "fig5", "fig6"}:
-        fig4_fig5_fig6(rows, args.scale, args.sources, args.full_variants)
+        fig4_fig5_fig6(rows, args.scale, args.sources, args.full_variants,
+                       args.backend)
     if "table3" in sections:
-        table3(rows, args.scale, args.sources)
+        table3(rows, args.scale, args.sources, args.backend)
+    if "backends" in sections:
+        backends(rows, args.scale, args.sources, args.batch)
     with open(os.path.join(ART, "paper_metrics.json"), "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {len(rows)} rows to benchmarks/artifacts/paper_metrics.json")

@@ -21,11 +21,18 @@ REQUEST messages) maps onto two bulk-synchronous TPU engines:
   both directions), reusing the same exchange primitive.
 
 Both engines share the exact heuristic formulas with the single-device
-engine via the ``*_from_stats`` variants (stats are psum-reduced partials).
+engine via the ``*_from_stats`` variants (stats are psum-reduced partials),
+and both build their per-shard relaxation from the shared primitives in
+:mod:`repro.core.relax` (windowed candidates, deterministic segment-min +
+winner recovery, update application) — the engines only add the collective
+merge (``pmin`` / ``all_to_all``).  Tie-breaking and the traversal-metric
+definitions match the single-device engine exactly, so ``dist``/``parent``
+*and* metrics are identical across engines (asserted by
+``tests/test_relax_backends.py``).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple
 
 import numpy as np
@@ -34,9 +41,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from . import stats, stepping, traversal
+from . import relax, stats, stepping, traversal
 from .graph import HostGraph
-from .sssp import INF, INT_MAX, SsspMetrics, _zero_metrics
+from .relax import INF, INT_MAX
+from .sssp import SsspMetrics, _zero_metrics
 
 
 class ShardedGraph(NamedTuple):
@@ -129,21 +137,11 @@ class _V2State(NamedTuple):
     metrics: SsspMetrics
 
 
-def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
-                     version: str = "v2", max_iters: int = 1_000_000,
-                     fused_rounds: int = 0, alpha: float = 3.0,
-                     beta: float = 0.9, capacity: int = 0):
-    """Run distributed EIC SSSP on ``mesh`` (axes flattened over ``axes``).
-
-    versions: v1 replicated/pmin, v2 sharded/all_to_all dense exchange,
-    v3 frontier-compacted exchange (top-C candidates per destination block;
-    falls back to the dense exchange on bucket overflow — exact always).
-    """
-    params = stepping.SteppingParams(alpha=alpha, beta=beta)
-    p, e_max = sg.src.shape
-    block = sg.deg.shape[1]
-    n_pad = p * block
-
+@lru_cache(maxsize=64)
+def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
+                  fused_rounds, capacity):
+    """Build + jit one distributed engine (cached so repeated calls with
+    the same mesh/shape/config reuse the compiled executable)."""
     in_specs = (graph_specs(axes), P())
     out_specs = (P(axes), P(axes), P())
 
@@ -151,7 +149,6 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
                        ((axes,) if isinstance(axes, str) else axes))
     if version == "v1":
         body = _v1_body(n_pad, block, axes, params, max_iters)
-        in_specs = (graph_specs(axes), P())
         out_specs = (P(), P(), P())
     elif version == "v2":
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
@@ -165,7 +162,26 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
 
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
-    return jax.jit(fn)(sg, jnp.int32(source))
+    return jax.jit(fn)
+
+
+def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
+                     version: str = "v2", max_iters: int = 1_000_000,
+                     fused_rounds: int = 0, alpha: float = 3.0,
+                     beta: float = 0.9, capacity: int = 0):
+    """Run distributed EIC SSSP on ``mesh`` (axes flattened over ``axes``).
+
+    versions: v1 replicated/pmin, v2 sharded/all_to_all dense exchange,
+    v3 frontier-compacted exchange (top-C candidates per destination block;
+    falls back to the dense exchange on bucket overflow — exact always).
+    """
+    params = stepping.SteppingParams(alpha=alpha, beta=beta)
+    p, _ = sg.src.shape
+    block = sg.deg.shape[1]
+    axes_key = axes if isinstance(axes, str) else tuple(axes)
+    fn = _build_engine(mesh, axes_key, version, block, p * block, params,
+                       max_iters, fused_rounds, capacity)
+    return fn(sg, jnp.int32(source))
 
 
 # --- v1 -------------------------------------------------------------------
@@ -187,19 +203,16 @@ def _v1_body(n_pad, block, axes, params, max_iters):
         metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
 
         def relax_round(dist, parent, frontier, lb, ub, metrics):
-            paths = frontier & ((dist <= 0.0) | (deg > 1))
-            cand_len = dist[src] + w
-            in_window = paths[src] & (cand_len >= lb) & (cand_len < ub)
-            active = in_window & (dst != parent[src])
-            cand = jnp.where(active, cand_len, INF)
-            best_l = jax.ops.segment_min(cand, dst, num_segments=n_pad)
-            best = jax.lax.pmin(best_l, axes)
-            improved = best < dist
-            win = jnp.where(active & (cand <= best[dst]), src, INT_MAX)
-            win = jax.ops.segment_min(win, dst, num_segments=n_pad)
-            winner = jax.lax.pmin(win, axes)
-            new_dist = jnp.where(improved, best, dist)
-            new_parent = jnp.where(improved, winner, parent)
+            paths = relax.leaf_pruned(frontier, dist, deg)
+            cand, in_window, active = relax.edge_candidates(
+                dist[src], paths[src], parent[src], dst, w, lb, ub)
+            best = jax.lax.pmin(
+                relax.segment_partial_min(cand, dst, n_pad), axes)
+            winner = jax.lax.pmin(
+                relax.winner_partial(cand, active, src, dst, best, n_pad),
+                axes)
+            new_dist, new_parent, improved = relax.apply_updates(
+                dist, parent, best, winner)
             touched = jax.lax.psum(jnp.sum(in_window.astype(jnp.int32)), axes)
             relaxed = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), axes)
             metrics = metrics._replace(
@@ -215,23 +228,24 @@ def _v1_body(n_pad, block, axes, params, max_iters):
 
         def pull_round(dist, parent, st, lb, ub, metrics):
             # mirrored push from the settled band (undirected store)
-            band = (dist[src] >= st) & (dist[src] < lb)
-            mask = band & (w < ub - st) & (dist[src] + w < ub)
-            cand = jnp.where(mask, dist[src] + w, INF)
-            best_l = jax.ops.segment_min(cand, dst, num_segments=n_pad)
-            best = jax.lax.pmin(best_l, axes)
-            improved = (best < dist) & (dist > lb)
-            win = jnp.where(mask & (cand <= best[dst]), src, INT_MAX)
-            win = jax.ops.segment_min(win, dst, num_segments=n_pad)
-            winner = jax.lax.pmin(win, axes)
-            new_dist = jnp.where(improved, best, dist)
-            new_parent = jnp.where(improved, winner, parent)
+            dv = dist[src]
+            mask = (dv >= st) & (dv < lb) & (dv + w < ub)
+            cand = jnp.where(mask, dv + w, INF)
+            best = jax.lax.pmin(
+                relax.segment_partial_min(cand, dst, n_pad), axes)
+            winner = jax.lax.pmin(
+                relax.winner_partial(cand, mask, src, dst, best, n_pad),
+                axes)
+            new_dist, new_parent, improved = relax.apply_updates(
+                dist, parent, best, winner, gate=dist > lb)
             scans = jax.lax.psum(jnp.sum(
-                ((dist[dst] > lb) & (w < ub - st)).astype(jnp.int32)), axes)
+                ((dist[src] > lb) & (w < ub - st)).astype(jnp.int32)), axes)
+            requests = jax.lax.psum(jnp.sum(mask.astype(jnp.int32)), axes)
             metrics = metrics._replace(
                 n_pull_trav=metrics.n_pull_trav + scans,
                 n_extended=metrics.n_extended +
                 jnp.sum((improved & (deg > 1)).astype(jnp.int32)),
+                n_relax=metrics.n_relax + requests,
                 n_updates=metrics.n_updates +
                 jnp.sum(improved.astype(jnp.int32)),
                 n_rounds=metrics.n_rounds + 1,
@@ -260,9 +274,8 @@ def _v1_body(n_pad, block, axes, params, max_iters):
             dist, parent, metrics = jax.lax.cond(
                 st_next < lb2, with_pull, lambda a: a,
                 (dist, parent, metrics))
-            lb0 = jnp.maximum(0.0, lb2 - max_w)
-            frontier = (((dist >= lb0) & (dist <= st_next)) |
-                        ((dist >= lb2) & (dist < ub2))) & ~done
+            frontier = relax.window_frontier(dist, st_next, lb2, ub2,
+                                             max_w) & ~done
             metrics = metrics._replace(
                 n_steps=metrics.n_steps + jnp.where(done, 0, 1))
             return dist, parent, frontier, lb2, ub2, st_next, done, metrics
@@ -333,21 +346,15 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
         frontier0 = (jnp.arange(block) + base) == source
         metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
 
-        def dense_exchange(best_g, win_g, dist_l, parent_l):
+        def dense_exchange(best_g, win_g):
             """all_to_all reduce-scatter-min of per-block candidate partials."""
             recv_v = jax.lax.all_to_all(best_g.reshape(p, block), axes,
                                         split_axis=0, concat_axis=0)
             recv_w = jax.lax.all_to_all(win_g.reshape(p, block), axes,
                                         split_axis=0, concat_axis=0)
-            best_l = jnp.min(recv_v, axis=0)
-            improved = best_l < dist_l
-            winner = jnp.min(jnp.where(recv_v <= best_l[None, :], recv_w,
-                                       INT_MAX), axis=0)
-            new_dist = jnp.where(improved, best_l, dist_l)
-            new_parent = jnp.where(improved, winner, parent_l)
-            return new_dist, new_parent, improved
+            return relax.combine_block_partials(recv_v, recv_w)
 
-        def compact_exchange(best_g, win_g, dist_l, parent_l):
+        def compact_exchange(best_g, win_g):
             """v3: exchange only the C best candidates per destination
             block — comm ∝ frontier cut, not N.  Falls back to the dense
             exchange when any block overflows C finite candidates (exact)."""
@@ -358,8 +365,7 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             overflow = jax.lax.pmax(
                 jnp.any(n_finite > cap).astype(jnp.int32), axes) > 0
 
-            def compact(args):
-                dist_l, parent_l = args
+            def compact(_):
                 # C smallest candidates per destination block
                 neg, idx = jax.lax.top_k(-rows_v, cap)        # [p, cap]
                 vals = -neg
@@ -373,30 +379,22 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 flat_v = rv.reshape(-1)
                 flat_i = ri.reshape(-1)
                 flat_s = rs.reshape(-1)
-                best_l = jax.ops.segment_min(flat_v, flat_i,
-                                             num_segments=block)
-                wmask = flat_v <= best_l[flat_i]
-                winner = jax.ops.segment_min(
-                    jnp.where(wmask, flat_s, INT_MAX), flat_i,
-                    num_segments=block)
-                improved = best_l < dist_l
-                return (jnp.where(improved, best_l, dist_l),
-                        jnp.where(improved, winner, parent_l), improved)
+                return relax.segment_min_with_winner(
+                    flat_v, jnp.isfinite(flat_v), flat_s, flat_i, block)
 
-            def dense(args):
-                dist_l, parent_l = args
-                return dense_exchange(best_g, win_g, dist_l, parent_l)
+            def dense(_):
+                return dense_exchange(best_g, win_g)
 
-            return jax.lax.cond(overflow, dense, compact,
-                                (dist_l, parent_l))
+            return jax.lax.cond(overflow, dense, compact, None)
 
-        def exchange(cand, dist_l, parent_l):
-            best_g = jax.ops.segment_min(cand, dst, num_segments=n_pad)
-            win_e = jnp.where(cand <= best_g[dst], src, INT_MAX)
-            win_g = jax.ops.segment_min(win_e, dst, num_segments=n_pad)
+        def exchange(cand, mask):
+            """Per-destination (min, winner) partials merged across shards;
+            returns the local block's ``(best_l, winner_l)``."""
+            best_g, win_g = relax.segment_min_with_winner(cand, mask, src,
+                                                          dst, n_pad)
             if compact_capacity:
-                return compact_exchange(best_g, win_g, dist_l, parent_l)
-            return dense_exchange(best_g, win_g, dist_l, parent_l)
+                return compact_exchange(best_g, win_g)
+            return dense_exchange(best_g, win_g)
 
         local_edge = (dst // block) == me
         dst_local = jnp.clip(dst - base, 0, block - 1)
@@ -408,21 +406,15 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             exchange.  Each wave is sync-free (no collectives)."""
             def wave(_, carry):
                 dist_l, parent_l, front, acc, touched = carry
-                paths = front & ((dist_l <= 0.0) | (deg_l > 1))
-                cand_len = dist_l[src_l] + w
-                mask = (local_edge & paths[src_l] & (cand_len >= lb) &
-                        (cand_len < ub) & (dst != parent_l[src_l]))
-                cand = jnp.where(mask, cand_len, INF)
-                best = jax.ops.segment_min(cand, dst_local,
-                                           num_segments=block)
-                improved = best < dist_l
-                win = jnp.where(mask & (cand <= best[dst_local]), src,
-                                INT_MAX)
-                winner = jax.ops.segment_min(win, dst_local,
-                                             num_segments=block)
-                dist2 = jnp.where(improved, best, dist_l)
-                parent2 = jnp.where(improved, winner, parent_l)
-                touched = touched + jnp.sum(mask.astype(jnp.int32))
+                paths = relax.leaf_pruned(front, dist_l, deg_l)
+                cand, _, active = relax.edge_candidates(
+                    dist_l[src_l], local_edge & paths[src_l],
+                    parent_l[src_l], dst, w, lb, ub)
+                best, winner = relax.segment_min_with_winner(
+                    cand, active, src, dst_local, block)
+                dist2, parent2, improved = relax.apply_updates(
+                    dist_l, parent_l, best, winner)
+                touched = touched + jnp.sum(active.astype(jnp.int32))
                 return dist2, parent2, improved, acc | improved, touched
 
             dist_l, parent_l, _, acc, touched = jax.lax.fori_loop(
@@ -437,13 +429,12 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             if fused_rounds > 0:
                 dist_l, parent_l, frontier_l, metrics = fused_local(
                     dist_l, parent_l, frontier_l, lb, ub, metrics)
-            paths = frontier_l & ((dist_l <= 0.0) | (deg_l > 1))
-            du = dist_l[src_l]
-            cand_len = du + w
-            in_window = paths[src_l] & (cand_len >= lb) & (cand_len < ub)
-            active = in_window & (dst != parent_l[src_l])
-            cand = jnp.where(active, cand_len, INF)
-            dist2, parent2, improved = exchange(cand, dist_l, parent_l)
+            paths = relax.leaf_pruned(frontier_l, dist_l, deg_l)
+            cand, in_window, active = relax.edge_candidates(
+                dist_l[src_l], paths[src_l], parent_l[src_l], dst, w, lb, ub)
+            best_l, winner_l = exchange(cand, active)
+            dist2, parent2, improved = relax.apply_updates(
+                dist_l, parent_l, best_l, winner_l)
             touched = jax.lax.psum(jnp.sum(in_window.astype(jnp.int32)), axes)
             relaxed = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), axes)
             nl_upd = jax.lax.psum(
@@ -460,18 +451,27 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             return dist2, parent2, improved, metrics
 
         def pull_round(dist_l, parent_l, st, lb, ub, metrics):
-            band = (dist_l[src_l] >= st) & (dist_l[src_l] < lb)
-            mask = band & (w < ub - st) & (dist_l[src_l] + w < ub)
-            cand = jnp.where(mask, dist_l[src_l] + w, INF)
-            dist2, parent2, improved = exchange(cand, dist_l, parent_l)
-            # accepted only for unsettled targets; settled can't improve
+            # mirrored push from the settled band (undirected store); the
+            # requester's dist is remote, so the unsettled gate applies on
+            # the local (destination-owner) side after the exchange.
+            dv = dist_l[src_l]
+            mask = (dv >= st) & (dv < lb) & (dv + w < ub)
+            cand = jnp.where(mask, dv + w, INF)
+            best_l, winner_l = exchange(cand, mask)
+            dist2, parent2, improved = relax.apply_updates(
+                dist_l, parent_l, best_l, winner_l, gate=dist_l > lb)
+            # scan/request sums equal the single-device definitions by edge
+            # symmetry: every directed edge lives on exactly one shard.
+            scans = jax.lax.psum(jnp.sum(
+                ((dv > lb) & (w < ub - st)).astype(jnp.int32)), axes)
             reqs = jax.lax.psum(jnp.sum(mask.astype(jnp.int32)), axes)
             nl_upd = jax.lax.psum(
                 jnp.sum((improved & (deg_l > 1)).astype(jnp.int32)), axes)
             upd = jax.lax.psum(jnp.sum(improved.astype(jnp.int32)), axes)
             metrics = metrics._replace(
-                n_pull_trav=metrics.n_pull_trav + reqs,
+                n_pull_trav=metrics.n_pull_trav + scans,
                 n_extended=metrics.n_extended + nl_upd,
+                n_relax=metrics.n_relax + reqs,
                 n_updates=metrics.n_updates + upd,
                 n_rounds=metrics.n_rounds + 1)
             return dist2, parent2, metrics
@@ -503,9 +503,8 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             dist_l, parent_l, metrics = jax.lax.cond(
                 st_next < lb2, with_pull, lambda a: a,
                 (dist_l, parent_l, metrics))
-            lb0 = jnp.maximum(0.0, lb2 - max_w)
-            frontier = (((dist_l >= lb0) & (dist_l <= st_next)) |
-                        ((dist_l >= lb2) & (dist_l < ub2))) & ~done
+            frontier = relax.window_frontier(dist_l, st_next, lb2, ub2,
+                                             max_w) & ~done
             metrics = metrics._replace(
                 n_steps=metrics.n_steps + jnp.where(done, 0, 1))
             return dist_l, parent_l, frontier, lb2, ub2, st_next, done, metrics

@@ -14,9 +14,10 @@ directed GAPBS graphs the same way).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 RATIO_NUM = 4096          # paper §4.1: RATIO_NUM = 2^12
@@ -129,6 +130,97 @@ def build_csr(n: int, eu: np.ndarray, ev: np.ndarray, ew: np.ndarray,
         rtow=rtow,
         max_w=float(w.max()) if w.size else 0.0,
     )
+
+
+# ---------------------------------------------------------------------------
+# Blocked layout for the Pallas edge-relax kernel (relax backend
+# "blocked_pallas"; see core/relax.py).
+# ---------------------------------------------------------------------------
+
+# block/tile defaults are the kernel's own (single source of truth)
+from ..kernels.edge_relax.edge_relax import (  # noqa: E402
+    DEFAULT_BLOCK_V, DEFAULT_TILE_E)
+
+
+class BlockedEdges(NamedTuple):
+    """One source-block edge slab, sorted by destination block, tile-padded."""
+    src_local: jnp.ndarray   # [E_pad] int32 — block-local source index
+    dst: jnp.ndarray         # [E_pad] int32 — global destination id
+    w: jnp.ndarray           # [E_pad] float32 (+inf on padding slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedGraph:
+    """2-D blocked edge layout: edges bucketed by (src block x dst block).
+
+    Sources are grouped into ``n_blocks`` blocks of ``block_v`` vertices so
+    that each slab's source-side ``dist``/``frontier`` slice fits in VMEM;
+    within a slab, edges are sorted by destination block (the 2-D bucketing)
+    and padded to a multiple of ``tile_e`` so the kernel grid is static.
+    Static layout parameters are pytree aux data (shapes stay static under
+    ``jax.jit``); only the arrays are traced.
+    """
+    n: int                               # true vertex count (pre-padding)
+    block_v: int
+    n_blocks: int
+    tile_e: int
+    use_kernel: bool                     # Pallas kernel vs jnp reference
+    interpret: bool                      # Pallas interpret mode (CPU)
+    slabs: Tuple[BlockedEdges, ...]      # one slab per source block
+    deg: jnp.ndarray                     # [n_blocks * block_v] int32, 0-padded
+
+    @property
+    def n_pad(self) -> int:
+        return self.n_blocks * self.block_v
+
+
+jax.tree_util.register_pytree_node(
+    BlockedGraph,
+    lambda bg: ((bg.slabs, bg.deg),
+                (bg.n, bg.block_v, bg.n_blocks, bg.tile_e, bg.use_kernel,
+                 bg.interpret)),
+    lambda aux, ch: BlockedGraph(n=aux[0], block_v=aux[1], n_blocks=aux[2],
+                                 tile_e=aux[3], use_kernel=aux[4],
+                                 interpret=aux[5], slabs=ch[0], deg=ch[1]),
+)
+
+
+def build_blocked(g, *, block_v: int = DEFAULT_BLOCK_V,
+                  tile_e: int = DEFAULT_TILE_E, use_kernel: bool = True,
+                  interpret: bool = True) -> BlockedGraph:
+    """Pre-bucket a graph (``HostGraph`` or ``DeviceGraph``) for the kernel.
+
+    Host-side (concrete shapes are required for the static tile padding);
+    call once per graph, outside ``jit``.
+    """
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    deg = np.asarray(g.deg)
+    n = int(deg.shape[0])
+    n_blocks = max(-(-n // block_v), 1)
+    sb = src // block_v
+    db = dst // block_v
+    order = np.lexsort((db, sb))         # bucket by (src block, dst block)
+    src, dst, w, sb = src[order], dst[order], w[order], sb[order]
+    slabs = []
+    for b in range(n_blocks):
+        m = sb == b
+        s_l = (src[m] - b * block_v).astype(np.int32)
+        d = dst[m].astype(np.int32)
+        ww = w[m].astype(np.float32)
+        e_pad = max(-(-s_l.shape[0] // tile_e) * tile_e, tile_e)
+        pad = e_pad - s_l.shape[0]
+        slabs.append(BlockedEdges(
+            src_local=jnp.asarray(np.pad(s_l, (0, pad))),
+            dst=jnp.asarray(np.pad(d, (0, pad))),
+            w=jnp.asarray(np.pad(ww, (0, pad), constant_values=np.inf))))
+    deg_pad = np.zeros(n_blocks * block_v, np.int32)
+    deg_pad[:n] = deg
+    return BlockedGraph(n=n, block_v=block_v, n_blocks=n_blocks,
+                        tile_e=tile_e, use_kernel=use_kernel,
+                        interpret=interpret, slabs=tuple(slabs),
+                        deg=jnp.asarray(deg_pad))
 
 
 def degree_bucket_np(deg: np.ndarray) -> np.ndarray:

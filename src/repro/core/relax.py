@@ -1,0 +1,257 @@
+"""Pluggable relaxation backends for the EIC engines (paper Algo 2 l.8-17).
+
+The windowed edge relaxation is the algorithm's inner loop and the only
+part that differs between execution strategies (dense ``segment_min``,
+blocked Pallas kernels, per-shard relaxation under ``shard_map``).  This
+module owns that hot path:
+
+* the **backend interface** — ``relax_window(layout, dist, parent,
+  frontier, lb, ub) -> (new_dist, new_parent, RoundMetrics)`` — with a
+  registry (:func:`get_backend` / :func:`available_backends`) so engines,
+  benchmarks and services select implementations by name;
+* the **shared relaxation primitives** (leaf pruning, windowed candidate
+  generation, deterministic segment-min + winner recovery, update
+  application, partial combination) that every engine builds from — the
+  distributed engines in ``core/distributed.py`` compose these with their
+  collectives instead of duplicating the relax logic.
+
+Registered backends:
+
+``segment_min``
+    The dense flat-edge-list path (extracted from the original
+    ``sssp._relax_round``): one masked ``segment_min`` over all edges plus
+    a min-source winner pass.  Layout = the ``DeviceGraph`` itself.
+
+``blocked_pallas``
+    The TPU hot path: a :class:`~repro.core.graph.BlockedGraph` layout
+    (edges bucketed by (src block x dst block), tile-padded) drives the
+    ``kernels/edge_relax`` Pallas kernel once per source block with a
+    ``(n_dst_blocks, n_tiles)`` grid; per-source-block (min, winner)
+    partials are combined with the same deterministic min/min-src rule.
+    On this CPU container the kernel runs in interpret mode.
+
+Determinism note: every backend resolves ties toward the smallest source
+id, so ``dist``/``parent`` (and the logical traversal metrics) are
+bitwise-identical across backends — the parity tests in
+``tests/test_relax_backends.py`` assert exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import DeviceGraph, BlockedGraph, build_blocked
+from ..kernels.edge_relax.ops import relax_bucket
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+INF = jnp.float32(jnp.inf)
+
+
+class RoundMetrics(NamedTuple):
+    """Per-round relaxation outcome (identical across backends)."""
+    improved: jnp.ndarray    # [N] bool — vertices whose dist improved
+    n_trav: jnp.ndarray      # scalar int32 — in-window edge touches (push)
+    n_relax: jnp.ndarray     # scalar int32 — relaxations attempted
+    n_updates: jnp.ndarray   # scalar int32 — successful dist improvements
+    n_extended: jnp.ndarray  # scalar int32 — non-leaf dist improvements
+
+
+# ---------------------------------------------------------------------------
+# shared relaxation primitives
+# ---------------------------------------------------------------------------
+
+def leaf_pruned(frontier: jnp.ndarray, dist: jnp.ndarray,
+                deg: jnp.ndarray) -> jnp.ndarray:
+    """Algo 2 l.8: paths reaching a leaf are never extended."""
+    return frontier & ((dist <= 0.0) | (deg > 1))
+
+
+def edge_candidates(d_src, f_src, p_src, dst, w, lb, ub):
+    """Algo 2 l.10-11: windowed candidate lengths over gathered edge values.
+
+    ``d_src``/``f_src``/``p_src`` are dist/frontier/parent gathered at each
+    edge's source.  Returns ``(cand, in_window, active)`` where ``cand`` is
+    +inf outside the active set; ``active`` additionally excludes the
+    relaxation back along the parent edge (which can never improve).
+    """
+    cand_len = d_src + w
+    in_window = f_src & (cand_len >= lb) & (cand_len < ub)
+    active = in_window & (dst != p_src)
+    return jnp.where(active, cand_len, INF), in_window, active
+
+
+def segment_partial_min(cand, seg, num_segments: int):
+    """Per-destination min of candidates (a shard's local partial)."""
+    return jax.ops.segment_min(cand, seg, num_segments=num_segments)
+
+
+def winner_partial(cand, mask, ids, seg, best, num_segments: int):
+    """Deterministic winner recovery: min ``ids`` among candidates that
+    achieve ``best`` at their segment (masked; INT_MAX where none)."""
+    win = jnp.where(mask & (cand <= best[seg]), ids, INT_MAX)
+    return jax.ops.segment_min(win, seg, num_segments=num_segments)
+
+
+def segment_min_with_winner(cand, mask, ids, seg, num_segments: int):
+    """The fused (min, argmin-by-min-id) segment reduction."""
+    best = segment_partial_min(cand, seg, num_segments)
+    return best, winner_partial(cand, mask, ids, seg, best, num_segments)
+
+
+def apply_updates(dist, parent, best, winner, gate=None):
+    """Commit improvements: ``dist``/``parent`` where ``best < dist``
+    (optionally gated by an extra per-vertex mask)."""
+    improved = best < dist
+    if gate is not None:
+        improved = improved & gate
+    return (jnp.where(improved, best, dist),
+            jnp.where(improved, winner, parent), improved)
+
+
+def combine_block_partials(vals, wins):
+    """Combine stacked (min, winner) partials over the leading axis with
+    the deterministic min-value / min-id-on-tie rule."""
+    best = jnp.min(vals, axis=0)
+    winner = jnp.min(jnp.where(vals <= best[None, :], wins, INT_MAX),
+                     axis=0)
+    return best, winner
+
+
+def window_frontier(dist, st, lb, ub, max_w):
+    """Function 1's frontier: the push band [max(0, lb - maxW), st] of
+    settled vertices whose edges may reach into the window, plus the
+    window occupants themselves."""
+    lb0 = jnp.maximum(0.0, lb - max_w)
+    return ((dist >= lb0) & (dist <= st)) | ((dist >= lb) & (dist < ub))
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RelaxBackend:
+    """A pluggable implementation of the windowed relaxation hot path.
+
+    ``prepare(graph, **opts)`` builds the backend's layout pytree once per
+    graph (host-side, outside ``jit``); ``relax_window(layout, dist,
+    parent, frontier, lb, ub)`` executes one synchronized round.
+    """
+    name: str
+    prepare: Callable[..., Any]
+    relax_window: Callable[..., Any]
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(backend: RelaxBackend) -> RelaxBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name) -> RelaxBackend:
+    if isinstance(name, RelaxBackend):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown relax backend {name!r}; available: "
+            f"{available_backends()}") from None
+
+
+# ---------------------------------------------------------------------------
+# backend: segment_min (dense flat edge list)
+# ---------------------------------------------------------------------------
+
+def _segment_min_prepare(g: DeviceGraph, **_opts) -> DeviceGraph:
+    return g            # the flat edge list is its own layout
+
+
+def _segment_min_relax(g: DeviceGraph, dist, parent, frontier, lb, ub):
+    paths = leaf_pruned(frontier, dist, g.deg)
+    cand, in_window, active = edge_candidates(
+        dist[g.src], paths[g.src], parent[g.src], g.dst, g.w, lb, ub)
+    best, winner = segment_min_with_winner(cand, active, g.src, g.dst, g.n)
+    new_dist, new_parent, improved = apply_updates(dist, parent, best,
+                                                   winner)
+    rm = RoundMetrics(
+        improved=improved,
+        n_trav=jnp.sum(in_window.astype(jnp.int32)),
+        n_relax=jnp.sum(active.astype(jnp.int32)),
+        n_updates=jnp.sum(improved.astype(jnp.int32)),
+        n_extended=jnp.sum((improved & (g.deg > 1)).astype(jnp.int32)))
+    return new_dist, new_parent, rm
+
+
+SEGMENT_MIN = register_backend(RelaxBackend(
+    name="segment_min", prepare=_segment_min_prepare,
+    relax_window=_segment_min_relax))
+
+
+# ---------------------------------------------------------------------------
+# backend: blocked_pallas (BlockedGraph layout -> edge_relax kernel)
+# ---------------------------------------------------------------------------
+
+def _blocked_prepare(g, **opts) -> BlockedGraph:
+    return build_blocked(g, **opts)
+
+
+def _blocked_relax(bg: BlockedGraph, dist, parent, frontier, lb, ub):
+    bv, nb = bg.block_v, bg.n_blocks
+    pad = bg.n_pad - dist.shape[0]
+    dist_p = jnp.pad(dist, (0, pad), constant_values=jnp.inf)
+    parent_p = jnp.pad(parent, (0, pad), constant_values=-1)
+    frontier_p = jnp.pad(frontier, (0, pad))
+    paths = leaf_pruned(frontier_p, dist_p, bg.deg)
+    front_i8 = paths.astype(jnp.int8)
+
+    vals, wins = [], []
+    n_trav = jnp.int32(0)
+    n_relax = jnp.int32(0)
+    for sb, slab in enumerate(bg.slabs):
+        lo = sb * bv
+        best_sb, win_local = relax_bucket(
+            dist_p[lo:lo + bv], front_i8[lo:lo + bv], slab.src_local,
+            slab.dst, slab.w, lb, ub, block_v=bv, n_dst_blocks=nb,
+            tile_e=bg.tile_e, use_kernel=bg.use_kernel,
+            interpret=bg.interpret)
+        vals.append(best_sb)
+        wins.append(jnp.where(win_local == INT_MAX, INT_MAX,
+                              win_local + lo))
+        # Traversal counters are cheap jnp reductions over the slab (the
+        # kernel owns only the scatter-min); the parent-edge exclusion in
+        # `active` cannot change the kernel's min/winner — relaxing back
+        # along the parent edge never improves the parent's dist.
+        src_g = slab.src_local + lo
+        _, in_window, active = edge_candidates(
+            dist_p[src_g], paths[src_g], parent_p[src_g], slab.dst,
+            slab.w, lb, ub)
+        n_trav = n_trav + jnp.sum(in_window.astype(jnp.int32))
+        n_relax = n_relax + jnp.sum(active.astype(jnp.int32))
+
+    best, winner = combine_block_partials(jnp.stack(vals), jnp.stack(wins))
+    new_dist, new_parent, improved = apply_updates(dist_p, parent_p, best,
+                                                   winner)
+    n = bg.n
+    improved = improved[:n]
+    rm = RoundMetrics(
+        improved=improved,
+        n_trav=n_trav,
+        n_relax=n_relax,
+        n_updates=jnp.sum(improved.astype(jnp.int32)),
+        n_extended=jnp.sum((improved & (bg.deg[:n] > 1)).astype(jnp.int32)))
+    return new_dist[:n], new_parent[:n], rm
+
+
+BLOCKED_PALLAS = register_backend(RelaxBackend(
+    name="blocked_pallas", prepare=_blocked_prepare,
+    relax_window=_blocked_relax))

@@ -6,6 +6,13 @@ relaxations; when the frontier empties, the same iteration performs the step
 transition (Function 2's ``computeST``, the dynamic-stepping ``gap``, and
 Function 1's ``initFrontiers`` including the pull phase).
 
+The windowed relaxation itself (Algo 2 l.8-17) is delegated to a pluggable
+backend from :mod:`repro.core.relax` — ``segment_min`` (dense flat edge
+list) or ``blocked_pallas`` (the ``BlockedGraph`` layout driving the
+``kernels/edge_relax`` Pallas kernel).  All backends resolve ties
+deterministically (min candidate, then min source id), so results and
+logical-traversal metrics are identical across them.
+
 TPU-native adaptation (DESIGN.md §2): the MPI worklist becomes a dense
 frontier mask + masked edge-parallel relaxation with a deterministic
 ``segment_min`` replacing the CAS; per-round metrics count *logical*
@@ -13,7 +20,7 @@ traversals exactly as the paper defines them (the weight-sorted adjacency +
 binary search of the C implementation touches precisely the edges our masks
 enable).
 
-Two deliberate, documented deviations:
+Three deliberate, documented deviations:
   * ``nFrontier`` counts successful non-leaf dist updates (every SAP-pushed
     vertex is popped exactly once per update, and leaf pops are pruned), plus
     one for the source pop — equal to worklist pops in the MPI original.
@@ -22,6 +29,12 @@ Two deliberate, documented deviations:
     length (exact — no shortest path can exist in the skipped range).  This
     also yields the termination test (no pending candidate ⇒ done), which is
     equivalent to line 23 of Algorithm 2 but robust to disconnected graphs.
+  * Pull-phase ``n_relax`` counts requests as *created* on the responder
+    side (``dist[resp] in [st, lb)`` with an in-window candidate), matching
+    the MPI model where the owner sends REQUEST messages without knowing
+    whether the requester is still unsettled.  This makes the counter
+    computable identically by the sharded engines (the requester's dist is
+    remote there).
 """
 from __future__ import annotations
 
@@ -31,11 +44,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import stats, stepping, traversal
+from . import relax, stats, stepping, traversal
 from .graph import DeviceGraph
+from .relax import INF, INT_MAX
 
-INT_MAX = jnp.iinfo(jnp.int32).max
-INF = jnp.float32(jnp.inf)
+__all__ = ["sssp", "sssp_batch", "SsspMetrics", "normalized_metrics",
+           "INF", "INT_MAX"]
 
 
 class SsspMetrics(NamedTuple):
@@ -44,8 +58,8 @@ class SsspMetrics(NamedTuple):
     n_extended: jnp.ndarray    # extended paths ("nFrontier" raw)
     n_trav: jnp.ndarray        # edge traversals, push model ("nTrav" raw part)
     n_pull_trav: jnp.ndarray   # edge traversals, pull model (requests)
-    n_relax: jnp.ndarray       # CAS attempts (created paths)
-    n_updates: jnp.ndarray     # successful CAS (dist improvements)
+    n_relax: jnp.ndarray       # relaxation attempts (created paths)
+    n_updates: jnp.ndarray     # successful relaxations (dist improvements)
 
 
 class SsspState(NamedTuple):
@@ -65,41 +79,22 @@ def _zero_metrics() -> SsspMetrics:
     return SsspMetrics(z, z, z, z, z, z, z)
 
 
-def _relax_round(g: DeviceGraph, st_: SsspState) -> SsspState:
-    """One synchronized round of push-model edge relaxations (Algo 2 l.8-17)."""
-    dist, parent = st_.dist, st_.parent
-    # l.8: leaf pruning — paths reaching a leaf are never extended
-    paths = st_.frontier & ((dist <= 0.0) | (g.deg > 1))
-    du = dist[g.src]
-    cand_len = du + g.w
-    in_window = paths[g.src] & (cand_len >= st_.lb) & (cand_len < st_.ub)
-    active = in_window & (g.dst != parent[g.src])
-
-    cand = jnp.where(active, cand_len, INF)
-    best = jax.ops.segment_min(cand, g.dst, num_segments=g.n)
-    improved = best < dist
-    # deterministic parent recovery (min src among winners)
-    win = jnp.where(active & (cand <= best[g.dst]), g.src, INT_MAX)
-    winner = jax.ops.segment_min(win, g.dst, num_segments=g.n)
-    new_dist = jnp.where(improved, best, dist)
-    new_parent = jnp.where(improved, winner, parent)
-
-    # metrics — nFrontier counts worklist pops: every successful update pushes
-    # the vertex into the worklist (SAP) and its later pop extends the path;
-    # leaves are pruned before extension (l.8), so only non-leaf updates count.
-    # With zero repeated relaxations every non-leaf update is final => 1.0.
-    touched = jnp.sum(in_window.astype(jnp.int32))
-    nonleaf_upd = improved & (g.deg > 1)
+def _relax_round(backend: relax.RelaxBackend, layout, st_: SsspState
+                 ) -> SsspState:
+    """One synchronized round of push-model edge relaxations (Algo 2 l.8-17),
+    dispatched through the selected relaxation backend."""
+    new_dist, new_parent, rm = backend.relax_window(
+        layout, st_.dist, st_.parent, st_.frontier, st_.lb, st_.ub)
     m = st_.metrics
     metrics = m._replace(
         n_rounds=m.n_rounds + jnp.where(jnp.any(st_.frontier), 1, 0),
-        n_extended=m.n_extended + jnp.sum(nonleaf_upd.astype(jnp.int32)),
-        n_trav=m.n_trav + touched,
-        n_relax=m.n_relax + jnp.sum(active.astype(jnp.int32)),
-        n_updates=m.n_updates + jnp.sum(improved.astype(jnp.int32)),
+        n_extended=m.n_extended + rm.n_extended,
+        n_trav=m.n_trav + rm.n_trav,
+        n_relax=m.n_relax + rm.n_relax,
+        n_updates=m.n_updates + rm.n_updates,
     )
-    return st_._replace(dist=new_dist, parent=new_parent, frontier=improved,
-                        metrics=metrics)
+    return st_._replace(dist=new_dist, parent=new_parent,
+                        frontier=rm.improved, metrics=metrics)
 
 
 def _bootstrap_ub(g: DeviceGraph, st_: SsspState,
@@ -114,39 +109,29 @@ def _bootstrap_ub(g: DeviceGraph, st_: SsspState,
     return st_._replace(ub=ub)
 
 
-def _init_frontiers(g: DeviceGraph, dist, parent, st, lb, ub, metrics):
-    """Function 1: push band + pull phase + window frontier."""
-    max_w = g.rtow[-1]
-    lb0 = jnp.maximum(0.0, lb - max_w)
-    push_band = (dist >= lb0) & (dist <= st)
-
-    def with_pull(args):
-        dist, parent, metrics = args
-        dv = dist[g.dst]
-        scan = (dist[g.src] > lb) & (g.w < ub - st)     # edges touched by pull
-        valid = scan & (dv >= st) & (dv < lb) & (dv + g.w < ub)
-        cand = jnp.where(valid, dv + g.w, INF)
-        best = jax.ops.segment_min(cand, g.src, num_segments=g.n)
-        improved = best < dist
-        win = jnp.where(valid & (cand <= best[g.src]), g.dst, INT_MAX)
-        winner = jax.ops.segment_min(win, g.src, num_segments=g.n)
-        new_dist = jnp.where(improved, best, dist)
-        new_parent = jnp.where(improved, winner, parent)
-        nonleaf_upd = improved & (g.deg > 1)
-        metrics = metrics._replace(
-            n_pull_trav=metrics.n_pull_trav + jnp.sum(scan.astype(jnp.int32)),
-            n_extended=metrics.n_extended +
-            jnp.sum(nonleaf_upd.astype(jnp.int32)),
-            n_relax=metrics.n_relax + jnp.sum(valid.astype(jnp.int32)),
-            n_updates=metrics.n_updates + jnp.sum(improved.astype(jnp.int32)),
-            n_rounds=metrics.n_rounds + 1,  # the pull phase is a round/sync
-        )
-        return new_dist, new_parent, metrics
-
-    dist, parent, metrics = jax.lax.cond(
-        st < lb, with_pull, lambda a: a, (dist, parent, metrics))
-    frontier = push_band | ((dist >= lb) & (dist < ub))
-    return dist, parent, frontier, metrics
+def _pull_phase(g: DeviceGraph, dist, parent, st, lb, ub, metrics):
+    """Function 1's pull phase: settled band [st, lb) answers requests from
+    unsettled vertices (built from the shared relax primitives)."""
+    dv = dist[g.dst]
+    # edges a pull scan touches: requester unsettled, weight short enough
+    scan = (dist[g.src] > lb) & (g.w < ub - st)
+    # requests created (responder side; w < ub - st is implied)
+    mask = (dv >= st) & (dv < lb) & (dv + g.w < ub)
+    cand = jnp.where(mask, dv + g.w, INF)
+    best, winner = relax.segment_min_with_winner(cand, mask, g.dst, g.src,
+                                                 g.n)
+    new_dist, new_parent, improved = relax.apply_updates(
+        dist, parent, best, winner, gate=dist > lb)
+    nonleaf_upd = improved & (g.deg > 1)
+    metrics = metrics._replace(
+        n_pull_trav=metrics.n_pull_trav + jnp.sum(scan.astype(jnp.int32)),
+        n_extended=metrics.n_extended +
+        jnp.sum(nonleaf_upd.astype(jnp.int32)),
+        n_relax=metrics.n_relax + jnp.sum(mask.astype(jnp.int32)),
+        n_updates=metrics.n_updates + jnp.sum(improved.astype(jnp.int32)),
+        n_rounds=metrics.n_rounds + 1,  # the pull phase is a round/sync
+    )
+    return new_dist, new_parent, metrics
 
 
 def _transition(g: DeviceGraph, st_: SsspState,
@@ -173,8 +158,13 @@ def _transition(g: DeviceGraph, st_: SsspState,
     ub2 = jnp.where(ffwd, lb2 + gap3, ub2)
     st_next = jnp.minimum(st_next, lb2)
 
-    dist, parent, frontier, metrics = _init_frontiers(
-        g, dist, parent, st_next, lb2, ub2, st_.metrics)
+    def with_pull(args):
+        dist, parent, metrics = args
+        return _pull_phase(g, dist, parent, st_next, lb2, ub2, metrics)
+
+    dist, parent, metrics = jax.lax.cond(
+        st_next < lb2, with_pull, lambda a: a, (dist, parent, st_.metrics))
+    frontier = relax.window_frontier(dist, st_next, lb2, ub2, g.rtow[-1])
     frontier = frontier & ~done
     metrics = metrics._replace(n_steps=metrics.n_steps + jnp.where(done, 0, 1))
     return st_._replace(dist=dist, parent=parent, frontier=frontier,
@@ -182,15 +172,12 @@ def _transition(g: DeviceGraph, st_: SsspState,
                         metrics=metrics)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "alpha", "beta"))
-def sssp(g: DeviceGraph, source: jnp.ndarray, *, max_iters: int = 1_000_000,
-         alpha: float = 3.0, beta: float = 0.9):
-    """Run the heuristic SSSP algorithm from ``source``.
-
-    Returns ``(dist, parent, metrics)``.
-    """
+def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
+         max_iters: int, alpha: float, beta: float):
+    """Trace one full SSSP computation (shared by sssp / sssp_batch)."""
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     n = g.n
+    source = jnp.asarray(source, jnp.int32)
     dist0 = jnp.full((n,), INF, jnp.float32).at[source].set(0.0)
     parent0 = jnp.full((n,), -1, jnp.int32).at[source].set(source)
     frontier0 = jnp.zeros((n,), bool).at[source].set(True)
@@ -208,7 +195,7 @@ def sssp(g: DeviceGraph, source: jnp.ndarray, *, max_iters: int = 1_000_000,
         return (~s.done) & (s.iters < max_iters)
 
     def body(s: SsspState):
-        s = _relax_round(g, s)
+        s = _relax_round(backend, layout, s)
         s = _bootstrap_ub(g, s, high_d0)
         s = jax.lax.cond(jnp.any(s.frontier),
                          lambda x: x,
@@ -218,6 +205,57 @@ def sssp(g: DeviceGraph, source: jnp.ndarray, *, max_iters: int = 1_000_000,
 
     out = jax.lax.while_loop(cond, body, init)
     return out.dist, out.parent, out.metrics
+
+
+@partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta"))
+def _sssp_jit(g, layout, source, backend, max_iters, alpha, beta):
+    return _run(g, layout, source, backend, max_iters, alpha, beta)
+
+
+@partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta"))
+def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta):
+    return jax.vmap(
+        lambda s: _run(g, layout, s, backend, max_iters, alpha, beta)
+    )(sources)
+
+
+def prepare_layout(g: DeviceGraph, backend="segment_min", **backend_opts):
+    """Build a backend's graph layout once (host-side, outside ``jit``)."""
+    return relax.get_backend(backend).prepare(g, **backend_opts)
+
+
+def sssp(g: DeviceGraph, source, *, backend="segment_min", layout=None,
+         max_iters: int = 1_000_000, alpha: float = 3.0, beta: float = 0.9,
+         **backend_opts):
+    """Run the heuristic SSSP algorithm from ``source``.
+
+    ``backend`` selects the relaxation implementation (see
+    :func:`repro.core.relax.available_backends`); pass a prebuilt
+    ``layout`` (from :func:`prepare_layout`) to amortize backend
+    preprocessing across calls.  Returns ``(dist, parent, metrics)``.
+    """
+    be = relax.get_backend(backend)
+    if layout is None:
+        layout = be.prepare(g, **backend_opts)
+    return _sssp_jit(g, layout, jnp.int32(source), be, max_iters, alpha,
+                     beta)
+
+
+def sssp_batch(g: DeviceGraph, sources, *, backend="segment_min",
+               layout=None, max_iters: int = 1_000_000, alpha: float = 3.0,
+               beta: float = 0.9, **backend_opts):
+    """Batched multi-source SSSP: one fused computation over ``sources``.
+
+    The per-source state (dist/parent/frontier/window) is stacked along a
+    leading batch axis via ``vmap``; sources that terminate early are
+    masked out by the batched ``while_loop`` while the rest keep stepping.
+    Returns ``(dist, parent, metrics)`` with a leading ``[S]`` axis.
+    """
+    be = relax.get_backend(backend)
+    if layout is None:
+        layout = be.prepare(g, **backend_opts)
+    sources = jnp.asarray(sources, jnp.int32)
+    return _sssp_batch_jit(g, layout, sources, be, max_iters, alpha, beta)
 
 
 def normalized_metrics(g_deg, dist, metrics: SsspMetrics) -> dict:

@@ -1,23 +1,30 @@
 """Pallas TPU kernel for the EIC windowed edge relaxation (paper Algo 2 l.10-17).
 
-One grid step processes one (edge tile x destination block) pair:
+One grid step processes one (destination block x edge tile) pair:
 
     cand[e] = dist[src[e]] + w[e]          if frontier[src[e]] and
                                               lb <= cand[e] < ub
     out[j]  = min over e with dst[e] == j  of cand[e]
+    win[j]  = min src[e] over the edges achieving out[j]   (deterministic
+              parent recovery: smallest source id among the winners)
 
 TPU adaptation (DESIGN.md §2/§5): the MPI CAS loop becomes a dense masked
 min-reduction.  Edges arrive pre-bucketed by (src block, dst block) — the
-2-D partition of the distributed engine — so the source-distance block and
-the destination output block both fit in VMEM.  The scatter is expressed as
-a broadcast-compare reduce over the (TILE_E x BLOCK_V) plane, which is
-VPU-shaped (8x128 lanes), avoiding data-dependent writes entirely; the
-per-tile partial mins are min-combined across the grid's edge-tile axis by
-the output BlockSpec revisiting scheme.
+:class:`~repro.core.graph.BlockedGraph` layout — so the source-distance
+block and the destination output block both fit in VMEM.  The scatter is
+expressed as a broadcast-compare reduce over the (TILE_E x BLOCK_V) plane,
+which is VPU-shaped (8x128 lanes), avoiding data-dependent writes entirely;
+the per-tile partial (min, argmin-src) pairs are combined across the grid's
+edge-tile axis by the output BlockSpec revisiting scheme (value min, winner
+min on ties — associative and order-independent, so the accumulation is
+deterministic).
 
-Grid: (n_dst_blocks, n_edge_tiles); edge tiles revisit the same output
-block, so the kernel accumulates min in-place (output initialized at +inf
-on the first visit).
+Grid: ``(n_dst_blocks, n_edge_tiles)``; for destination block ``b`` the
+kernel masks edges to ``dst in [b*block_v, (b+1)*block_v)``, so every
+destination block is computed (the seed kernel's ``grid=(1, n_tiles)`` only
+ever produced block 0).  Edge tiles revisit the same output block, so the
+kernel accumulates in-place (outputs initialized at +inf / INT_MAX on the
+first visit).
 """
 from __future__ import annotations
 
@@ -29,11 +36,12 @@ from jax.experimental import pallas as pl
 
 DEFAULT_TILE_E = 512
 DEFAULT_BLOCK_V = 512
-NEG = jnp.float32(jnp.inf)
+INT_MAX = jnp.iinfo(jnp.int32).max
 
 
 def _kernel(dist_ref, frontier_ref, src_ref, dst_ref, w_ref, lbub_ref,
-            out_ref, *, block_v: int):
+            val_ref, win_ref, *, block_v: int):
+    b = pl.program_id(0)
     t = pl.program_id(1)
     lb = lbub_ref[0]
     ub = lbub_ref[1]
@@ -45,29 +53,46 @@ def _kernel(dist_ref, frontier_ref, src_ref, dst_ref, w_ref, lbub_ref,
     cand = d_src + w
     ok = (front > 0) & (cand >= lb) & (cand < ub)
     cand = jnp.where(ok, cand, jnp.inf)
-    # dense scatter-min: [TILE_E, BLOCK_V] compare plane
-    cols = jax.lax.broadcasted_iota(jnp.int32, (src.shape[0], block_v), 1)
-    plane = jnp.where(dst[:, None] == cols, cand[:, None], jnp.inf)
+    # dense scatter-min: [TILE_E, BLOCK_V] compare plane for dst block b
+    cols = b * block_v + jax.lax.broadcasted_iota(
+        jnp.int32, (src.shape[0], block_v), 1)
+    hit = dst[:, None] == cols
+    plane = jnp.where(hit, cand[:, None], jnp.inf)
     tile_min = jnp.min(plane, axis=0)           # [BLOCK_V]
+    winners = jnp.where(hit & ok[:, None] & (cand[:, None] <= tile_min),
+                        src[:, None], INT_MAX)
+    tile_win = jnp.min(winners, axis=0)         # [BLOCK_V] block-local src
 
     @pl.when(t == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+        val_ref[...] = jnp.full_like(val_ref, jnp.inf)
+        win_ref[...] = jnp.full_like(win_ref, INT_MAX)
 
-    out_ref[...] = jnp.minimum(out_ref[...], tile_min)
+    prev_v = val_ref[...]
+    prev_w = win_ref[...]
+    better = tile_min < prev_v
+    tie = tile_min == prev_v
+    val_ref[...] = jnp.minimum(prev_v, tile_min)
+    win_ref[...] = jnp.where(
+        better, tile_win,
+        jnp.where(tie, jnp.minimum(prev_w, tile_win), prev_w))
 
 
 @functools.partial(jax.jit, static_argnames=("block_v", "tile_e",
-                                             "interpret"))
+                                             "n_dst_blocks", "interpret"))
 def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
                lb, ub, *, block_v: int = DEFAULT_BLOCK_V,
-               tile_e: int = DEFAULT_TILE_E, interpret: bool = True):
-    """Relax one (src block, dst block) edge bucket.
+               tile_e: int = DEFAULT_TILE_E, n_dst_blocks: int = 1,
+               interpret: bool = True):
+    """Relax one source-block edge slab against ``n_dst_blocks`` dst blocks.
 
     dist_block/frontier_block: [Bs] f32 / int8 (src block local).
-    src_local/dst_local/w: [E] edge slabs (dst_local indexes the dst block;
-    padding edges carry w=+inf).  Returns per-dst-block min candidates
-    [n_dst_blocks * block_v] where n_dst_blocks = ceil(max_dst / block_v).
+    src_local/dst_local/w: [E] edge slabs (``src_local`` is block-local,
+    ``dst_local`` indexes the full ``n_dst_blocks * block_v`` destination
+    range; padding edges carry w=+inf).  Returns ``(vals, winners)`` of
+    shape [n_dst_blocks * block_v]: the per-destination min candidate and
+    the block-local source id achieving it (INT_MAX where no candidate;
+    ties broken toward the smallest source id).
     """
     e = src_local.shape[0]
     e_pad = -(-e // tile_e) * tile_e
@@ -76,10 +101,11 @@ def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
     w = jnp.pad(w, (0, e_pad - e), constant_values=jnp.inf)
     n_tiles = e_pad // tile_e
     lbub = jnp.stack([jnp.float32(lb), jnp.float32(ub)])
+    n_out = n_dst_blocks * block_v
 
-    out = pl.pallas_call(
+    vals, wins = pl.pallas_call(
         functools.partial(_kernel, block_v=block_v),
-        grid=(1, n_tiles),
+        grid=(n_dst_blocks, n_tiles),
         in_specs=[
             pl.BlockSpec(dist_block.shape, lambda b, t: (0,)),
             pl.BlockSpec(frontier_block.shape, lambda b, t: (0,)),
@@ -88,9 +114,11 @@ def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
             pl.BlockSpec((tile_e,), lambda b, t: (t,)),
             pl.BlockSpec(lbub.shape, lambda b, t: (0,)),
         ],
-        out_specs=pl.BlockSpec((block_v,), lambda b, t: (b,)),
-        out_shape=jax.ShapeDtypeStruct((block_v,), jnp.float32),
+        out_specs=(pl.BlockSpec((block_v,), lambda b, t: (b,)),
+                   pl.BlockSpec((block_v,), lambda b, t: (b,))),
+        out_shape=(jax.ShapeDtypeStruct((n_out,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_out,), jnp.int32)),
         interpret=interpret,
     )(dist_block, frontier_block.astype(jnp.int8), src_local, dst_local,
       w, lbub)
-    return out
+    return vals, wins

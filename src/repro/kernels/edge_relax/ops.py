@@ -5,8 +5,6 @@ executes in Python/XLA for validation); on TPU set interpret=False.
 """
 from __future__ import annotations
 
-import jax
-
 from .edge_relax import edge_relax
 from .ref import edge_relax_ref
 
@@ -14,11 +12,18 @@ __all__ = ["edge_relax", "edge_relax_ref", "relax_bucket"]
 
 
 def relax_bucket(dist_block, frontier_block, src_local, dst_local, w, lb,
-                 ub, *, block_v: int = 512, use_kernel: bool = True,
+                 ub, *, block_v: int = 512, n_dst_blocks: int = 1,
+                 tile_e: int = 512, use_kernel: bool = True,
                  interpret: bool = True):
-    """Dispatch: Pallas kernel (TPU hot path) or jnp reference fallback."""
+    """Dispatch: Pallas kernel (TPU hot path) or jnp reference fallback.
+
+    Both paths return ``(vals, winners)`` over the full
+    ``n_dst_blocks * block_v`` destination range.
+    """
     if use_kernel:
         return edge_relax(dist_block, frontier_block, src_local, dst_local,
-                          w, lb, ub, block_v=block_v, interpret=interpret)
+                          w, lb, ub, block_v=block_v, tile_e=tile_e,
+                          n_dst_blocks=n_dst_blocks, interpret=interpret)
     return edge_relax_ref(dist_block, frontier_block, src_local, dst_local,
-                          w, lb, ub, block_v=block_v)
+                          w, lb, ub, block_v=block_v,
+                          n_dst_blocks=n_dst_blocks)

@@ -4,10 +4,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .edge_relax import INT_MAX
+
 
 def edge_relax_ref(dist_block, frontier_block, src_local, dst_local, w,
-                   lb, ub, *, block_v: int = 512):
+                   lb, ub, *, block_v: int = 512, n_dst_blocks: int = 1):
+    """Returns ``(vals, winners)`` matching the Pallas kernel contract:
+    per-destination min candidate plus the smallest block-local source id
+    achieving it (INT_MAX where no in-window candidate exists)."""
+    n_out = n_dst_blocks * block_v
     cand = dist_block[src_local] + w
     ok = (frontier_block[src_local] > 0) & (cand >= lb) & (cand < ub)
     cand = jnp.where(ok, cand, jnp.inf)
-    return jax.ops.segment_min(cand, dst_local, num_segments=block_v)
+    best = jax.ops.segment_min(cand, dst_local, num_segments=n_out)
+    win = jnp.where(ok & (cand <= best[dst_local]), src_local, INT_MAX)
+    winner = jax.ops.segment_min(win, dst_local, num_segments=n_out)
+    return best, winner

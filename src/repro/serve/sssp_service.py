@@ -1,0 +1,104 @@
+"""Request-batching SSSP endpoint: slot-batched multi-source queries.
+
+Production pattern mirroring :mod:`repro.serve.engine`'s slot design, but
+for shortest-path queries instead of token decoding: a fixed-width batch of
+``max_batch`` source slots is filled from a request queue and executed as
+one fused :func:`repro.core.sssp.sssp_batch` call (vmapped state — XLA
+sees a single static shape regardless of how many requests are pending).
+Free slots are padded with a repeat of the first admitted source and their
+results discarded, so partially-full batches never trigger a recompile.
+
+The relaxation backend is pluggable per service instance (see
+``repro.core.relax``); the backend's graph layout is built once at
+construction and reused for every batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+import jax
+
+from ..core import relax
+from ..core.graph import DeviceGraph, HostGraph
+from ..core.sssp import normalized_metrics, sssp_batch
+
+
+@dataclasses.dataclass
+class SsspRequest:
+    """One shortest-path-tree query against the service's graph."""
+    rid: int
+    source: int
+    dist: Optional[np.ndarray] = None      # filled on completion
+    parent: Optional[np.ndarray] = None
+    metrics: Optional[dict] = None
+
+    @property
+    def done(self) -> bool:
+        return self.dist is not None
+
+
+class SsspService:
+    """Continuous request batching over a fixed graph.
+
+    ``submit()`` enqueues requests; each ``step()`` admits up to
+    ``max_batch`` of them, runs one fused batched SSSP and retires the
+    whole batch (unlike token decoding, a query completes in a single
+    engine call, so no slot persists between steps — the fixed
+    ``max_batch`` width exists purely to keep the batch shape static).
+    """
+
+    def __init__(self, g, *, max_batch: int = 8, backend: str = "segment_min",
+                 alpha: float = 3.0, beta: float = 0.9, **backend_opts):
+        if isinstance(g, HostGraph):
+            g = g.to_device()
+        if not isinstance(g, DeviceGraph):
+            raise TypeError(f"expected HostGraph/DeviceGraph, got {type(g)}")
+        self.g = g
+        self.max_batch = max_batch
+        self.backend = relax.get_backend(backend)
+        self.layout = self.backend.prepare(g, **backend_opts)
+        self.alpha = alpha
+        self.beta = beta
+        self.queue: List[SsspRequest] = []
+        self.n_batches = 0
+
+    def submit(self, req: SsspRequest) -> SsspRequest:
+        self.queue.append(req)
+        return req
+
+    def step(self) -> bool:
+        """Admit pending requests and run one fused batch; returns whether
+        any work was done."""
+        batch = self.queue[:self.max_batch]
+        del self.queue[:len(batch)]
+        if not batch:
+            return False
+        # pad free slots with the first admitted source (results discarded)
+        sources = np.array([r.source for r in batch] +
+                           [batch[0].source] * (self.max_batch - len(batch)),
+                           np.int32)
+        dist, parent, metrics = sssp_batch(
+            self.g, sources, backend=self.backend, layout=self.layout,
+            alpha=self.alpha, beta=self.beta)
+        dist = np.asarray(dist)
+        parent = np.asarray(parent)
+        metrics = jax.tree.map(np.asarray, metrics)
+        deg = np.asarray(self.g.deg)
+        for slot, req in enumerate(batch):
+            req.dist = dist[slot]
+            req.parent = parent[slot]
+            req.metrics = normalized_metrics(
+                deg, dist[slot],
+                jax.tree.map(lambda x: x[slot], metrics))
+        self.n_batches += 1
+        return True
+
+    def run(self, max_steps: int = 10_000) -> int:
+        """Drain the queue; returns the number of batch steps executed."""
+        steps = 0
+        while self.queue and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

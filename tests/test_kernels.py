@@ -2,6 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.edge_relax.ops import edge_relax, edge_relax_ref
@@ -23,12 +24,47 @@ def test_edge_relax_shapes(bs, bv, e, window):
     dst = rng.integers(0, bv, e).astype(np.int32)
     w = rng.random(e).astype(np.float32)
     lb, ub = window
-    out = edge_relax(jnp.asarray(dist), jnp.asarray(front), jnp.asarray(src),
-                     jnp.asarray(dst), jnp.asarray(w), lb, ub, block_v=bv)
-    ref = edge_relax_ref(jnp.asarray(dist), jnp.asarray(front),
-                         jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
-                         lb, ub, block_v=bv)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+    out_v, out_w = edge_relax(jnp.asarray(dist), jnp.asarray(front),
+                              jnp.asarray(src), jnp.asarray(dst),
+                              jnp.asarray(w), lb, ub, block_v=bv)
+    ref_v, ref_w = edge_relax_ref(jnp.asarray(dist), jnp.asarray(front),
+                                  jnp.asarray(src), jnp.asarray(dst),
+                                  jnp.asarray(w), lb, ub, block_v=bv)
+    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(out_w), np.asarray(ref_w))
+
+
+@pytest.mark.parametrize("bv,n_dst_blocks,tile_e", [(128, 3, 64),
+                                                    (64, 5, 128),
+                                                    (256, 2, 256)])
+def test_edge_relax_multi_dst_block(bv, n_dst_blocks, tile_e):
+    """Destinations spanning >1 block must all be computed (the seed kernel's
+    grid=(1, n_tiles) silently produced only block 0) and winners must match
+    the deterministic min-src tiebreak of the reference."""
+    rng = np.random.default_rng(bv * n_dst_blocks)
+    bs = 200
+    e = 3000
+    n_out = bv * n_dst_blocks
+    dist = np.where(rng.random(bs) < 0.7,
+                    rng.random(bs).astype(np.float32), np.inf)
+    front = (rng.random(bs) < 0.6).astype(np.int8)
+    src = rng.integers(0, bs, e).astype(np.int32)
+    dst = rng.integers(0, n_out, e).astype(np.int32)
+    # duplicate candidates force winner tie-breaks
+    w = (rng.integers(1, 8, e) / 8.0).astype(np.float32)
+    args = (jnp.asarray(dist), jnp.asarray(front), jnp.asarray(src),
+            jnp.asarray(dst), jnp.asarray(w), 0.1, 1.4)
+    out_v, out_w = edge_relax(*args, block_v=bv, tile_e=tile_e,
+                              n_dst_blocks=n_dst_blocks)
+    ref_v, ref_w = edge_relax_ref(*args, block_v=bv,
+                                  n_dst_blocks=n_dst_blocks)
+    assert out_v.shape == (n_out,) and out_w.shape == (n_out,)
+    # every dst block must receive candidates (not just block 0)
+    finite_per_block = np.isfinite(np.asarray(out_v)).reshape(
+        n_dst_blocks, bv).sum(axis=1)
+    assert (finite_per_block > 0).all(), finite_per_block
+    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(out_w), np.asarray(ref_w))
 
 
 @settings(max_examples=20, deadline=None)
@@ -48,9 +84,10 @@ def test_edge_relax_property(seed):
     ub = lb + float(rng.random() * 2) + 1e-3
     args = (jnp.asarray(dist), jnp.asarray(front), jnp.asarray(src),
             jnp.asarray(dst), jnp.asarray(w), lb, ub)
-    np.testing.assert_allclose(
-        np.asarray(edge_relax(*args, block_v=bv)),
-        np.asarray(edge_relax_ref(*args, block_v=bv)))
+    out_v, out_w = edge_relax(*args, block_v=bv)
+    ref_v, ref_w = edge_relax_ref(*args, block_v=bv)
+    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(out_w), np.asarray(ref_w))
 
 
 # --- flash attention ---------------------------------------------------------
