@@ -18,7 +18,7 @@ import jax
 from repro.core import relax
 from repro.core.baselines import bellman_ford, delta_stepping, dijkstra_host
 from repro.core.distributed import shard_graph, sssp_distributed
-from repro.core.sssp import sssp, sssp_batch, normalized_metrics
+from repro.core.sssp import sssp, sssp_batch, sssp_p2p, normalized_metrics
 from repro.data.generators import kronecker, road_grid, uniform_random
 from repro.data.weights import make_variant
 
@@ -106,6 +106,47 @@ def run_eic_batch(g, sources, alpha=3.0, beta=0.9, backend="segment_min"):
     avg["time_s"] = elapsed / srcs.size
     avg["batch"] = int(srcs.size)
     return avg
+
+
+def run_p2p_vs_tree(g, pairs, alpha=3.0, beta=0.9, backend="segment_min"):
+    """Early-exit head-to-head: p2p queries vs full trees on the same
+    (source, target) pairs — raw rounds (nSync) saved and bitwise target
+    distance parity (the serving acceptance check)."""
+    dg = g.to_device()
+    be = relax.get_backend(backend)
+    layout = be.prepare(dg)
+    s0, t0 = pairs[0]
+    jax.block_until_ready(sssp(dg, int(s0), backend=be, layout=layout,
+                               alpha=alpha, beta=beta)[0])
+    jax.block_until_ready(sssp_p2p(dg, int(s0), int(t0), backend=be,
+                                   layout=layout, alpha=alpha, beta=beta)[0])
+    rounds_tree, rounds_p2p = [], []
+    t_tree = t_p2p = 0.0
+    bitwise_equal = True
+    for s, t in pairs:
+        t0_ = time.perf_counter()
+        d_full, _, m_full = sssp(dg, int(s), backend=be, layout=layout,
+                                 alpha=alpha, beta=beta)
+        jax.block_until_ready(d_full)
+        t_tree += time.perf_counter() - t0_
+        t0_ = time.perf_counter()
+        d_p2p, _, m_p2p = sssp_p2p(dg, int(s), int(t), backend=be,
+                                   layout=layout, alpha=alpha, beta=beta)
+        jax.block_until_ready(d_p2p)
+        t_p2p += time.perf_counter() - t0_
+        bitwise_equal &= (np.asarray(d_p2p)[t].tobytes()
+                          == np.asarray(d_full)[t].tobytes())
+        rounds_tree.append(int(m_full.n_rounds))
+        rounds_p2p.append(int(m_p2p.n_rounds))
+    n = len(pairs)
+    return {
+        "rounds_tree": float(np.mean(rounds_tree)),
+        "rounds_p2p": float(np.mean(rounds_p2p)),
+        "round_ratio": float(np.sum(rounds_p2p) / max(np.sum(rounds_tree), 1)),
+        "bitwise_equal": bool(bitwise_equal),
+        "time_s_tree": t_tree / n,
+        "time_s": t_p2p / n,
+    }
 
 
 def run_distributed(g, sources, alpha=3.0, beta=0.9, version="v2"):

@@ -128,6 +128,17 @@ def window_frontier(dist, st, lb, ub, max_w):
     return ((dist >= lb0) & (dist <= st)) | ((dist >= lb) & (dist < ub))
 
 
+def settled_mask(dist, lb):
+    """Vertices whose distance is final under the stepping invariant.
+
+    Every vertex with ``dist < lb`` is settled: all shorter paths were
+    relaxed in earlier windows, and any pending candidate has length
+    >= lb.  This is the predicate the early-exit query goals (p2p /
+    distance-bounded / k-nearest in :mod:`repro.core.sssp`) test against.
+    """
+    return dist < lb
+
+
 # ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------

@@ -41,6 +41,7 @@ from __future__ import annotations
 from functools import partial
 from typing import NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -48,8 +49,74 @@ from . import relax, stats, stepping, traversal
 from .graph import DeviceGraph
 from .relax import INF, INT_MAX
 
-__all__ = ["sssp", "sssp_batch", "SsspMetrics", "normalized_metrics",
+__all__ = ["sssp", "sssp_batch", "sssp_p2p", "sssp_bounded", "sssp_knear",
+           "SsspMetrics", "normalized_metrics", "GOALS", "goal_param_array",
            "INF", "INT_MAX"]
+
+# Early-exit query goals.  A goal turns the full shortest-path-tree
+# computation into a query that terminates as soon as its answer is
+# settled (the stepping invariant: every vertex with dist < lb is final,
+# see relax.settled_mask), saving the remaining windows entirely:
+#
+#   "tree"    — no goal; run until every reachable vertex settles.
+#   "p2p"     — point-to-point: stop once `target` (the goal param) is
+#               settled; dist[target]/the parent chain back to the source
+#               are then bitwise-equal to the full-tree result.
+#   "bounded" — distance-bounded search: stop once lb > D, i.e. every
+#               vertex with dist <= D is settled.
+#   "knear"   — k-nearest: stop once k+1 vertices (the source plus its k
+#               nearest) are settled.
+#
+# The goal kind is static (part of the jit cache key); the goal parameter
+# is a traced scalar (int32 target/k, float32 bound) so one compiled
+# engine serves every target/bound/k — and vmaps over per-source params
+# in sssp_batch.
+GOALS = ("tree", "p2p", "bounded", "knear")
+
+
+def goal_param_array(goal: str, params) -> jnp.ndarray:
+    """Coerce goal parameter(s) to the dtype the engine expects."""
+    if goal not in GOALS:
+        raise ValueError(f"unknown goal {goal!r}; expected one of {GOALS}")
+    if goal == "tree":
+        shape = () if params is None or jnp.ndim(params) == 0 \
+            else (len(params),)
+        return jnp.zeros(shape, jnp.int32)
+    if params is None:
+        raise ValueError(f"goal {goal!r} requires a parameter "
+                         "(target / bound / k)")
+    dtype = jnp.float32 if goal == "bounded" else jnp.int32
+    return jnp.asarray(params, dtype)
+
+
+def _check_goal_bounds(goal: str, gp, n: int) -> None:
+    """Reject out-of-range p2p targets while they are still concrete: a
+    jit gather clamps silently, which would report vertex n-1's distance
+    as the target's.  Traced params (calls from inside jit) are skipped —
+    the caller owns validation there."""
+    if goal != "p2p":
+        return
+    try:
+        t = np.asarray(gp)
+    except Exception:
+        return
+    if t.size and (int(t.min()) < 0 or int(t.max()) >= n):
+        raise ValueError(f"p2p target(s) {t} out of range for graph "
+                         f"with n={n}")
+
+
+def _goal_reached(goal: str, goal_param, dist, lb):
+    """Whether the query goal is settled at window lower bound ``lb``."""
+    if goal == "tree":
+        return jnp.bool_(False)
+    if goal == "p2p":
+        return relax.settled_mask(dist, lb)[goal_param]
+    if goal == "bounded":
+        return lb > goal_param
+    if goal == "knear":
+        n_settled = jnp.sum(relax.settled_mask(dist, lb).astype(jnp.int32))
+        return n_settled >= goal_param + 1
+    raise ValueError(f"unknown goal {goal!r}; expected one of {GOALS}")
 
 
 class SsspMetrics(NamedTuple):
@@ -135,7 +202,8 @@ def _pull_phase(g: DeviceGraph, dist, parent, st, lb, ub, metrics):
 
 
 def _transition(g: DeviceGraph, st_: SsspState,
-                params: stepping.SteppingParams) -> SsspState:
+                params: stepping.SteppingParams, goal: str,
+                goal_param) -> SsspState:
     """Step transition (Algo 2 l.22 + Function 1/2 + fast-forward/termination)."""
     dist, parent = st_.dist, st_.parent
     lb, ub = st_.lb, st_.ub
@@ -164,6 +232,9 @@ def _transition(g: DeviceGraph, st_: SsspState,
 
     dist, parent, metrics = jax.lax.cond(
         st_next < lb2, with_pull, lambda a: a, (dist, parent, st_.metrics))
+    # early-exit goal: the settled set only grows at step transitions, so
+    # checking here is exact — and costs one reduction per transition.
+    done = done | _goal_reached(goal, goal_param, dist, lb2)
     frontier = relax.window_frontier(dist, st_next, lb2, ub2, g.rtow[-1])
     frontier = frontier & ~done
     metrics = metrics._replace(n_steps=metrics.n_steps + jnp.where(done, 0, 1))
@@ -173,9 +244,13 @@ def _transition(g: DeviceGraph, st_: SsspState,
 
 
 def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
-         max_iters: int, alpha: float, beta: float):
-    """Trace one full SSSP computation (shared by sssp / sssp_batch)."""
+         max_iters: int, alpha: float, beta: float, goal: str = "tree",
+         goal_param=None):
+    """Trace one SSSP computation (shared by sssp / sssp_batch); ``goal``
+    selects the early-exit variant (see GOALS)."""
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
+    if goal_param is None:
+        goal_param = jnp.int32(0)
     n = g.n
     source = jnp.asarray(source, jnp.int32)
     dist0 = jnp.full((n,), INF, jnp.float32).at[source].set(0.0)
@@ -199,7 +274,8 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
         s = _bootstrap_ub(g, s, high_d0)
         s = jax.lax.cond(jnp.any(s.frontier),
                          lambda x: x,
-                         lambda x: _transition(g, x, params),
+                         lambda x: _transition(g, x, params, goal,
+                                               goal_param),
                          s)
         return s._replace(iters=s.iters + 1)
 
@@ -207,16 +283,22 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
     return out.dist, out.parent, out.metrics
 
 
-@partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta"))
-def _sssp_jit(g, layout, source, backend, max_iters, alpha, beta):
-    return _run(g, layout, source, backend, max_iters, alpha, beta)
+@partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
+                                   "goal"))
+def _sssp_jit(g, layout, source, backend, max_iters, alpha, beta, goal,
+              goal_param):
+    return _run(g, layout, source, backend, max_iters, alpha, beta, goal,
+                goal_param)
 
 
-@partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta"))
-def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta):
+@partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
+                                   "goal"))
+def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta,
+                    goal, goal_params):
     return jax.vmap(
-        lambda s: _run(g, layout, s, backend, max_iters, alpha, beta)
-    )(sources)
+        lambda s, gp: _run(g, layout, s, backend, max_iters, alpha, beta,
+                           goal, gp)
+    )(sources, goal_params)
 
 
 def prepare_layout(g: DeviceGraph, backend="segment_min", **backend_opts):
@@ -226,36 +308,72 @@ def prepare_layout(g: DeviceGraph, backend="segment_min", **backend_opts):
 
 def sssp(g: DeviceGraph, source, *, backend="segment_min", layout=None,
          max_iters: int = 1_000_000, alpha: float = 3.0, beta: float = 0.9,
-         **backend_opts):
+         goal: str = "tree", goal_param=None, **backend_opts):
     """Run the heuristic SSSP algorithm from ``source``.
 
     ``backend`` selects the relaxation implementation (see
     :func:`repro.core.relax.available_backends`); pass a prebuilt
     ``layout`` (from :func:`prepare_layout`) to amortize backend
-    preprocessing across calls.  Returns ``(dist, parent, metrics)``.
+    preprocessing across calls.  ``goal``/``goal_param`` select an
+    early-exit query variant (see :data:`GOALS`; the convenience wrappers
+    :func:`sssp_p2p` / :func:`sssp_bounded` / :func:`sssp_knear` fill them
+    in).  Returns ``(dist, parent, metrics)``.
     """
     be = relax.get_backend(backend)
     if layout is None:
         layout = be.prepare(g, **backend_opts)
+    gp = goal_param_array(goal, goal_param)
+    _check_goal_bounds(goal, gp, g.n)
     return _sssp_jit(g, layout, jnp.int32(source), be, max_iters, alpha,
-                     beta)
+                     beta, goal, gp)
+
+
+def sssp_p2p(g: DeviceGraph, source, target, **kw):
+    """Point-to-point query: early exit once ``target`` is settled.
+
+    ``dist[target]`` and the parent chain target -> source are bitwise
+    equal to the full-tree result; other entries may be tentative."""
+    return sssp(g, source, goal="p2p", goal_param=target, **kw)
+
+
+def sssp_bounded(g: DeviceGraph, source, bound, **kw):
+    """Distance-bounded query: early exit once every vertex with
+    ``dist <= bound`` is settled (entries above ``bound`` are tentative)."""
+    return sssp(g, source, goal="bounded", goal_param=bound, **kw)
+
+
+def sssp_knear(g: DeviceGraph, source, k, **kw):
+    """k-nearest query: early exit once the source plus its ``k`` nearest
+    vertices are settled (their distances are final; the rest tentative)."""
+    return sssp(g, source, goal="knear", goal_param=k, **kw)
 
 
 def sssp_batch(g: DeviceGraph, sources, *, backend="segment_min",
                layout=None, max_iters: int = 1_000_000, alpha: float = 3.0,
-               beta: float = 0.9, **backend_opts):
+               beta: float = 0.9, goal: str = "tree", goal_params=None,
+               **backend_opts):
     """Batched multi-source SSSP: one fused computation over ``sources``.
 
     The per-source state (dist/parent/frontier/window) is stacked along a
     leading batch axis via ``vmap``; sources that terminate early are
     masked out by the batched ``while_loop`` while the rest keep stepping.
-    Returns ``(dist, parent, metrics)`` with a leading ``[S]`` axis.
+    All slots share the (static) ``goal`` kind but carry per-slot
+    ``goal_params`` (targets / bounds / k values).  Returns ``(dist,
+    parent, metrics)`` with a leading ``[S]`` axis.
     """
     be = relax.get_backend(backend)
     if layout is None:
         layout = be.prepare(g, **backend_opts)
     sources = jnp.asarray(sources, jnp.int32)
-    return _sssp_batch_jit(g, layout, sources, be, max_iters, alpha, beta)
+    if goal == "tree" and goal_params is None:
+        goal_params = [0] * sources.shape[0]
+    gp = goal_param_array(goal, goal_params)
+    if gp.shape != sources.shape:
+        raise ValueError(f"goal_params shape {gp.shape} != sources shape "
+                         f"{sources.shape}")
+    _check_goal_bounds(goal, gp, g.n)
+    return _sssp_batch_jit(g, layout, sources, be, max_iters, alpha, beta,
+                           goal, gp)
 
 
 def normalized_metrics(g_deg, dist, metrics: SsspMetrics) -> dict:

@@ -19,12 +19,25 @@ from repro.core.graph import HostGraph, build_csr
 RMAT_A, RMAT_B, RMAT_C, RMAT_D = 0.57, 0.19, 0.19, 0.05
 
 
-def kronecker(scale: int, edge_factor: int, seed: int = 0,
-              weights: str = "uniform") -> HostGraph:
-    """Graph500 Kronecker generator: 2^scale vertices, edge_factor*2^scale edges."""
-    rng = np.random.default_rng(seed)
-    n = 1 << scale
-    m = edge_factor * n
+def _resample_exact(m: int, draw) -> tuple:
+    """Draw (u, v) endpoint batches via ``draw(k)`` until exactly ``m``
+    non-self-loop edges accumulate (generators previously under-delivered
+    by however many self loops they happened to draw)."""
+    us = [np.zeros(0, np.int64)]
+    vs = [np.zeros(0, np.int64)]
+    have = 0
+    while have < m:
+        u, v = draw(m - have)
+        keep = u != v
+        u, v = u[keep], v[keep]
+        us.append(u)
+        vs.append(v)
+        have += u.shape[0]
+    return np.concatenate(us)[:m], np.concatenate(vs)[:m]
+
+
+def _rmat_pairs(rng, m: int, scale: int) -> tuple:
+    """One batch of m RMAT endpoint pairs (may contain self loops)."""
     u = np.zeros(m, np.int64)
     v = np.zeros(m, np.int64)
     ab = RMAT_A + RMAT_B
@@ -37,24 +50,34 @@ def kronecker(scale: int, edge_factor: int, seed: int = 0,
         v_bit = np.where(u_bit, r2 > c_norm, r2 > a_norm)
         u |= u_bit.astype(np.int64) << bit
         v |= v_bit.astype(np.int64) << bit
+    return u, v
+
+
+def kronecker(scale: int, edge_factor: int, seed: int = 0,
+              weights: str = "uniform") -> HostGraph:
+    """Graph500 Kronecker generator: 2^scale vertices, edge_factor*2^scale edges."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = edge_factor * n
+    if n < 2 and m > 0:
+        raise ValueError("need scale >= 1 to draw non-self-loop edges")
+    u, v = _resample_exact(m, lambda k: _rmat_pairs(rng, k, scale))
     # Graph500 permutes vertex labels to break locality
     perm = rng.permutation(n)
     u, v = perm[u], perm[v]
-    mask = u != v  # drop self loops
-    u, v = u[mask], v[mask]
-    w = _gen_weights(rng, u.shape[0], weights)
+    w = _gen_weights(rng, m, weights)
     return build_csr(n, u, v, w)
 
 
 def uniform_random(n: int, m: int, seed: int = 0,
                    weights: str = "uniform") -> HostGraph:
     """Urand-style: m undirected edges with uniformly random endpoints."""
+    if n < 2 and m > 0:
+        raise ValueError("need n >= 2 to draw non-self-loop edges")
     rng = np.random.default_rng(seed)
-    u = rng.integers(0, n, m)
-    v = rng.integers(0, n, m)
-    mask = u != v
-    u, v = u[mask], v[mask]
-    w = _gen_weights(rng, u.shape[0], weights)
+    u, v = _resample_exact(
+        m, lambda k: (rng.integers(0, n, k), rng.integers(0, n, k)))
+    w = _gen_weights(rng, m, weights)
     return build_csr(n, u, v, w)
 
 
@@ -98,4 +121,11 @@ def _gen_weights(rng, m, kind: str):
     if kind == "uniform":
         # uniform in (0, 1] as Graph500 SSSP specifies
         return 1.0 - rng.random(m)
+    if kind == "bimodal":
+        # paper §4.2 weight-variant flavor: two narrow bands (a "short
+        # hop" mode near 0.1 and a "long hop" mode near 0.9), stressing
+        # the RtoW quantile LUT with a strongly non-uniform distribution
+        lo = rng.uniform(0.05, 0.15, m)
+        hi = rng.uniform(0.85, 1.0, m)
+        return np.where(rng.random(m) < 0.5, lo, hi)
     raise ValueError(f"unknown weight kind {kind}")

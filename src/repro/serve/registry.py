@@ -1,0 +1,222 @@
+"""Multi-graph registry: cached device layouts + engines, LRU-evicted.
+
+Serving heterogeneous traffic means holding several preprocessed graphs
+at once — each with a device-resident :class:`~repro.core.graph.DeviceGraph`,
+one relaxation-backend layout (``BlockedGraph`` bucketing etc.), and the
+host-side per-graph serving state (hoisted degree array, eccentricity
+hints for batch formation).  Those are exactly the expensive,
+re-buildable artifacts, so the registry separates
+
+* the **spec** — how to (re)build a graph, registered once per ``gid``
+  and kept forever (a ``HostGraph`` or a zero-arg factory returning one);
+* the **engine cache** — at most ``capacity`` built
+  :class:`GraphEngine` s, keyed by ``(gid, backend)``, recycled LRU.
+
+A cache miss on a registered gid transparently rebuilds the engine from
+its spec (and re-pays layout preprocessing + jit, which is why the
+serving benchmark reports registry hit rates).  The jitted engine itself
+is shared process-wide by jax's jit cache; what the registry pins per
+entry is the layout pytree the compiled code is keyed on.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import numpy as np
+import jax
+
+from ..core import relax
+from ..core.graph import DeviceGraph, HostGraph
+from ..core.sssp import sssp_batch
+
+__all__ = ["GraphEngine", "GraphRegistry", "estimate_eccentricity"]
+
+
+def estimate_eccentricity(hg) -> np.ndarray:
+    """Per-vertex eccentricity estimate, in hops (host-side, O(N + M)).
+
+    One BFS from a max-degree landmark ``L`` gives hop distances
+    ``h(v)``; with ``H = ecc(L)`` (in hops, observed), the triangle
+    inequality bounds ``ecc(v)`` within ``[H - h(v), H + h(v)]`` and we
+    report the upper bound ``H + h(v)``.  The absolute value is crude,
+    but the *ordering* is what batch formation needs: sources far from
+    the landmark run more stepping rounds, so grouping nearby estimates
+    keeps a vmapped batch from paying one outlier's rounds.
+    Disconnected vertices get ``2H + 1`` (worst bucket).
+    """
+    n = hg.n
+    row_ptr = np.asarray(hg.row_ptr, np.int64)
+    dst = np.asarray(hg.dst, np.int64)
+    hop = np.full(n, -1, np.int64)
+    if n == 0:
+        return np.zeros(0, np.float32)
+    frontier = np.array([int(np.argmax(np.asarray(hg.deg)))], np.int64)
+    hop[frontier] = 0
+    level = 0
+    while frontier.size:
+        starts = row_ptr[frontier]
+        counts = row_ptr[frontier + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            break
+        offsets = np.repeat(
+            starts - np.concatenate(([0], np.cumsum(counts)[:-1])), counts)
+        nbrs = dst[offsets + np.arange(total)]
+        nbrs = np.unique(nbrs[hop[nbrs] < 0])
+        level += 1
+        hop[nbrs] = level
+        frontier = nbrs
+    h_max = int(hop.max())
+    ecc = np.where(hop >= 0, h_max + hop, 2 * h_max + 1)
+    return ecc.astype(np.float32)
+
+
+GraphSpec = Union[HostGraph, DeviceGraph, Callable[[], HostGraph]]
+
+
+class GraphEngine:
+    """One built (graph, backend) serving entry.
+
+    Owns the device graph, the backend layout (built once), the hoisted
+    host-side degree array, and the eccentricity hints; ``run_batch``
+    executes one fused multi-source goal query batch.
+    """
+
+    def __init__(self, gid: str, hg, backend: str,
+                 alpha: float, beta: float, **backend_opts):
+        self.gid = gid
+        self.host = hg
+        self.g: DeviceGraph = hg.to_device() if isinstance(hg, HostGraph) \
+            else hg
+        self.backend = relax.get_backend(backend)
+        self.layout = self.backend.prepare(self.g, **backend_opts)
+        self.alpha = alpha
+        self.beta = beta
+        # hoisted once: per-slot metric normalization reads this every batch
+        self.deg = np.asarray(hg.deg)
+        self._ecc_hint: Optional[np.ndarray] = None
+
+    @property
+    def ecc_hint(self) -> np.ndarray:
+        """Lazy landmark-BFS eccentricity estimates (only ecc-aware batch
+        formation reads these; FIFO consumers never pay the BFS)."""
+        if self._ecc_hint is None:
+            self._ecc_hint = estimate_eccentricity(self.host)
+        return self._ecc_hint
+
+    def run_batch(self, sources, goal: str = "tree", goal_params=None):
+        """One fused batch; returns numpy ``(dist, parent, metrics)`` with
+        a leading slot axis."""
+        dist, parent, metrics = sssp_batch(
+            self.g, np.asarray(sources, np.int32), backend=self.backend,
+            layout=self.layout, alpha=self.alpha, beta=self.beta,
+            goal=goal, goal_params=goal_params)
+        return (np.asarray(dist), np.asarray(parent),
+                jax.tree.map(np.asarray, metrics))
+
+
+@dataclasses.dataclass
+class RegistryStats:
+    hits: int = 0
+    misses: int = 0
+    builds: int = 0
+    evictions: int = 0
+
+    def as_dict(self) -> dict:
+        total = self.hits + self.misses
+        return {**dataclasses.asdict(self),
+                "hit_rate": self.hits / total if total else 1.0}
+
+
+class GraphRegistry:
+    """LRU cache of :class:`GraphEngine` s over registered graph specs.
+
+    Thread-safe: the LRU state is guarded by an internal lock, so several
+    schedulers (or producer threads) can share one registry.  A cold
+    build holds the lock for its duration — concurrent lookups wait
+    rather than build duplicates (per-key build futures are a ROADMAP
+    follow-up).
+    """
+
+    def __init__(self, capacity: int = 4, *, backend: str = "segment_min",
+                 alpha: float = 3.0, beta: float = 0.9, **backend_opts):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.default_backend = relax.get_backend(backend).name
+        self.alpha = alpha
+        self.beta = beta
+        self.backend_opts = dict(backend_opts)
+        self._lock = threading.RLock()
+        self._specs: Dict[str, GraphSpec] = {}
+        self._engines: "collections.OrderedDict[Tuple[str, str], GraphEngine]" \
+            = collections.OrderedDict()
+        self.stats = RegistryStats()
+
+    def register(self, gid: str, graph: GraphSpec) -> None:
+        """Register (or replace) a graph spec; drops any cached engines
+        built from the previous spec."""
+        if not (isinstance(graph, (HostGraph, DeviceGraph))
+                or callable(graph)):
+            raise TypeError(
+                f"expected HostGraph/DeviceGraph or factory for {gid!r}, "
+                f"got {type(graph)}")
+        with self._lock:
+            self._specs[gid] = graph
+            for key in [k for k in self._engines if k[0] == gid]:
+                del self._engines[key]
+
+    @property
+    def gids(self) -> tuple:
+        with self._lock:
+            return tuple(self._specs)
+
+    def cached_keys(self) -> tuple:
+        """Currently built (gid, backend) pairs, LRU -> MRU order."""
+        with self._lock:
+            return tuple(self._engines)
+
+    def peek(self, gid: str,
+             backend: Optional[str] = None) -> Optional[GraphEngine]:
+        """Return the cached engine or None — never builds, never touches
+        LRU order or hit/miss stats (for lock-sensitive callers)."""
+        backend = (relax.get_backend(backend).name if backend is not None
+                   else self.default_backend)
+        with self._lock:
+            return self._engines.get((gid, backend))
+
+    def engine(self, gid: str, backend: Optional[str] = None) -> GraphEngine:
+        """Get-or-build the engine for ``(gid, backend)`` (marks it MRU)."""
+        backend = (relax.get_backend(backend).name if backend is not None
+                   else self.default_backend)
+        key = (gid, backend)
+        with self._lock:
+            if gid not in self._specs:
+                raise KeyError(f"graph {gid!r} is not registered "
+                               f"(have: {sorted(self._specs)})")
+            eng = self._engines.get(key)
+            if eng is not None:
+                self.stats.hits += 1
+                self._engines.move_to_end(key)
+                return eng
+            self.stats.misses += 1
+            spec = self._specs[gid]
+            hg = spec() if callable(spec) else spec
+            eng = GraphEngine(gid, hg, backend, self.alpha, self.beta,
+                              **self.backend_opts)
+            self.stats.builds += 1
+            self._engines[key] = eng
+            while len(self._engines) > self.capacity:
+                self._engines.popitem(last=False)
+                self.stats.evictions += 1
+            return eng
+
+    def evict(self, gid: str, backend: Optional[str] = None) -> bool:
+        """Drop a cached engine (the spec stays registered)."""
+        backend = (relax.get_backend(backend).name if backend is not None
+                   else self.default_backend)
+        with self._lock:
+            return self._engines.pop((gid, backend), None) is not None

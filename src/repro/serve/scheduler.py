@@ -1,0 +1,285 @@
+"""Async admission layer: thread-safe query queue -> fused engine batches.
+
+Producers call :meth:`QueryScheduler.submit` from any thread and get a
+``concurrent.futures.Future`` resolving to a
+:class:`~repro.serve.queries.QueryResult`.  A batch step (driven either
+synchronously via :meth:`step`/:meth:`drain` or by the background worker
+started with :meth:`start`) then
+
+1. **expires** tickets whose deadline passed (``DeadlineExceeded`` on the
+   future) — deadline-aware admission;
+2. orders the queue by ``(priority desc, deadline, FIFO seq)`` and picks
+   the head-of-line ticket — priority-aware admission;
+3. restricts an ``admit_window`` of queue-front tickets to the head's
+   batch-compatibility key ``(gid, goal kind)`` (one compiled engine per
+   batch), then — the ROADMAP divergent-sources item — fills the
+   remaining slots with the window tickets whose **estimated
+   eccentricity** is nearest the head's, so a vmapped batch is not
+   dominated by one long-running outlier's stepping rounds;
+4. pads free slots by repeating slot 0 (static batch shape, no
+   recompiles; padded results are discarded, never surfaced) and runs one
+   fused ``sssp_batch`` goal query.
+
+The head of line is always admitted, so priority/FIFO progress is
+starvation-free; eccentricity grouping only chooses its *companions*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional
+
+import numpy as np
+import jax
+
+from .queries import ExecutionPlan, Query, finalize, plan
+from .registry import GraphRegistry
+
+__all__ = ["DeadlineExceeded", "QueryScheduler"]
+
+
+class DeadlineExceeded(Exception):
+    """Raised on a query future whose deadline passed before admission."""
+
+
+@dataclasses.dataclass
+class _Ticket:
+    seq: int
+    query: Query
+    plan: ExecutionPlan
+    priority: int
+    deadline: Optional[float]         # absolute monotonic time or None
+    future: Future
+    t_submit: float
+
+    def sort_key(self):
+        return (-self.priority,
+                self.deadline if self.deadline is not None else float("inf"),
+                self.seq)
+
+
+class QueryScheduler:
+    """Thread-safe admission queue over a :class:`GraphRegistry`."""
+
+    def __init__(self, registry: GraphRegistry, *, max_batch: int = 8,
+                 backend: Optional[str] = None,
+                 admit_window: Optional[int] = None,
+                 ecc_batching: bool = True):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if admit_window is None:
+            admit_window = 4 * max_batch
+        if admit_window < 1:
+            raise ValueError("admit_window must be >= 1")
+        self.registry = registry
+        self.max_batch = max_batch
+        self.backend = backend
+        self.admit_window = admit_window
+        self.ecc_batching = ecc_batching
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._pending: List[_Ticket] = []
+        self._seq = 0
+        self._worker: Optional[threading.Thread] = None
+        self._stop = False
+        # serving counters (the benchmark's occupancy/throughput inputs)
+        self.n_batches = 0
+        self.n_done = 0
+        self.n_expired = 0
+
+    # ------------------------------------------------------------------
+    # producer side
+    # ------------------------------------------------------------------
+
+    def submit(self, query: Query, *, priority: int = 0,
+               deadline_s: Optional[float] = None) -> Future:
+        """Enqueue a query; higher ``priority`` is served first (FIFO
+        within a priority level), ``deadline_s`` seconds from now bounds
+        its queueing time."""
+        now = time.monotonic()
+        fut: Future = Future()
+        with self._work:
+            self._seq += 1
+            self._pending.append(_Ticket(
+                seq=self._seq, query=query, plan=plan(query),
+                priority=priority,
+                deadline=None if deadline_s is None else now + deadline_s,
+                future=fut, t_submit=now))
+            self._work.notify()
+        return fut
+
+    # ------------------------------------------------------------------
+    # batch formation + execution
+    # ------------------------------------------------------------------
+
+    def _expire_locked(self, now: float) -> None:
+        live = []
+        for t in self._pending:
+            if t.deadline is not None and now > t.deadline:
+                self.n_expired += 1
+                try:
+                    t.future.set_exception(DeadlineExceeded(
+                        f"query {t.query} missed its deadline by "
+                        f"{now - t.deadline:.3f}s in the queue"))
+                except Exception:   # racing producer-side cancel() is fine
+                    pass
+            else:
+                live.append(t)
+        self._pending = live
+
+    def _select_locked(self) -> List[_Ticket]:
+        """Pick one batch (head-of-line + ecc-nearest companions)."""
+        self._pending.sort(key=_Ticket.sort_key)
+        window = self._pending[:self.admit_window]
+        head = window[0]
+        group = [t for t in window if t.plan.key == head.plan.key]
+        if len(group) > self.max_batch:
+            companions = group[1:]
+            # peek never builds: a cold engine here would run the build
+            # under the scheduler lock, stalling every producer.  On a
+            # cold entry this batch gets FIFO companions; _execute builds
+            # the engine outside the lock, so later batches ecc-sort.
+            eng = self.registry.peek(head.plan.gid, self.backend)
+            if eng is not None and self.ecc_batching and self.max_batch > 1:
+                try:
+                    ecc = eng.ecc_hint
+                    ref = ecc[head.query.source]
+                    companions.sort(
+                        key=lambda t: (abs(ecc[t.query.source] - ref),
+                                       t.seq))
+                except Exception:
+                    # fall back to FIFO companions; _execute will surface
+                    # any per-ticket problem on its future
+                    pass
+            # the head is always admitted (no ecc starvation); grouping
+            # only chooses its companion slots
+            group = [head] + companions[:self.max_batch - 1]
+        taken = set(id(t) for t in group)
+        self._pending = [t for t in self._pending if id(t) not in taken]
+        return group
+
+    def step(self, _now: Optional[float] = None) -> bool:
+        """Admit and execute one batch; returns whether work was done."""
+        with self._lock:
+            self._expire_locked(time.monotonic() if _now is None else _now)
+            if not self._pending:
+                return False
+            batch = self._select_locked()
+        batch = [t for t in batch if t.future.set_running_or_notify_cancel()]
+        if not batch:
+            return True     # all cancelled — the queue still made progress
+        self._execute(batch)
+        return True
+
+    def _execute(self, batch: List[_Ticket]) -> None:
+        head = batch[0]
+        try:
+            # registry is internally locked; a cold build here happens
+            # outside the scheduler lock, so producers keep submitting
+            eng = self.registry.engine(head.plan.gid, self.backend)
+            # out-of-range vertex ids must fail loudly here: under jit an
+            # o-o-b scatter is silently dropped and a gather clamps, which
+            # would return a plausible-looking wrong answer
+            batch = [t for t in batch if _check_vertices(t, eng.g.n)]
+            if not batch:
+                return
+            head = batch[0]
+            pad = self.max_batch - len(batch)
+            # repeat slot 0 in free slots: static shape, results discarded
+            plans = [t.plan for t in batch] + [head.plan] * pad
+            sources = np.array([t.query.source for t in batch] +
+                               [head.query.source] * pad, np.int32)
+            dist, parent, metrics = eng.run_batch(     # outside the lock
+                sources, goal=head.plan.goal,
+                goal_params=[p.goal_param for p in plans])
+        except Exception as exc:     # engine failure fails the whole batch
+            for t in batch:
+                t.future.set_exception(exc)
+            return                   # futures carry the error; keep serving
+        now = time.monotonic()
+        for slot, t in enumerate(batch):
+            res = finalize(t.query, eng.deg, dist[slot], parent[slot],
+                           _slot_tree(metrics, slot))
+            res.latency_s = now - t.t_submit
+            t.future.set_result(res)
+        with self._lock:
+            self.n_batches += 1
+            self.n_done += len(batch)
+
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Synchronously run batches until the queue empties."""
+        steps = 0
+        while steps < max_steps and self.step():
+            steps += 1
+        return steps
+
+    # ------------------------------------------------------------------
+    # background worker
+    # ------------------------------------------------------------------
+
+    def start(self) -> None:
+        """Serve the queue from a daemon thread until :meth:`stop`."""
+        if self._worker is not None:
+            return
+        self._stop = False
+
+        def loop():
+            while True:
+                with self._work:
+                    while not self._pending and not self._stop:
+                        self._work.wait(timeout=0.1)
+                    if self._stop:
+                        return
+                self.step()
+
+        self._worker = threading.Thread(target=loop, name="query-scheduler",
+                                        daemon=True)
+        self._worker.start()
+
+    def stop(self, cancel_pending: bool = False) -> None:
+        """Stop the worker thread.  Still-queued tickets stay pending (a
+        later :meth:`drain`/:meth:`start` serves them) unless
+        ``cancel_pending`` — then their futures are cancelled so no
+        caller blocks forever on an abandoned query."""
+        with self._work:
+            self._stop = True
+            self._work.notify_all()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if cancel_pending:
+            with self._lock:
+                dropped, self._pending = self._pending, []
+            for t in dropped:
+                t.future.cancel()
+
+    # ------------------------------------------------------------------
+    # stats
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            occ = (self.n_done / (self.n_batches * self.max_batch)
+                   if self.n_batches else 0.0)
+            return {"n_batches": self.n_batches, "n_done": self.n_done,
+                    "n_expired": self.n_expired, "occupancy": occ,
+                    "pending": len(self._pending),
+                    "registry": self.registry.stats.as_dict()}
+
+
+def _slot_tree(metrics, slot: int):
+    """Index one slot out of a stacked metrics pytree."""
+    return jax.tree.map(lambda x: x[slot], metrics)
+
+
+def _check_vertices(t: _Ticket, n: int) -> bool:
+    """Fail a ticket whose vertex ids don't exist in its graph."""
+    q = t.query
+    for label, v in (("source", q.source), ("target", q.target)):
+        if v is not None and not 0 <= v < n:
+            t.future.set_exception(ValueError(
+                f"{label} {v} out of range for graph {q.gid!r} (n={n})"))
+            return False
+    return True

@@ -1,28 +1,31 @@
-"""Request-batching SSSP endpoint: slot-batched multi-source queries.
+"""Single-graph SSSP endpoint — a thin wrapper over registry + scheduler.
 
-Production pattern mirroring :mod:`repro.serve.engine`'s slot design, but
-for shortest-path queries instead of token decoding: a fixed-width batch of
-``max_batch`` source slots is filled from a request queue and executed as
-one fused :func:`repro.core.sssp.sssp_batch` call (vmapped state — XLA
-sees a single static shape regardless of how many requests are pending).
-Free slots are padded with a repeat of the first admitted source and their
-results discarded, so partially-full batches never trigger a recompile.
+PR 1's ``SsspService`` (slot-batched full-tree queries over one fixed
+graph) is kept as the compatibility facade: it registers its one graph in
+a capacity-1 :class:`~repro.serve.registry.GraphRegistry` and drives a
+synchronous :class:`~repro.serve.scheduler.QueryScheduler` step per
+``step()`` call.  New code should use the registry/scheduler/queries
+stack directly (multi-graph, async admission, p2p/bounded/k-nearest
+early-exit queries); this facade only speaks full shortest-path trees,
+FIFO, one graph.
 
-The relaxation backend is pluggable per service instance (see
-``repro.core.relax``); the backend's graph layout is built once at
-construction and reused for every batch.
+The per-batch ``np.asarray(deg)`` recomputation of the old implementation
+is gone: the degree array is hoisted into the registry's cached
+:class:`~repro.serve.registry.GraphEngine` at construction.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
-import jax
 
-from ..core import relax
 from ..core.graph import DeviceGraph, HostGraph
-from ..core.sssp import normalized_metrics, sssp_batch
+from .queries import Query
+from .registry import GraphRegistry
+from .scheduler import QueryScheduler
+
+_GID = "default"
 
 
 @dataclasses.dataclass
@@ -33,6 +36,7 @@ class SsspRequest:
     dist: Optional[np.ndarray] = None      # filled on completion
     parent: Optional[np.ndarray] = None
     metrics: Optional[dict] = None
+    error: Optional[Exception] = None      # set instead, on failure
 
     @property
     def done(self) -> bool:
@@ -43,62 +47,64 @@ class SsspService:
     """Continuous request batching over a fixed graph.
 
     ``submit()`` enqueues requests; each ``step()`` admits up to
-    ``max_batch`` of them, runs one fused batched SSSP and retires the
-    whole batch (unlike token decoding, a query completes in a single
-    engine call, so no slot persists between steps — the fixed
-    ``max_batch`` width exists purely to keep the batch shape static).
+    ``max_batch`` of them (FIFO), runs one fused batched SSSP and retires
+    the whole batch.  Free slots are padded (repeating slot 0) so
+    partially-full batches never trigger a recompile; padded results are
+    discarded by the scheduler and never reach a request.
     """
 
     def __init__(self, g, *, max_batch: int = 8, backend: str = "segment_min",
                  alpha: float = 3.0, beta: float = 0.9, **backend_opts):
-        if isinstance(g, HostGraph):
-            g = g.to_device()
-        if not isinstance(g, DeviceGraph):
+        if not isinstance(g, (HostGraph, DeviceGraph)):
             raise TypeError(f"expected HostGraph/DeviceGraph, got {type(g)}")
-        self.g = g
+        self.registry = GraphRegistry(capacity=1, backend=backend,
+                                      alpha=alpha, beta=beta, **backend_opts)
+        self.registry.register(_GID, g)
+        # FIFO facade: no eccentricity reordering, no priorities
+        self.scheduler = QueryScheduler(self.registry, max_batch=max_batch,
+                                        ecc_batching=False)
         self.max_batch = max_batch
-        self.backend = relax.get_backend(backend)
-        self.layout = self.backend.prepare(g, **backend_opts)
-        self.alpha = alpha
-        self.beta = beta
-        self.queue: List[SsspRequest] = []
-        self.n_batches = 0
+        self.g = self.registry.engine(_GID).g
+        self._inflight: List[Tuple[SsspRequest, object]] = []
+
+    @property
+    def queue(self) -> list:
+        """Requests submitted but not yet completed (compat shim)."""
+        return [r for r, f in self._inflight if not f.done()]
+
+    @property
+    def n_batches(self) -> int:
+        return self.scheduler.n_batches
 
     def submit(self, req: SsspRequest) -> SsspRequest:
-        self.queue.append(req)
+        fut = self.scheduler.submit(Query(gid=_GID, source=int(req.source)))
+        self._inflight.append((req, fut))
         return req
+
+    def _collect(self) -> None:
+        remaining = []
+        for req, fut in self._inflight:
+            if not fut.done():
+                remaining.append((req, fut))
+            elif fut.exception() is not None:
+                # a failed request must not wedge collection of the rest
+                req.error = fut.exception()
+            else:
+                res = fut.result()
+                req.dist = res.dist
+                req.parent = res.parent
+                req.metrics = res.metrics
+        self._inflight = remaining
 
     def step(self) -> bool:
         """Admit pending requests and run one fused batch; returns whether
         any work was done."""
-        batch = self.queue[:self.max_batch]
-        del self.queue[:len(batch)]
-        if not batch:
-            return False
-        # pad free slots with the first admitted source (results discarded)
-        sources = np.array([r.source for r in batch] +
-                           [batch[0].source] * (self.max_batch - len(batch)),
-                           np.int32)
-        dist, parent, metrics = sssp_batch(
-            self.g, sources, backend=self.backend, layout=self.layout,
-            alpha=self.alpha, beta=self.beta)
-        dist = np.asarray(dist)
-        parent = np.asarray(parent)
-        metrics = jax.tree.map(np.asarray, metrics)
-        deg = np.asarray(self.g.deg)
-        for slot, req in enumerate(batch):
-            req.dist = dist[slot]
-            req.parent = parent[slot]
-            req.metrics = normalized_metrics(
-                deg, dist[slot],
-                jax.tree.map(lambda x: x[slot], metrics))
-        self.n_batches += 1
-        return True
+        did = self.scheduler.step()
+        self._collect()
+        return did
 
     def run(self, max_steps: int = 10_000) -> int:
         """Drain the queue; returns the number of batch steps executed."""
-        steps = 0
-        while self.queue and steps < max_steps:
-            self.step()
-            steps += 1
+        steps = self.scheduler.drain(max_steps)
+        self._collect()
         return steps

@@ -20,6 +20,60 @@ def test_kronecker_shapes():
         assert np.all(np.diff(row) >= 0)
 
 
+def test_generators_deliver_exact_edge_counts():
+    # self-loop drops are resampled, not silently swallowed
+    g = kronecker(7, 8, seed=3)
+    assert g.m == 2 * 8 * 128
+    g2 = uniform_random(100, 500, seed=4)
+    assert g2.m == 2 * 500
+    assert uniform_random(10, 0).m == 0          # empty graphs still build
+    with pytest.raises(ValueError):
+        uniform_random(1, 5)
+    with pytest.raises(ValueError):
+        kronecker(0, 8)                          # all draws are self loops
+
+
+def test_bimodal_weights():
+    g = kronecker(7, 8, seed=3, weights="bimodal")
+    w = g.w
+    low = w <= 0.15
+    high = w >= 0.85
+    assert (low | high).all()               # two narrow bands only
+    assert 0.35 < low.mean() < 0.65         # roughly balanced modes
+    with pytest.raises(ValueError):
+        kronecker(7, 4, weights="nope")
+
+
+def test_traffic_generator_zipf_mix():
+    from repro.data.traffic import make_traffic
+
+    graphs = {"hot": kronecker(7, 6, seed=1),
+              "warm": road_grid(10, seed=2),
+              "cold": uniform_random(128, 512, seed=3)}
+    items = make_traffic(graphs, 200, seed=0, deadline_s=5.0)
+    assert len(items) == 200
+    by_gid = {gid: 0 for gid in graphs}
+    kinds = set()
+    for it in items:
+        q = it.query
+        by_gid[q.gid] += 1
+        kinds.add(q.kind)
+        deg = graphs[q.gid].deg
+        assert deg[q.source] > 0            # endpoints are never isolates
+        if q.kind == "p2p":
+            assert deg[q.target] > 0
+        if q.kind == "knear":
+            assert q.k >= 1
+        if q.kind == "bounded":
+            assert q.bound > 0
+    # Zipf skew: first-registered graph takes the most traffic
+    assert by_gid["hot"] > by_gid["warm"] > by_gid["cold"]
+    assert kinds == {"p2p", "bounded", "knear", "tree"}
+    # deterministic per seed
+    again = make_traffic(graphs, 200, seed=0, deadline_s=5.0)
+    assert again == items
+
+
 def test_weight_variants():
     w = np.random.default_rng(0).random(10000)
     for power in [1, 2, 4, 10]:

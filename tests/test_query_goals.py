@@ -1,0 +1,111 @@
+"""Early-exit query goals (p2p / bounded / knear) vs full-tree SSSP."""
+import numpy as np
+import pytest
+
+from repro.core.sssp import (sssp, sssp_batch, sssp_bounded, sssp_knear,
+                             sssp_p2p)
+from repro.data.generators import kronecker, road_grid, uniform_random
+
+SCALE = 8
+
+
+def benchmark_suite():
+    """The 9-graph benchmark suite shape, scaled down for tests."""
+    n = 1 << SCALE
+    side = int(np.sqrt(n))
+    return {
+        f"gr{SCALE}_4": kronecker(SCALE, 4, seed=1),
+        f"gr{SCALE}_8": kronecker(SCALE, 8, seed=2),
+        f"gr{SCALE}_16": kronecker(SCALE, 16, seed=3),
+        f"gr{SCALE}_32": kronecker(SCALE, 32, seed=4),
+        "Road": road_grid(side, seed=5),
+        "Urand": uniform_random(n, 16 * n, seed=6),
+        "Web": kronecker(SCALE, 30, seed=7),
+        "Twitter": kronecker(SCALE, 22, seed=8),
+        "Kron": kronecker(SCALE, 32, seed=9),
+    }
+
+
+def test_p2p_matches_full_tree_on_all_benchmark_graphs():
+    rng = np.random.default_rng(0)
+    for name, g in benchmark_suite().items():
+        dg = g.to_device()
+        nz = np.where(g.deg > 0)[0]
+        s, t = (int(v) for v in rng.choice(nz, 2, replace=False))
+        d_full, p_full, m_full = sssp(dg, s)
+        d_p2p, p_p2p, m_p2p = sssp_p2p(dg, s, t)
+        d_full, d_p2p = np.asarray(d_full), np.asarray(d_p2p)
+        # bitwise-equal target distance (and parent, when reachable)
+        assert d_p2p[t].tobytes() == d_full[t].tobytes(), name
+        if np.isfinite(d_full[t]):
+            assert int(np.asarray(p_p2p)[t]) == int(np.asarray(p_full)[t]), \
+                name
+        assert int(m_p2p.n_rounds) <= int(m_full.n_rounds), name
+
+
+def test_p2p_saves_rounds_on_road():
+    g = road_grid(20, seed=5)
+    dg = g.to_device()
+    # nearby target on a huge-diameter graph: the window sweep stops early
+    d_full, _, m_full = sssp(dg, 0)
+    d_p2p, _, m_p2p = sssp_p2p(dg, 0, 42)
+    assert np.asarray(d_p2p)[42] == np.asarray(d_full)[42]
+    assert int(m_p2p.n_rounds) < int(m_full.n_rounds)
+
+
+def test_bounded_settles_everything_within_bound():
+    g = kronecker(SCALE, 8, seed=2)
+    dg = g.to_device()
+    s = int(np.argmax(g.deg))
+    d_full, _, m_full = sssp(dg, s)
+    d_full = np.asarray(d_full)
+    bound = float(np.percentile(d_full[np.isfinite(d_full)], 40))
+    d_b, _, m_b = sssp_bounded(dg, s, bound)
+    d_b = np.asarray(d_b)
+    within = d_full <= bound
+    np.testing.assert_array_equal(d_b[within], d_full[within])
+    assert int(m_b.n_rounds) <= int(m_full.n_rounds)
+
+
+def test_knear_returns_k_smallest_final_distances():
+    g = kronecker(SCALE, 8, seed=2)
+    dg = g.to_device()
+    s = int(np.argmax(g.deg))
+    k = 12
+    d_full, _, _ = sssp(dg, s)
+    d_k, _, _ = sssp_knear(dg, s, k)
+    d_full, d_k = np.asarray(d_full), np.asarray(d_k)
+    # the k+1 smallest values (source included) are settled and exact
+    np.testing.assert_array_equal(np.sort(d_k)[:k + 1],
+                                  np.sort(d_full)[:k + 1])
+
+
+def test_batched_goal_params_per_slot():
+    g = road_grid(16, seed=5)
+    dg = g.to_device()
+    d_full, _, _ = sssp(dg, 0)
+    d_full = np.asarray(d_full)
+    tgts = np.array([3, 40, 100, 255], np.int32)
+    dist, _, metrics = sssp_batch(dg, np.zeros(4, np.int32), goal="p2p",
+                                  goal_params=tgts)
+    dist = np.asarray(dist)
+    for i, t in enumerate(tgts):
+        assert dist[i, t].tobytes() == d_full[t].tobytes()
+    # nearer targets in the same batch terminate in fewer rounds
+    rounds = np.asarray(metrics.n_rounds)
+    assert rounds[0] <= rounds[-1]
+
+
+def test_goal_validation():
+    g = road_grid(8, seed=0)
+    dg = g.to_device()
+    with pytest.raises(ValueError):
+        sssp(dg, 0, goal="nope", goal_param=1)
+    with pytest.raises(ValueError):
+        sssp(dg, 0, goal="p2p")            # missing parameter
+    with pytest.raises(ValueError):
+        sssp_batch(dg, [0, 1], goal="p2p", goal_params=[1])  # shape mismatch
+    with pytest.raises(ValueError):
+        sssp_p2p(dg, 0, dg.n + 3)          # o-o-b target would clamp in jit
+    with pytest.raises(ValueError):
+        sssp_batch(dg, [0, 1], goal="p2p", goal_params=[1, -2])

@@ -1,0 +1,186 @@
+"""Admission scheduler: priority/FIFO order, deadlines, padding, ecc batching."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sssp import sssp
+from repro.data.generators import road_grid
+from repro.serve.queries import Query
+from repro.serve.registry import GraphRegistry
+from repro.serve.scheduler import DeadlineExceeded, QueryScheduler
+
+
+SIDE = 12
+
+
+@pytest.fixture()
+def registry():
+    reg = GraphRegistry(capacity=2)
+    reg.register("road", road_grid(SIDE, seed=5))
+    return reg
+
+
+def test_priority_then_fifo_ordering(registry):
+    sch = QueryScheduler(registry, max_batch=1)
+    done_order = []
+
+    def track(tag):
+        return lambda fut: done_order.append(tag)
+
+    for tag, prio in [("a0", 0), ("b1", 1), ("c0", 0), ("d2", 2), ("e1", 1)]:
+        fut = sch.submit(Query(gid="road", source=0), priority=prio)
+        fut.add_done_callback(track(tag))
+    sch.drain()
+    # highest priority first; FIFO within a priority level
+    assert done_order == ["d2", "b1", "e1", "a0", "c0"]
+
+
+def test_padded_slots_never_leak(registry):
+    sch = QueryScheduler(registry, max_batch=8)
+    srcs = [5, 17, 40]
+    futs = [sch.submit(Query(gid="road", source=s)) for s in srcs]
+    assert sch.step()
+    stats = sch.stats()
+    assert stats["n_done"] == 3 and stats["n_batches"] == 1
+    assert stats["occupancy"] == pytest.approx(3 / 8)
+    dg = registry.engine("road").g
+    for s, fut in zip(srcs, futs):
+        res = fut.result(timeout=0)
+        d_ref, p_ref, _ = sssp(dg, s)
+        # each response is its own source's tree, not the padding slot's
+        np.testing.assert_array_equal(res.dist, np.asarray(d_ref))
+        np.testing.assert_array_equal(res.parent, np.asarray(p_ref))
+
+
+def test_cancelled_future_with_deadline_does_not_break_step(registry):
+    sch = QueryScheduler(registry, max_batch=2)
+    doomed = sch.submit(Query(gid="road", source=1), deadline_s=0.0)
+    assert doomed.cancel()
+    ok = sch.submit(Query(gid="road", source=2))
+    time.sleep(0.01)
+    sch.drain()                    # must not raise InvalidStateError
+    assert ok.result(timeout=0).dist is not None
+
+
+def test_admit_window_validation(registry):
+    with pytest.raises(ValueError):
+        QueryScheduler(registry, admit_window=0)
+
+
+def test_deadline_expiry(registry):
+    sch = QueryScheduler(registry, max_batch=2)
+    doomed = sch.submit(Query(gid="road", source=1), deadline_s=0.0)
+    alive = sch.submit(Query(gid="road", source=2), deadline_s=60.0)
+    time.sleep(0.01)
+    sch.drain()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=0)
+    assert alive.result(timeout=0).dist is not None
+    assert sch.stats()["n_expired"] == 1
+
+
+def test_ecc_batch_grouping(registry):
+    """Companion slots are ecc-nearest to the head, not FIFO-next."""
+    ecc = registry.engine("road").ecc_hint
+    order = np.argsort(ecc)
+    near_a, near_b = int(order[0]), int(order[1])     # close to landmark
+    far = int(order[-1])                              # opposite periphery
+    assert ecc[far] - ecc[near_a] > ecc[near_b] - ecc[near_a]
+    sch = QueryScheduler(registry, max_batch=2)
+    f_near_a = sch.submit(Query(gid="road", source=near_a))
+    f_far = sch.submit(Query(gid="road", source=far))
+    f_near_b = sch.submit(Query(gid="road", source=near_b))
+    assert sch.step()
+    # head (near_a) rides with its ecc-neighbor, skipping the FIFO-next far
+    assert f_near_a.done() and f_near_b.done()
+    assert not f_far.done()
+    sch.drain()
+    assert f_far.done()
+
+
+def test_fifo_companions_without_ecc_batching(registry):
+    sch = QueryScheduler(registry, max_batch=2, ecc_batching=False)
+    corner_a, corner_b = 0, SIDE * SIDE - 1
+    center = SIDE * (SIDE // 2) + SIDE // 2
+    f1 = sch.submit(Query(gid="road", source=corner_a))
+    f2 = sch.submit(Query(gid="road", source=center))
+    f3 = sch.submit(Query(gid="road", source=corner_b))
+    assert sch.step()
+    assert f1.done() and f2.done() and not f3.done()
+    sch.drain()
+
+
+def test_engine_failure_fails_batch_not_scheduler(registry):
+    sch = QueryScheduler(registry, max_batch=2)
+    bad = sch.submit(Query(gid="unregistered", source=0))
+    good = sch.submit(Query(gid="road", source=3))
+    sch.drain()
+    with pytest.raises(KeyError):
+        bad.result(timeout=0)
+    assert good.result(timeout=0).dist is not None
+
+
+def test_unknown_gid_overflow_group_does_not_kill_scheduler(registry):
+    # > max_batch same-key tickets trigger the ecc-grouping engine lookup
+    # during selection; an unknown gid must fail the futures, not step()
+    sch = QueryScheduler(registry, max_batch=2)
+    futs = [sch.submit(Query(gid="unregistered", source=0))
+            for _ in range(3)]
+    ok = sch.submit(Query(gid="road", source=1))
+    sch.drain()
+    for f in futs:
+        with pytest.raises(KeyError):
+            f.result(timeout=0)
+    assert ok.result(timeout=0).dist is not None
+
+
+def test_out_of_range_vertices_fail_loudly(registry):
+    n = SIDE * SIDE
+    sch = QueryScheduler(registry, max_batch=2)
+    bad_src = sch.submit(Query(gid="road", source=n + 5))
+    bad_tgt = sch.submit(Query(gid="road", source=0, kind="p2p", target=n))
+    good = sch.submit(Query(gid="road", source=0))
+    sch.drain()
+    with pytest.raises(ValueError):
+        bad_src.result(timeout=0)
+    with pytest.raises(ValueError):
+        bad_tgt.result(timeout=0)
+    assert good.result(timeout=0).dist is not None
+    with pytest.raises(ValueError):
+        Query(gid="road", source=-1)
+    with pytest.raises(ValueError):
+        Query(gid="road", source=0, kind="knear", k=0)
+
+
+def test_finalized_arrays_expose_only_settled_values(registry):
+    sch = QueryScheduler(registry, max_batch=2)
+    f_p2p = sch.submit(Query(gid="road", source=0, kind="p2p", target=30))
+    f_k = sch.submit(Query(gid="road", source=0, kind="knear", k=5))
+    sch.drain()
+    r = f_p2p.result(timeout=0)
+    # every finite entry is settled: nothing beyond the target's distance
+    assert np.isfinite(r.distance)
+    finite = np.isfinite(r.dist)
+    assert np.all(r.dist[finite] <= r.distance)
+    assert np.all(r.parent[~finite] == -1)
+    rk = f_k.result(timeout=0)
+    assert int(np.isfinite(rk.dist).sum()) == 5 + 1   # k nearest + source
+
+
+def test_background_worker(registry):
+    sch = QueryScheduler(registry, max_batch=2)
+    sch.start()
+    try:
+        futs = [sch.submit(Query(gid="road", source=s, kind="p2p", target=t))
+                for s, t in [(0, 5), (7, 100), (30, 31)]]
+        for fut in futs:
+            res = fut.result(timeout=120)
+            assert res.distance is not None
+            assert res.latency_s >= 0
+            if np.isfinite(res.distance):
+                assert res.path[0] == res.query.source
+                assert res.path[-1] == res.query.target
+    finally:
+        sch.stop()
+    assert sch.stats()["pending"] == 0

@@ -1,0 +1,84 @@
+"""Multi-graph registry: LRU eviction/rebuild, stats, ecc hints."""
+import numpy as np
+import pytest
+
+from repro.core.sssp import sssp
+from repro.data.generators import kronecker, road_grid
+from repro.serve.registry import GraphRegistry, estimate_eccentricity
+
+
+def test_engine_caching_and_lru_eviction_rebuild():
+    reg = GraphRegistry(capacity=1)
+    road = road_grid(12, seed=5)
+    kron = kronecker(7, 6, seed=2)
+    reg.register("road", road)
+    reg.register("kron", kron)
+    assert set(reg.gids) == {"road", "kron"}
+
+    e1 = reg.engine("road")
+    assert reg.engine("road") is e1               # cache hit
+    assert reg.stats.hits == 1 and reg.stats.builds == 1
+
+    reg.engine("kron")                            # evicts road (capacity 1)
+    assert reg.cached_keys() == (("kron", "segment_min"),)
+    assert reg.stats.evictions == 1
+
+    e2 = reg.engine("road")                       # transparent rebuild
+    assert e2 is not e1
+    assert reg.stats.builds == 3
+    # rebuilt engine answers identically
+    d_ref, _, _ = sssp(road.to_device(), 0)
+    dist, _, _ = e2.run_batch([0, 0])
+    np.testing.assert_array_equal(dist[0], np.asarray(d_ref))
+
+
+def test_registry_keys_per_backend_and_factory_spec():
+    reg = GraphRegistry(capacity=4, block_v=128, tile_e=128)
+    builds = []
+
+    def factory():
+        builds.append(1)
+        return road_grid(12, seed=5)
+
+    reg.register("road", factory)
+    e_seg = reg.engine("road", "segment_min")
+    e_blk = reg.engine("road", "blocked_pallas")
+    assert e_seg is not e_blk
+    assert len(builds) == 2                       # one HostGraph per engine
+    assert set(reg.cached_keys()) == {("road", "segment_min"),
+                                      ("road", "blocked_pallas")}
+    # both backends serve bitwise-identical results
+    d1, _, _ = e_seg.run_batch([3, 7])
+    d2, _, _ = e_blk.run_batch([3, 7])
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_register_replaces_and_validates():
+    reg = GraphRegistry(capacity=2)
+    reg.register("g", road_grid(12, seed=5))
+    reg.engine("g")
+    reg.register("g", road_grid(12, seed=6))      # new spec drops old engine
+    assert reg.cached_keys() == ()
+    with pytest.raises(TypeError):
+        reg.register("bad", object())
+    with pytest.raises(KeyError):
+        reg.engine("missing")
+    with pytest.raises(ValueError):
+        GraphRegistry(capacity=0)
+
+
+def test_eccentricity_hint_ordering():
+    side = 12
+    g = road_grid(side, seed=5)
+    ecc = estimate_eccentricity(g)
+    assert ecc.shape == (side * side,)
+    # grid corners are estimated more eccentric than the landmark region
+    landmark = int(np.argmax(g.deg))
+    corners = [0, side - 1, side * (side - 1), side * side - 1]
+    assert all(ecc[c] > ecc[landmark] for c in corners)
+    # hoisted degree array is numpy (not recomputed per batch)
+    reg = GraphRegistry(capacity=1)
+    reg.register("g", g)
+    eng = reg.engine("g")
+    assert isinstance(eng.deg, np.ndarray)
+    np.testing.assert_array_equal(eng.ecc_hint, ecc)

@@ -45,3 +45,17 @@ def test_service_partial_batch_and_backend_selection():
 def test_service_rejects_bad_graph():
     with pytest.raises(TypeError):
         SsspService(object())
+
+
+def test_failed_request_does_not_wedge_service():
+    g = kronecker(8, 6, seed=2)
+    svc = SsspService(g, max_batch=2)
+    bad = svc.submit(SsspRequest(rid=0, source=g.n + 5))   # out of range
+    good = svc.submit(SsspRequest(rid=1, source=0))
+    svc.run()
+    assert isinstance(bad.error, ValueError) and not bad.done
+    assert good.done and good.error is None
+    # the service keeps serving after a failure
+    later = svc.submit(SsspRequest(rid=2, source=1))
+    svc.run()
+    assert later.done
