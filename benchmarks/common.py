@@ -149,6 +149,98 @@ def run_p2p_vs_tree(g, pairs, alpha=3.0, beta=0.9, backend="segment_min"):
     }
 
 
+def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
+                        capacity=None, backend=None, warm_kinds=None,
+                        max_pending=None):
+    """Serve a traffic list through a :class:`QueryRouter` and measure it.
+
+    ``devices`` selects the serving plane width (default: every local
+    device; pass ``jax.devices()[:1]`` for the 1-device scaling
+    baseline).  Warmup (engine builds + per-(graph, kind, batch) jit
+    compiles) runs before the timed region and is reported separately —
+    the timed qps is the steady-state serving rate.
+    """
+    from repro.serve.registry import GraphRegistry
+    from repro.serve.router import QueryRouter
+
+    n_dev = len(devices) if devices is not None else len(jax.devices())
+    if capacity is None:
+        # room for one engine per (graph, device) replica
+        capacity = (len(graphs) + 1) * max(n_dev, 1)
+    registry = GraphRegistry(capacity=capacity,
+                             **({"backend": backend} if backend else {}))
+    for gid, g in graphs.items():
+        registry.register(gid, g)
+    router = QueryRouter(registry, devices=devices, max_batch=max_batch,
+                         max_pending=max_pending)
+    if warm_kinds is None:
+        warm_kinds = tuple(dict.fromkeys(it.query.kind for it in traffic))
+    # capacity planning: replicate by the traffic's per-graph share (a
+    # real deployment would use yesterday's traffic; the warmup below
+    # then pre-pays every replica's build + compiles)
+    weights = {}
+    for it in traffic:
+        weights[it.query.gid] = weights.get(it.query.gid, 0) + 1
+    router.plan_placement(weights)
+    t0 = time.perf_counter()
+    warm_rows = router.warmup(kinds=warm_kinds, batch_sizes=(max_batch,))
+    warmup_s = time.perf_counter() - t0
+    # snapshot so the reported hit rate covers only the serving phase
+    # (warmup's one miss+build per replica shares the same stats object)
+    pre_hits, pre_misses = registry.stats.hits, registry.stats.misses
+    router.start()
+    t0 = time.perf_counter()
+    futs = [(it, router.submit(it.query, priority=it.priority,
+                               deadline_s=it.deadline_s))
+            for it in traffic]
+    results = [(it, f.result(timeout=1200)) for it, f in futs]
+    elapsed = time.perf_counter() - t0
+    router.stop()
+    lats = np.array([r.latency_s for _, r in results])
+    stats = router.stats()
+    d_hits = registry.stats.hits - pre_hits
+    d_misses = registry.stats.misses - pre_misses
+    return {
+        "qps": len(traffic) / elapsed,
+        "elapsed_s": elapsed,
+        "time_s": float(lats.mean()),
+        "p50_ms": float(np.percentile(lats, 50) * 1e3),
+        "p99_ms": float(np.percentile(lats, 99) * 1e3),
+        "occupancy": stats["occupancy"],
+        "warmup_s": warmup_s,
+        "n_devices": n_dev,
+        "serving_hit_rate": (d_hits / (d_hits + d_misses)
+                             if d_hits + d_misses else 1.0),
+        "stats": stats,
+        "results": results,
+        "warm_rows": warm_rows,
+    }
+
+
+def check_p2p_parity(graphs, results, sample=12):
+    """Bitwise-compare served p2p distances against the single-device
+    engine (the serving acceptance check).  Returns ``(ok, checked)`` so
+    'no p2p queries in the sample' is distinguishable from a mismatch."""
+    checked = 0
+    ok = True
+    engines = {}
+    for item, res in results:
+        q = item.query
+        if q.kind != "p2p":
+            continue
+        if q.gid not in engines:
+            dg = graphs[q.gid].to_device()
+            engines[q.gid] = (dg, relax.get_backend("segment_min").prepare(dg))
+        dg, layout = engines[q.gid]
+        d_ref, _, _ = sssp_p2p(dg, q.source, q.target, layout=layout)
+        ok &= (np.float32(res.distance).tobytes()
+               == np.asarray(d_ref)[q.target].tobytes())
+        checked += 1
+        if checked >= sample:
+            break
+    return ok, checked
+
+
 def run_distributed(g, sources, alpha=3.0, beta=0.9, version="v2"):
     """Distributed engine over every available local device."""
     n_dev = len(jax.devices())

@@ -18,11 +18,15 @@ Sections:
              segment_min vs blocked_pallas (interpret mode on CPU) vs the
              distributed engine, plus the fused multi-source sssp_batch
              at ``--batch`` sources per call
-  serving  — the query-serving subsystem under Zipf-skewed multi-graph
-             traffic (registry + scheduler + mixed p2p/bounded/knear/tree
-             queries): throughput (queries/s), p50/p99 latency, batch
-             occupancy, registry hit rate, plus the p2p early-exit
-             vs full-tree round comparison on the Road graph
+  serving  — the multi-device serving plane under Zipf-skewed
+             multi-graph traffic (router -> per-device schedulers ->
+             registry tiers; mixed p2p/bounded/knear/tree queries):
+             queries/s for the 1-device vs whole-mesh router configs and
+             their scaling, p50/p99 latency, occupancy, warmup cost,
+             bitwise p2p parity, a sharded-tier (shard_map) serving row,
+             plus the p2p early-exit vs full-tree round comparison.
+             Run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+             for a CPU device mesh.
 
 ``--backend`` selects the relaxation backend used by the paper-metric
 sections (fig4/5/6, table3); the ``backends`` section always sweeps all
@@ -132,75 +136,102 @@ def backends(rows, scale, n_sources, batch):
 
 
 def serving(rows, scale, batch, n_queries=None, seed=0):
-    """Serving subsystem under Zipf-skewed multi-graph traffic."""
+    """Serving plane under Zipf-skewed multi-graph traffic.
+
+    Runs the same traffic twice — through a 1-device router and through a
+    router over every local device — and reports the aggregate
+    queries/s scaling (the multi-device acceptance check; run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get a CPU
+    mesh), with served p2p distances bitwise-checked against the
+    single-device engine.  A final row serves a graph through the
+    sharded (shard_map) engine tier via the same ``SsspService``/router
+    API and checks dist/parent parity.
+    """
     import time
 
+    import jax
+
+    from repro.core.sssp import sssp
     from repro.data.generators import kronecker, road_grid, uniform_random
     from repro.data.traffic import make_traffic
-    from repro.serve.registry import GraphRegistry
-    from repro.serve.scheduler import QueryScheduler
+    from repro.serve.sssp_service import SsspRequest, SsspService
 
     n = 1 << scale
     side = int(np.sqrt(n))
-    # >= 2 registered graphs, heterogeneous shapes (skewed / road / random)
+    # heterogeneous shapes (skewed / road / random), enough graphs that
+    # placement can spread over a mesh; insertion order = Zipf popularity
     graphs = {
-        f"gr{scale}_8": kronecker(scale, 8, seed=2),   # hottest (Zipf rank 0)
+        f"gr{scale}_8": kronecker(scale, 8, seed=2),   # hottest (rank 0)
         "Road": road_grid(side, seed=5),
         "Urand": uniform_random(n, 8 * n, seed=6),
+        f"gr{scale}_4": kronecker(scale, 4, seed=11),
+        "Web": kronecker(scale, 30, seed=7),
+        "Twitter": kronecker(scale, 22, seed=8),
     }
     if n_queries is None:   # explicit 0 is 0, not the default
-        n_queries = max(48, 8 * batch)
+        n_queries = max(96, 16 * batch)
+    n_dev = len(jax.devices())
     print(f"# serving: {len(graphs)} graphs, {n_queries} Zipf queries, "
-          f"max_batch={batch}")
+          f"max_batch={batch}, devices={n_dev}")
     traffic = make_traffic(graphs, n_queries, seed=seed)
-    # capacity below the graph count: the Zipf tail churns the LRU, so
-    # the reported hit rate / p99 actually reflect eviction+rebuild cost
-    registry = GraphRegistry(capacity=max(len(graphs) - 1, 1))
-    for gid, g in graphs.items():
-        registry.register(gid, g)
-    # warm-up: pay each (graph, goal) jit compile outside the timed region
-    warm = QueryScheduler(registry, max_batch=batch)
-    seen = set()
-    for item in traffic:
-        key = (item.query.gid, item.query.kind)
-        if key not in seen:
-            seen.add(key)
-            warm.submit(item.query)
-            warm.drain()
 
-    # snapshot so the reported hit rate covers only the measured phase
-    # (the registry stats object is shared with the warm-up scheduler)
-    pre_hits, pre_misses = registry.stats.hits, registry.stats.misses
-    sch = QueryScheduler(registry, max_batch=batch)
-    t0 = time.perf_counter()
-    futs = [(item, sch.submit(item.query, priority=item.priority,
-                              deadline_s=item.deadline_s))
-            for item in traffic]
-    sch.drain()
-    elapsed = time.perf_counter() - t0
-    stats = sch.stats()
-    d_hits = registry.stats.hits - pre_hits
-    d_misses = registry.stats.misses - pre_misses
-    hit_rate = d_hits / (d_hits + d_misses) if d_hits + d_misses else 1.0
+    one = common.run_serving_traffic(graphs, traffic,
+                                     devices=jax.devices()[:1],
+                                     max_batch=batch)
+    emit(rows, "serving/1dev", one["time_s"], qps=one["qps"],
+         p50_ms=one["p50_ms"], p99_ms=one["p99_ms"],
+         occupancy=one["occupancy"], warmup_s=one["warmup_s"],
+         n_batches=one["stats"]["n_batches"], n_graphs=len(graphs),
+         n_queries=n_queries,
+         registry_hit_rate=one["serving_hit_rate"])
+    best = one
+    if n_dev > 1:
+        many = common.run_serving_traffic(graphs, traffic, max_batch=batch)
+        parity, n_checked = common.check_p2p_parity(graphs,
+                                                    many["results"],
+                                                    sample=12)
+        emit(rows, "serving/router", many["time_s"], qps=many["qps"],
+             n_devices=n_dev, scaling=many["qps"] / one["qps"],
+             p2p_bitwise_equal=int(parity), p2p_checked=n_checked,
+             p50_ms=many["p50_ms"], p99_ms=many["p99_ms"],
+             occupancy=many["occupancy"], warmup_s=many["warmup_s"],
+             n_batches=many["stats"]["n_batches"],
+             replications=many["stats"]["n_replications"],
+             rejected=many["stats"]["rejected"],
+             registry_hit_rate=many["serving_hit_rate"])
+        best = many
 
     lat_by_gid = {}
-    for item, fut in futs:
-        lat_by_gid.setdefault(item.query.gid, []).append(
-            fut.result().latency_s)
-    lat_all = np.concatenate([np.asarray(v) for v in lat_by_gid.values()])
-    emit(rows, "serving/overall", float(lat_all.mean()),
-         qps=n_queries / elapsed,
-         p50_ms=float(np.percentile(lat_all, 50) * 1e3),
-         p99_ms=float(np.percentile(lat_all, 99) * 1e3),
-         occupancy=stats["occupancy"], n_batches=stats["n_batches"],
-         n_graphs=len(graphs), n_queries=n_queries,
-         registry_hit_rate=hit_rate)
+    for item, res in best["results"]:
+        lat_by_gid.setdefault(item.query.gid, []).append(res.latency_s)
     for gid, lats in sorted(lat_by_gid.items()):
         lats = np.asarray(lats)
         emit(rows, f"serving/{gid}", float(lats.mean()),
              n=lats.size,
              p50_ms=float(np.percentile(lats, 50) * 1e3),
              p99_ms=float(np.percentile(lats, 99) * 1e3))
+
+    # sharded-tier acceptance: a graph forced over the shard threshold is
+    # served through the same SsspService/router API by the shard_map
+    # engine spanning the mesh, with dist/parent parity vs single-device
+    big_name = f"gr{scale}_8"
+    big = graphs[big_name]
+    svc = SsspService(big, max_batch=min(batch, 4), devices=jax.devices(),
+                      shard_threshold_n=1)
+    srcs = common.pick_sources(big, min(batch, 4), seed=3)
+    t0 = time.perf_counter()
+    reqs = [svc.submit(SsspRequest(rid=i, source=int(s)))
+            for i, s in enumerate(srcs)]
+    svc.run()
+    elapsed = time.perf_counter() - t0
+    dg = big.to_device()
+    parity = True
+    for r in reqs:
+        d_ref, p_ref, _ = sssp(dg, r.source)
+        parity &= (np.array_equal(r.dist, np.asarray(d_ref))
+                   and np.array_equal(r.parent, np.asarray(p_ref)))
+    emit(rows, f"serving/{big_name}/sharded_tier", elapsed / len(reqs),
+         n_devices=n_dev, parity=int(parity), n_sources=len(reqs))
 
     # acceptance check: p2p early exit saves rounds on the Road graph and
     # returns bitwise-identical target distances

@@ -1,11 +1,17 @@
-"""Serving demo: multi-graph registry + async scheduler under Zipf traffic.
+"""Serving demo: multi-device router + per-device schedulers under Zipf
+traffic.
 
     PYTHONPATH=src python examples/serving_demo.py [--scale 10] [--queries 32]
 
-Registers a road grid and a Kronecker graph, starts the background
-scheduler worker, streams a Zipf-skewed mixed query load (p2p / bounded /
-k-nearest / tree) through it, and prints per-kind samples plus the
-serving counters.
+    # with a forced CPU device mesh:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python examples/serving_demo.py
+
+Registers a road grid and a Kronecker graph, plans placement from the
+expected traffic shares, warms every replica engine, starts the
+background workers (one per device), streams a Zipf-skewed mixed query
+load (p2p / bounded / k-nearest / tree) through the router, and prints
+per-kind samples plus placement and serving counters.
 """
 import argparse
 import os
@@ -19,7 +25,7 @@ import numpy as np  # noqa: E402
 from repro.data.generators import kronecker, road_grid  # noqa: E402
 from repro.data.traffic import make_traffic  # noqa: E402
 from repro.serve.registry import GraphRegistry  # noqa: E402
-from repro.serve.scheduler import QueryScheduler  # noqa: E402
+from repro.serve.router import QueryRouter  # noqa: E402
 
 
 def main():
@@ -27,6 +33,8 @@ def main():
     ap.add_argument("--scale", type=int, default=10)
     ap.add_argument("--queries", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--rate-qps", type=float, default=None,
+                    help="open-loop arrival pacing (default: closed loop)")
     args = ap.parse_args()
 
     n = 1 << args.scale
@@ -34,20 +42,38 @@ def main():
         "social": kronecker(args.scale, 8, seed=2),      # hottest
         "road": road_grid(int(np.sqrt(n)), seed=5),
     }
-    registry = GraphRegistry(capacity=len(graphs))
+    registry = GraphRegistry(capacity=4 * len(graphs))
     for gid, g in graphs.items():
         registry.register(gid, g)
         print(f"registered {gid!r}: |V|={g.n} |E|={g.m // 2}")
 
-    scheduler = QueryScheduler(registry, max_batch=args.max_batch)
-    scheduler.start()
-    traffic = make_traffic(graphs, args.queries, seed=0)
+    router = QueryRouter(registry, max_batch=args.max_batch)
+    print(f"router over {router.n_devices} device(s)")
+    traffic = make_traffic(graphs, args.queries, seed=0,
+                           rate_qps=args.rate_qps)
+    shares = {}
+    for item in traffic:
+        shares[item.query.gid] = shares.get(item.query.gid, 0) + 1
+    placement = router.plan_placement(shares)
+    print(f"placement: {placement}")
     t0 = time.perf_counter()
-    futs = [(item, scheduler.submit(item.query, priority=item.priority))
-            for item in traffic]
+    router.warmup(kinds=("p2p", "bounded", "knear", "tree"))
+    print(f"warmup (builds + jit compiles): "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    router.start()
+    t0 = time.perf_counter()
+    futs = []
+    for item in traffic:
+        if args.rate_qps is not None:       # open-loop pacing
+            lag = item.arrival_s - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+        futs.append((item, router.submit(item.query,
+                                         priority=item.priority)))
     results = [(item, fut.result(timeout=600)) for item, fut in futs]
     elapsed = time.perf_counter() - t0
-    scheduler.stop()
+    router.stop()
 
     shown = set()
     for item, res in results:
@@ -55,32 +81,38 @@ def main():
         if q.kind in shown:
             continue
         shown.add(q.kind)
+        where = f"@{res.served_by}"
         if q.kind == "p2p":
             hops = len(res.path) - 1 if res.path else None
-            print(f"[{q.gid}] p2p {q.source}->{q.target}: "
+            print(f"[{q.gid}{where}] p2p {q.source}->{q.target}: "
                   f"dist={res.distance:.4f} hops={hops} "
                   f"({res.latency_s * 1e3:.0f} ms)")
         elif q.kind == "bounded":
-            print(f"[{q.gid}] bounded src={q.source} D={q.bound:.2f}: "
+            print(f"[{q.gid}{where}] bounded src={q.source} "
+                  f"D={q.bound:.2f}: "
                   f"{int(np.isfinite(res.dist).sum())} vertices in range")
         elif q.kind == "knear":
             v, d = res.nearest[-1]
-            print(f"[{q.gid}] knear src={q.source} k={q.k}: "
+            print(f"[{q.gid}{where}] knear src={q.source} k={q.k}: "
                   f"k-th neighbor {v} at {d:.4f}")
         else:
-            print(f"[{q.gid}] tree src={q.source}: "
+            print(f"[{q.gid}{where}] tree src={q.source}: "
                   f"{res.metrics['reachable']} reachable, "
                   f"nSync={res.metrics['nSync']:.2f}")
 
     lats = np.array([res.latency_s for _, res in results])
-    stats = scheduler.stats()
+    stats = router.stats()
     print(f"\n{len(results)} queries in {elapsed:.2f}s "
-          f"({len(results) / elapsed:.1f} q/s, incl. jit warmup)")
+          f"({len(results) / elapsed:.1f} q/s, warmed)")
     print(f"latency p50={np.percentile(lats, 50) * 1e3:.0f} ms "
           f"p99={np.percentile(lats, 99) * 1e3:.0f} ms; "
           f"occupancy={stats['occupancy']:.2f} over "
-          f"{stats['n_batches']} batches; "
+          f"{stats['n_batches']} batches on {stats['n_devices']} devices; "
+          f"replications={stats['n_replications']}; "
           f"registry hit rate={stats['registry']['hit_rate']:.2f}")
+    per_dev = {s["name"]: s["n_done"] for s in stats["schedulers"]
+               if s["n_done"]}
+    print(f"queries per scheduler: {per_dev}")
 
 
 if __name__ == "__main__":

@@ -44,7 +44,8 @@ from jax.experimental.shard_map import shard_map
 from . import relax, stats, stepping, traversal
 from .graph import HostGraph
 from .relax import INF, INT_MAX
-from .sssp import SsspMetrics, _zero_metrics
+from .sssp import (SsspMetrics, _check_goal_bounds, _goal_reached,
+                   _zero_metrics, goal_param_array)
 
 
 class ShardedGraph(NamedTuple):
@@ -59,6 +60,7 @@ class ShardedGraph(NamedTuple):
     deg: jnp.ndarray       # [P, B] int32
     rtow: jnp.ndarray      # [RATIO_NUM] float32 (replicated)
     n_edges2: jnp.ndarray  # scalar int32
+    n_true: jnp.ndarray    # scalar int32 — real vertex count (pre-padding)
 
 
 def shard_graph(g: HostGraph, n_shards: int) -> ShardedGraph:
@@ -89,13 +91,14 @@ def shard_graph(g: HostGraph, n_shards: int) -> ShardedGraph:
     return ShardedGraph(
         src=jnp.asarray(s_sl), dst=jnp.asarray(d_sl), w=jnp.asarray(w_sl),
         deg=jnp.asarray(deg.reshape(p, block)),
-        rtow=jnp.asarray(g.rtow), n_edges2=jnp.int32(g.m))
+        rtow=jnp.asarray(g.rtow), n_edges2=jnp.int32(g.m),
+        n_true=jnp.int32(g.n))
 
 
 def graph_specs(axis):
     """PartitionSpecs matching :class:`ShardedGraph` for mesh axis ``axis``."""
     return ShardedGraph(src=P(axis), dst=P(axis), w=P(axis), deg=P(axis),
-                        rtow=P(), n_edges2=P())
+                        rtow=P(), n_edges2=P(), n_true=P())
 
 
 # ---------------------------------------------------------------------------
@@ -139,26 +142,35 @@ class _V2State(NamedTuple):
 
 @lru_cache(maxsize=64)
 def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
-                  fused_rounds, capacity):
+                  fused_rounds, capacity, goal="tree", batch=False):
     """Build + jit one distributed engine (cached so repeated calls with
-    the same mesh/shape/config reuse the compiled executable)."""
-    in_specs = (graph_specs(axes), P())
+    the same mesh/shape/config reuse the compiled executable).
+
+    ``goal`` is static (part of the compiled program, like the
+    single-device engine); ``batch`` switches the body to the multi-source
+    entry point (``lax.map`` over a ``[S]`` sources axis).
+    """
+    in_specs = (graph_specs(axes), P(), P())
     out_specs = (P(axes), P(axes), P())
 
     axis_sizes = tuple(mesh.shape[a] for a in
                        ((axes,) if isinstance(axes, str) else axes))
     if version == "v1":
-        body = _v1_body(n_pad, block, axes, params, max_iters)
+        body = _v1_body(n_pad, block, axes, params, max_iters, goal, batch)
         out_specs = (P(), P(), P())
     elif version == "v2":
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
-                        axis_sizes)
+                        axis_sizes, goal=goal, batch=batch)
     elif version == "v3":
         cap = capacity or max(block // 16, 8)
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
-                        axis_sizes, compact_capacity=cap)
+                        axis_sizes, goal=goal, batch=batch,
+                        compact_capacity=cap)
     else:
         raise ValueError(version)
+    if version in ("v2", "v3") and batch:
+        # per-shard [S, B] slabs concatenate into a global [S, n_pad]
+        out_specs = (P(None, axes), P(None, axes), P())
 
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
@@ -168,26 +180,70 @@ def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
 def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
                      version: str = "v2", max_iters: int = 1_000_000,
                      fused_rounds: int = 0, alpha: float = 3.0,
-                     beta: float = 0.9, capacity: int = 0):
+                     beta: float = 0.9, capacity: int = 0,
+                     goal: str = "tree", goal_param=None):
     """Run distributed EIC SSSP on ``mesh`` (axes flattened over ``axes``).
 
     versions: v1 replicated/pmin, v2 sharded/all_to_all dense exchange,
     v3 frontier-compacted exchange (top-C candidates per destination block;
     falls back to the dense exchange on bucket overflow — exact always).
+
+    ``goal``/``goal_param`` select the same early-exit query variants as
+    the single-device engine (:data:`repro.core.sssp.GOALS`): the settled
+    test is evaluated distributively (owner-local settled check + pmax for
+    p2p, psum'd settled count for knear) so a sharded p2p/bounded/knear
+    query stops stepping as early as the single-device one.
     """
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
     block = sg.deg.shape[1]
+    gp = goal_param_array(goal, goal_param)
+    _check_goal_bounds(goal, gp, int(sg.n_true))
     axes_key = axes if isinstance(axes, str) else tuple(axes)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
-                       max_iters, fused_rounds, capacity)
-    return fn(sg, jnp.int32(source))
+                       max_iters, fused_rounds, capacity, goal, False)
+    return fn(sg, jnp.int32(source), gp)
+
+
+def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
+                           *, version: str = "v2",
+                           max_iters: int = 1_000_000, fused_rounds: int = 0,
+                           alpha: float = 3.0, beta: float = 0.9,
+                           capacity: int = 0, goal: str = "tree",
+                           goal_params=None):
+    """Batched multi-source distributed SSSP — the sharded serving tier's
+    entry point.
+
+    Sources are scanned *sequentially* inside one compiled ``shard_map``
+    program (``lax.map``), not vmapped: the sharded tier exists for graphs
+    whose per-device state is the memory budget, so slots must not
+    multiply the O(N/P) dist/parent footprint.  One compile still serves
+    every batch of the same width, and per-batch dispatch overhead is paid
+    once per batch instead of once per source.  All slots share the static
+    ``goal`` kind with per-slot ``goal_params``; returns ``(dist, parent,
+    metrics)`` with a leading ``[S]`` axis (dist/parent ``[S, n_pad]``).
+    """
+    params = stepping.SteppingParams(alpha=alpha, beta=beta)
+    p, _ = sg.src.shape
+    block = sg.deg.shape[1]
+    sources = jnp.asarray(sources, jnp.int32)
+    if goal == "tree" and goal_params is None:
+        goal_params = [0] * sources.shape[0]
+    gp = goal_param_array(goal, goal_params)
+    if gp.shape != sources.shape:
+        raise ValueError(f"goal_params shape {gp.shape} != sources shape "
+                         f"{sources.shape}")
+    _check_goal_bounds(goal, gp, int(sg.n_true))
+    axes_key = axes if isinstance(axes, str) else tuple(axes)
+    fn = _build_engine(mesh, axes_key, version, block, p * block, params,
+                       max_iters, fused_rounds, capacity, goal, True)
+    return fn(sg, sources, gp)
 
 
 # --- v1 -------------------------------------------------------------------
 
-def _v1_body(n_pad, block, axes, params, max_iters):
-    def run(sg: ShardedGraph, source):
+def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False):
+    def run(sg: ShardedGraph, source, goal_param):
         src = sg.src.reshape(-1)
         dst = sg.dst.reshape(-1)
         w = sg.w.reshape(-1)
@@ -195,12 +251,7 @@ def _v1_body(n_pad, block, axes, params, max_iters):
         deg = jax.lax.all_gather(deg_l, axes, tiled=True)  # replicated [N]
         rtow, n_edges2 = sg.rtow, sg.n_edges2
         max_w = rtow[-1]
-
-        dist0 = jnp.full((n_pad,), INF, jnp.float32).at[source].set(0.0)
-        parent0 = jnp.full((n_pad,), -1, jnp.int32).at[source].set(source)
-        frontier0 = jnp.zeros((n_pad,), bool).at[source].set(True)
         high_d0 = stats.high_d(jnp.zeros((n_pad,), jnp.float32), deg, 0.0)
-        metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
 
         def relax_round(dist, parent, frontier, lb, ub, metrics):
             paths = relax.leaf_pruned(frontier, dist, deg)
@@ -252,7 +303,7 @@ def _v1_body(n_pad, block, axes, params, max_iters):
             )
             return new_dist, new_parent, metrics
 
-        def transition(dist, parent, lb, ub, metrics):
+        def transition(dist, parent, lb, ub, metrics, gp):
             pend = dist[src] + w
             pend = jnp.where(pend >= ub, pend, INF)
             min_pending = jax.lax.pmin(jnp.min(pend), axes)
@@ -274,6 +325,8 @@ def _v1_body(n_pad, block, axes, params, max_iters):
             dist, parent, metrics = jax.lax.cond(
                 st_next < lb2, with_pull, lambda a: a,
                 (dist, parent, metrics))
+            # dist is replicated here, so the single-device goal test applies
+            done = done | _goal_reached(goal, gp, dist, lb2)
             frontier = relax.window_frontier(dist, st_next, lb2, ub2,
                                              max_w) & ~done
             metrics = metrics._replace(
@@ -284,33 +337,47 @@ def _v1_body(n_pad, block, axes, params, max_iters):
             (dist, parent, frontier, lb, ub, st_, done, iters, metrics) = s
             return (~done) & (iters < max_iters)
 
-        def body(s):
-            (dist, parent, frontier, lb, ub, st_, done, iters, metrics) = s
-            dist, parent, frontier, metrics = relax_round(
-                dist, parent, frontier, lb, ub, metrics)
-            # first-step ub bootstrap
-            def tighten(ub):
-                mask = (deg.astype(jnp.float32) >= high_d0) & (dist > 0)
-                return jnp.minimum(ub, jnp.min(jnp.where(mask, dist, INF)))
-            ub = jax.lax.cond(lb <= 0.0, tighten, lambda u: u, ub)
+        def run_one(source, gp):
+            dist0 = jnp.full((n_pad,), INF, jnp.float32).at[source].set(0.0)
+            parent0 = jnp.full((n_pad,), -1,
+                               jnp.int32).at[source].set(source)
+            frontier0 = jnp.zeros((n_pad,), bool).at[source].set(True)
+            metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
 
-            def trans(args):
-                return transition(*args)
+            def body(s):
+                (dist, parent, frontier, lb, ub, st_, done, iters,
+                 metrics) = s
+                dist, parent, frontier, metrics = relax_round(
+                    dist, parent, frontier, lb, ub, metrics)
+                # first-step ub bootstrap
+                def tighten(ub):
+                    mask = (deg.astype(jnp.float32) >= high_d0) & (dist > 0)
+                    return jnp.minimum(ub,
+                                       jnp.min(jnp.where(mask, dist, INF)))
+                ub = jax.lax.cond(lb <= 0.0, tighten, lambda u: u, ub)
 
-            def keep(args):
-                dist, parent, lb, ub, metrics = args
-                return dist, parent, frontier, lb, ub, st_, done, metrics
+                def trans(args):
+                    return transition(*args, gp)
 
-            (dist, parent, frontier, lb, ub, st2, done, metrics) = \
-                jax.lax.cond(jnp.any(frontier), keep, trans,
-                             (dist, parent, lb, ub, metrics))
-            return (dist, parent, frontier, lb, ub, st2, done,
-                    iters + 1, metrics)
+                def keep(args):
+                    dist, parent, lb, ub, metrics = args
+                    return dist, parent, frontier, lb, ub, st_, done, metrics
 
-        init = (dist0, parent0, frontier0, jnp.float32(0.0), INF,
-                jnp.float32(0.0), jnp.bool_(False), jnp.int32(0), metrics0)
-        out = jax.lax.while_loop(cond, body, init)
-        return out[0], out[1], out[8]
+                (dist, parent, frontier, lb, ub, st2, done, metrics) = \
+                    jax.lax.cond(jnp.any(frontier), keep, trans,
+                                 (dist, parent, lb, ub, metrics))
+                return (dist, parent, frontier, lb, ub, st2, done,
+                        iters + 1, metrics)
+
+            init = (dist0, parent0, frontier0, jnp.float32(0.0), INF,
+                    jnp.float32(0.0), jnp.bool_(False), jnp.int32(0),
+                    metrics0)
+            out = jax.lax.while_loop(cond, body, init)
+            return out[0], out[1], out[8]
+
+        if batch:
+            return jax.lax.map(lambda a: run_one(*a), (source, goal_param))
+        return run_one(source, goal_param)
 
     return run
 
@@ -318,11 +385,11 @@ def _v1_body(n_pad, block, axes, params, max_iters):
 # --- v2 -------------------------------------------------------------------
 
 def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
-             axis_sizes, compact_capacity: int = 0):
+             axis_sizes, goal="tree", batch=False, compact_capacity: int = 0):
     p = n_pad // block
     axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
 
-    def run(sg: ShardedGraph, source):
+    def run(sg: ShardedGraph, source, goal_param):
         src = sg.src.reshape(-1)          # global ids, sources owned locally
         dst = sg.dst.reshape(-1)
         w = sg.w.reshape(-1)
@@ -340,11 +407,27 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             stats.degree_hist(own_src, deg_l, 0.0), axes)
         high_d0 = stats.high_d_from_hist(high_d0_hist)
 
-        dist0 = jnp.where(jnp.arange(block) + base == source, 0.0, INF)
-        parent0 = jnp.where(jnp.arange(block) + base == source, source,
-                            -1).astype(jnp.int32)
-        frontier0 = (jnp.arange(block) + base) == source
-        metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
+        def goal_reached(dist_l, lb, gp):
+            """Distributed twin of sssp._goal_reached: ``dist`` lives
+            block-sharded here, so the settled test is owner-local with a
+            collective merge (pmax for the p2p hit, psum for the knear
+            settled count).  Matches the single-device decision exactly —
+            same lb, same settled invariant — so early exit keeps bitwise
+            dist/parent parity."""
+            if goal == "tree":
+                return jnp.bool_(False)
+            if goal == "p2p":
+                own = (gp // block) == me
+                loc = jnp.clip(gp - base, 0, block - 1)
+                hit = own & relax.settled_mask(dist_l, lb)[loc]
+                return jax.lax.pmax(hit.astype(jnp.int32), axes) > 0
+            if goal == "bounded":
+                return lb > gp
+            if goal == "knear":
+                n_settled = jax.lax.psum(jnp.sum(
+                    relax.settled_mask(dist_l, lb).astype(jnp.int32)), axes)
+                return n_settled >= gp + 1
+            raise ValueError(f"unknown goal {goal!r}")
 
         def dense_exchange(best_g, win_g):
             """all_to_all reduce-scatter-min of per-block candidate partials."""
@@ -481,7 +564,7 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                                    axes)
             return g_
 
-        def transition(dist_l, parent_l, lb, ub, metrics):
+        def transition(dist_l, parent_l, lb, ub, metrics, gp):
             pend = dist_l[src_l] + w
             pend = jnp.where(pend >= ub, pend, INF)
             min_pending = jax.lax.pmin(jnp.min(pend), axes)
@@ -503,6 +586,7 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             dist_l, parent_l, metrics = jax.lax.cond(
                 st_next < lb2, with_pull, lambda a: a,
                 (dist_l, parent_l, metrics))
+            done = done | goal_reached(dist_l, lb2, gp)
             frontier = relax.window_frontier(dist_l, st_next, lb2, ub2,
                                              max_w) & ~done
             metrics = metrics._replace(
@@ -512,37 +596,50 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
         def cond(s):
             return (~s.done) & (s.iters < max_iters)
 
-        def body(s: _V2State):
-            dist_l, parent_l, frontier, metrics = relax_round(
-                s.dist, s.parent, s.frontier, s.lb, s.ub, s.metrics)
+        def run_one(source, gp):
+            dist0 = jnp.where(jnp.arange(block) + base == source, 0.0, INF)
+            parent0 = jnp.where(jnp.arange(block) + base == source, source,
+                                -1).astype(jnp.int32)
+            frontier0 = (jnp.arange(block) + base) == source
+            metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
 
-            def tighten(ub):
-                mask = (deg_l.astype(jnp.float32) >= high_d0) & (dist_l > 0)
-                local = jnp.min(jnp.where(mask, dist_l, INF))
-                return jnp.minimum(ub, jax.lax.pmin(local, axes))
-            ub = jax.lax.cond(s.lb <= 0.0, tighten, lambda u: u, s.ub)
+            def body(s: _V2State):
+                dist_l, parent_l, frontier, metrics = relax_round(
+                    s.dist, s.parent, s.frontier, s.lb, s.ub, s.metrics)
 
-            any_front = jax.lax.pmax(jnp.any(frontier).astype(jnp.int32),
-                                     axes) > 0
+                def tighten(ub):
+                    mask = (deg_l.astype(jnp.float32) >= high_d0) \
+                        & (dist_l > 0)
+                    local = jnp.min(jnp.where(mask, dist_l, INF))
+                    return jnp.minimum(ub, jax.lax.pmin(local, axes))
+                ub = jax.lax.cond(s.lb <= 0.0, tighten, lambda u: u, s.ub)
 
-            def keep(args):
-                dist_l, parent_l, lb, ub, metrics = args
-                return (dist_l, parent_l, frontier, lb, ub, s.st, s.done,
-                        metrics)
+                any_front = jax.lax.pmax(jnp.any(frontier).astype(jnp.int32),
+                                         axes) > 0
 
-            def trans(args):
-                return transition(args[0], args[1], args[2], args[3], args[4])
+                def keep(args):
+                    dist_l, parent_l, lb, ub, metrics = args
+                    return (dist_l, parent_l, frontier, lb, ub, s.st, s.done,
+                            metrics)
 
-            (dist_l, parent_l, frontier, lb, ub, st2, done, metrics) = \
-                jax.lax.cond(any_front, keep, trans,
-                             (dist_l, parent_l, s.lb, ub, metrics))
-            return _V2State(dist_l, parent_l, frontier, lb, ub, st2, done,
-                            s.iters + 1, metrics)
+                def trans(args):
+                    return transition(args[0], args[1], args[2], args[3],
+                                      args[4], gp)
 
-        init = _V2State(dist0, parent0, frontier0, jnp.float32(0.0), INF,
-                        jnp.float32(0.0), jnp.bool_(False), jnp.int32(0),
-                        metrics0)
-        out = jax.lax.while_loop(cond, body, init)
-        return out.dist, out.parent, out.metrics
+                (dist_l, parent_l, frontier, lb, ub, st2, done, metrics) = \
+                    jax.lax.cond(any_front, keep, trans,
+                                 (dist_l, parent_l, s.lb, ub, metrics))
+                return _V2State(dist_l, parent_l, frontier, lb, ub, st2,
+                                done, s.iters + 1, metrics)
+
+            init = _V2State(dist0, parent0, frontier0, jnp.float32(0.0), INF,
+                            jnp.float32(0.0), jnp.bool_(False), jnp.int32(0),
+                            metrics0)
+            out = jax.lax.while_loop(cond, body, init)
+            return out.dist, out.parent, out.metrics
+
+        if batch:
+            return jax.lax.map(lambda a: run_one(*a), (source, goal_param))
+        return run_one(source, goal_param)
 
     return run

@@ -32,10 +32,16 @@ DEFAULT_MIX: Tuple[Tuple[str, float], ...] = (
 
 @dataclasses.dataclass(frozen=True)
 class TrafficItem:
-    """One generated request: the query plus its admission attributes."""
+    """One generated request: the query plus its admission attributes.
+
+    ``arrival_s`` is the item's offset from the start of the stream
+    (non-decreasing; 0.0 unless ``make_traffic(..., rate_qps=...)`` draws
+    Poisson arrivals) — open-loop load generators sleep until it before
+    submitting, closed-loop consumers ignore it."""
     query: Query
     priority: int = 0
     deadline_s: Optional[float] = None
+    arrival_s: float = 0.0
 
 
 def _zipf_probs(n_ranks: int, a: float) -> np.ndarray:
@@ -72,7 +78,8 @@ def make_traffic(graphs: Dict[str, "HostGraph"], n_queries: int, *,
                  bound_w_scale: Tuple[float, float] = (2.0, 8.0),
                  k_range: Tuple[int, int] = (4, 64),
                  priority_levels: int = 3,
-                 deadline_s: Optional[float] = None) -> List[TrafficItem]:
+                 deadline_s: Optional[float] = None,
+                 rate_qps: Optional[float] = None) -> List[TrafficItem]:
     """Generate a Zipf-skewed query stream over ``graphs``.
 
     ``graphs`` maps gid -> HostGraph; insertion order is the popularity
@@ -80,7 +87,10 @@ def make_traffic(graphs: Dict[str, "HostGraph"], n_queries: int, *,
     radii as ``uniform(lo, hi) * max_w``; ``k_range`` bounds k-nearest
     sizes (log-uniform).  Priorities are uniform in
     ``[0, priority_levels)``; ``deadline_s`` (optional) attaches the same
-    relative deadline to roughly one query in four.
+    relative deadline to roughly one query in four.  ``rate_qps`` draws
+    Poisson arrival offsets (exponential inter-arrival at that mean
+    rate) into ``TrafficItem.arrival_s`` for open-loop replay against
+    the router.
     """
     if n_queries < 0:
         raise ValueError("n_queries must be >= 0")
@@ -91,6 +101,14 @@ def make_traffic(graphs: Dict[str, "HostGraph"], n_queries: int, *,
     probs = probs / probs.sum()
     pick_endpoint = _endpoints(rng, graphs, gids, zipf_a)
     g_ranks = zipf_ranks(rng, len(gids), n_queries, zipf_a)
+    arrivals = np.zeros(n_queries, np.float64)
+    if rate_qps is not None:
+        if rate_qps <= 0:
+            raise ValueError("rate_qps must be > 0")
+        # derived RNG: pacing must not perturb the query stream itself —
+        # the same seed replays identical queries with or without arrivals
+        arr_rng = np.random.default_rng((seed, 0x9E3779B9))
+        arrivals = np.cumsum(arr_rng.exponential(1.0 / rate_qps, n_queries))
     out: List[TrafficItem] = []
     for i in range(n_queries):
         gid = gids[int(g_ranks[i])]
@@ -110,5 +128,6 @@ def make_traffic(graphs: Dict[str, "HostGraph"], n_queries: int, *,
             query=Query(gid=gid, source=source, kind=kind, **kw),
             priority=int(rng.integers(0, priority_levels)),
             deadline_s=(deadline_s if deadline_s is not None
-                        and rng.random() < 0.25 else None)))
+                        and rng.random() < 0.25 else None),
+            arrival_s=float(arrivals[i])))
     return out

@@ -157,8 +157,10 @@ def run_sssp(mesh_kind: str, scale: int = 26, edge_factor: int = 16,
             w=S((p, e_max), jnp.float32, P(axes)),
             deg=S((p, block), jnp.int32, P(axes)),
             rtow=S((RATIO_NUM,), jnp.float32, P()),
-            n_edges2=S((), jnp.int32, P()))
+            n_edges2=S((), jnp.int32, P()),
+            n_true=S((), jnp.int32, P()))
         src_s = S((), jnp.int32, P())
+        gp_s = S((), jnp.int32, P())        # "tree" goal parameter
         params = stepping.SteppingParams()
         if version == "v1":
             body = dist._v1_body(n, block, axes, params, 1 << 20)
@@ -173,11 +175,13 @@ def run_sssp(mesh_kind: str, scale: int = 26, edge_factor: int = 16,
                                  tuple(mesh.shape[a] for a in axes))
             out_specs = (P(axes), P(axes), P())
         fn = shard_map(body, mesh=mesh,
-                       in_specs=(dist.graph_specs(axes), P()),
+                       in_specs=(dist.graph_specs(axes), P(), P()),
                        out_specs=out_specs, check_rep=False)
-        lowered = jax.jit(fn).lower(sg, src_s)
+        lowered = jax.jit(fn).lower(sg, src_s, gp_s)
         compiled = lowered.compile()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, list):     # older jax: one dict per partition
+            cost = cost[0] if cost else {}
         art["cost"] = {k: float(v) for k, v in cost.items()
                        if isinstance(v, (int, float))}
         art["memory"] = _mem_dict(compiled)

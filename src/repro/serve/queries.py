@@ -90,6 +90,7 @@ class QueryResult:
     path: Optional[list] = None       # p2p: source..target vertex ids
     nearest: Optional[list] = None    # knear: [(vertex, dist)] ascending
     latency_s: Optional[float] = None  # filled by the scheduler
+    served_by: Optional[str] = None   # scheduler name (router placement)
 
 
 def reconstruct_path(parent, source: int, target: int) -> Optional[list]:

@@ -9,30 +9,56 @@ re-buildable artifacts, so the registry separates
 
 * the **spec** — how to (re)build a graph, registered once per ``gid``
   and kept forever (a ``HostGraph`` or a zero-arg factory returning one);
-* the **engine cache** — at most ``capacity`` built
-  :class:`GraphEngine` s, keyed by ``(gid, backend)``, recycled LRU.
+* the **engine cache** — at most ``capacity`` built engines, keyed by
+  ``(gid, backend, placement)``, recycled LRU.
+
+Placement is the multi-device serving plane's device-affinity axis: the
+same graph can be built once per device (the router replicates hot
+graphs), with each engine's buffers ``jax.device_put`` on its device so
+the jitted query batch runs there without transfers.
+
+**Engine tiers.**  Graphs small enough to fit one device are served by
+the single-device vmapped engine (:class:`GraphEngine`).  Graphs above
+the registry's vertex/edge shard thresholds are built as
+:class:`ShardedGraphEngine` s over :mod:`repro.core.distributed` (v2
+sharded-dist ``shard_map``) spanning the whole mesh — both tiers expose
+the same ``run_batch`` interface, so the scheduler/planner stack serves
+either transparently.
+
+**Concurrency.**  Lookups of built engines take only a short lock.  A
+cold build publishes a per-key future and builds *outside* the lock:
+concurrent lookups of the same key wait on that future (no duplicate
+builds), while lookups of other keys — in particular already-built
+engines — proceed immediately instead of serializing behind someone
+else's build.
 
 A cache miss on a registered gid transparently rebuilds the engine from
 its spec (and re-pays layout preprocessing + jit, which is why the
-serving benchmark reports registry hit rates).  The jitted engine itself
-is shared process-wide by jax's jit cache; what the registry pins per
-entry is the layout pytree the compiled code is keyed on.
+serving benchmark reports registry hit rates).  :meth:`GraphRegistry.warmup`
+pre-pays builds and per-(graph, kind, batch-width) jit compiles before
+traffic arrives.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import threading
+import time
+from concurrent.futures import Future
 from typing import Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 import jax
+from jax.sharding import Mesh, NamedSharding
 
 from ..core import relax
+from ..core.distributed import (graph_specs, shard_graph,
+                                sssp_distributed_batch, ShardedGraph)
 from ..core.graph import DeviceGraph, HostGraph
-from ..core.sssp import sssp_batch
+from ..core.sssp import GOALS, sssp_batch
 
-__all__ = ["GraphEngine", "GraphRegistry", "estimate_eccentricity"]
+__all__ = ["GraphEngine", "ShardedGraphEngine", "GraphRegistry",
+           "estimate_eccentricity"]
 
 
 def estimate_eccentricity(hg) -> np.ndarray:
@@ -77,27 +103,23 @@ def estimate_eccentricity(hg) -> np.ndarray:
 GraphSpec = Union[HostGraph, DeviceGraph, Callable[[], HostGraph]]
 
 
-class GraphEngine:
-    """One built (graph, backend) serving entry.
+class _EngineBase:
+    """Shared serving state: eccentricity hints + measured-rounds feedback.
 
-    Owns the device graph, the backend layout (built once), the hoisted
-    host-side degree array, and the eccentricity hints; ``run_batch``
-    executes one fused multi-source goal query batch.
+    ``batch_hint`` is what batch formation reads.  It starts as the
+    landmark-BFS eccentricity estimate and is EMA-blended with *measured*
+    per-source round counts (:meth:`record_rounds`, fed back by the
+    scheduler after every batch): vertices that have actually been served
+    converge to their true stepping cost, unvisited ones keep the BFS
+    prior.  The two are on different scales (hops vs rounds), which is
+    fine — grouping only needs a consistent *ordering*, and rounds
+    correlate monotonically with hop eccentricity.
     """
 
-    def __init__(self, gid: str, hg, backend: str,
-                 alpha: float, beta: float, **backend_opts):
-        self.gid = gid
-        self.host = hg
-        self.g: DeviceGraph = hg.to_device() if isinstance(hg, HostGraph) \
-            else hg
-        self.backend = relax.get_backend(backend)
-        self.layout = self.backend.prepare(self.g, **backend_opts)
-        self.alpha = alpha
-        self.beta = beta
-        # hoisted once: per-slot metric normalization reads this every batch
-        self.deg = np.asarray(hg.deg)
+    def __init__(self):
         self._ecc_hint: Optional[np.ndarray] = None
+        self._batch_hint: Optional[np.ndarray] = None
+        self._hint_lock = threading.Lock()
 
     @property
     def ecc_hint(self) -> np.ndarray:
@@ -107,15 +129,127 @@ class GraphEngine:
             self._ecc_hint = estimate_eccentricity(self.host)
         return self._ecc_hint
 
+    @property
+    def batch_hint(self) -> np.ndarray:
+        """Feedback-blended per-vertex stepping-cost estimate (see class
+        docstring); identical to ``ecc_hint`` until rounds are fed back."""
+        if self._batch_hint is None:
+            with self._hint_lock:
+                if self._batch_hint is None:
+                    self._batch_hint = self.ecc_hint.astype(np.float32,
+                                                            copy=True)
+        return self._batch_hint
+
+    def peek_batch_hint(self) -> Optional[np.ndarray]:
+        """``batch_hint`` only if it is available without running the
+        landmark BFS (None otherwise) — safe to call under a scheduler
+        lock.  A computed ``ecc_hint`` is promoted (an O(N) copy, no
+        BFS); the scheduler pays the BFS itself outside its lock."""
+        if self._batch_hint is None and self._ecc_hint is None:
+            return None
+        return self.batch_hint
+
+    def record_rounds(self, sources, rounds, gamma: float = 0.25) -> None:
+        """EMA-blend measured per-source round counts into ``batch_hint``."""
+        sources = np.asarray(sources, np.int64)
+        rounds = np.asarray(rounds, np.float32)
+        if sources.size == 0:
+            return
+        hint = self.batch_hint
+        with self._hint_lock:
+            hint[sources] = (1.0 - gamma) * hint[sources] + gamma * rounds
+
+
+class GraphEngine(_EngineBase):
+    """One built (graph, backend) serving entry — the single-device tier.
+
+    Owns the device graph, the backend layout (built once), the hoisted
+    host-side degree array, and the batch-formation hints; ``run_batch``
+    executes one fused multi-source goal query batch.  With ``device``
+    set, graph + layout buffers are ``jax.device_put`` there, making the
+    jitted batch device-affine (it runs on that device, no transfers).
+    """
+
+    tier = "single"
+
+    def __init__(self, gid: str, hg, backend: str,
+                 alpha: float, beta: float, device=None, **backend_opts):
+        super().__init__()
+        self.gid = gid
+        self.host = hg
+        self.device = device
+        g = hg.to_device() if isinstance(hg, HostGraph) else hg
+        if device is not None:
+            g = jax.device_put(g, device)
+        self.g: DeviceGraph = g
+        self.backend = relax.get_backend(backend)
+        layout = self.backend.prepare(self.g, **backend_opts)
+        if device is not None:
+            layout = jax.device_put(layout, device)
+        self.layout = layout
+        self.alpha = alpha
+        self.beta = beta
+        # hoisted once: per-slot metric normalization reads this every batch
+        self.deg = np.asarray(hg.deg)
+        self.n = int(self.deg.shape[0])
+
     def run_batch(self, sources, goal: str = "tree", goal_params=None):
-        """One fused batch; returns numpy ``(dist, parent, metrics)`` with
-        a leading slot axis."""
-        dist, parent, metrics = sssp_batch(
+        """One fused batch; returns ``(dist, parent, metrics)`` with a
+        leading slot axis.  Results are *device* arrays — dispatch is
+        async, so a caller can overlap host-side work with the device
+        computation (the scheduler's double buffering) and force them
+        with ``np.asarray`` only when needed."""
+        return sssp_batch(
             self.g, np.asarray(sources, np.int32), backend=self.backend,
             layout=self.layout, alpha=self.alpha, beta=self.beta,
             goal=goal, goal_params=goal_params)
-        return (np.asarray(dist), np.asarray(parent),
-                jax.tree.map(np.asarray, metrics))
+
+
+class ShardedGraphEngine(_EngineBase):
+    """The sharded serving tier: one graph spanning the whole device mesh.
+
+    Built for graphs above the registry's shard thresholds, where a
+    single device can't (or shouldn't) hold dist/parent + the edge list.
+    The graph is block-partitioned with
+    :func:`repro.core.distributed.shard_graph`, each slab placed on its
+    device via ``NamedSharding``, and batches run through the v2
+    sharded-dist ``shard_map`` engine's batch entry point
+    (:func:`repro.core.distributed.sssp_distributed_batch`) with the same
+    goal semantics as the single-device tier — so the registry/scheduler
+    stack serves both tiers through one ``run_batch`` interface.
+    """
+
+    tier = "sharded"
+
+    def __init__(self, gid: str, hg, alpha: float, beta: float,
+                 devices=None, version: str = "v2", fused_rounds: int = 0):
+        super().__init__()
+        self.gid = gid
+        self.host = hg
+        self.deg = np.asarray(hg.deg)
+        self.n = int(self.deg.shape[0])
+        self.alpha = alpha
+        self.beta = beta
+        self.version = version
+        self.fused_rounds = fused_rounds
+        devs = tuple(devices) if devices else tuple(jax.devices())
+        self.devices = devs
+        self.mesh = Mesh(np.array(devs), ("graph",))
+        sg = shard_graph(hg, len(devs))
+        # pre-place each slab on its owner device (the engine's layout)
+        self.sg = ShardedGraph(*(
+            jax.device_put(x, NamedSharding(self.mesh, s))
+            for x, s in zip(sg, graph_specs("graph"))))
+
+    def run_batch(self, sources, goal: str = "tree", goal_params=None):
+        """Same contract as :meth:`GraphEngine.run_batch` (leading slot
+        axis, device arrays); padding vertices are sliced off."""
+        dist, parent, metrics = sssp_distributed_batch(
+            self.sg, np.asarray(sources, np.int32), self.mesh, ("graph",),
+            version=self.version, fused_rounds=self.fused_rounds,
+            alpha=self.alpha, beta=self.beta, goal=goal,
+            goal_params=goal_params)
+        return dist[:, :self.n], parent[:, :self.n], metrics
 
 
 @dataclasses.dataclass
@@ -124,6 +258,7 @@ class RegistryStats:
     misses: int = 0
     builds: int = 0
     evictions: int = 0
+    build_waits: int = 0      # lookups that waited on another thread's build
 
     def as_dict(self) -> dict:
         total = self.hits + self.misses
@@ -132,17 +267,27 @@ class RegistryStats:
 
 
 class GraphRegistry:
-    """LRU cache of :class:`GraphEngine` s over registered graph specs.
+    """LRU cache of serving engines over registered graph specs.
 
-    Thread-safe: the LRU state is guarded by an internal lock, so several
-    schedulers (or producer threads) can share one registry.  A cold
-    build holds the lock for its duration — concurrent lookups wait
-    rather than build duplicates (per-key build futures are a ROADMAP
-    follow-up).
+    Thread-safe: the LRU state is guarded by a short internal lock, and
+    cold builds run outside it behind per-key futures — concurrent
+    lookups of the *same* key share one build, lookups of other keys
+    (notably already-built engines) never wait (see module docstring).
+
+    ``shard_threshold_n`` / ``shard_threshold_m`` select the engine tier:
+    a registered ``HostGraph`` at or above either threshold is served by
+    a :class:`ShardedGraphEngine` over ``shard_devices`` (default: every
+    local device); smaller graphs get the single-device
+    :class:`GraphEngine` (optionally device-affine, see :meth:`engine`).
+    ``register(..., tier=...)`` overrides per graph.
     """
 
     def __init__(self, capacity: int = 4, *, backend: str = "segment_min",
-                 alpha: float = 3.0, beta: float = 0.9, **backend_opts):
+                 alpha: float = 3.0, beta: float = 0.9,
+                 shard_threshold_n: Optional[int] = None,
+                 shard_threshold_m: Optional[int] = None,
+                 shard_devices=None, shard_version: str = "v2",
+                 **backend_opts):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
@@ -150,24 +295,66 @@ class GraphRegistry:
         self.alpha = alpha
         self.beta = beta
         self.backend_opts = dict(backend_opts)
+        self.shard_threshold_n = shard_threshold_n
+        self.shard_threshold_m = shard_threshold_m
+        self.shard_devices = tuple(shard_devices) if shard_devices else None
+        self.shard_version = shard_version
         self._lock = threading.RLock()
         self._specs: Dict[str, GraphSpec] = {}
-        self._engines: "collections.OrderedDict[Tuple[str, str], GraphEngine]" \
+        self._tiers: Dict[str, str] = {}
+        self._engines: "collections.OrderedDict[tuple, object]" \
             = collections.OrderedDict()
+        self._building: Dict[tuple, Future] = {}
         self.stats = RegistryStats()
 
-    def register(self, gid: str, graph: GraphSpec) -> None:
+    # ------------------------------------------------------------------
+    # specs + tiers
+    # ------------------------------------------------------------------
+
+    def register(self, gid: str, graph: GraphSpec, *,
+                 tier: Optional[str] = None) -> None:
         """Register (or replace) a graph spec; drops any cached engines
-        built from the previous spec."""
+        built from the previous spec.  ``tier`` forces ``"single"`` or
+        ``"sharded"``; default auto-selects by the shard thresholds
+        (factory specs default to ``"single"`` — their size is unknown
+        until built, so pass ``tier="sharded"`` explicitly)."""
         if not (isinstance(graph, (HostGraph, DeviceGraph))
                 or callable(graph)):
             raise TypeError(
                 f"expected HostGraph/DeviceGraph or factory for {gid!r}, "
                 f"got {type(graph)}")
+        if tier not in (None, "single", "sharded"):
+            raise ValueError(f"tier must be 'single' or 'sharded', "
+                             f"got {tier!r}")
+        if tier is None:
+            tier = "single"
+            if isinstance(graph, (HostGraph, DeviceGraph)):
+                n, m = int(graph.n), int(graph.m)
+                if ((self.shard_threshold_n is not None
+                     and n >= self.shard_threshold_n)
+                        or (self.shard_threshold_m is not None
+                            and m >= self.shard_threshold_m)):
+                    tier = "sharded"
         with self._lock:
             self._specs[gid] = graph
+            self._tiers[gid] = tier
             for key in [k for k in self._engines if k[0] == gid]:
                 del self._engines[key]
+            # detach in-flight builds of the old spec: lookups from here
+            # on start a fresh build of the new spec instead of attaching
+            # to a stale future (the old build's owner only resolves its
+            # own future — pre-replacement waiters — and the spec guard
+            # below keeps its stale engine out of the cache)
+            for key in [k for k in self._building if k[0] == gid]:
+                del self._building[key]
+
+    def tier(self, gid: str) -> str:
+        """The engine tier (``"single"``/``"sharded"``) serving ``gid``."""
+        with self._lock:
+            if gid not in self._tiers:
+                raise KeyError(f"graph {gid!r} is not registered "
+                               f"(have: {sorted(self._specs)})")
+            return self._tiers[gid]
 
     @property
     def gids(self) -> tuple:
@@ -175,25 +362,51 @@ class GraphRegistry:
             return tuple(self._specs)
 
     def cached_keys(self) -> tuple:
-        """Currently built (gid, backend) pairs, LRU -> MRU order."""
+        """Currently built (gid, backend, placement) keys, LRU -> MRU."""
         with self._lock:
             return tuple(self._engines)
 
-    def peek(self, gid: str,
-             backend: Optional[str] = None) -> Optional[GraphEngine]:
-        """Return the cached engine or None — never builds, never touches
-        LRU order or hit/miss stats (for lock-sensitive callers)."""
-        backend = (relax.get_backend(backend).name if backend is not None
-                   else self.default_backend)
-        with self._lock:
-            return self._engines.get((gid, backend))
+    # ------------------------------------------------------------------
+    # engine lookup / build
+    # ------------------------------------------------------------------
 
-    def engine(self, gid: str, backend: Optional[str] = None) -> GraphEngine:
-        """Get-or-build the engine for ``(gid, backend)`` (marks it MRU)."""
+    def _resolve(self, gid: str, backend, device):
         backend = (relax.get_backend(backend).name if backend is not None
                    else self.default_backend)
-        key = (gid, backend)
+        with self._lock:      # RLock: atomic with a caller's locked section
+            if self._tiers.get(gid) == "sharded":
+                # the sharded engine ignores the relax backend (it relaxes
+                # through the shared primitives): normalize the key so
+                # different-backend lookups share one whole-mesh engine
+                return (gid, "sharded", "sharded"), None
+        if device is None:
+            return (gid, backend, None), None
+        if isinstance(device, int):
+            device = jax.devices()[device]
+        return (gid, backend, ("dev", device.id)), device
+
+    def peek(self, gid: str, backend: Optional[str] = None,
+             device=None):
+        """Return the cached engine or None — never builds, never waits,
+        never touches LRU order or hit/miss stats (for lock-sensitive
+        callers like the scheduler's batch-formation path)."""
+        key, _ = self._resolve(gid, backend, device)
         with self._lock:
+            return self._engines.get(key)
+
+    def engine(self, gid: str, backend: Optional[str] = None, device=None):
+        """Get-or-build the engine for ``(gid, backend, device)``.
+
+        ``device`` pins the single-device tier's buffers to that jax
+        device (an index or a ``Device``; None keeps jax's default).
+        Sharded-tier gids ignore ``device`` — their one engine spans
+        ``shard_devices``.  Marks the entry MRU.
+        """
+        with self._lock:
+            # key and (spec, tier) must come from one consistent view: a
+            # racing register(tier=...) between them could file an engine
+            # of one tier under the other tier's key
+            key, dev = self._resolve(gid, backend, device)
             if gid not in self._specs:
                 raise KeyError(f"graph {gid!r} is not registered "
                                f"(have: {sorted(self._specs)})")
@@ -203,20 +416,99 @@ class GraphRegistry:
                 self._engines.move_to_end(key)
                 return eng
             self.stats.misses += 1
-            spec = self._specs[gid]
-            hg = spec() if callable(spec) else spec
-            eng = GraphEngine(gid, hg, backend, self.alpha, self.beta,
-                              **self.backend_opts)
-            self.stats.builds += 1
-            self._engines[key] = eng
-            while len(self._engines) > self.capacity:
-                self._engines.popitem(last=False)
-                self.stats.evictions += 1
-            return eng
-
-    def evict(self, gid: str, backend: Optional[str] = None) -> bool:
-        """Drop a cached engine (the spec stays registered)."""
-        backend = (relax.get_backend(backend).name if backend is not None
-                   else self.default_backend)
+            fut = self._building.get(key)
+            owner = fut is None
+            if owner:
+                fut = Future()
+                self._building[key] = fut
+                spec = self._specs[gid]
+                tier = self._tiers[gid]
+            else:
+                # same-key build in flight: share it (wait off-lock)
+                self.stats.build_waits += 1
+        if not owner:
+            return fut.result()
+        # we own the build: run it outside the lock so other keys' lookups
+        # (and producers) proceed
+        try:
+            eng = self._build(gid, spec, key[1], dev, tier)
+        except BaseException as exc:
+            with self._lock:
+                if self._building.get(key) is fut:   # not replaced by a
+                    del self._building[key]          # re-register's fresh build
+            fut.set_exception(exc)
+            raise
         with self._lock:
-            return self._engines.pop((gid, backend), None) is not None
+            if self._building.get(key) is fut:
+                del self._building[key]
+            self.stats.builds += 1
+            if self._specs.get(gid) is spec:     # not re-registered mid-build
+                self._engines[key] = eng
+                self._engines.move_to_end(key)
+                while len(self._engines) > self.capacity:
+                    self._engines.popitem(last=False)
+                    self.stats.evictions += 1
+        fut.set_result(eng)
+        return eng
+
+    def _build(self, gid, spec, backend, device, tier):
+        hg = spec() if callable(spec) else spec
+        if tier == "sharded":
+            return ShardedGraphEngine(gid, hg, self.alpha, self.beta,
+                                      devices=self.shard_devices,
+                                      version=self.shard_version)
+        return GraphEngine(gid, hg, backend, self.alpha, self.beta,
+                           device=device, **self.backend_opts)
+
+    def evict(self, gid: str, backend: Optional[str] = None,
+              device=None) -> bool:
+        """Drop a cached engine (the spec stays registered)."""
+        key, _ = self._resolve(gid, backend, device)
+        with self._lock:
+            return self._engines.pop(key, None) is not None
+
+    # ------------------------------------------------------------------
+    # warmup
+    # ------------------------------------------------------------------
+
+    def warmup(self, gids=None, *, backend: Optional[str] = None,
+               device=None, kinds=("tree",), batch_sizes=(1,)):
+        """Pre-pay engine builds and per-(graph, kind, batch-width) jit
+        compiles before traffic arrives.
+
+        Runs one dummy batch per (gid, kind, batch size) — the jit cache
+        is keyed on the static goal kind and the batch width, so pass the
+        scheduler's ``max_batch`` in ``batch_sizes`` for the compiles to
+        be the ones traffic will hit.  Returns one row dict per dummy
+        batch with ``build_s`` (engine build, attributed to its first
+        row) and ``compile_s`` wall times — the serving benchmark reports
+        these as the warmup cost.
+        """
+        if isinstance(gids, str):
+            gids = [gids]
+        gids = list(self.gids) if gids is None else list(gids)
+        for kind in kinds:
+            if kind not in GOALS:
+                raise ValueError(f"unknown warmup kind {kind!r}; "
+                                 f"expected one of {GOALS}")
+        rows = []
+        for gid in gids:
+            t0 = time.perf_counter()
+            eng = self.engine(gid, backend, device=device)
+            build_s = time.perf_counter() - t0
+            src = int(np.argmax(eng.deg))       # a vertex with edges
+            for kind in kinds:
+                for bs in batch_sizes:
+                    bs = int(bs)
+                    gp = {"tree": None, "p2p": [src] * bs,
+                          "bounded": [0.0] * bs, "knear": [1] * bs}[kind]
+                    t0 = time.perf_counter()
+                    out = eng.run_batch([src] * bs, goal=kind,
+                                        goal_params=gp)
+                    jax.block_until_ready(out[0])
+                    rows.append({"gid": gid, "tier": eng.tier, "kind": kind,
+                                 "batch": bs, "build_s": build_s,
+                                 "compile_s": time.perf_counter() - t0})
+                    build_s = 0.0               # attribute the build once
+        return rows
+

@@ -1,0 +1,327 @@
+"""Multi-device serving plane: a router over per-device schedulers.
+
+PR 2's stack drove exactly one device with one worker thread.  This
+module scales it across a JAX device mesh the way the stepping
+literature scales across cores (Dong et al., arXiv:2105.06145): keep
+every execution unit busy.
+
+::
+
+                         QueryRouter.submit(query)
+                                   |
+                 placement (stickiness) + least-outstanding-work
+                 /                 |                  \\
+        QueryScheduler(dev0) QueryScheduler(dev1) ... QueryScheduler(devP-1)
+                 |                 |                  |
+          GraphEngine@dev0   GraphEngine@dev1   GraphEngine@devP-1
+                 \\_________________|_________________/
+                                   |
+            sharded-tier gids ->  "mesh" QueryScheduler
+                                   |
+                    ShardedGraphEngine (shard_map, whole mesh)
+
+* **Placement + stickiness** — the first query for a graph places it on
+  the least-loaded device (fewest outstanding tickets, ties broken by
+  fewest placed graphs); later queries stick to that device so its
+  engine cache, jit cache, and batch hints stay warm.  A graph
+  replicated on several devices routes each query to its
+  least-outstanding replica.
+* **Hot-graph replication** — when one device's outstanding depth
+  dominates the pool (``replicate_factor`` x the mean of the others, and
+  at least ``replicate_min_depth``), the router replicates that device's
+  hottest graph onto the least-loaded device; the registry builds the
+  replica engine there on first use (outside every lock).  Replicas are
+  never torn down mid-run — the LRU evicts cold ones naturally.
+* **Engine tiers** — graphs the registry classifies as sharded
+  (:class:`~repro.serve.registry.ShardedGraphEngine`) span the whole
+  mesh, so they bypass per-device placement and run on a dedicated
+  ``"mesh"`` scheduler through the identical ``run_batch`` interface.
+
+Each per-device scheduler double-buffers (dispatch batch *k+1* while
+host-finalizing batch *k* — see :mod:`repro.serve.scheduler`), so with P
+devices up to P batches compute while P hosts finalize.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from .queries import Query
+from .registry import GraphRegistry
+from .scheduler import QueryScheduler
+
+__all__ = ["QueryRouter"]
+
+
+class QueryRouter:
+    """Route queries across a pool of per-device :class:`QueryScheduler` s.
+
+    ``devices`` defaults to every local jax device (one scheduler each);
+    passing an explicit list also allows repeating a device, which is
+    how the logic is unit-tested on single-device hosts.  All other
+    knobs are forwarded to the per-device schedulers (``max_pending``
+    bounds *each* device queue — total admission capacity is
+    ``P * max_pending``).
+    """
+
+    def __init__(self, registry: GraphRegistry, *, devices=None,
+                 max_batch: int = 8, backend: Optional[str] = None,
+                 admit_window: Optional[int] = None,
+                 ecc_batching: bool = True,
+                 max_pending: Optional[int] = None,
+                 feedback: bool = True,
+                 replicate_factor: float = 4.0,
+                 replicate_min_depth: int = 16):
+        devices = (list(devices) if devices is not None
+                   else list(jax.devices()))
+        if not devices:
+            raise ValueError("need at least one device")
+        if replicate_factor < 1.0:
+            raise ValueError("replicate_factor must be >= 1")
+        self.registry = registry
+        self.devices = devices
+        self.backend = backend
+        self.max_batch = max_batch
+        self.replicate_factor = replicate_factor
+        self.replicate_min_depth = replicate_min_depth
+        kw = dict(max_batch=max_batch, backend=backend,
+                  admit_window=admit_window, ecc_batching=ecc_batching,
+                  max_pending=max_pending, feedback=feedback)
+        self.schedulers = [
+            QueryScheduler(registry, device=d, name=f"dev{i}", **kw)
+            for i, d in enumerate(devices)]
+        # sharded-tier engines span the whole mesh; one scheduler drives
+        # them so per-device queues stay device-sized
+        self.mesh_scheduler = QueryScheduler(registry, device=None,
+                                             name="mesh", **kw)
+        self._lock = threading.Lock()
+        self._placement: Dict[str, List[int]] = {}
+        self._load = [0] * len(self.schedulers)      # outstanding tickets
+        self._n_placed = [0] * len(self.schedulers)  # graphs placed
+        self._gid_load: Dict[Tuple[int, str], int] = {}
+        self.n_routed = 0
+        self.n_replications = 0
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def _all_schedulers(self):
+        return self.schedulers + [self.mesh_scheduler]
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+
+    def _route_locked(self, gid: str) -> int:
+        placed = self._placement.get(gid)
+        if not placed:
+            idx = min(range(len(self.schedulers)),
+                      key=lambda i: (self._load[i], self._n_placed[i], i))
+            self._placement[gid] = [idx]
+            self._n_placed[idx] += 1
+            return idx
+        if len(placed) == 1:
+            return placed[0]
+        return min(placed, key=lambda i: (self._load[i], i))
+
+    def _done(self, idx: int, gid: str) -> None:
+        with self._lock:
+            self._load[idx] = max(self._load[idx] - 1, 0)
+            key = (idx, gid)
+            left = self._gid_load.get(key, 0) - 1
+            if left > 0:
+                self._gid_load[key] = left
+            else:
+                self._gid_load.pop(key, None)
+
+    def _maybe_replicate_locked(self) -> None:
+        """Replicate the hottest graph off a dominating device."""
+        if len(self.schedulers) < 2:
+            return
+        hot = max(range(len(self._load)), key=lambda i: self._load[i])
+        depth = self._load[hot]
+        if depth < self.replicate_min_depth:
+            return
+        others = [l for i, l in enumerate(self._load) if i != hot]
+        if depth < self.replicate_factor * (sum(others) / len(others) + 1.0):
+            return
+        gids = [(c, g) for (i, g), c in self._gid_load.items() if i == hot]
+        if not gids:
+            return
+        gid = max(gids)[1]
+        cold = min(range(len(self._load)),
+                   key=lambda i: (self._load[i], self._n_placed[i], i))
+        placed = self._placement.setdefault(gid, [])
+        if cold == hot or cold in placed:
+            return
+        placed.append(cold)
+        self._n_placed[cold] += 1
+        self.n_replications += 1
+
+    def plan_placement(self, weights: Dict[str, float]) -> Dict[str, list]:
+        """Pre-place graphs with replica counts proportional to expected
+        load (capacity planning from historical/forecast traffic shares).
+
+        Each gid gets ``max(1, round(P * weight / total))`` replicas
+        (capped at P), assigned hottest-first onto the devices hosting
+        the fewest graphs.  Combine with :meth:`warmup` so every replica
+        engine is built + compiled before traffic; the dynamic
+        replication path then only handles *unforecast* shifts.  Returns
+        ``{gid: [scheduler names]}``.
+        """
+        total = float(sum(weights.values()))
+        if total <= 0:
+            raise ValueError("weights must sum to > 0")
+        n_sch = len(self.schedulers)
+        with self._lock:
+            for gid, wt in sorted(weights.items(), key=lambda kv: -kv[1]):
+                if self.registry.tier(gid) == "sharded":
+                    continue          # spans the mesh already
+                n_rep = max(1, min(n_sch, round(n_sch * wt / total)))
+                placed = self._placement.setdefault(gid, [])
+                while len(placed) < n_rep:
+                    free = [i for i in range(n_sch) if i not in placed]
+                    if not free:
+                        break
+                    idx = min(free, key=lambda i: (self._n_placed[i], i))
+                    placed.append(idx)
+                    self._n_placed[idx] += 1
+            return {gid: [self.schedulers[i].name for i in idxs]
+                    for gid, idxs in self._placement.items()}
+
+    def submit(self, query: Query, *, priority: int = 0,
+               deadline_s: Optional[float] = None):
+        """Route and enqueue one query; returns the scheduler future.
+
+        Raises :class:`~repro.serve.scheduler.QueueFull` when the target
+        device's bounded queue is full (load shedding is per device —
+        sticky traffic must not hide one hot device behind idle ones).
+        """
+        gid = query.gid
+        try:
+            tier = self.registry.tier(gid)
+        except KeyError:
+            # unknown gid: route to the least-loaded scheduler *without*
+            # creating placement state (the engine lookup fails the future
+            # loudly; phantom gids must not skew placement tie-breaking)
+            with self._lock:
+                idx = min(range(len(self.schedulers)),
+                          key=lambda i: (self._load[i], i))
+                self.n_routed += 1
+            return self.schedulers[idx].submit(query, priority=priority,
+                                               deadline_s=deadline_s)
+        if tier == "sharded":
+            fut = self.mesh_scheduler.submit(query, priority=priority,
+                                             deadline_s=deadline_s)
+            with self._lock:
+                self.n_routed += 1
+            return fut
+        with self._lock:
+            idx = self._route_locked(gid)
+        fut = self.schedulers[idx].submit(query, priority=priority,
+                                          deadline_s=deadline_s)
+        with self._lock:
+            self.n_routed += 1
+            self._load[idx] += 1
+            self._gid_load[(idx, gid)] = \
+                self._gid_load.get((idx, gid), 0) + 1
+            self._maybe_replicate_locked()
+        # outside the router lock: a done future runs the callback inline
+        fut.add_done_callback(lambda _f, i=idx, g=gid: self._done(i, g))
+        return fut
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    def start(self) -> None:
+        """Start one background worker per device (plus the mesh one)."""
+        for sch in self._all_schedulers():
+            sch.start()
+
+    def stop(self, cancel_pending: bool = False) -> None:
+        for sch in self._all_schedulers():
+            sch.stop(cancel_pending=cancel_pending)
+
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Synchronously round-robin the pool until every queue empties
+        (single-threaded alternative to :meth:`start`)."""
+        steps = 0
+        progress = True
+        while progress and steps < max_steps:
+            progress = False
+            for sch in self._all_schedulers():
+                if steps >= max_steps:
+                    break
+                if sch.step():
+                    steps += 1
+                    progress = True
+        return steps
+
+    # ------------------------------------------------------------------
+    # warmup + stats
+    # ------------------------------------------------------------------
+
+    def warmup(self, gids=None, *, kinds=("tree",), batch_sizes=None):
+        """Pre-place graphs and pre-pay their jit compiles before traffic.
+
+        Each single-tier gid is placed (becoming its sticky device) and
+        its engine built + compiled there via
+        :meth:`GraphRegistry.warmup`; sharded-tier gids warm on the mesh.
+        ``batch_sizes`` defaults to this router's ``max_batch`` so the
+        compiles are exactly the ones traffic will hit.  Returns the
+        registry warmup rows with the serving scheduler attached.
+        """
+        if batch_sizes is None:
+            batch_sizes = (self.max_batch,)
+        if isinstance(gids, str):
+            gids = [gids]
+        gids = list(self.registry.gids) if gids is None else list(gids)
+        rows = []
+        for gid in gids:
+            if self.registry.tier(gid) == "sharded":
+                rs = self.registry.warmup([gid], backend=self.backend,
+                                          kinds=kinds,
+                                          batch_sizes=batch_sizes)
+                for r in rs:
+                    r["scheduler"] = self.mesh_scheduler.name
+                rows.extend(rs)
+                continue
+            with self._lock:
+                self._route_locked(gid)      # place if unplaced
+                idxs = list(self._placement[gid])
+            for idx in idxs:                 # warm every replica device
+                rs = self.registry.warmup([gid], backend=self.backend,
+                                          device=self.devices[idx],
+                                          kinds=kinds,
+                                          batch_sizes=batch_sizes)
+                for r in rs:
+                    r["scheduler"] = self.schedulers[idx].name
+                rows.extend(rs)
+        return rows
+
+    def stats(self) -> dict:
+        per = [sch.stats() for sch in self._all_schedulers()]
+        n_batches = sum(s["n_batches"] for s in per)
+        n_done = sum(s["n_done"] for s in per)
+        with self._lock:
+            placement = {gid: [self.schedulers[i].name for i in idxs]
+                         for gid, idxs in self._placement.items()}
+            return {
+                "n_devices": self.n_devices,
+                "n_routed": self.n_routed,
+                "n_replications": self.n_replications,
+                "n_batches": n_batches,
+                "n_done": n_done,
+                "n_expired": sum(s["n_expired"] for s in per),
+                "rejected": sum(s["rejected"] for s in per),
+                "pending": sum(s["pending"] for s in per),
+                "occupancy": (n_done / (n_batches * self.max_batch)
+                              if n_batches else 0.0),
+                "placement": placement,
+                "schedulers": per,
+                "registry": self.registry.stats.as_dict(),
+            }

@@ -12,16 +12,34 @@ started with :meth:`start`) then
    the head-of-line ticket — priority-aware admission;
 3. restricts an ``admit_window`` of queue-front tickets to the head's
    batch-compatibility key ``(gid, goal kind)`` (one compiled engine per
-   batch), then — the ROADMAP divergent-sources item — fills the
-   remaining slots with the window tickets whose **estimated
-   eccentricity** is nearest the head's, so a vmapped batch is not
-   dominated by one long-running outlier's stepping rounds;
+   batch), then fills the remaining slots with the window tickets whose
+   **estimated stepping cost** is nearest the head's, so a vmapped batch
+   is not dominated by one long-running outlier's rounds.  The estimate
+   is the engine's ``batch_hint`` — landmark-BFS eccentricity blended
+   (EMA) with *measured* per-source round counts this scheduler feeds
+   back after every batch;
 4. pads free slots by repeating slot 0 (static batch shape, no
    recompiles; padded results are discarded, never surfaced) and runs one
    fused ``sssp_batch`` goal query.
 
+**Device affinity.**  A scheduler constructed with ``device=`` asks the
+registry for engines pinned to that device — the multi-device router
+(:mod:`repro.serve.router`) runs one such scheduler per device.
+
+**Load shedding.**  With ``max_pending`` set, :meth:`submit` rejects at
+submit time with :class:`QueueFull` once that many tickets queue
+(counted in ``stats()["rejected"]``) instead of only expiring deadlines
+after admission — bounded queues are what keep overload from turning
+into unbounded latency.
+
+**Double buffering.**  ``run_batch`` dispatches asynchronously and
+returns device arrays; the background worker dispatches batch *k+1*
+before forcing batch *k*'s results to the host, so host-side
+finalization (path reconstruction, result shaping, future callbacks)
+overlaps the device compute instead of stalling it.
+
 The head of line is always admitted, so priority/FIFO progress is
-starvation-free; eccentricity grouping only chooses its *companions*.
+starvation-free; the cost-hint grouping only chooses its *companions*.
 """
 from __future__ import annotations
 
@@ -29,7 +47,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -37,11 +55,15 @@ import jax
 from .queries import ExecutionPlan, Query, finalize, plan
 from .registry import GraphRegistry
 
-__all__ = ["DeadlineExceeded", "QueryScheduler"]
+__all__ = ["DeadlineExceeded", "QueueFull", "QueryScheduler"]
 
 
 class DeadlineExceeded(Exception):
     """Raised on a query future whose deadline passed before admission."""
+
+
+class QueueFull(Exception):
+    """Raised by ``submit`` when the bounded admission queue is full."""
 
 
 @dataclasses.dataclass
@@ -60,34 +82,59 @@ class _Ticket:
                 self.seq)
 
 
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-not-finalized batch (the double buffer slot)."""
+    batch: List[_Ticket]
+    eng: object
+    sources: np.ndarray               # real (unpadded) ticket sources
+    dist: object                      # device arrays, possibly still computing
+    parent: object
+    metrics: object
+
+
 class QueryScheduler:
     """Thread-safe admission queue over a :class:`GraphRegistry`."""
 
     def __init__(self, registry: GraphRegistry, *, max_batch: int = 8,
                  backend: Optional[str] = None,
                  admit_window: Optional[int] = None,
-                 ecc_batching: bool = True):
+                 ecc_batching: bool = True,
+                 device=None, name: Optional[str] = None,
+                 max_pending: Optional[int] = None,
+                 feedback: bool = True, feedback_gamma: float = 0.25):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if admit_window is None:
             admit_window = 4 * max_batch
         if admit_window < 1:
             raise ValueError("admit_window must be >= 1")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
         self.registry = registry
         self.max_batch = max_batch
         self.backend = backend
         self.admit_window = admit_window
         self.ecc_batching = ecc_batching
+        self.device = device
+        self.name = name if name is not None else (
+            "default" if device is None
+            else f"dev{getattr(device, 'id', device)}")
+        self.max_pending = max_pending
+        self.feedback = feedback
+        self.feedback_gamma = feedback_gamma
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._pending: List[_Ticket] = []
         self._seq = 0
         self._worker: Optional[threading.Thread] = None
         self._stop = False
+        self._inflight_n = 0
         # serving counters (the benchmark's occupancy/throughput inputs)
         self.n_batches = 0
         self.n_done = 0
         self.n_expired = 0
+        self.n_rejected = 0
 
     # ------------------------------------------------------------------
     # producer side
@@ -97,10 +144,17 @@ class QueryScheduler:
                deadline_s: Optional[float] = None) -> Future:
         """Enqueue a query; higher ``priority`` is served first (FIFO
         within a priority level), ``deadline_s`` seconds from now bounds
-        its queueing time."""
+        its queueing time.  Raises :class:`QueueFull` (and counts the
+        rejection) when a bounded queue is at ``max_pending``."""
         now = time.monotonic()
         fut: Future = Future()
         with self._work:
+            if (self.max_pending is not None
+                    and len(self._pending) >= self.max_pending):
+                self.n_rejected += 1
+                raise QueueFull(
+                    f"admission queue full ({self.max_pending} pending) "
+                    f"on scheduler {self.name!r}; query {query} rejected")
             self._seq += 1
             self._pending.append(_Ticket(
                 seq=self._seq, query=query, plan=plan(query),
@@ -109,6 +163,13 @@ class QueryScheduler:
                 future=fut, t_submit=now))
             self._work.notify()
         return fut
+
+    def outstanding(self) -> int:
+        """Queued + dispatched-but-unfinished tickets.  (The router keeps
+        its own per-submit load counters so routing never takes scheduler
+        locks; this is the introspection equivalent.)"""
+        with self._lock:
+            return len(self._pending) + self._inflight_n
 
     # ------------------------------------------------------------------
     # batch formation + execution
@@ -130,7 +191,7 @@ class QueryScheduler:
         self._pending = live
 
     def _select_locked(self) -> List[_Ticket]:
-        """Pick one batch (head-of-line + ecc-nearest companions)."""
+        """Pick one batch (head-of-line + cost-nearest companions)."""
         self._pending.sort(key=_Ticket.sort_key)
         window = self._pending[:self.admit_window]
         head = window[0]
@@ -139,74 +200,125 @@ class QueryScheduler:
             companions = group[1:]
             # peek never builds: a cold engine here would run the build
             # under the scheduler lock, stalling every producer.  On a
-            # cold entry this batch gets FIFO companions; _execute builds
-            # the engine outside the lock, so later batches ecc-sort.
-            eng = self.registry.peek(head.plan.gid, self.backend)
+            # cold entry this batch gets FIFO companions; _dispatch builds
+            # the engine outside the lock, so later batches cost-sort.
+            eng = self.registry.peek(head.plan.gid, self.backend,
+                                     device=self.device)
             if eng is not None and self.ecc_batching and self.max_batch > 1:
                 try:
-                    ecc = eng.ecc_hint
-                    ref = ecc[head.query.source]
-                    companions.sort(
-                        key=lambda t: (abs(ecc[t.query.source] - ref),
-                                       t.seq))
+                    # peek only: the landmark BFS behind batch_hint must
+                    # not run under this lock (_dispatch pre-pays it off
+                    # the lock; until then companions stay FIFO)
+                    hint = eng.peek_batch_hint()
+                    if hint is not None:
+                        ref = hint[head.query.source]
+                        companions.sort(
+                            key=lambda t: (abs(hint[t.query.source] - ref),
+                                           t.seq))
                 except Exception:
-                    # fall back to FIFO companions; _execute will surface
+                    # fall back to FIFO companions; _dispatch will surface
                     # any per-ticket problem on its future
                     pass
-            # the head is always admitted (no ecc starvation); grouping
-            # only chooses its companion slots
+            # the head is always admitted (no grouping starvation); the
+            # hint only chooses its companion slots
             group = [head] + companions[:self.max_batch - 1]
         taken = set(id(t) for t in group)
         self._pending = [t for t in self._pending if id(t) not in taken]
         return group
 
     def step(self, _now: Optional[float] = None) -> bool:
-        """Admit and execute one batch; returns whether work was done."""
+        """Admit, execute and finalize one batch synchronously; returns
+        whether work was done."""
+        did, inflight = self._dispatch_one(_now)
+        if inflight is not None:
+            self._finalize(inflight)
+        return did
+
+    def _dispatch_one(self, _now: Optional[float] = None
+                      ) -> Tuple[bool, Optional[_Inflight]]:
+        """Admit one batch and dispatch it to the device (non-blocking)."""
         with self._lock:
             self._expire_locked(time.monotonic() if _now is None else _now)
             if not self._pending:
-                return False
+                return False, None
             batch = self._select_locked()
         batch = [t for t in batch if t.future.set_running_or_notify_cancel()]
         if not batch:
-            return True     # all cancelled — the queue still made progress
-        self._execute(batch)
-        return True
+            return True, None   # all cancelled — the queue made progress
+        return True, self._dispatch(batch)
 
-    def _execute(self, batch: List[_Ticket]) -> None:
+    def _dispatch(self, batch: List[_Ticket]) -> Optional[_Inflight]:
         head = batch[0]
         try:
-            # registry is internally locked; a cold build here happens
-            # outside the scheduler lock, so producers keep submitting
-            eng = self.registry.engine(head.plan.gid, self.backend)
+            # registry is internally locked with per-key build futures; a
+            # cold build here happens outside the scheduler lock, so
+            # producers (and other gids' batches) keep moving
+            eng = self.registry.engine(head.plan.gid, self.backend,
+                                       device=self.device)
+            if self.ecc_batching and self.max_batch > 1:
+                try:
+                    eng.batch_hint   # pre-pay the landmark BFS off-lock
+                except Exception:
+                    pass             # grouping falls back to FIFO
             # out-of-range vertex ids must fail loudly here: under jit an
             # o-o-b scatter is silently dropped and a gather clamps, which
             # would return a plausible-looking wrong answer
-            batch = [t for t in batch if _check_vertices(t, eng.g.n)]
+            batch = [t for t in batch if _check_vertices(t, eng.n)]
             if not batch:
-                return
+                return None
             head = batch[0]
             pad = self.max_batch - len(batch)
             # repeat slot 0 in free slots: static shape, results discarded
             plans = [t.plan for t in batch] + [head.plan] * pad
             sources = np.array([t.query.source for t in batch] +
                                [head.query.source] * pad, np.int32)
-            dist, parent, metrics = eng.run_batch(     # outside the lock
+            dist, parent, metrics = eng.run_batch(   # async device dispatch
                 sources, goal=head.plan.goal,
                 goal_params=[p.goal_param for p in plans])
         except Exception as exc:     # engine failure fails the whole batch
             for t in batch:
                 t.future.set_exception(exc)
-            return                   # futures carry the error; keep serving
+            return None              # futures carry the error; keep serving
+        with self._lock:
+            self._inflight_n += len(batch)
+        return _Inflight(batch=batch, eng=eng,
+                         sources=sources[:len(batch)],
+                         dist=dist, parent=parent, metrics=metrics)
+
+    def _finalize(self, inflight: _Inflight) -> None:
+        """Force one dispatched batch to the host and resolve its futures
+        (the host half of the double buffer)."""
+        batch, eng = inflight.batch, inflight.eng
+        try:
+            dist = np.asarray(inflight.dist)       # blocks on the device
+            parent = np.asarray(inflight.parent)
+            metrics = jax.tree.map(np.asarray, inflight.metrics)
+        except Exception as exc:
+            for t in batch:
+                t.future.set_exception(exc)
+            with self._lock:
+                self._inflight_n -= len(batch)
+            return
+        if self.feedback:
+            try:
+                # measured rounds -> engine batch hints (EMA); padding
+                # slots are excluded (sources holds real tickets only)
+                eng.record_rounds(inflight.sources,
+                                  metrics.n_rounds[:len(batch)],
+                                  gamma=self.feedback_gamma)
+            except Exception:
+                pass                 # a hint failure must not fail results
         now = time.monotonic()
         for slot, t in enumerate(batch):
             res = finalize(t.query, eng.deg, dist[slot], parent[slot],
                            _slot_tree(metrics, slot))
             res.latency_s = now - t.t_submit
+            res.served_by = self.name
             t.future.set_result(res)
         with self._lock:
             self.n_batches += 1
             self.n_done += len(batch)
+            self._inflight_n -= len(batch)
 
     def drain(self, max_steps: int = 10_000) -> int:
         """Synchronously run batches until the queue empties."""
@@ -216,31 +328,45 @@ class QueryScheduler:
         return steps
 
     # ------------------------------------------------------------------
-    # background worker
+    # background worker (double-buffered)
     # ------------------------------------------------------------------
 
     def start(self) -> None:
-        """Serve the queue from a daemon thread until :meth:`stop`."""
+        """Serve the queue from a daemon thread until :meth:`stop`.
+
+        The worker keeps one batch in flight while finalizing the
+        previous one: dispatch *k+1*, then force + finalize *k* — so
+        host-side result shaping overlaps device compute.
+        """
         if self._worker is not None:
             return
         self._stop = False
 
         def loop():
+            inflight: Optional[_Inflight] = None
             while True:
                 with self._work:
-                    while not self._pending and not self._stop:
+                    while (not self._pending and not self._stop
+                           and inflight is None):
                         self._work.wait(timeout=0.1)
-                    if self._stop:
-                        return
-                self.step()
+                    stop = self._stop
+                nxt = None
+                if not stop:
+                    _, nxt = self._dispatch_one()
+                if inflight is not None:
+                    self._finalize(inflight)
+                inflight = nxt
+                if stop and inflight is None:
+                    return
 
-        self._worker = threading.Thread(target=loop, name="query-scheduler",
-                                        daemon=True)
+        self._worker = threading.Thread(
+            target=loop, name=f"query-scheduler-{self.name}", daemon=True)
         self._worker.start()
 
     def stop(self, cancel_pending: bool = False) -> None:
-        """Stop the worker thread.  Still-queued tickets stay pending (a
-        later :meth:`drain`/:meth:`start` serves them) unless
+        """Stop the worker thread (finalizing any in-flight batch).
+        Still-queued tickets stay pending (a later
+        :meth:`drain`/:meth:`start` serves them) unless
         ``cancel_pending`` — then their futures are cancelled so no
         caller blocks forever on an abandoned query."""
         with self._work:
@@ -263,9 +389,11 @@ class QueryScheduler:
         with self._lock:
             occ = (self.n_done / (self.n_batches * self.max_batch)
                    if self.n_batches else 0.0)
-            return {"n_batches": self.n_batches, "n_done": self.n_done,
-                    "n_expired": self.n_expired, "occupancy": occ,
+            return {"name": self.name, "n_batches": self.n_batches,
+                    "n_done": self.n_done, "n_expired": self.n_expired,
+                    "rejected": self.n_rejected, "occupancy": occ,
                     "pending": len(self._pending),
+                    "inflight": self._inflight_n,
                     "registry": self.registry.stats.as_dict()}
 
 

@@ -1,17 +1,16 @@
-"""Single-graph SSSP endpoint — a thin wrapper over registry + scheduler.
+"""Single-graph SSSP endpoint — a thin wrapper over the serving plane.
 
 PR 1's ``SsspService`` (slot-batched full-tree queries over one fixed
-graph) is kept as the compatibility facade: it registers its one graph in
-a capacity-1 :class:`~repro.serve.registry.GraphRegistry` and drives a
+graph) is kept as the compatibility facade.  By default it registers its
+one graph in a :class:`~repro.serve.registry.GraphRegistry` and drives a
 synchronous :class:`~repro.serve.scheduler.QueryScheduler` step per
-``step()`` call.  New code should use the registry/scheduler/queries
-stack directly (multi-graph, async admission, p2p/bounded/k-nearest
-early-exit queries); this facade only speaks full shortest-path trees,
-FIFO, one graph.
-
-The per-batch ``np.asarray(deg)`` recomputation of the old implementation
-is gone: the degree array is hoisted into the registry's cached
-:class:`~repro.serve.registry.GraphEngine` at construction.
+``step()`` call; with ``devices=`` it instead fronts a
+:class:`~repro.serve.router.QueryRouter` over those devices, so even the
+legacy endpoint scales across a mesh (and serves sharded-tier graphs —
+pass ``shard_threshold_n``/``shard_threshold_m`` through to the
+registry).  New code should use the registry/router/queries stack
+directly (multi-graph, async admission, p2p/bounded/k-nearest early-exit
+queries); this facade only speaks full shortest-path trees, FIFO.
 """
 from __future__ import annotations
 
@@ -23,6 +22,7 @@ import numpy as np
 from ..core.graph import DeviceGraph, HostGraph
 from .queries import Query
 from .registry import GraphRegistry
+from .router import QueryRouter
 from .scheduler import QueryScheduler
 
 _GID = "default"
@@ -54,17 +54,40 @@ class SsspService:
     """
 
     def __init__(self, g, *, max_batch: int = 8, backend: str = "segment_min",
-                 alpha: float = 3.0, beta: float = 0.9, **backend_opts):
+                 alpha: float = 3.0, beta: float = 0.9, devices=None,
+                 shard_threshold_n: Optional[int] = None,
+                 shard_threshold_m: Optional[int] = None, **backend_opts):
         if not isinstance(g, (HostGraph, DeviceGraph)):
             raise TypeError(f"expected HostGraph/DeviceGraph, got {type(g)}")
-        self.registry = GraphRegistry(capacity=1, backend=backend,
-                                      alpha=alpha, beta=beta, **backend_opts)
+        devices = list(devices) if devices is not None else None
+        capacity = 1 if devices is None else len(devices) + 1
+        self.registry = GraphRegistry(capacity=capacity, backend=backend,
+                                      alpha=alpha, beta=beta,
+                                      shard_threshold_n=shard_threshold_n,
+                                      shard_threshold_m=shard_threshold_m,
+                                      **backend_opts)
         self.registry.register(_GID, g)
-        # FIFO facade: no eccentricity reordering, no priorities
-        self.scheduler = QueryScheduler(self.registry, max_batch=max_batch,
-                                        ecc_batching=False)
+        if devices is None:
+            # FIFO facade: no eccentricity reordering, no priorities
+            self.router = None
+            self.scheduler = QueryScheduler(self.registry,
+                                            max_batch=max_batch,
+                                            ecc_batching=False)
+        else:
+            self.router = QueryRouter(self.registry, devices=devices,
+                                      max_batch=max_batch,
+                                      ecc_batching=False)
+            self.scheduler = None
         self.max_batch = max_batch
-        self.g = self.registry.engine(_GID).g
+        self.n = int(g.n)
+        if self.router is None:
+            # the sync facade serves from the default-placement engine;
+            # building it here keeps first-step latency out of step()
+            self.g = self.registry.engine(_GID).g
+        else:
+            # router placement decides the serving devices — don't build
+            # an unused default-placement engine just to expose .g
+            self.g = None
         self._inflight: List[Tuple[SsspRequest, object]] = []
 
     @property
@@ -74,10 +97,14 @@ class SsspService:
 
     @property
     def n_batches(self) -> int:
+        if self.router is not None:
+            return self.router.stats()["n_batches"]
         return self.scheduler.n_batches
 
     def submit(self, req: SsspRequest) -> SsspRequest:
-        fut = self.scheduler.submit(Query(gid=_GID, source=int(req.source)))
+        q = Query(gid=_GID, source=int(req.source))
+        fut = (self.router.submit(q) if self.router is not None
+               else self.scheduler.submit(q))
         self._inflight.append((req, fut))
         return req
 
@@ -99,12 +126,18 @@ class SsspService:
     def step(self) -> bool:
         """Admit pending requests and run one fused batch; returns whether
         any work was done."""
-        did = self.scheduler.step()
+        if self.router is not None:
+            did = self.router.drain(max_steps=1) > 0
+        else:
+            did = self.scheduler.step()
         self._collect()
         return did
 
     def run(self, max_steps: int = 10_000) -> int:
         """Drain the queue; returns the number of batch steps executed."""
-        steps = self.scheduler.drain(max_steps)
+        if self.router is not None:
+            steps = self.router.drain(max_steps)
+        else:
+            steps = self.scheduler.drain(max_steps)
         self._collect()
         return steps

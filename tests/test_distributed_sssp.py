@@ -51,6 +51,35 @@ for name, g in [("kron", kronecker(9, 8, seed=1)),
             failures.append((name, ver, fused, mdiff))
 assert not failures, failures
 print("DISTRIBUTED_OK")
+
+# goal-aware early exit + the batch entry point (the sharded serving
+# tier's interface) keep bitwise parity with the single-device engine
+from repro.core.distributed import sssp_distributed_batch
+from repro.core.sssp import sssp_batch, sssp_p2p
+
+g = road_grid(20, seed=2)
+sg = shard_graph(g, 8)
+dg = g.to_device()
+rng = np.random.default_rng(0)
+nz = np.where(g.deg > 0)[0]
+srcs = rng.choice(nz, 3, replace=False).astype(np.int32)
+tgts = rng.choice(nz, 3, replace=False).astype(np.int32)
+d_b, p_b, m_b = sssp_distributed_batch(sg, srcs, mesh, ("graph",),
+                                       version="v2", goal="p2p",
+                                       goal_params=tgts)
+d_r, p_r, m_r = sssp_batch(dg, srcs, goal="p2p", goal_params=tgts)
+for i, t in enumerate(tgts):
+    assert np.asarray(d_b)[i, int(t)].tobytes() \
+        == np.asarray(d_r)[i, int(t)].tobytes(), i
+assert np.array_equal(np.asarray(m_b.n_rounds), np.asarray(m_r.n_rounds))
+s, t = int(srcs[0]), int(tgts[0])
+ds, _, ms = sssp_p2p(dg, s, t)
+for ver in ["v1", "v2", "v3"]:
+    d, p, m = sssp_distributed(sg, s, mesh, ("graph",), version=ver,
+                               goal="p2p", goal_param=t)
+    assert np.asarray(d)[t].tobytes() == np.asarray(ds)[t].tobytes(), ver
+    assert int(m.n_rounds) == int(ms.n_rounds), (ver, int(m.n_rounds))
+print("GOALS_OK")
 """
 
 
@@ -61,5 +90,45 @@ def test_distributed_matches_oracle():
         [sys.executable, "-c", SCRIPT, src_dir],
         capture_output=True, text=True, timeout=900,
         env={**os.environ, "JAX_PLATFORMS": "cpu"})
-    assert "DISTRIBUTED_OK" in proc.stdout, \
+    assert "DISTRIBUTED_OK" in proc.stdout and "GOALS_OK" in proc.stdout, \
         f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-2000:]}"
+
+
+def test_distributed_goal_batch_single_shard():
+    """Fast in-process coverage (1-shard mesh) of the goal-aware batch
+    entry point: parity with the single-device batched engine."""
+    import numpy as np
+    import jax
+
+    from repro.core.distributed import (shard_graph, sssp_distributed,
+                                        sssp_distributed_batch)
+    from repro.core.sssp import sssp_batch
+    from repro.data.generators import road_grid
+
+    g = road_grid(12, seed=2)
+    mesh = jax.make_mesh((1,), ("graph",))
+    sg = shard_graph(g, 1)
+    srcs = np.array([0, 5], np.int32)
+    tgts = np.array([100, 30], np.int32)
+    dist, parent, metrics = sssp_distributed_batch(
+        sg, srcs, mesh, ("graph",), goal="p2p", goal_params=tgts)
+    d_ref, p_ref, m_ref = sssp_batch(g.to_device(), srcs, goal="p2p",
+                                     goal_params=tgts)
+    n = g.n
+    np.testing.assert_array_equal(np.asarray(dist)[:, :n],
+                                  np.asarray(d_ref))
+    np.testing.assert_array_equal(np.asarray(parent)[:, :n],
+                                  np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(metrics.n_rounds),
+                                  np.asarray(m_ref.n_rounds))
+    # bounded goal on the single-source entry point
+    d_b, _, _ = sssp_distributed(sg, 0, mesh, ("graph",), goal="bounded",
+                                 goal_param=2.5)
+    from repro.core.sssp import sssp_bounded
+    d_bref, _, _ = sssp_bounded(g.to_device(), 0, 2.5)
+    np.testing.assert_array_equal(np.asarray(d_b)[:n], np.asarray(d_bref))
+    # o-o-b p2p targets are rejected against the real vertex count (a jit
+    # gather would clamp silently; padding vertices never settle)
+    with pytest.raises(ValueError):
+        sssp_distributed(sg, 0, mesh, ("graph",), goal="p2p",
+                         goal_param=n + 1)

@@ -1,0 +1,210 @@
+"""Multi-device router: placement, stickiness, replication, tiers, parity.
+
+Routing logic is exercised on any host by passing a repeated device list
+(two schedulers over one physical device); the ``multidevice``-marked
+parity test needs a real mesh — run it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+multidevice job does).
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.core.sssp import sssp, sssp_p2p
+from repro.data.generators import kronecker, road_grid, uniform_random
+from repro.serve.queries import Query
+from repro.serve.registry import GraphRegistry, ShardedGraphEngine
+from repro.serve.router import QueryRouter
+from repro.serve.scheduler import QueueFull
+
+SIDE = 12
+
+
+def two_graph_registry(**kw):
+    reg = GraphRegistry(capacity=8, **kw)
+    reg.register("road", road_grid(SIDE, seed=5))
+    reg.register("kron", kronecker(7, 6, seed=2))
+    return reg
+
+
+def dup_devices(k=2):
+    """k logical schedulers over the host's first device — routing logic
+    is device-count independent."""
+    return [jax.devices()[0]] * k
+
+
+def test_placement_stickiness_and_spread():
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2)
+    futs = [router.submit(Query(gid="road", source=s)) for s in (0, 5, 9)]
+    futs += [router.submit(Query(gid="kron", source=s)) for s in (1, 2)]
+    router.drain()
+    road_by = {f.result(timeout=0).served_by for f in futs[:3]}
+    kron_by = {f.result(timeout=0).served_by for f in futs[3:]}
+    # one sticky scheduler per graph, and the two graphs spread apart
+    assert len(road_by) == 1 and len(kron_by) == 1
+    assert road_by != kron_by
+    st = router.stats()
+    assert st["n_routed"] == 5 and st["n_done"] == 5
+    assert set(st["placement"]) == {"road", "kron"}
+
+
+def test_replicas_route_to_least_loaded():
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2)
+    router.plan_placement({"road": 1.0})     # both devices host road
+    assert sorted(router.stats()["placement"]["road"]) == ["dev0", "dev1"]
+    futs = [router.submit(Query(gid="road", source=s))
+            for s in (0, 1, 2, 3)]
+    router.drain()
+    # with every queue empty at submit time, load alternates 0/1
+    served = [f.result(timeout=0).served_by for f in futs]
+    assert set(served) == {"dev0", "dev1"}
+
+
+def test_hot_graph_replication_triggers():
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2,
+                         replicate_factor=2.0, replicate_min_depth=4)
+    # a burst on one graph with no serving in between piles depth on its
+    # sticky device until the router replicates it onto the idle one
+    futs = [router.submit(Query(gid="road", source=s % 100))
+            for s in range(12)]
+    st = router.stats()
+    assert st["n_replications"] >= 1
+    assert len(st["placement"]["road"]) == 2
+    router.drain()
+    assert {f.result(timeout=0).served_by for f in futs} \
+        == {"dev0", "dev1"}
+
+
+def test_sharded_tier_served_by_mesh_scheduler():
+    road = road_grid(SIDE, seed=5)
+    reg = GraphRegistry(capacity=4, shard_threshold_n=100)
+    reg.register("big", road)                # 144 >= 100 -> sharded
+    reg.register("small", kronecker(6, 4, seed=2))   # 64 < 100 -> single
+    assert reg.tier("big") == "sharded" and reg.tier("small") == "single"
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2)
+    f_big = router.submit(Query(gid="big", source=0, kind="p2p",
+                                target=100))
+    f_small = router.submit(Query(gid="small", source=1))
+    router.drain()
+    res = f_big.result(timeout=0)
+    assert res.served_by == "mesh"
+    assert isinstance(reg.peek("big"), ShardedGraphEngine)
+    assert f_small.result(timeout=0).served_by != "mesh"
+    # sharded-tier answer matches the single-device engine bitwise
+    d_ref, _, _ = sssp_p2p(road.to_device(), 0, 100)
+    assert np.float32(res.distance).tobytes() \
+        == np.asarray(d_ref)[100].tobytes()
+    settled = np.isfinite(np.asarray(res.dist))
+    np.testing.assert_array_equal(np.asarray(res.dist)[settled],
+                                  np.asarray(d_ref)[settled])
+
+
+def test_router_load_shedding_is_per_device():
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2,
+                         max_pending=2)
+    for s in (0, 1):
+        router.submit(Query(gid="road", source=s))
+    with pytest.raises(QueueFull):
+        router.submit(Query(gid="road", source=2))   # road's device full
+    # the other device still admits
+    router.submit(Query(gid="kron", source=0))
+    assert router.stats()["rejected"] == 1
+    router.drain()
+
+
+def test_warmup_builds_replicas_and_prepays_compiles():
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2)
+    router.plan_placement({"road": 3.0, "kron": 1.0})
+    rows = router.warmup(kinds=("tree", "p2p"))
+    # road is replicated on both schedulers, kron on one: 3 engines x 2
+    # kinds
+    assert len(rows) == 6
+    assert {r["scheduler"] for r in rows if r["gid"] == "road"} \
+        == {"dev0", "dev1"}
+    builds = reg.stats.builds
+    fut = router.submit(Query(gid="road", source=0, kind="p2p", target=9))
+    router.drain()
+    assert fut.result(timeout=0).distance is not None
+    assert reg.stats.builds == builds        # traffic paid no build
+
+
+def test_unknown_gid_fails_future_not_router():
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2)
+    bad = router.submit(Query(gid="nope", source=0))
+    ok = router.submit(Query(gid="road", source=1))
+    router.drain()
+    with pytest.raises(KeyError):
+        bad.result(timeout=0)
+    assert ok.result(timeout=0).dist is not None
+
+
+SCALE = 8
+
+
+def benchmark_suite():
+    """The 9-graph benchmark suite shape, scaled down for tests."""
+    n = 1 << SCALE
+    side = int(np.sqrt(n))
+    return {
+        f"gr{SCALE}_4": kronecker(SCALE, 4, seed=1),
+        f"gr{SCALE}_8": kronecker(SCALE, 8, seed=2),
+        f"gr{SCALE}_16": kronecker(SCALE, 16, seed=3),
+        f"gr{SCALE}_32": kronecker(SCALE, 32, seed=4),
+        "Road": road_grid(side, seed=5),
+        "Urand": uniform_random(n, 16 * n, seed=6),
+        "Web": kronecker(SCALE, 30, seed=7),
+        "Twitter": kronecker(SCALE, 22, seed=8),
+        "Kron": kronecker(SCALE, 32, seed=9),
+    }
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device mesh (set XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_router_bitwise_parity_on_all_benchmark_graphs():
+    """Router-served results == single-device engine results, bitwise,
+    on all nine benchmark graphs (the multi-device acceptance check)."""
+    graphs = benchmark_suite()
+    reg = GraphRegistry(capacity=len(graphs) + 1)
+    for gid, g in graphs.items():
+        reg.register(gid, g)
+    router = QueryRouter(reg, max_batch=2)
+    rng = np.random.default_rng(0)
+    futs = []
+    for gid, g in graphs.items():
+        nz = np.where(g.deg > 0)[0]
+        s, t = (int(v) for v in rng.choice(nz, 2, replace=False))
+        futs.append((gid, "tree", s, None,
+                     router.submit(Query(gid=gid, source=s))))
+        futs.append((gid, "p2p", s, t,
+                     router.submit(Query(gid=gid, source=s, kind="p2p",
+                                         target=t))))
+    router.start()
+    results = [(gid, kind, s, t, f.result(timeout=600))
+               for gid, kind, s, t, f in futs]
+    router.stop()
+    served_on = set()
+    for gid, kind, s, t, res in results:
+        served_on.add(res.served_by)
+        d_ref, p_ref, _ = sssp(graphs[gid].to_device(), s)
+        d_ref, p_ref = np.asarray(d_ref), np.asarray(p_ref)
+        if kind == "tree":
+            np.testing.assert_array_equal(res.dist, d_ref, err_msg=gid)
+            np.testing.assert_array_equal(res.parent, p_ref, err_msg=gid)
+        else:
+            # p2p masks tentative entries; the target's distance (and the
+            # whole settled prefix) must be bitwise-equal
+            assert np.float32(res.distance).tobytes() \
+                == d_ref[t].tobytes(), gid
+            settled = np.isfinite(np.asarray(res.dist))
+            np.testing.assert_array_equal(np.asarray(res.dist)[settled],
+                                          d_ref[settled], err_msg=gid)
+    # the suite actually exercised several devices
+    assert len(served_on) >= 2

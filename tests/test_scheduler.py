@@ -1,4 +1,5 @@
-"""Admission scheduler: priority/FIFO order, deadlines, padding, ecc batching."""
+"""Admission scheduler: priority/FIFO order, deadlines, padding, ecc
+batching, load shedding, rounds feedback, double-buffered worker."""
 import time
 
 import numpy as np
@@ -8,7 +9,8 @@ from repro.core.sssp import sssp
 from repro.data.generators import road_grid
 from repro.serve.queries import Query
 from repro.serve.registry import GraphRegistry
-from repro.serve.scheduler import DeadlineExceeded, QueryScheduler
+from repro.serve.scheduler import (DeadlineExceeded, QueryScheduler,
+                                   QueueFull)
 
 
 SIDE = 12
@@ -166,6 +168,64 @@ def test_finalized_arrays_expose_only_settled_values(registry):
     assert np.all(r.parent[~finite] == -1)
     rk = f_k.result(timeout=0)
     assert int(np.isfinite(rk.dist).sum()) == 5 + 1   # k nearest + source
+
+
+def test_bounded_queue_rejects_at_submit_time(registry):
+    sch = QueryScheduler(registry, max_batch=2, max_pending=2)
+    f1 = sch.submit(Query(gid="road", source=0))
+    f2 = sch.submit(Query(gid="road", source=1))
+    with pytest.raises(QueueFull):
+        sch.submit(Query(gid="road", source=2))
+    assert sch.stats()["rejected"] == 1
+    # shedding is submit-time back-pressure: draining frees capacity
+    sch.drain()
+    assert f1.result(timeout=0).dist is not None
+    assert f2.result(timeout=0).dist is not None
+    f3 = sch.submit(Query(gid="road", source=2))
+    sch.drain()
+    assert f3.result(timeout=0).dist is not None
+    with pytest.raises(ValueError):
+        QueryScheduler(registry, max_pending=0)
+
+
+def test_measured_rounds_feed_back_into_batch_hint(registry):
+    sch = QueryScheduler(registry, max_batch=2, feedback_gamma=0.5)
+    eng = registry.engine("road")
+    before = eng.batch_hint.copy()
+    srcs = [5, 17]
+    futs = [sch.submit(Query(gid="road", source=s)) for s in srcs]
+    assert sch.step()
+    rounds = [futs[i].result(timeout=0).metrics["n_rounds"]
+              for i in range(2)]
+    for s, r in zip(srcs, rounds):
+        assert eng.batch_hint[s] == pytest.approx(
+            0.5 * before[s] + 0.5 * r)
+    # feedback off leaves hints untouched
+    sch2 = QueryScheduler(registry, max_batch=2, feedback=False)
+    after = eng.batch_hint.copy()
+    sch2.submit(Query(gid="road", source=40))
+    sch2.drain()
+    np.testing.assert_array_equal(eng.batch_hint, after)
+
+
+def test_double_buffered_worker_pipelines_batches(registry):
+    """The background worker keeps one batch in flight while finalizing
+    the previous one; many small batches must all resolve correctly."""
+    sch = QueryScheduler(registry, max_batch=2, ecc_batching=False)
+    dg = registry.engine("road").g
+    sch.start()
+    try:
+        srcs = list(range(0, 24))
+        futs = [sch.submit(Query(gid="road", source=s)) for s in srcs]
+        for s, fut in zip(srcs, futs):
+            res = fut.result(timeout=300)
+            d_ref, _, _ = sssp(dg, s)
+            np.testing.assert_array_equal(res.dist, np.asarray(d_ref))
+    finally:
+        sch.stop()
+    st = sch.stats()
+    assert st["n_done"] == 24 and st["pending"] == 0 \
+        and st["inflight"] == 0
 
 
 def test_background_worker(registry):

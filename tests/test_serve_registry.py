@@ -1,10 +1,15 @@
-"""Multi-graph registry: LRU eviction/rebuild, stats, ecc hints."""
+"""Multi-graph registry: LRU eviction/rebuild, build futures, tiers,
+warmup, stats, ecc/feedback hints."""
+import threading
+import time
+
 import numpy as np
 import pytest
 
 from repro.core.sssp import sssp
 from repro.data.generators import kronecker, road_grid
-from repro.serve.registry import GraphRegistry, estimate_eccentricity
+from repro.serve.registry import (GraphEngine, GraphRegistry,
+                                  ShardedGraphEngine, estimate_eccentricity)
 
 
 def test_engine_caching_and_lru_eviction_rebuild():
@@ -20,7 +25,7 @@ def test_engine_caching_and_lru_eviction_rebuild():
     assert reg.stats.hits == 1 and reg.stats.builds == 1
 
     reg.engine("kron")                            # evicts road (capacity 1)
-    assert reg.cached_keys() == (("kron", "segment_min"),)
+    assert reg.cached_keys() == (("kron", "segment_min", None),)
     assert reg.stats.evictions == 1
 
     e2 = reg.engine("road")                       # transparent rebuild
@@ -45,8 +50,8 @@ def test_registry_keys_per_backend_and_factory_spec():
     e_blk = reg.engine("road", "blocked_pallas")
     assert e_seg is not e_blk
     assert len(builds) == 2                       # one HostGraph per engine
-    assert set(reg.cached_keys()) == {("road", "segment_min"),
-                                      ("road", "blocked_pallas")}
+    assert set(reg.cached_keys()) == {("road", "segment_min", None),
+                                      ("road", "blocked_pallas", None)}
     # both backends serve bitwise-identical results
     d1, _, _ = e_seg.run_batch([3, 7])
     d2, _, _ = e_blk.run_batch([3, 7])
@@ -65,6 +70,157 @@ def test_register_replaces_and_validates():
         reg.engine("missing")
     with pytest.raises(ValueError):
         GraphRegistry(capacity=0)
+
+
+def test_cold_build_does_not_serialize_other_lookups():
+    """Per-key build futures (ROADMAP follow-up): while one thread pays a
+    slow cold build, lookups of an *already-built* engine return
+    immediately instead of queueing behind the registry lock."""
+    reg = GraphRegistry(capacity=4)
+    reg.register("fast", road_grid(8, seed=5))
+    reg.engine("fast")                               # built up front
+
+    entered = threading.Event()
+
+    def slow_factory():
+        entered.set()
+        time.sleep(0.8)
+        return road_grid(8, seed=6)
+
+    reg.register("slow", slow_factory)
+    builder = threading.Thread(target=lambda: reg.engine("slow"))
+    builder.start()
+    assert entered.wait(timeout=5)                   # build in progress
+    t0 = time.perf_counter()
+    assert reg.engine("fast") is not None
+    waited = time.perf_counter() - t0
+    builder.join()
+    assert waited < 0.4, f"built-engine lookup waited {waited:.2f}s " \
+                         "on another key's build"
+
+
+def test_concurrent_same_key_lookups_share_one_build():
+    reg = GraphRegistry(capacity=2)
+    builds = []
+
+    def factory():
+        builds.append(1)
+        time.sleep(0.3)
+        return road_grid(8, seed=5)
+
+    reg.register("g", factory)
+    out = []
+    threads = [threading.Thread(target=lambda: out.append(reg.engine("g")))
+               for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(builds) == 1                          # deduped
+    assert out[0] is out[1] is out[2]
+    assert reg.stats.builds == 1 and reg.stats.build_waits == 2
+
+
+def test_reregister_mid_build_serves_new_spec_not_stale_engine():
+    """A lookup after ``register()`` replaced the spec must not attach to
+    the old spec's in-flight build future."""
+    reg = GraphRegistry(capacity=2)
+    entered = threading.Event()
+    release = threading.Event()
+
+    def slow_old():
+        entered.set()
+        release.wait(timeout=5)
+        return road_grid(8, seed=5)          # n = 64
+
+    reg.register("g", slow_old)
+    old = []
+    builder = threading.Thread(target=lambda: old.append(reg.engine("g")))
+    builder.start()
+    assert entered.wait(timeout=5)           # old build in flight
+    reg.register("g", road_grid(10, seed=6))  # n = 100
+    release.set()
+    eng = reg.engine("g")                    # post-replacement lookup
+    builder.join()
+    assert eng.n == 100                      # served the new spec
+    assert reg.peek("g").n == 100            # stale engine never cached
+    assert old[0].n == 64                    # pre-replacement waiter kept
+    #                                          its (then-correct) result
+
+
+def test_failed_build_raises_everywhere_and_allows_retry():
+    reg = GraphRegistry(capacity=2)
+    boom = [True]
+
+    def factory():
+        if boom[0]:
+            raise RuntimeError("transient build failure")
+        return road_grid(8, seed=5)
+
+    reg.register("g", factory)
+    with pytest.raises(RuntimeError):
+        reg.engine("g")
+    boom[0] = False
+    assert reg.engine("g") is not None               # retried cleanly
+
+
+def test_tier_dispatch_and_sharded_parity():
+    road = road_grid(12, seed=5)                     # n=144
+    reg = GraphRegistry(capacity=4, shard_threshold_n=100)
+    reg.register("big", road)
+    reg.register("small", kronecker(6, 4, seed=2))   # n=64
+    reg.register("forced", kronecker(6, 4, seed=2), tier="sharded")
+    assert reg.tier("big") == "sharded"
+    assert reg.tier("small") == "single"
+    assert reg.tier("forced") == "sharded"
+    with pytest.raises(ValueError):
+        reg.register("bad_tier", road, tier="mesh")
+    big = reg.engine("big")
+    assert isinstance(big, ShardedGraphEngine)
+    assert isinstance(reg.engine("small"), GraphEngine)
+    # both tiers share the run_batch contract and agree bitwise
+    dist, parent, _ = big.run_batch([0, 7])
+    assert dist.shape == (2, road.n)                 # padding sliced off
+    for slot, s in enumerate((0, 7)):
+        d_ref, p_ref, _ = sssp(road.to_device(), s)
+        np.testing.assert_array_equal(np.asarray(dist[slot]),
+                                      np.asarray(d_ref))
+        np.testing.assert_array_equal(np.asarray(parent[slot]),
+                                      np.asarray(p_ref))
+
+
+def test_warmup_prepays_builds_and_compiles():
+    reg = GraphRegistry(capacity=4)
+    reg.register("road", road_grid(10, seed=5))
+    rows = reg.warmup(kinds=("tree", "p2p"), batch_sizes=(2,))
+    assert [r["kind"] for r in rows] == ["tree", "p2p"]
+    assert rows[0]["build_s"] > 0 and rows[1]["build_s"] == 0
+    assert all(r["batch"] == 2 and r["tier"] == "single" for r in rows)
+    # warmed: the same (kind, batch) executes without a fresh compile
+    eng = reg.engine("road")
+    t0 = time.perf_counter()
+    out = eng.run_batch([1, 2], goal="p2p", goal_params=[3, 4])
+    np.asarray(out[0])
+    assert time.perf_counter() - t0 < rows[1]["compile_s"]
+    with pytest.raises(ValueError):
+        reg.warmup(kinds=("nope",))
+
+
+def test_feedback_blends_measured_rounds_into_batch_hint():
+    reg = GraphRegistry(capacity=2)
+    reg.register("road", road_grid(10, seed=5))
+    eng = reg.engine("road")
+    base = eng.batch_hint.copy()
+    np.testing.assert_array_equal(base, eng.ecc_hint)   # prior = BFS hint
+    eng.record_rounds([3, 7], [40.0, 10.0], gamma=0.5)
+    assert eng.batch_hint[3] == pytest.approx(0.5 * base[3] + 0.5 * 40.0)
+    assert eng.batch_hint[7] == pytest.approx(0.5 * base[7] + 0.5 * 10.0)
+    untouched = np.ones(base.shape, bool)
+    untouched[[3, 7]] = False
+    np.testing.assert_array_equal(eng.batch_hint[untouched],
+                                  base[untouched])
+    # the BFS prior itself is unchanged (hints are a separate buffer)
+    np.testing.assert_array_equal(eng.ecc_hint, base)
 
 
 def test_eccentricity_hint_ordering():
