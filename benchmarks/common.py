@@ -17,7 +17,7 @@ import jax
 
 from repro.core import relax
 from repro.core.baselines import bellman_ford, delta_stepping, dijkstra_host
-from repro.core.distributed import shard_graph, sssp_distributed
+from repro.core.distributed import shard_blocked, shard_graph, sssp_distributed
 from repro.core.sssp import sssp, sssp_batch, sssp_p2p, normalized_metrics
 from repro.data.generators import kronecker, road_grid, uniform_random
 from repro.data.weights import make_variant
@@ -151,7 +151,7 @@ def run_p2p_vs_tree(g, pairs, alpha=3.0, beta=0.9, backend="segment_min"):
 
 def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
                         capacity=None, backend=None, warm_kinds=None,
-                        max_pending=None):
+                        max_pending=None, open_loop=False):
     """Serve a traffic list through a :class:`QueryRouter` and measure it.
 
     ``devices`` selects the serving plane width (default: every local
@@ -159,9 +159,17 @@ def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
     baseline).  Warmup (engine builds + per-(graph, kind, batch) jit
     compiles) runs before the timed region and is reported separately —
     the timed qps is the steady-state serving rate.
+
+    ``open_loop`` paces each submission to its ``TrafficItem.arrival_s``
+    (generate the traffic with ``make_traffic(..., rate_qps=...)``) so
+    the measured p50/p99 are *tail latency at that offered load* instead
+    of closed-loop drain behaviour; submissions shed by a bounded queue
+    (``QueueFull``) are counted, not retried, as an open-loop client
+    would.  The result gains ``offered_qps`` and ``shed``.
     """
     from repro.serve.registry import GraphRegistry
     from repro.serve.router import QueryRouter
+    from repro.serve.scheduler import QueueFull
 
     n_dev = len(devices) if devices is not None else len(jax.devices())
     if capacity is None:
@@ -189,10 +197,19 @@ def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
     # (warmup's one miss+build per replica shares the same stats object)
     pre_hits, pre_misses = registry.stats.hits, registry.stats.misses
     router.start()
+    shed = 0
     t0 = time.perf_counter()
-    futs = [(it, router.submit(it.query, priority=it.priority,
-                               deadline_s=it.deadline_s))
-            for it in traffic]
+    futs = []
+    for it in traffic:
+        if open_loop:
+            delay = t0 + it.arrival_s - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+        try:
+            futs.append((it, router.submit(it.query, priority=it.priority,
+                                           deadline_s=it.deadline_s)))
+        except QueueFull:
+            shed += 1           # open-loop clients drop, don't retry
     results = [(it, f.result(timeout=1200)) for it, f in futs]
     elapsed = time.perf_counter() - t0
     router.stop()
@@ -200,8 +217,8 @@ def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
     stats = router.stats()
     d_hits = registry.stats.hits - pre_hits
     d_misses = registry.stats.misses - pre_misses
-    return {
-        "qps": len(traffic) / elapsed,
+    out = {
+        "qps": len(results) / elapsed,
         "elapsed_s": elapsed,
         "time_s": float(lats.mean()),
         "p50_ms": float(np.percentile(lats, 50) * 1e3),
@@ -214,7 +231,12 @@ def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
         "stats": stats,
         "results": results,
         "warm_rows": warm_rows,
+        "shed": shed,
     }
+    if open_loop:
+        span = max(traffic[-1].arrival_s, 1e-9) if traffic else 1e-9
+        out["offered_qps"] = len(traffic) / span
+    return out
 
 
 def check_p2p_parity(graphs, results, sample=12):
@@ -241,20 +263,29 @@ def check_p2p_parity(graphs, results, sample=12):
     return ok, checked
 
 
-def run_distributed(g, sources, alpha=3.0, beta=0.9, version="v2"):
-    """Distributed engine over every available local device."""
+def run_distributed(g, sources, alpha=3.0, beta=0.9, version="v2",
+                    backend="segment_min", **blocked_opts):
+    """Distributed engine over every available local device.
+
+    ``backend="blocked"`` pre-builds the per-shard blocked layout once
+    (``blocked_opts`` → :func:`repro.core.distributed.shard_blocked`) and
+    relaxes through it.
+    """
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("graph",))
     sg = shard_graph(g, n_dev)
-    d0, _, _ = sssp_distributed(sg, int(sources[0]), mesh, ("graph",),
-                                version=version, alpha=alpha, beta=beta)
+    blocked = None
+    if backend != "segment_min":
+        blocked = shard_blocked(sg, **blocked_opts)
+    kw = dict(version=version, alpha=alpha, beta=beta, backend=backend,
+              blocked=blocked)
+    d0, _, _ = sssp_distributed(sg, int(sources[0]), mesh, ("graph",), **kw)
     jax.block_until_ready(d0)
     t_total, mets = 0.0, []
     for s in sources:
         t0 = time.perf_counter()
         dist, parent, metrics = sssp_distributed(
-            sg, int(s), mesh, ("graph",), version=version, alpha=alpha,
-            beta=beta)
+            sg, int(s), mesh, ("graph",), **kw)
         jax.block_until_ready(dist)
         t_total += time.perf_counter() - t0
         mets.append(normalized_metrics(

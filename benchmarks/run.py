@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run [--scale 14] [--sources 4]
         [--backend segment_min|blocked_pallas] [--batch 4]
         [--full-variants] [--sections fig4,fig5,fig6,table3,backends]
+        [--open-loop]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per graph x metric) and
 writes benchmarks/artifacts/paper_metrics.json for EXPERIMENTS.md.
@@ -16,8 +17,11 @@ Sections:
              Table 3 / Fig. 7): times, speedups, nFrontier, nSync
   backends — relaxation-backend head-to-head on the same graphs/sources:
              segment_min vs blocked_pallas (interpret mode on CPU) vs the
-             distributed engine, plus the fused multi-source sssp_batch
-             at ``--batch`` sources per call
+             distributed engine with both per-shard backends
+             (segment_min / blocked), plus the fused multi-source
+             sssp_batch at ``--batch`` sources per call.  Blocked rows
+             report tiles_per_round / tile_reduction from the kernel's
+             frontier-compaction metrics (the skipped-tile win)
   serving  — the multi-device serving plane under Zipf-skewed
              multi-graph traffic (router -> per-device schedulers ->
              registry tiers; mixed p2p/bounded/knear/tree queries):
@@ -26,7 +30,10 @@ Sections:
              bitwise p2p parity, a sharded-tier (shard_map) serving row,
              plus the p2p early-exit vs full-tree round comparison.
              Run under XLA_FLAGS=--xla_force_host_platform_device_count=8
-             for a CPU device mesh.
+             for a CPU device mesh.  With ``--open-loop``, submissions
+             are paced by the traffic's Poisson ``arrival_s`` at several
+             fractions of the measured closed-loop capacity and the
+             section reports p50/p99 tail latency vs offered load.
 
 ``--backend`` selects the relaxation backend used by the paper-metric
 sections (fig4/5/6, table3); the ``backends`` section always sweeps all
@@ -107,7 +114,13 @@ def table3(rows, scale, n_sources, backend):
 
 
 def backends(rows, scale, n_sources, batch):
-    """Relaxation-backend head-to-head (see core/relax.py)."""
+    """Relaxation-backend head-to-head (see core/relax.py).
+
+    Blocked rows report the kernel's own per-round tile metrics —
+    ``tiles_per_round`` (active tiles the compacted schedule ran) and
+    ``tile_reduction`` (the dense ``(n_dst_blocks, n_tiles)`` scan cost
+    over it) — straight from ``SsspMetrics``, not recomputed host-side.
+    """
     print("# backends: segment_min vs blocked_pallas vs distributed"
           f" (+ sssp_batch x{batch})")
     graphs = common.benchmark_graphs(scale)
@@ -121,13 +134,27 @@ def backends(rows, scale, n_sources, batch):
             m = common.run_eic(g, srcs, backend=be)
             if base is None:        # `or` would treat a 0.0 timing as unset
                 base = m["time_s"]
+            extra = {}
+            if m["n_tiles_scanned"]:
+                rounds = max(m["n_rounds"], 1)
+                extra = {
+                    "tiles_per_round": m["n_tiles_scanned"] / rounds,
+                    "tile_reduction":
+                        m["n_tiles_dense"] / max(m["n_tiles_scanned"], 1),
+                }
             emit(rows, f"backends/{name}/{be}", m["time_s"],
                  nTrav=m["nTrav"], nSync=m["nSync"],
-                 rel_time=m["time_s"] / base)
-        d = common.run_distributed(g, srcs, version="v2")
-        emit(rows, f"backends/{name}/distributed_v2", d["time_s"],
-             nTrav=d["nTrav"], nSync=d["nSync"],
-             n_devices=d["n_devices"], rel_time=d["time_s"] / base)
+                 rel_time=m["time_s"] / base, **extra)
+        for dbe in ["segment_min", "blocked"]:
+            d = common.run_distributed(g, srcs, version="v2", backend=dbe)
+            extra = {}
+            if d["n_tiles_scanned"]:
+                extra = {"tile_reduction": d["n_tiles_dense"] /
+                         max(d["n_tiles_scanned"], 1)}
+            emit(rows, f"backends/{name}/distributed_v2_{dbe}", d["time_s"],
+                 nTrav=d["nTrav"], nSync=d["nSync"],
+                 n_devices=d["n_devices"], rel_time=d["time_s"] / base,
+                 **extra)
         bsrcs = common.pick_sources(g, batch, seed=1)
         b = common.run_eic_batch(g, bsrcs)
         emit(rows, f"backends/{name}/sssp_batch", b["time_s"],
@@ -135,7 +162,28 @@ def backends(rows, scale, n_sources, batch):
              rel_time=b["time_s"] / base)
 
 
-def serving(rows, scale, batch, n_queries=None, seed=0):
+def serving_open_loop(rows, graphs, base_qps, batch, n_queries, seed,
+                      load_fracs=(0.3, 0.6, 0.9)):
+    """Open-loop mode: Poisson arrivals at fractions of the measured
+    closed-loop capacity; reports p50/p99 tail latency vs offered load."""
+    from repro.data.traffic import make_traffic
+
+    for frac in load_fracs:
+        rate = max(base_qps * frac, 0.5)
+        traffic = make_traffic(graphs, n_queries, seed=seed, rate_qps=rate)
+        # bounded per-device queues so overload sheds (QueueFull) instead
+        # of stretching the tail unboundedly — open-loop needs real
+        # admission control for the p99-vs-load curve to mean anything
+        r = common.run_serving_traffic(graphs, traffic, max_batch=batch,
+                                       open_loop=True,
+                                       max_pending=8 * batch)
+        emit(rows, f"serving/open_loop/{frac:g}x", r["time_s"],
+             offered_qps=r["offered_qps"], achieved_qps=r["qps"],
+             p50_ms=r["p50_ms"], p99_ms=r["p99_ms"], shed=r["shed"],
+             occupancy=r["occupancy"], n_queries=n_queries)
+
+
+def serving(rows, scale, batch, n_queries=None, seed=0, open_loop=False):
     """Serving plane under Zipf-skewed multi-graph traffic.
 
     Runs the same traffic twice — through a 1-device router and through a
@@ -191,6 +239,7 @@ def serving(rows, scale, batch, n_queries=None, seed=0):
                                                     many["results"],
                                                     sample=12)
         emit(rows, "serving/router", many["time_s"], qps=many["qps"],
+             rebuilds=many["stats"]["n_rebuilds"],
              n_devices=n_dev, scaling=many["qps"] / one["qps"],
              p2p_bitwise_equal=int(parity), p2p_checked=n_checked,
              p50_ms=many["p50_ms"], p99_ms=many["p99_ms"],
@@ -200,6 +249,11 @@ def serving(rows, scale, batch, n_queries=None, seed=0):
              rejected=many["stats"]["rejected"],
              registry_hit_rate=many["serving_hit_rate"])
         best = many
+
+    if open_loop:
+        # tail latency vs offered load, paced by the traffic's Poisson
+        # arrival offsets (instead of closed-loop drain throughput)
+        serving_open_loop(rows, graphs, best["qps"], batch, n_queries, seed)
 
     lat_by_gid = {}
     for item, res in best["results"]:
@@ -213,25 +267,30 @@ def serving(rows, scale, batch, n_queries=None, seed=0):
 
     # sharded-tier acceptance: a graph forced over the shard threshold is
     # served through the same SsspService/router API by the shard_map
-    # engine spanning the mesh, with dist/parent parity vs single-device
+    # engine spanning the mesh — once per relax backend (segment_min and
+    # the sparsity-aware blocked layout) — with dist/parent parity vs
+    # single-device
     big_name = f"gr{scale}_8"
     big = graphs[big_name]
-    svc = SsspService(big, max_batch=min(batch, 4), devices=jax.devices(),
-                      shard_threshold_n=1)
-    srcs = common.pick_sources(big, min(batch, 4), seed=3)
-    t0 = time.perf_counter()
-    reqs = [svc.submit(SsspRequest(rid=i, source=int(s)))
-            for i, s in enumerate(srcs)]
-    svc.run()
-    elapsed = time.perf_counter() - t0
     dg = big.to_device()
-    parity = True
-    for r in reqs:
-        d_ref, p_ref, _ = sssp(dg, r.source)
-        parity &= (np.array_equal(r.dist, np.asarray(d_ref))
-                   and np.array_equal(r.parent, np.asarray(p_ref)))
-    emit(rows, f"serving/{big_name}/sharded_tier", elapsed / len(reqs),
-         n_devices=n_dev, parity=int(parity), n_sources=len(reqs))
+    srcs = common.pick_sources(big, min(batch, 4), seed=3)
+    for sbe in ["segment_min", "blocked"]:
+        svc = SsspService(big, max_batch=min(batch, 4),
+                          devices=jax.devices(), shard_threshold_n=1,
+                          shard_backend=sbe)
+        t0 = time.perf_counter()
+        reqs = [svc.submit(SsspRequest(rid=i, source=int(s)))
+                for i, s in enumerate(srcs)]
+        svc.run()
+        elapsed = time.perf_counter() - t0
+        parity = True
+        for r in reqs:
+            d_ref, p_ref, _ = sssp(dg, r.source)
+            parity &= (np.array_equal(r.dist, np.asarray(d_ref))
+                       and np.array_equal(r.parent, np.asarray(p_ref)))
+        emit(rows, f"serving/{big_name}/sharded_tier_{sbe}",
+             elapsed / len(reqs), n_devices=n_dev, parity=int(parity),
+             n_sources=len(reqs))
 
     # acceptance check: p2p early exit saves rounds on the Road graph and
     # returns bitwise-identical target distances
@@ -261,6 +320,10 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=None,
                     help="query count for the serving section "
                          "(default: max(48, 8*batch))")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="serving section: pace submissions by the "
+                         "traffic's Poisson arrival_s and report p50/p99 "
+                         "tail latency vs offered load")
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
@@ -281,7 +344,8 @@ def main() -> None:
     if "backends" in sections:
         backends(rows, args.scale, args.sources, args.batch)
     if "serving" in sections:
-        serving(rows, args.scale, args.batch, n_queries=args.queries)
+        serving(rows, args.scale, args.batch, n_queries=args.queries,
+                open_loop=args.open_loop)
     with open(os.path.join(ART, "paper_metrics.json"), "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {len(rows)} rows to benchmarks/artifacts/paper_metrics.json")

@@ -27,13 +27,27 @@ and both build their per-shard relaxation from the shared primitives in
 winner recovery, update application) — the engines only add the collective
 merge (``pmin`` / ``all_to_all``).  Tie-breaking and the traversal-metric
 definitions match the single-device engine exactly, so ``dist``/``parent``
-*and* metrics are identical across engines (asserted by
+*and* logical metrics are identical across engines (asserted by
 ``tests/test_relax_backends.py``).
+
+**Relaxation backends.**  Each engine's per-shard push partial is
+pluggable (``backend=``): ``"segment_min"`` (default) computes it with a
+masked segment reduction over the shard's flat edge slab; ``"blocked"``
+computes it with the sparsity-aware blocked layout — per-shard
+:func:`~repro.core.graph.slice_for_shard` slabs (sources = owner block,
+destinations = the global padded range, per-bucket tile ranges) driving
+the ``kernels/edge_relax`` ragged-grid kernel inside ``shard_map``, so
+the frontier-compaction prepass skips edge tiles whose sources sit
+outside the window band.  Both backends produce bitwise-identical
+``dist``/``parent``/logical metrics; only the physical tile counters
+differ (0 under ``segment_min``).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import lru_cache, partial
-from typing import NamedTuple
+from types import SimpleNamespace
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
 import jax
@@ -42,10 +56,13 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import relax, stats, stepping, traversal
-from .graph import HostGraph
+from .graph import (DEFAULT_BLOCK_V, DEFAULT_TILE_E, BlockedEdges,
+                    HostGraph, shard_block_v, slice_for_shard)
 from .relax import INF, INT_MAX
 from .sssp import (SsspMetrics, _check_goal_bounds, _goal_reached,
                    _zero_metrics, goal_param_array)
+
+DIST_BACKENDS = ("segment_min", "blocked")
 
 
 class ShardedGraph(NamedTuple):
@@ -101,6 +118,110 @@ def graph_specs(axis):
                         rtow=P(), n_edges2=P(), n_true=P())
 
 
+class BlockedShards(NamedTuple):
+    """Stacked per-shard blocked slabs (leading axis sharded on the mesh).
+
+    Each shard's slice is one :func:`~repro.core.graph.slice_for_shard`
+    layout with uniform shapes across shards: ``S`` source blocks of
+    ``block_v`` vertices tile the owner block, every slab padded to the
+    same ``NT`` tiles.
+    """
+    src_local: jnp.ndarray       # [P, S, NT*tile_e] int32 block-local src
+    dst: jnp.ndarray             # [P, S, NT*tile_e] int32 global dst id
+    w: jnp.ndarray               # [P, S, NT*tile_e] f32 (+inf padding)
+    tile_dst: jnp.ndarray        # [P, S, NT] int32 dst block per tile
+    tile_first: jnp.ndarray      # [P, S, NT] bool forced-first tiles
+    bucket_nonempty: jnp.ndarray  # [P, S, NB] bool bucket-has-edges
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedShardMeta:
+    """Static geometry of a :class:`BlockedShards` layout (jit cache key)."""
+    block_v: int
+    tile_e: int
+    n_src_blocks: int
+    n_dst_blocks: int
+    dense_grid_tiles: int        # global per-round cost of the dense scan
+    use_kernel: bool
+    interpret: bool
+
+
+def blocked_specs(axis):
+    """PartitionSpecs matching :class:`BlockedShards` for mesh ``axis``."""
+    return BlockedShards(*([P(axis)] * len(BlockedShards._fields)))
+
+
+def shard_blocked(g, n_shards: Optional[int] = None, *,
+                  block_v: int = DEFAULT_BLOCK_V,
+                  tile_e: int = DEFAULT_TILE_E,
+                  use_kernel: Optional[bool] = None,
+                  interpret: bool = True
+                  ) -> Tuple[BlockedShards, BlockedShardMeta]:
+    """Build the stacked per-shard blocked layout for the engines.
+
+    ``g`` is a :class:`~repro.core.graph.HostGraph` (with ``n_shards``)
+    or a :class:`ShardedGraph` (shard count taken from its slab axis; the
+    flat edge slabs are unpacked host-side).  Host-side, once per graph —
+    pass the result to ``sssp_distributed*(..., backend="blocked",
+    blocked=...)`` so repeated calls don't re-bucket.
+
+    ``use_kernel`` defaults to ``not interpret``: on real TPU
+    (``interpret=False``) the ragged-grid Pallas kernel is Mosaic-compiled
+    and is the hot path; in interpret mode (this CPU container) the
+    kernel's interpreter — itself a ``lax.while_loop`` of dynamic slices —
+    deterministically miscompiles under multi-device ``shard_map`` SPMD
+    partitioning (jax 0.4.x: output ranges silently drop, and the
+    failure shifts with unrelated program perturbations), so the
+    distributed engines default to the bitwise-identical jnp reference
+    bucket relax.  Layout, frontier-compaction schedule, and tile
+    metrics are shared by both paths; the single-device
+    ``blocked_pallas`` backend runs the real interpret-mode kernel
+    (jit/vmap, no shard_map) and is where kernel semantics are CI-tested.
+    """
+    if use_kernel is None:
+        use_kernel = not interpret
+    if isinstance(g, ShardedGraph):
+        if n_shards is None:
+            n_shards = int(g.src.shape[0])
+        w_flat = np.asarray(g.w).reshape(-1)
+        real = np.isfinite(w_flat)                  # padding carries w=inf
+        n = int(g.n_true)
+        g = SimpleNamespace(
+            src=np.asarray(g.src).reshape(-1)[real],
+            dst=np.asarray(g.dst).reshape(-1)[real],
+            w=w_flat[real],
+            deg=np.asarray(g.deg).reshape(-1)[:n])
+    elif n_shards is None:
+        raise ValueError("n_shards is required for a HostGraph")
+    kw = dict(block_v=block_v, tile_e=tile_e, use_kernel=use_kernel,
+              interpret=interpret)
+    # size the uniform tile padding with one cheap counting pass (no slab
+    # arrays materialized): block_v divides the owner block, so the
+    # global src-block id is just src // bv and one bincount covers
+    # every (src block, dst block) bucket at once
+    n = int(np.asarray(g.deg).shape[0])
+    block = -(-n // n_shards)
+    bv = shard_block_v(block, block_v)
+    n_dst = (block * n_shards) // bv
+    key = (np.asarray(g.src) // bv).astype(np.int64) * n_dst \
+        + np.asarray(g.dst) // bv
+    counts = np.bincount(key, minlength=(block * n_shards // bv) * n_dst)
+    tiles = -(-counts.reshape(-1, n_dst) // tile_e)
+    nt = max(int(tiles.sum(axis=1).max()), 1)
+    bgs = [slice_for_shard(g, q, n_shards, n_tiles=nt, **kw)
+           for q in range(n_shards)]
+    stacked = BlockedShards(*(
+        jnp.stack([jnp.stack([getattr(slab, f) for slab in bg.slabs])
+                   for bg in bgs])
+        for f in BlockedEdges._fields))
+    meta = BlockedShardMeta(
+        block_v=bgs[0].block_v, tile_e=tile_e,
+        n_src_blocks=bgs[0].n_blocks, n_dst_blocks=bgs[0].n_dst_blocks,
+        dense_grid_tiles=sum(bg.dense_grid_tiles for bg in bgs),
+        use_kernel=use_kernel, interpret=interpret)
+    return stacked, meta
+
+
 # ---------------------------------------------------------------------------
 # shared distributed statistics (local partial + psum)
 # ---------------------------------------------------------------------------
@@ -142,30 +263,44 @@ class _V2State(NamedTuple):
 
 @lru_cache(maxsize=64)
 def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
-                  fused_rounds, capacity, goal="tree", batch=False):
+                  fused_rounds, capacity, goal="tree", batch=False,
+                  bmeta: Optional[BlockedShardMeta] = None):
     """Build + jit one distributed engine (cached so repeated calls with
     the same mesh/shape/config reuse the compiled executable).
 
     ``goal`` is static (part of the compiled program, like the
     single-device engine); ``batch`` switches the body to the multi-source
-    entry point (``lax.map`` over a ``[S]`` sources axis).
+    entry point (``lax.map`` over a ``[S]`` sources axis).  ``bmeta``
+    selects the blocked relaxation backend: the engine then takes a
+    :class:`BlockedShards` layout as its second argument and computes the
+    push partials with the ragged-grid kernel instead of ``segment_min``.
     """
     in_specs = (graph_specs(axes), P(), P())
+    if bmeta is not None:
+        # blocked engines also take the layout and a per-shard owner-block
+        # offset.  The offset rides in as *data* (not lax.axis_index): an
+        # axis_index-derived value flowing into consumers of the
+        # interpret-mode Pallas outputs inside the stepping while_loop
+        # makes the XLA SPMD partitioner reject the module (PartitionId
+        # in a nested while, jax 0.4.x) — data sidesteps it entirely.
+        in_specs = (graph_specs(axes), blocked_specs(axes), P(axes), P(),
+                    P())
     out_specs = (P(axes), P(axes), P())
 
     axis_sizes = tuple(mesh.shape[a] for a in
                        ((axes,) if isinstance(axes, str) else axes))
     if version == "v1":
-        body = _v1_body(n_pad, block, axes, params, max_iters, goal, batch)
+        body = _v1_body(n_pad, block, axes, params, max_iters, goal, batch,
+                        bmeta=bmeta, axis_sizes=axis_sizes)
         out_specs = (P(), P(), P())
     elif version == "v2":
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
-                        axis_sizes, goal=goal, batch=batch)
+                        axis_sizes, goal=goal, batch=batch, bmeta=bmeta)
     elif version == "v3":
         cap = capacity or max(block // 16, 8)
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                         axis_sizes, goal=goal, batch=batch,
-                        compact_capacity=cap)
+                        compact_capacity=cap, bmeta=bmeta)
     else:
         raise ValueError(version)
     if version in ("v2", "v3") and batch:
@@ -177,11 +312,43 @@ def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
     return jax.jit(fn)
 
 
+def _resolve_backend(backend: str) -> str:
+    if backend == "blocked_pallas":      # single-device layout's name
+        backend = "blocked"
+    if backend not in DIST_BACKENDS:
+        raise ValueError(f"unknown distributed relax backend {backend!r}; "
+                         f"expected one of {DIST_BACKENDS}")
+    return backend
+
+
+def _resolve_blocked(sg: ShardedGraph, backend: str, blocked, block_v: int,
+                     tile_e: int):
+    """Normalize the (backend, blocked layout) pair for the entry points."""
+    if _resolve_backend(backend) == "segment_min":
+        if blocked is not None:
+            raise ValueError("blocked layout passed with "
+                             "backend='segment_min'")
+        return None, None
+    if blocked is None:
+        # convenience one-off build; callers that relax repeatedly should
+        # shard_blocked() once and pass the result
+        blocked = shard_blocked(sg, block_v=block_v, tile_e=tile_e)
+    arrays, bmeta = blocked
+    if arrays.src_local.shape[0] != sg.src.shape[0]:
+        raise ValueError(
+            f"blocked layout has {arrays.src_local.shape[0]} shards, "
+            f"graph has {sg.src.shape[0]}")
+    return arrays, bmeta
+
+
 def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
                      version: str = "v2", max_iters: int = 1_000_000,
                      fused_rounds: int = 0, alpha: float = 3.0,
                      beta: float = 0.9, capacity: int = 0,
-                     goal: str = "tree", goal_param=None):
+                     goal: str = "tree", goal_param=None,
+                     backend: str = "segment_min", blocked=None,
+                     block_v: int = DEFAULT_BLOCK_V,
+                     tile_e: int = DEFAULT_TILE_E):
     """Run distributed EIC SSSP on ``mesh`` (axes flattened over ``axes``).
 
     versions: v1 replicated/pmin, v2 sharded/all_to_all dense exchange,
@@ -193,6 +360,12 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     test is evaluated distributively (owner-local settled check + pmax for
     p2p, psum'd settled count for knear) so a sharded p2p/bounded/knear
     query stops stepping as early as the single-device one.
+
+    ``backend`` selects the per-shard push-partial implementation (see
+    :data:`DIST_BACKENDS`); with ``"blocked"``, pass ``blocked=`` a
+    prebuilt :func:`shard_blocked` layout to amortize bucketing across
+    calls (``block_v``/``tile_e`` size the one-off build otherwise).
+    Results are bitwise-identical across backends.
     """
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
@@ -200,8 +373,13 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     gp = goal_param_array(goal, goal_param)
     _check_goal_bounds(goal, gp, int(sg.n_true))
     axes_key = axes if isinstance(axes, str) else tuple(axes)
+    arrays, bmeta = _resolve_blocked(sg, backend, blocked, block_v, tile_e)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
-                       max_iters, fused_rounds, capacity, goal, False)
+                       max_iters, fused_rounds, capacity, goal, False,
+                       bmeta)
+    if arrays is not None:
+        bases = jnp.arange(p, dtype=jnp.int32) * block
+        return fn(sg, arrays, bases, jnp.int32(source), gp)
     return fn(sg, jnp.int32(source), gp)
 
 
@@ -210,7 +388,9 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
                            max_iters: int = 1_000_000, fused_rounds: int = 0,
                            alpha: float = 3.0, beta: float = 0.9,
                            capacity: int = 0, goal: str = "tree",
-                           goal_params=None):
+                           goal_params=None, backend: str = "segment_min",
+                           blocked=None, block_v: int = DEFAULT_BLOCK_V,
+                           tile_e: int = DEFAULT_TILE_E):
     """Batched multi-source distributed SSSP — the sharded serving tier's
     entry point.
 
@@ -222,6 +402,8 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
     once per batch instead of once per source.  All slots share the static
     ``goal`` kind with per-slot ``goal_params``; returns ``(dist, parent,
     metrics)`` with a leading ``[S]`` axis (dist/parent ``[S, n_pad]``).
+    ``backend``/``blocked`` select the per-shard relaxation exactly as in
+    :func:`sssp_distributed`.
     """
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
@@ -235,15 +417,35 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
                          f"{sources.shape}")
     _check_goal_bounds(goal, gp, int(sg.n_true))
     axes_key = axes if isinstance(axes, str) else tuple(axes)
+    arrays, bmeta = _resolve_blocked(sg, backend, blocked, block_v, tile_e)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
-                       max_iters, fused_rounds, capacity, goal, True)
+                       max_iters, fused_rounds, capacity, goal, True,
+                       bmeta)
+    if arrays is not None:
+        bases = jnp.arange(p, dtype=jnp.int32) * block
+        return fn(sg, arrays, bases, sources, gp)
     return fn(sg, sources, gp)
 
 
 # --- v1 -------------------------------------------------------------------
 
-def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False):
-    def run(sg: ShardedGraph, source, goal_param):
+def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
+             bmeta=None, axis_sizes=()):
+    axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
+
+    def run(sg: ShardedGraph, *args):
+        if bmeta is not None:
+            bl, base_arr, source, goal_param = args
+            bl = jax.tree.map(lambda x: x[0], bl)    # drop the shard axis
+            base = base_arr[0]       # owner-block offset as data (see
+            me = base // block       # _build_engine on why not axis_index)
+        else:
+            source, goal_param = args
+            bl = None
+            me = jnp.int32(0)
+            for name, size in zip(axis_names, axis_sizes):
+                me = me * size + jax.lax.axis_index(name)
+            base = me * block
         src = sg.src.reshape(-1)
         dst = sg.dst.reshape(-1)
         w = sg.w.reshape(-1)
@@ -257,11 +459,28 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False):
             paths = relax.leaf_pruned(frontier, dist, deg)
             cand, in_window, active = relax.edge_candidates(
                 dist[src], paths[src], parent[src], dst, w, lb, ub)
-            best = jax.lax.pmin(
-                relax.segment_partial_min(cand, dst, n_pad), axes)
-            winner = jax.lax.pmin(
-                relax.winner_partial(cand, active, src, dst, best, n_pad),
-                axes)
+            if bmeta is None:
+                best = jax.lax.pmin(
+                    relax.segment_partial_min(cand, dst, n_pad), axes)
+                winner = jax.lax.pmin(
+                    relax.winner_partial(cand, active, src, dst, best,
+                                         n_pad), axes)
+                n_tiles = jnp.float32(0)
+            else:
+                # dist/frontier are replicated; the blocked slab only reads
+                # the shard's owner block (its source range)
+                dist_src = jax.lax.dynamic_slice(dist, (base,), (block,))
+                paths_src = jax.lax.dynamic_slice(paths, (base,), (block,))
+                best_l, win_l, nt = relax.blocked_shard_partials(
+                    bl.src_local, bl.dst, bl.w, bl.tile_dst, bl.tile_first,
+                    bl.bucket_nonempty, dist_src, paths_src, base, lb, ub,
+                    block_v=bmeta.block_v, n_dst_blocks=bmeta.n_dst_blocks,
+                    tile_e=bmeta.tile_e, use_kernel=bmeta.use_kernel,
+                    interpret=bmeta.interpret)
+                best = jax.lax.pmin(best_l, axes)
+                winner = jax.lax.pmin(
+                    jnp.where(best_l <= best, win_l, INT_MAX), axes)
+                n_tiles = jax.lax.psum(nt.astype(jnp.float32), axes)
             new_dist, new_parent, improved = relax.apply_updates(
                 dist, parent, best, winner)
             touched = jax.lax.psum(jnp.sum(in_window.astype(jnp.int32)), axes)
@@ -274,6 +493,9 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False):
                 n_relax=metrics.n_relax + relaxed,
                 n_updates=metrics.n_updates +
                 jnp.sum(improved.astype(jnp.int32)),
+                n_tiles_scanned=metrics.n_tiles_scanned + n_tiles,
+                n_tiles_dense=metrics.n_tiles_dense + jnp.float32(
+                    0 if bmeta is None else bmeta.dense_grid_tiles),
             )
             return new_dist, new_parent, improved, metrics
 
@@ -385,21 +607,30 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False):
 # --- v2 -------------------------------------------------------------------
 
 def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
-             axis_sizes, goal="tree", batch=False, compact_capacity: int = 0):
+             axis_sizes, goal="tree", batch=False, compact_capacity: int = 0,
+             bmeta=None):
     p = n_pad // block
     axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
 
-    def run(sg: ShardedGraph, source, goal_param):
+    def run(sg: ShardedGraph, *args):
+        if bmeta is not None:
+            bl, base_arr, source, goal_param = args
+            bl = jax.tree.map(lambda x: x[0], bl)    # drop the shard axis
+            base = base_arr[0]       # owner-block offset as data (see
+            me = base // block       # _build_engine on why not axis_index)
+        else:
+            source, goal_param = args
+            bl = None
+            me = jnp.int32(0)
+            for name, size in zip(axis_names, axis_sizes):
+                me = me * size + jax.lax.axis_index(name)
+            base = me * block
         src = sg.src.reshape(-1)          # global ids, sources owned locally
         dst = sg.dst.reshape(-1)
         w = sg.w.reshape(-1)
         deg_l = sg.deg.reshape(-1)        # [B] local block degrees
         rtow, n_edges2 = sg.rtow, sg.n_edges2
         max_w = rtow[-1]
-        me = jnp.int32(0)
-        for name, size in zip(axis_names, axis_sizes):
-            me = me * size + jax.lax.axis_index(name)
-        base = me * block
         src_l = src - base                # local source index
 
         own_src = jnp.zeros((block,), jnp.float32)
@@ -470,14 +701,32 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
 
             return jax.lax.cond(overflow, dense, compact, None)
 
+        def merge(best_g, win_g):
+            """Global per-destination partials -> the local block's
+            ``(best_l, winner_l)`` via the version's collective."""
+            if compact_capacity:
+                return compact_exchange(best_g, win_g)
+            return dense_exchange(best_g, win_g)
+
         def exchange(cand, mask):
             """Per-destination (min, winner) partials merged across shards;
             returns the local block's ``(best_l, winner_l)``."""
             best_g, win_g = relax.segment_min_with_winner(cand, mask, src,
                                                           dst, n_pad)
-            if compact_capacity:
-                return compact_exchange(best_g, win_g)
-            return dense_exchange(best_g, win_g)
+            return merge(best_g, win_g)
+
+        def blocked_partials(dist_l, paths, lb, ub):
+            """Blocked backend's push partial: ragged-grid kernel over the
+            shard's tile-indexed slabs (see relax.blocked_shard_partials).
+            The parent-edge exclusion is omitted — relaxing back along the
+            parent edge can never achieve a strictly-improving minimum, so
+            the (best, winner) pair is unchanged."""
+            return relax.blocked_shard_partials(
+                bl.src_local, bl.dst, bl.w, bl.tile_dst, bl.tile_first,
+                bl.bucket_nonempty, dist_l, paths, base, lb, ub,
+                block_v=bmeta.block_v, n_dst_blocks=bmeta.n_dst_blocks,
+                tile_e=bmeta.tile_e, use_kernel=bmeta.use_kernel,
+                interpret=bmeta.interpret)
 
         local_edge = (dst // block) == me
         dst_local = jnp.clip(dst - base, 0, block - 1)
@@ -515,7 +764,14 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             paths = relax.leaf_pruned(frontier_l, dist_l, deg_l)
             cand, in_window, active = relax.edge_candidates(
                 dist_l[src_l], paths[src_l], parent_l[src_l], dst, w, lb, ub)
-            best_l, winner_l = exchange(cand, active)
+            if bmeta is None:
+                best_g, win_g = relax.segment_min_with_winner(
+                    cand, active, src, dst, n_pad)
+                n_tiles = jnp.float32(0)
+            else:
+                best_g, win_g, nt = blocked_partials(dist_l, paths, lb, ub)
+                n_tiles = jax.lax.psum(nt.astype(jnp.float32), axes)
+            best_l, winner_l = merge(best_g, win_g)
             dist2, parent2, improved = relax.apply_updates(
                 dist_l, parent_l, best_l, winner_l)
             touched = jax.lax.psum(jnp.sum(in_window.astype(jnp.int32)), axes)
@@ -530,7 +786,10 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 n_extended=metrics.n_extended + nl_upd,
                 n_trav=metrics.n_trav + touched,
                 n_relax=metrics.n_relax + relaxed,
-                n_updates=metrics.n_updates + upd)
+                n_updates=metrics.n_updates + upd,
+                n_tiles_scanned=metrics.n_tiles_scanned + n_tiles,
+                n_tiles_dense=metrics.n_tiles_dense + jnp.float32(
+                    0 if bmeta is None else bmeta.dense_grid_tiles))
             return dist2, parent2, improved, metrics
 
         def pull_round(dist_l, parent_l, st, lb, ub, metrics):

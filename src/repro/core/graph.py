@@ -134,7 +134,7 @@ def build_csr(n: int, eu: np.ndarray, ev: np.ndarray, ew: np.ndarray,
 
 # ---------------------------------------------------------------------------
 # Blocked layout for the Pallas edge-relax kernel (relax backend
-# "blocked_pallas"; see core/relax.py).
+# "blocked_pallas" and the distributed "blocked" backend; see core/relax.py).
 # ---------------------------------------------------------------------------
 
 # block/tile defaults are the kernel's own (single source of truth)
@@ -143,10 +143,19 @@ from ..kernels.edge_relax.edge_relax import (  # noqa: E402
 
 
 class BlockedEdges(NamedTuple):
-    """One source-block edge slab, sorted by destination block, tile-padded."""
-    src_local: jnp.ndarray   # [E_pad] int32 — block-local source index
-    dst: jnp.ndarray         # [E_pad] int32 — global destination id
-    w: jnp.ndarray           # [E_pad] float32 (+inf on padding slots)
+    """One source-block edge slab with its CSR-of-tiles index.
+
+    Edges are sorted by destination block and every (src-block, dst-block)
+    bucket is padded to a tile boundary, so each ``tile_e``-edge tile
+    belongs to exactly one destination block — the kernel's ragged grid
+    iterates tiles, not the dense (dst block x tile) product.
+    """
+    src_local: jnp.ndarray       # [NT*tile_e] int32 — block-local source
+    dst: jnp.ndarray             # [NT*tile_e] int32 — global destination id
+    w: jnp.ndarray               # [NT*tile_e] float32 (+inf on padding)
+    tile_dst: jnp.ndarray        # [NT] int32 — dst block per tile (sorted)
+    tile_first: jnp.ndarray      # [NT] bool — first tile of each bucket
+    bucket_nonempty: jnp.ndarray  # [n_dst_blocks] bool — bucket has edges
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,34 +164,122 @@ class BlockedGraph:
 
     Sources are grouped into ``n_blocks`` blocks of ``block_v`` vertices so
     that each slab's source-side ``dist``/``frontier`` slice fits in VMEM;
-    within a slab, edges are sorted by destination block (the 2-D bucketing)
-    and padded to a multiple of ``tile_e`` so the kernel grid is static.
+    within a slab, edges are bucketed by destination block with each
+    bucket tile-aligned (see :func:`bucket_edges`), giving the kernel a
+    per-bucket tile-range index instead of a full scan.  For the whole
+    graph (``build_blocked``) sources and destinations share one blocking
+    (``n_blocks == n_dst_blocks``, ``src_base == 0``); a shard slice
+    (:func:`slice_for_shard`) covers only its own source block range
+    (``src_base = shard * block``) while destinations stay global.
     Static layout parameters are pytree aux data (shapes stay static under
     ``jax.jit``); only the arrays are traced.
     """
     n: int                               # true vertex count (pre-padding)
     block_v: int
-    n_blocks: int
+    n_blocks: int                        # source blocks in this layout
+    n_dst_blocks: int                    # destination blocks (global range)
+    src_base: int                        # global id of the first source
     tile_e: int
     use_kernel: bool                     # Pallas kernel vs jnp reference
     interpret: bool                      # Pallas interpret mode (CPU)
+    dense_grid_tiles: int                # per-round cost of the dense scan
     slabs: Tuple[BlockedEdges, ...]      # one slab per source block
     deg: jnp.ndarray                     # [n_blocks * block_v] int32, 0-padded
 
     @property
     def n_pad(self) -> int:
+        """Padded source-side vertex count."""
         return self.n_blocks * self.block_v
+
+    @property
+    def n_out(self) -> int:
+        """Padded destination-side vertex count (kernel output range)."""
+        return self.n_dst_blocks * self.block_v
 
 
 jax.tree_util.register_pytree_node(
     BlockedGraph,
     lambda bg: ((bg.slabs, bg.deg),
-                (bg.n, bg.block_v, bg.n_blocks, bg.tile_e, bg.use_kernel,
-                 bg.interpret)),
+                (bg.n, bg.block_v, bg.n_blocks, bg.n_dst_blocks,
+                 bg.src_base, bg.tile_e, bg.use_kernel, bg.interpret,
+                 bg.dense_grid_tiles)),
     lambda aux, ch: BlockedGraph(n=aux[0], block_v=aux[1], n_blocks=aux[2],
-                                 tile_e=aux[3], use_kernel=aux[4],
-                                 interpret=aux[5], slabs=ch[0], deg=ch[1]),
+                                 n_dst_blocks=aux[3], src_base=aux[4],
+                                 tile_e=aux[5], use_kernel=aux[6],
+                                 interpret=aux[7], dense_grid_tiles=aux[8],
+                                 slabs=ch[0], deg=ch[1]),
 )
+
+
+def bucket_edges(src_local, dst, w, *, n_dst_blocks: int, block_v: int,
+                 tile_e: int, n_tiles: int = 0):
+    """Bucket one slab's edges by destination block, tile-aligned.
+
+    Edges are sorted by ``dst // block_v`` (stable) and each non-empty
+    bucket is padded to a multiple of ``tile_e`` — so no tile straddles
+    two destination blocks and the kernel can iterate a bucket's tile
+    *range* instead of masking a full scan.  Padding slots carry
+    ``w=+inf`` (never in-window, never activating a tile).
+
+    ``n_tiles`` > 0 pads the slab to exactly that many tiles (shape
+    uniformity across shard slabs under ``shard_map``); 0 keeps the
+    minimal count (always >= 1, so the kernel grid is never empty).
+
+    Returns numpy arrays ``(src_local, dst, w, tile_dst, tile_first,
+    bucket_nonempty, tile_ptr)``; ``tile_ptr`` [n_dst_blocks + 1] is the
+    CSR-of-tiles index (``tile_dst`` is its expansion).
+    """
+    src_local = np.asarray(src_local, np.int32)
+    dst = np.asarray(dst, np.int32)
+    w = np.asarray(w, np.float32)
+    db = dst // block_v
+    if db.size and (db.min() < 0 or db.max() >= n_dst_blocks):
+        raise ValueError(f"dst ids outside the {n_dst_blocks} x {block_v} "
+                         "destination range")
+    order = np.argsort(db, kind="stable")
+    src_local, dst, w, db = (src_local[order], dst[order], w[order],
+                             db[order])
+    counts = np.bincount(db, minlength=n_dst_blocks).astype(np.int64)
+    tiles_per = -(-counts // tile_e)              # ceil; 0 for empty buckets
+    nt_real = int(tiles_per.sum())
+    nt_min = max(nt_real, 1)
+    if n_tiles and n_tiles < nt_min:
+        raise ValueError(f"n_tiles={n_tiles} < required {nt_min}")
+    nt = n_tiles if n_tiles else nt_min
+    tile_ptr = np.zeros(n_dst_blocks + 1, np.int64)
+    np.cumsum(tiles_per, out=tile_ptr[1:])
+    s_out = np.zeros(nt * tile_e, np.int32)
+    d_out = np.zeros(nt * tile_e, np.int32)
+    w_out = np.full(nt * tile_e, np.inf, np.float32)
+    off = np.zeros(n_dst_blocks + 1, np.int64)
+    np.cumsum(counts, out=off[1:])
+    # each edge lands at its bucket's tile base + its rank in the bucket
+    pos = tile_ptr[db] * tile_e + (np.arange(db.size) - off[db])
+    s_out[pos] = src_local
+    d_out[pos] = dst
+    w_out[pos] = w
+    tile_dst = np.zeros(nt, np.int32)
+    tile_dst[:nt_real] = np.repeat(np.arange(n_dst_blocks, dtype=np.int32),
+                                   tiles_per)
+    if nt > nt_real and nt_real:
+        # surplus pad tiles repeat the last real block id so a (defensive)
+        # visit can never revisit an earlier, already-flushed output block
+        tile_dst[nt_real:] = tile_dst[nt_real - 1]
+    tile_first = np.zeros(nt, bool)
+    tile_first[tile_ptr[:-1][counts > 0]] = True
+    tile_first[0] = True                  # >= 1 scheduled tile every round
+    return (s_out, d_out, w_out, tile_dst, tile_first, counts > 0,
+            tile_ptr.astype(np.int32))
+
+
+def _slab_edges(s_l, d, ww, *, n_dst_blocks, block_v, tile_e, n_tiles=0):
+    se, de, we, td, tf, bne, _ = bucket_edges(
+        s_l, d, ww, n_dst_blocks=n_dst_blocks, block_v=block_v,
+        tile_e=tile_e, n_tiles=n_tiles)
+    return BlockedEdges(src_local=jnp.asarray(se), dst=jnp.asarray(de),
+                        w=jnp.asarray(we), tile_dst=jnp.asarray(td),
+                        tile_first=jnp.asarray(tf),
+                        bucket_nonempty=jnp.asarray(bne))
 
 
 def build_blocked(g, *, block_v: int = DEFAULT_BLOCK_V,
@@ -200,27 +297,90 @@ def build_blocked(g, *, block_v: int = DEFAULT_BLOCK_V,
     n = int(deg.shape[0])
     n_blocks = max(-(-n // block_v), 1)
     sb = src // block_v
-    db = dst // block_v
-    order = np.lexsort((db, sb))         # bucket by (src block, dst block)
-    src, dst, w, sb = src[order], dst[order], w[order], sb[order]
     slabs = []
+    dense_tiles = 0
     for b in range(n_blocks):
         m = sb == b
-        s_l = (src[m] - b * block_v).astype(np.int32)
-        d = dst[m].astype(np.int32)
-        ww = w[m].astype(np.float32)
-        e_pad = max(-(-s_l.shape[0] // tile_e) * tile_e, tile_e)
-        pad = e_pad - s_l.shape[0]
-        slabs.append(BlockedEdges(
-            src_local=jnp.asarray(np.pad(s_l, (0, pad))),
-            dst=jnp.asarray(np.pad(d, (0, pad))),
-            w=jnp.asarray(np.pad(ww, (0, pad), constant_values=np.inf))))
+        slabs.append(_slab_edges(src[m] - b * block_v, dst[m], w[m],
+                                 n_dst_blocks=n_blocks, block_v=block_v,
+                                 tile_e=tile_e))
+        # what the dense (n_dst_blocks x n_tiles) grid scanned per round
+        dense_tiles += n_blocks * max(-(-int(m.sum()) // tile_e), 1)
     deg_pad = np.zeros(n_blocks * block_v, np.int32)
     deg_pad[:n] = deg
     return BlockedGraph(n=n, block_v=block_v, n_blocks=n_blocks,
-                        tile_e=tile_e, use_kernel=use_kernel,
-                        interpret=interpret, slabs=tuple(slabs),
+                        n_dst_blocks=n_blocks, src_base=0, tile_e=tile_e,
+                        use_kernel=use_kernel, interpret=interpret,
+                        dense_grid_tiles=dense_tiles, slabs=tuple(slabs),
                         deg=jnp.asarray(deg_pad))
+
+
+def shard_block_v(block: int, block_v: int) -> int:
+    """Largest divisor of the shard block size that is <= ``block_v``.
+
+    Shard slabs must tile the owner block exactly (the exchanged partials
+    reshape to ``(P, block)``), so the requested ``block_v`` is snapped
+    down to a divisor of ``block``.
+    """
+    if block <= 0:
+        raise ValueError("block must be positive")
+    for d in range(min(block_v, block), 0, -1):
+        if block % d == 0:
+            return d
+    return 1
+
+
+def slice_for_shard(g, shard: int, n_shards: int, *,
+                    block_v: int = DEFAULT_BLOCK_V,
+                    tile_e: int = DEFAULT_TILE_E, n_tiles: int = 0,
+                    use_kernel: bool = True,
+                    interpret: bool = True) -> BlockedGraph:
+    """Blocked layout for one shard's CSR slice (sources = owner block).
+
+    Vertex ownership matches :func:`repro.core.distributed.shard_graph`:
+    shard ``q`` owns the contiguous block ``[q*B, (q+1)*B)`` with
+    ``B = ceil(n / n_shards)``, and its slab holds every edge whose
+    *source* it owns.  The returned layout's source blocks tile that
+    owner block (``src_base = q*B``; ``block_v`` snapped to a divisor of
+    ``B`` via :func:`shard_block_v`) while destinations span the full
+    padded ``n_shards * B`` range — so the per-destination partials line
+    up with the engines' ``all_to_all`` exchange.  ``n_tiles`` > 0 pads
+    every slab to that tile count (uniform shapes across shards, a
+    ``shard_map`` requirement).
+    """
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    deg = np.asarray(g.deg)
+    n = int(deg.shape[0])
+    if not 0 <= shard < n_shards:
+        raise ValueError(f"shard {shard} out of range for {n_shards}")
+    block = -(-n // n_shards)
+    n_pad = block * n_shards
+    bv = shard_block_v(block, block_v)
+    n_src_blocks = block // bv
+    n_dst_blocks = n_pad // bv
+    lo = shard * block
+    m_shard = (src >= lo) & (src < lo + block)
+    src_s, dst_s, w_s = src[m_shard], dst[m_shard], w[m_shard]
+    sb = (src_s - lo) // bv
+    slabs = []
+    dense_tiles = 0
+    for b in range(n_src_blocks):
+        m = sb == b
+        slabs.append(_slab_edges(src_s[m] - lo - b * bv, dst_s[m], w_s[m],
+                                 n_dst_blocks=n_dst_blocks, block_v=bv,
+                                 tile_e=tile_e, n_tiles=n_tiles))
+        dense_tiles += n_dst_blocks * max(-(-int(m.sum()) // tile_e), 1)
+    deg_pad = np.zeros(block, np.int32)
+    hi = min(lo + block, n)
+    if hi > lo:
+        deg_pad[:hi - lo] = deg[lo:hi]
+    return BlockedGraph(n=n, block_v=bv, n_blocks=n_src_blocks,
+                        n_dst_blocks=n_dst_blocks, src_base=lo,
+                        tile_e=tile_e, use_kernel=use_kernel,
+                        interpret=interpret, dense_grid_tiles=dense_tiles,
+                        slabs=tuple(slabs), deg=jnp.asarray(deg_pad))
 
 
 def degree_bucket_np(deg: np.ndarray) -> np.ndarray:

@@ -22,18 +22,25 @@ Registered backends:
     ``sssp._relax_round``): one masked ``segment_min`` over all edges plus
     a min-source winner pass.  Layout = the ``DeviceGraph`` itself.
 
-``blocked_pallas``
+``blocked_pallas`` (alias ``blocked``)
     The TPU hot path: a :class:`~repro.core.graph.BlockedGraph` layout
-    (edges bucketed by (src block x dst block), tile-padded) drives the
-    ``kernels/edge_relax`` Pallas kernel once per source block with a
-    ``(n_dst_blocks, n_tiles)`` grid; per-source-block (min, winner)
-    partials are combined with the same deterministic min/min-src rule.
-    On this CPU container the kernel runs in interpret mode.
+    (edges bucketed by (src block x dst block), every bucket tile-aligned
+    with a CSR-of-tiles index) drives the ``kernels/edge_relax`` Pallas
+    kernel once per source block over a *ragged* tile grid: each
+    destination block iterates only its own tile range, and a
+    frontier-compaction prepass skips tiles with no frontier source this
+    round entirely.  Per-source-block (min, winner) partials are combined
+    with the same deterministic min/min-src rule.  On this CPU container
+    the kernel runs in interpret mode.  The same per-shard machinery
+    (:func:`blocked_partials`) backs ``core/distributed.py``'s
+    ``backend="blocked"`` inside ``shard_map``.
 
 Determinism note: every backend resolves ties toward the smallest source
 id, so ``dist``/``parent`` (and the logical traversal metrics) are
 bitwise-identical across backends — the parity tests in
-``tests/test_relax_backends.py`` assert exactly that.
+``tests/test_relax_backends.py`` assert exactly that.  The *physical*
+tile counters (``n_tiles_scanned`` / ``n_tiles_dense``) are
+layout-specific and excluded from cross-backend parity.
 """
 from __future__ import annotations
 
@@ -51,12 +58,23 @@ INF = jnp.float32(jnp.inf)
 
 
 class RoundMetrics(NamedTuple):
-    """Per-round relaxation outcome (identical across backends)."""
+    """Per-round relaxation outcome.
+
+    The logical counters (trav/relax/updates/extended) are identical
+    across backends; the tile counters are *physical* — they describe the
+    blocked layout's work (0 for layouts without tiles) and are excluded
+    from cross-backend parity.
+    """
     improved: jnp.ndarray    # [N] bool — vertices whose dist improved
     n_trav: jnp.ndarray      # scalar int32 — in-window edge touches (push)
     n_relax: jnp.ndarray     # scalar int32 — relaxations attempted
     n_updates: jnp.ndarray   # scalar int32 — successful dist improvements
     n_extended: jnp.ndarray  # scalar int32 — non-leaf dist improvements
+    # tile counters are f32: the dense comparator accumulates
+    # n_dst_blocks * n_tiles per round, which overflows int32 on large
+    # graphs (and x64 is disabled, so int64 is unavailable)
+    n_tiles_scanned: jnp.ndarray  # scalar f32 — edge tiles actually run
+    n_tiles_dense: jnp.ndarray    # scalar f32 — dense-grid tile cost
 
 
 # ---------------------------------------------------------------------------
@@ -159,13 +177,16 @@ class RelaxBackend:
 _REGISTRY: dict = {}
 
 
-def register_backend(backend: RelaxBackend) -> RelaxBackend:
+def register_backend(backend: RelaxBackend, aliases=()) -> RelaxBackend:
     _REGISTRY[backend.name] = backend
+    for alias in aliases:
+        _REGISTRY[alias] = backend
     return backend
 
 
 def available_backends() -> tuple:
-    return tuple(sorted(_REGISTRY))
+    """Canonical backend names (aliases resolve but are not listed)."""
+    return tuple(sorted({b.name for b in _REGISTRY.values()}))
 
 
 def get_backend(name) -> RelaxBackend:
@@ -199,7 +220,9 @@ def _segment_min_relax(g: DeviceGraph, dist, parent, frontier, lb, ub):
         n_trav=jnp.sum(in_window.astype(jnp.int32)),
         n_relax=jnp.sum(active.astype(jnp.int32)),
         n_updates=jnp.sum(improved.astype(jnp.int32)),
-        n_extended=jnp.sum((improved & (g.deg > 1)).astype(jnp.int32)))
+        n_extended=jnp.sum((improved & (g.deg > 1)).astype(jnp.int32)),
+        n_tiles_scanned=jnp.float32(0),
+        n_tiles_dense=jnp.float32(0))
     return new_dist, new_parent, rm
 
 
@@ -216,40 +239,99 @@ def _blocked_prepare(g, **opts) -> BlockedGraph:
     return build_blocked(g, **opts)
 
 
+def _combine_bucket_partials(slab_of, n_src_blocks, dist_src, paths_src,
+                             src_base, lb, ub, *, block_v, n_dst_blocks,
+                             tile_e, use_kernel, interpret):
+    """Shared core of the blocked partial computations: relax every
+    source block's bucketed slab, lift winners to global source ids
+    (deterministic INT_MAX-preserving offset), combine deterministically.
+    ``slab_of(s)`` returns source block ``s``'s ``(src_local, dst, w,
+    tile_dst, tile_first, bucket_nonempty)`` arrays."""
+    paths_i8 = paths_src.astype(jnp.int8)
+    vals, wins = [], []
+    n_tiles = jnp.int32(0)
+    for s in range(n_src_blocks):
+        lo = s * block_v
+        best_sb, win_local, nt = relax_bucket(
+            dist_src[lo:lo + block_v], paths_i8[lo:lo + block_v],
+            *slab_of(s), lb, ub, block_v=block_v,
+            n_dst_blocks=n_dst_blocks, tile_e=tile_e,
+            use_kernel=use_kernel, interpret=interpret)
+        vals.append(best_sb)
+        wins.append(jnp.where(win_local == INT_MAX, INT_MAX,
+                              win_local + (src_base + lo)))
+        n_tiles = n_tiles + nt
+    best, winner = combine_block_partials(jnp.stack(vals), jnp.stack(wins))
+    return best, winner, n_tiles
+
+
+def blocked_partials(bg: BlockedGraph, dist_src, paths_src, lb, ub):
+    """Per-destination (min, winner) partials of one blocked layout.
+
+    ``dist_src``/``paths_src`` cover the layout's *source* range
+    ``[src_base, src_base + n_blocks * block_v)`` (the full padded graph
+    for ``build_blocked`` layouts, the owner block for
+    :func:`~repro.core.graph.slice_for_shard` slabs).  Returns ``(best,
+    winner, n_tiles)`` over the global ``n_out`` destination range —
+    winners are *global* source ids (``src_base`` applied), so shard
+    partials feed the distributed exchange unchanged and single-device
+    partials feed :func:`apply_updates` directly.
+    """
+    return _combine_bucket_partials(
+        lambda s: bg.slabs[s], bg.n_blocks, dist_src, paths_src,
+        bg.src_base, lb, ub, block_v=bg.block_v,
+        n_dst_blocks=bg.n_dst_blocks, tile_e=bg.tile_e,
+        use_kernel=bg.use_kernel, interpret=bg.interpret)
+
+
+def blocked_shard_partials(src_local, dst, w, tile_dst, tile_first,
+                           bucket_nonempty, dist_src, paths_src, src_base,
+                           lb, ub, *, block_v: int, n_dst_blocks: int,
+                           tile_e: int, use_kernel: bool, interpret: bool):
+    """`shard_map` twin of :func:`blocked_partials`.
+
+    Same computation over one shard's *stacked* uniform slabs
+    (``src_local``/``dst``/``w`` are ``[S, NT*tile_e]``,
+    ``tile_dst``/``tile_first`` ``[S, NT]``, ``bucket_nonempty``
+    ``[S, n_dst_blocks]`` — shapes identical across shards, a shard_map
+    requirement) with a *traced* ``src_base`` (the shard's owner-block
+    offset).  ``dist_src``/``paths_src`` are the shard's local source
+    slice.  Returns global-id ``(best, winner, n_tiles)`` over the
+    ``n_dst_blocks * block_v`` destination range, ready for the engines'
+    collective merge.
+    """
+    return _combine_bucket_partials(
+        lambda s: (src_local[s], dst[s], w[s], tile_dst[s], tile_first[s],
+                   bucket_nonempty[s]),
+        src_local.shape[0], dist_src, paths_src, src_base, lb, ub,
+        block_v=block_v, n_dst_blocks=n_dst_blocks, tile_e=tile_e,
+        use_kernel=use_kernel, interpret=interpret)
+
+
 def _blocked_relax(bg: BlockedGraph, dist, parent, frontier, lb, ub):
-    bv, nb = bg.block_v, bg.n_blocks
-    pad = bg.n_pad - dist.shape[0]
+    bv = bg.block_v
+    pad = bg.n_out - dist.shape[0]
     dist_p = jnp.pad(dist, (0, pad), constant_values=jnp.inf)
     parent_p = jnp.pad(parent, (0, pad), constant_values=-1)
     frontier_p = jnp.pad(frontier, (0, pad))
     paths = leaf_pruned(frontier_p, dist_p, bg.deg)
-    front_i8 = paths.astype(jnp.int8)
 
-    vals, wins = [], []
+    best, winner, n_tiles = blocked_partials(bg, dist_p, paths, lb, ub)
+
+    # Traversal counters are cheap jnp reductions over the slabs (the
+    # kernel owns only the scatter-min); the parent-edge exclusion in
+    # `active` cannot change the kernel's min/winner — relaxing back
+    # along the parent edge never improves the parent's dist.
     n_trav = jnp.int32(0)
     n_relax = jnp.int32(0)
     for sb, slab in enumerate(bg.slabs):
-        lo = sb * bv
-        best_sb, win_local = relax_bucket(
-            dist_p[lo:lo + bv], front_i8[lo:lo + bv], slab.src_local,
-            slab.dst, slab.w, lb, ub, block_v=bv, n_dst_blocks=nb,
-            tile_e=bg.tile_e, use_kernel=bg.use_kernel,
-            interpret=bg.interpret)
-        vals.append(best_sb)
-        wins.append(jnp.where(win_local == INT_MAX, INT_MAX,
-                              win_local + lo))
-        # Traversal counters are cheap jnp reductions over the slab (the
-        # kernel owns only the scatter-min); the parent-edge exclusion in
-        # `active` cannot change the kernel's min/winner — relaxing back
-        # along the parent edge never improves the parent's dist.
-        src_g = slab.src_local + lo
+        src_g = slab.src_local + sb * bv
         _, in_window, active = edge_candidates(
             dist_p[src_g], paths[src_g], parent_p[src_g], slab.dst,
             slab.w, lb, ub)
         n_trav = n_trav + jnp.sum(in_window.astype(jnp.int32))
         n_relax = n_relax + jnp.sum(active.astype(jnp.int32))
 
-    best, winner = combine_block_partials(jnp.stack(vals), jnp.stack(wins))
     new_dist, new_parent, improved = apply_updates(dist_p, parent_p, best,
                                                    winner)
     n = bg.n
@@ -259,10 +341,12 @@ def _blocked_relax(bg: BlockedGraph, dist, parent, frontier, lb, ub):
         n_trav=n_trav,
         n_relax=n_relax,
         n_updates=jnp.sum(improved.astype(jnp.int32)),
-        n_extended=jnp.sum((improved & (bg.deg[:n] > 1)).astype(jnp.int32)))
+        n_extended=jnp.sum((improved & (bg.deg[:n] > 1)).astype(jnp.int32)),
+        n_tiles_scanned=n_tiles.astype(jnp.float32),
+        n_tiles_dense=jnp.float32(bg.dense_grid_tiles))
     return new_dist[:n], new_parent[:n], rm
 
 
 BLOCKED_PALLAS = register_backend(RelaxBackend(
     name="blocked_pallas", prepare=_blocked_prepare,
-    relax_window=_blocked_relax))
+    relax_window=_blocked_relax), aliases=("blocked",))

@@ -50,8 +50,8 @@ from .graph import DeviceGraph
 from .relax import INF, INT_MAX
 
 __all__ = ["sssp", "sssp_batch", "sssp_p2p", "sssp_bounded", "sssp_knear",
-           "SsspMetrics", "normalized_metrics", "GOALS", "goal_param_array",
-           "INF", "INT_MAX"]
+           "SsspMetrics", "LOGICAL_METRIC_FIELDS", "normalized_metrics",
+           "GOALS", "goal_param_array", "INF", "INT_MAX"]
 
 # Early-exit query goals.  A goal turns the full shortest-path-tree
 # computation into a query that terminates as soon as its answer is
@@ -127,6 +127,15 @@ class SsspMetrics(NamedTuple):
     n_pull_trav: jnp.ndarray   # edge traversals, pull model (requests)
     n_relax: jnp.ndarray       # relaxation attempts (created paths)
     n_updates: jnp.ndarray     # successful relaxations (dist improvements)
+    n_tiles_scanned: jnp.ndarray  # blocked layouts: tiles actually run (f32)
+    n_tiles_dense: jnp.ndarray    # blocked layouts: dense-grid cost (f32)
+
+
+# The counters every backend/engine must agree on bitwise.  The two tile
+# counters are *physical* (layout geometry, 0 outside blocked layouts)
+# and are excluded from cross-backend/engine parity checks.
+LOGICAL_METRIC_FIELDS = tuple(f for f in SsspMetrics._fields
+                              if not f.startswith("n_tiles"))
 
 
 class SsspState(NamedTuple):
@@ -143,7 +152,9 @@ class SsspState(NamedTuple):
 
 def _zero_metrics() -> SsspMetrics:
     z = jnp.int32(0)
-    return SsspMetrics(z, z, z, z, z, z, z)
+    f = jnp.float32(0)      # tile counters accumulate past int32 range
+    return SsspMetrics(**{name: f if name.startswith("n_tiles") else z
+                          for name in SsspMetrics._fields})
 
 
 def _relax_round(backend: relax.RelaxBackend, layout, st_: SsspState
@@ -159,6 +170,8 @@ def _relax_round(backend: relax.RelaxBackend, layout, st_: SsspState
         n_trav=m.n_trav + rm.n_trav,
         n_relax=m.n_relax + rm.n_relax,
         n_updates=m.n_updates + rm.n_updates,
+        n_tiles_scanned=m.n_tiles_scanned + rm.n_tiles_scanned,
+        n_tiles_dense=m.n_tiles_dense + rm.n_tiles_dense,
     )
     return st_._replace(dist=new_dist, parent=new_parent,
                         frontier=rm.improved, metrics=metrics)
@@ -395,5 +408,7 @@ def normalized_metrics(g_deg, dist, metrics: SsspMetrics) -> dict:
         "n_rounds": int(metrics.n_rounds),
         "n_relax": int(metrics.n_relax),
         "n_updates": int(metrics.n_updates),
+        "n_tiles_scanned": int(metrics.n_tiles_scanned),
+        "n_tiles_dense": int(metrics.n_tiles_dense),
         "reachable": n_reach,
     }

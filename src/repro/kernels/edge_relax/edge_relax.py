@@ -1,6 +1,7 @@
 """Pallas TPU kernel for the EIC windowed edge relaxation (paper Algo 2 l.10-17).
 
-One grid step processes one (destination block x edge tile) pair:
+One grid step processes one *scheduled* edge tile against its destination
+block:
 
     cand[e] = dist[src[e]] + w[e]          if frontier[src[e]] and
                                               lb <= cand[e] < ub
@@ -9,22 +10,38 @@ One grid step processes one (destination block x edge tile) pair:
               parent recovery: smallest source id among the winners)
 
 TPU adaptation (DESIGN.md §2/§5): the MPI CAS loop becomes a dense masked
-min-reduction.  Edges arrive pre-bucketed by (src block, dst block) — the
-:class:`~repro.core.graph.BlockedGraph` layout — so the source-distance
-block and the destination output block both fit in VMEM.  The scatter is
-expressed as a broadcast-compare reduce over the (TILE_E x BLOCK_V) plane,
-which is VPU-shaped (8x128 lanes), avoiding data-dependent writes entirely;
-the per-tile partial (min, argmin-src) pairs are combined across the grid's
-edge-tile axis by the output BlockSpec revisiting scheme (value min, winner
+min-reduction.  Edges arrive pre-bucketed by (src block, dst block) with
+every bucket padded to a tile boundary — the
+:class:`~repro.core.graph.BlockedGraph` layout — so each tile belongs to
+exactly one destination block and the source-distance block and the
+destination output block both fit in VMEM.  The scatter is expressed as a
+broadcast-compare reduce over the (TILE_E x BLOCK_V) plane, which is
+VPU-shaped (8x128 lanes), avoiding data-dependent writes entirely; tiles
+revisiting the same output block are combined in-place (value min, winner
 min on ties — associative and order-independent, so the accumulation is
 deterministic).
 
-Grid: ``(n_dst_blocks, n_edge_tiles)``; for destination block ``b`` the
-kernel masks edges to ``dst in [b*block_v, (b+1)*block_v)``, so every
-destination block is computed (the seed kernel's ``grid=(1, n_tiles)`` only
-ever produced block 0).  Edge tiles revisit the same output block, so the
-kernel accumulates in-place (outputs initialized at +inf / INT_MAX on the
-first visit).
+**Sparsity-aware ragged grid.**  The grid is 1-D over the slab's tiles
+(``grid=(n_tiles,)``), not the dense ``(n_dst_blocks, n_tiles)`` product:
+the layout's CSR-of-tiles index (``tile_dst``, non-decreasing) already
+restricts every destination block to its own tile range, so no tile is
+ever scanned against a foreign block.  On top of the static ranges, a
+**frontier-compaction prepass** (:func:`schedule_tiles`) computes an
+active-tile bitmap from the round's frontier and compacts the active
+tiles to the front of the schedule (stable, so the dst-sorted order —
+which the revisiting output BlockSpec requires — is preserved).  Inactive
+tail steps are pinned to the last active tile, so consecutive grid steps
+see an unchanged block index: Pallas skips the re-fetch DMA and
+``pl.when`` skips the compute.  Steps with narrow windows — the common
+case under dynamic stepping — touch only the few tiles whose sources sit
+in the frontier band.
+
+The schedule, the per-step destination block, and the active count ride
+in as scalar-prefetch operands (``PrefetchScalarGridSpec``), which is
+what lets the input/output index maps follow a *traced* per-round
+schedule while the grid itself stays static (jit/vmap-compatible).
+Destination blocks with no tiles at all are never visited; their output
+range is masked to +inf / INT_MAX after the call.
 """
 from __future__ import annotations
 
@@ -33,92 +50,143 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_TILE_E = 512
 DEFAULT_BLOCK_V = 512
 INT_MAX = jnp.iinfo(jnp.int32).max
 
 
-def _kernel(dist_ref, frontier_ref, src_ref, dst_ref, w_ref, lbub_ref,
-            val_ref, win_ref, *, block_v: int):
-    b = pl.program_id(0)
-    t = pl.program_id(1)
-    lb = lbub_ref[0]
-    ub = lbub_ref[1]
-    src = src_ref[...]
-    dst = dst_ref[...]
-    w = w_ref[...]
-    d_src = dist_ref[src]                       # VMEM gather (src block local)
-    front = frontier_ref[src]
-    cand = d_src + w
-    ok = (front > 0) & (cand >= lb) & (cand < ub)
-    cand = jnp.where(ok, cand, jnp.inf)
-    # dense scatter-min: [TILE_E, BLOCK_V] compare plane for dst block b
-    cols = b * block_v + jax.lax.broadcasted_iota(
-        jnp.int32, (src.shape[0], block_v), 1)
-    hit = dst[:, None] == cols
-    plane = jnp.where(hit, cand[:, None], jnp.inf)
-    tile_min = jnp.min(plane, axis=0)           # [BLOCK_V]
-    winners = jnp.where(hit & ok[:, None] & (cand[:, None] <= tile_min),
-                        src[:, None], INT_MAX)
-    tile_win = jnp.min(winners, axis=0)         # [BLOCK_V] block-local src
+def schedule_tiles(frontier_block, src_local, w, tile_first, tile_e: int):
+    """Frontier-compaction prepass: compact the active tiles to the front.
 
-    @pl.when(t == 0)
+    A tile is *active* when any of its edges has a frontier source and a
+    finite weight (padding slots carry ``w=+inf``), or when it is the
+    forced first tile of a non-empty (src-block, dst-block) bucket
+    (``tile_first`` — those visits guarantee every non-empty destination
+    block's output is initialized even on rounds where its bucket is
+    entirely outside the frontier).
+
+    Returns ``(sched, sched_n)``: ``sched[i]`` is the tile to run at grid
+    step ``i`` — active tiles first, in layout (dst-sorted) order, then
+    the last active tile repeated so inactive steps never change the
+    block index — and ``sched_n`` the number of active tiles.
+    """
+    nt = tile_first.shape[0]
+    touched = (frontier_block[src_local] > 0) & jnp.isfinite(w)
+    active = touched.reshape(nt, tile_e).any(axis=1) | tile_first
+    order = jnp.argsort(~active, stable=True).astype(jnp.int32)
+    sched_n = jnp.sum(active.astype(jnp.int32))
+    last = order[jnp.maximum(sched_n - 1, 0)]
+    idx = jnp.arange(nt, dtype=jnp.int32)
+    sched = jnp.where(idx < sched_n, order, last)
+    return sched, sched_n
+
+
+def _kernel(sched_ref, sd_ref, na_ref, lbub_ref, dist_ref, frontier_ref,
+            src_ref, dst_ref, w_ref, val_ref, win_ref, *, block_v: int):
+    i = pl.program_id(0)
+    b = sd_ref[i]                               # this tile's dst block
+    prev = jnp.maximum(i - 1, 0)
+    is_first = (i == 0) | (sd_ref[i] != sd_ref[prev])
+
+    @pl.when(is_first)
     def _init():
         val_ref[...] = jnp.full_like(val_ref, jnp.inf)
         win_ref[...] = jnp.full_like(win_ref, INT_MAX)
 
-    prev_v = val_ref[...]
-    prev_w = win_ref[...]
-    better = tile_min < prev_v
-    tie = tile_min == prev_v
-    val_ref[...] = jnp.minimum(prev_v, tile_min)
-    win_ref[...] = jnp.where(
-        better, tile_win,
-        jnp.where(tie, jnp.minimum(prev_w, tile_win), prev_w))
+    @pl.when(i < na_ref[0])
+    def _accumulate():
+        lb = lbub_ref[0]
+        ub = lbub_ref[1]
+        src = src_ref[...]
+        dst = dst_ref[...]
+        w = w_ref[...]
+        d_src = dist_ref[src]                   # VMEM gather (src block local)
+        front = frontier_ref[src]
+        cand = d_src + w
+        ok = (front > 0) & (cand >= lb) & (cand < ub)
+        cand = jnp.where(ok, cand, jnp.inf)
+        # dense scatter-min: [TILE_E, BLOCK_V] compare plane for dst block b
+        cols = b * block_v + jax.lax.broadcasted_iota(
+            jnp.int32, (src.shape[0], block_v), 1)
+        hit = dst[:, None] == cols
+        plane = jnp.where(hit, cand[:, None], jnp.inf)
+        tile_min = jnp.min(plane, axis=0)       # [BLOCK_V]
+        winners = jnp.where(hit & ok[:, None] & (cand[:, None] <= tile_min),
+                            src[:, None], INT_MAX)
+        tile_win = jnp.min(winners, axis=0)     # [BLOCK_V] block-local src
+
+        prev_v = val_ref[...]
+        prev_w = win_ref[...]
+        better = tile_min < prev_v
+        tie = tile_min == prev_v
+        val_ref[...] = jnp.minimum(prev_v, tile_min)
+        win_ref[...] = jnp.where(
+            better, tile_win,
+            jnp.where(tie, jnp.minimum(prev_w, tile_win), prev_w))
 
 
 @functools.partial(jax.jit, static_argnames=("block_v", "tile_e",
                                              "n_dst_blocks", "interpret"))
 def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
-               lb, ub, *, block_v: int = DEFAULT_BLOCK_V,
-               tile_e: int = DEFAULT_TILE_E, n_dst_blocks: int = 1,
-               interpret: bool = True):
-    """Relax one source-block edge slab against ``n_dst_blocks`` dst blocks.
+               tile_dst, tile_first, bucket_nonempty, lb, ub, *,
+               block_v: int = DEFAULT_BLOCK_V, tile_e: int = DEFAULT_TILE_E,
+               n_dst_blocks: int = 1, interpret: bool = True):
+    """Relax one source-block edge slab against its active tile schedule.
 
     dist_block/frontier_block: [Bs] f32 / int8 (src block local).
-    src_local/dst_local/w: [E] edge slabs (``src_local`` is block-local,
-    ``dst_local`` indexes the full ``n_dst_blocks * block_v`` destination
-    range; padding edges carry w=+inf).  Returns ``(vals, winners)`` of
-    shape [n_dst_blocks * block_v]: the per-destination min candidate and
-    the block-local source id achieving it (INT_MAX where no candidate;
-    ties broken toward the smallest source id).
+    src_local/dst_local/w: [NT * tile_e] tile-aligned edge slab
+    (``src_local`` is block-local, ``dst_local`` indexes the full
+    ``n_dst_blocks * block_v`` destination range; padding edges carry
+    w=+inf).  ``tile_dst`` [NT] is the CSR-of-tiles destination-block
+    index (non-decreasing), ``tile_first`` [NT] the forced-active first
+    tile of each non-empty bucket, ``bucket_nonempty`` [n_dst_blocks] the
+    static has-edges mask (see :func:`repro.core.graph.bucket_edges`).
+
+    Returns ``(vals, winners, n_tiles)``: per-destination min candidate
+    and the block-local source id achieving it over the
+    ``n_dst_blocks * block_v`` range (INT_MAX where no candidate; ties
+    broken toward the smallest source id), plus the number of tiles the
+    compacted schedule actually ran.
     """
     e = src_local.shape[0]
-    e_pad = -(-e // tile_e) * tile_e
-    src_local = jnp.pad(src_local, (0, e_pad - e))
-    dst_local = jnp.pad(dst_local, (0, e_pad - e))
-    w = jnp.pad(w, (0, e_pad - e), constant_values=jnp.inf)
-    n_tiles = e_pad // tile_e
+    if e % tile_e != 0 or e == 0:
+        raise ValueError(f"slab length {e} is not tile-aligned "
+                         f"(tile_e={tile_e}); bucket it with "
+                         "repro.core.graph.bucket_edges")
+    nt = e // tile_e
+    sched, sched_n = schedule_tiles(frontier_block, src_local, w,
+                                    tile_first, tile_e)
+    sched_dst = tile_dst[sched]
     lbub = jnp.stack([jnp.float32(lb), jnp.float32(ub)])
     n_out = n_dst_blocks * block_v
 
+    # lbub rides in the scalar-prefetch (SMEM) path with the schedule —
+    # window bounds are genuinely scalars, which is what SMEM is for.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,      # sched, sched_dst, n_active, lbub
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec(dist_block.shape, lambda i, s, d, n, b: (0,)),
+            pl.BlockSpec(frontier_block.shape, lambda i, s, d, n, b: (0,)),
+            pl.BlockSpec((tile_e,), lambda i, s, d, n, b: (s[i],)),
+            pl.BlockSpec((tile_e,), lambda i, s, d, n, b: (s[i],)),
+            pl.BlockSpec((tile_e,), lambda i, s, d, n, b: (s[i],)),
+        ],
+        out_specs=(pl.BlockSpec((block_v,), lambda i, s, d, n, b: (d[i],)),
+                   pl.BlockSpec((block_v,), lambda i, s, d, n, b: (d[i],))),
+    )
     vals, wins = pl.pallas_call(
         functools.partial(_kernel, block_v=block_v),
-        grid=(n_dst_blocks, n_tiles),
-        in_specs=[
-            pl.BlockSpec(dist_block.shape, lambda b, t: (0,)),
-            pl.BlockSpec(frontier_block.shape, lambda b, t: (0,)),
-            pl.BlockSpec((tile_e,), lambda b, t: (t,)),
-            pl.BlockSpec((tile_e,), lambda b, t: (t,)),
-            pl.BlockSpec((tile_e,), lambda b, t: (t,)),
-            pl.BlockSpec(lbub.shape, lambda b, t: (0,)),
-        ],
-        out_specs=(pl.BlockSpec((block_v,), lambda b, t: (b,)),
-                   pl.BlockSpec((block_v,), lambda b, t: (b,))),
+        grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((n_out,), jnp.float32),
                    jax.ShapeDtypeStruct((n_out,), jnp.int32)),
         interpret=interpret,
-    )(dist_block, frontier_block.astype(jnp.int8), src_local, dst_local,
-      w, lbub)
-    return vals, wins
+    )(sched, sched_dst, sched_n[None], lbub, dist_block,
+      frontier_block.astype(jnp.int8), src_local, dst_local, w)
+    # destination blocks without any tile are never visited by the grid:
+    # mask their (uninitialized) output range to the no-candidate value
+    visited = jnp.repeat(bucket_nonempty, block_v)
+    return (jnp.where(visited, vals, jnp.inf),
+            jnp.where(visited, wins, INT_MAX), sched_n)

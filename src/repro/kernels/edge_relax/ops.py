@@ -5,25 +5,33 @@ executes in Python/XLA for validation); on TPU set interpret=False.
 """
 from __future__ import annotations
 
-from .edge_relax import edge_relax
+from .edge_relax import edge_relax, schedule_tiles
 from .ref import edge_relax_ref
 
-__all__ = ["edge_relax", "edge_relax_ref", "relax_bucket"]
+__all__ = ["edge_relax", "edge_relax_ref", "relax_bucket", "schedule_tiles"]
 
 
-def relax_bucket(dist_block, frontier_block, src_local, dst_local, w, lb,
-                 ub, *, block_v: int = 512, n_dst_blocks: int = 1,
+def relax_bucket(dist_block, frontier_block, src_local, dst_local, w,
+                 tile_dst, tile_first, bucket_nonempty, lb, ub, *,
+                 block_v: int = 512, n_dst_blocks: int = 1,
                  tile_e: int = 512, use_kernel: bool = True,
                  interpret: bool = True):
     """Dispatch: Pallas kernel (TPU hot path) or jnp reference fallback.
 
-    Both paths return ``(vals, winners)`` over the full
-    ``n_dst_blocks * block_v`` destination range.
+    Both paths return ``(vals, winners, n_tiles)`` over the full
+    ``n_dst_blocks * block_v`` destination range; ``n_tiles`` is the
+    number of tiles the frontier-compacted schedule keeps this round
+    (the reference path runs the same prepass so the tile metrics are
+    backend-independent).
     """
     if use_kernel:
         return edge_relax(dist_block, frontier_block, src_local, dst_local,
-                          w, lb, ub, block_v=block_v, tile_e=tile_e,
+                          w, tile_dst, tile_first, bucket_nonempty, lb, ub,
+                          block_v=block_v, tile_e=tile_e,
                           n_dst_blocks=n_dst_blocks, interpret=interpret)
-    return edge_relax_ref(dist_block, frontier_block, src_local, dst_local,
-                          w, lb, ub, block_v=block_v,
-                          n_dst_blocks=n_dst_blocks)
+    vals, wins = edge_relax_ref(dist_block, frontier_block, src_local,
+                                dst_local, w, lb, ub, block_v=block_v,
+                                n_dst_blocks=n_dst_blocks)
+    _, n_tiles = schedule_tiles(frontier_block, src_local, w, tile_first,
+                                tile_e)
+    return vals, wins, n_tiles

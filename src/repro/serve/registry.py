@@ -44,6 +44,7 @@ import collections
 import dataclasses
 import threading
 import time
+import weakref
 from concurrent.futures import Future
 from typing import Callable, Dict, Optional, Tuple, Union
 
@@ -52,13 +53,31 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 
 from ..core import relax
-from ..core.distributed import (graph_specs, shard_graph,
-                                sssp_distributed_batch, ShardedGraph)
+from ..core.distributed import (blocked_specs, graph_specs, shard_blocked,
+                                shard_graph, sssp_distributed_batch,
+                                ShardedGraph)
 from ..core.graph import DeviceGraph, HostGraph
 from ..core.sssp import GOALS, sssp_batch
 
 __all__ = ["GraphEngine", "ShardedGraphEngine", "GraphRegistry",
            "estimate_eccentricity"]
+
+
+def _shard_backend_name(backend) -> str:
+    """Resolve a relax-backend name/alias to the sharded tier's backend."""
+    name = relax.get_backend(backend).name
+    return "blocked" if name == "blocked_pallas" else name
+
+
+class _StrongRef:
+    """weakref.WeakMethod-shaped holder for callables that aren't bound
+    methods (plain functions, lambdas)."""
+
+    def __init__(self, cb):
+        self._cb = cb
+
+    def __call__(self):
+        return self._cb
 
 
 def estimate_eccentricity(hg) -> np.ndarray:
@@ -120,6 +139,7 @@ class _EngineBase:
         self._ecc_hint: Optional[np.ndarray] = None
         self._batch_hint: Optional[np.ndarray] = None
         self._hint_lock = threading.Lock()
+        self.generation = 0     # registry spec generation (stamped on build)
 
     @property
     def ecc_hint(self) -> np.ndarray:
@@ -217,12 +237,20 @@ class ShardedGraphEngine(_EngineBase):
     (:func:`repro.core.distributed.sssp_distributed_batch`) with the same
     goal semantics as the single-device tier — so the registry/scheduler
     stack serves both tiers through one ``run_batch`` interface.
+
+    ``backend`` selects the per-shard relaxation
+    (:data:`repro.core.distributed.DIST_BACKENDS`): ``"blocked"`` builds
+    the sparsity-aware per-shard blocked slabs
+    (:func:`repro.core.distributed.shard_blocked`, ``block_v``/``tile_e``
+    sized) once at engine build and threads them through every batch;
+    results are bitwise-identical across backends.
     """
 
     tier = "sharded"
 
     def __init__(self, gid: str, hg, alpha: float, beta: float,
-                 devices=None, version: str = "v2", fused_rounds: int = 0):
+                 devices=None, version: str = "v2", fused_rounds: int = 0,
+                 backend: str = "segment_min", **blocked_opts):
         super().__init__()
         self.gid = gid
         self.host = hg
@@ -232,6 +260,7 @@ class ShardedGraphEngine(_EngineBase):
         self.beta = beta
         self.version = version
         self.fused_rounds = fused_rounds
+        self.backend = _shard_backend_name(backend)
         devs = tuple(devices) if devices else tuple(jax.devices())
         self.devices = devs
         self.mesh = Mesh(np.array(devs), ("graph",))
@@ -240,6 +269,13 @@ class ShardedGraphEngine(_EngineBase):
         self.sg = ShardedGraph(*(
             jax.device_put(x, NamedSharding(self.mesh, s))
             for x, s in zip(sg, graph_specs("graph"))))
+        self.blocked = None
+        if self.backend == "blocked":
+            arrays, bmeta = shard_blocked(hg, len(devs), **blocked_opts)
+            arrays = type(arrays)(*(
+                jax.device_put(x, NamedSharding(self.mesh, s))
+                for x, s in zip(arrays, blocked_specs("graph"))))
+            self.blocked = (arrays, bmeta)
 
     def run_batch(self, sources, goal: str = "tree", goal_params=None):
         """Same contract as :meth:`GraphEngine.run_batch` (leading slot
@@ -248,7 +284,8 @@ class ShardedGraphEngine(_EngineBase):
             self.sg, np.asarray(sources, np.int32), self.mesh, ("graph",),
             version=self.version, fused_rounds=self.fused_rounds,
             alpha=self.alpha, beta=self.beta, goal=goal,
-            goal_params=goal_params)
+            goal_params=goal_params, backend=self.backend,
+            blocked=self.blocked)
         return dist[:, :self.n], parent[:, :self.n], metrics
 
 
@@ -279,7 +316,17 @@ class GraphRegistry:
     a :class:`ShardedGraphEngine` over ``shard_devices`` (default: every
     local device); smaller graphs get the single-device
     :class:`GraphEngine` (optionally device-affine, see :meth:`engine`).
-    ``register(..., tier=...)`` overrides per graph.
+    ``register(..., tier=...)`` overrides per graph.  ``shard_backend``
+    is the sharded tier's default relaxation backend; a per-lookup
+    ``backend`` of ``blocked``/``blocked_pallas`` overrides it (the two
+    tiers share one name axis, so a blocked-configured router serves
+    blocked engines on both).
+
+    **Generations.**  Every :meth:`register` bumps the gid's generation
+    counter; engines record the generation they were built from.
+    Invalidation listeners (:meth:`add_invalidation_listener`) fire after
+    each re-register so a router can rebuild already-placed replicas
+    eagerly instead of letting the next query pay the cold build.
     """
 
     def __init__(self, capacity: int = 4, *, backend: str = "segment_min",
@@ -287,6 +334,7 @@ class GraphRegistry:
                  shard_threshold_n: Optional[int] = None,
                  shard_threshold_m: Optional[int] = None,
                  shard_devices=None, shard_version: str = "v2",
+                 shard_backend: str = "segment_min",
                  **backend_opts):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -299,9 +347,12 @@ class GraphRegistry:
         self.shard_threshold_m = shard_threshold_m
         self.shard_devices = tuple(shard_devices) if shard_devices else None
         self.shard_version = shard_version
+        self.shard_backend = _shard_backend_name(shard_backend)
         self._lock = threading.RLock()
         self._specs: Dict[str, GraphSpec] = {}
         self._tiers: Dict[str, str] = {}
+        self._gens: Dict[str, int] = {}
+        self._listeners: list = []
         self._engines: "collections.OrderedDict[tuple, object]" \
             = collections.OrderedDict()
         self._building: Dict[tuple, Future] = {}
@@ -336,8 +387,10 @@ class GraphRegistry:
                             and m >= self.shard_threshold_m)):
                     tier = "sharded"
         with self._lock:
+            replaced = gid in self._specs
             self._specs[gid] = graph
             self._tiers[gid] = tier
+            self._gens[gid] = gen = self._gens.get(gid, 0) + 1
             for key in [k for k in self._engines if k[0] == gid]:
                 del self._engines[key]
             # detach in-flight builds of the old spec: lookups from here
@@ -347,6 +400,45 @@ class GraphRegistry:
             # below keeps its stale engine out of the cache)
             for key in [k for k in self._building if k[0] == gid]:
                 del self._building[key]
+            listeners = []
+            if replaced:
+                live = []
+                for ref in self._listeners:
+                    cb = ref()
+                    if cb is not None:       # drop dead (collected) owners
+                        live.append(ref)
+                        listeners.append(cb)
+                self._listeners = live
+        # outside the lock: listeners typically rebuild engines (which
+        # re-enter the registry); a first registration has no replicas to
+        # refresh, so only *re*-registrations notify
+        for cb in listeners:
+            cb(gid, gen)
+
+    def generation(self, gid: str) -> int:
+        """Spec generation of ``gid`` (bumped by every :meth:`register`)."""
+        with self._lock:
+            if gid not in self._gens:
+                raise KeyError(f"graph {gid!r} is not registered "
+                               f"(have: {sorted(self._specs)})")
+            return self._gens[gid]
+
+    def add_invalidation_listener(self, cb) -> None:
+        """Call ``cb(gid, generation)`` after every re-``register`` of an
+        existing gid (in the registering thread, outside the registry
+        lock).  Exceptions propagate to the ``register`` caller.
+
+        Bound methods are held via ``weakref`` so a discarded owner (a
+        router the caller dropped) is unhooked automatically instead of
+        being kept alive — and rebuilt for — forever; plain functions
+        and lambdas are held strongly (the caller owns their lifetime).
+        """
+        try:
+            ref = weakref.WeakMethod(cb)
+        except TypeError:
+            ref = _StrongRef(cb)
+        with self._lock:
+            self._listeners.append(ref)
 
     def tier(self, gid: str) -> str:
         """The engine tier (``"single"``/``"sharded"``) serving ``gid``."""
@@ -371,14 +463,17 @@ class GraphRegistry:
     # ------------------------------------------------------------------
 
     def _resolve(self, gid: str, backend, device):
-        backend = (relax.get_backend(backend).name if backend is not None
-                   else self.default_backend)
         with self._lock:      # RLock: atomic with a caller's locked section
             if self._tiers.get(gid) == "sharded":
-                # the sharded engine ignores the relax backend (it relaxes
-                # through the shared primitives): normalize the key so
-                # different-backend lookups share one whole-mesh engine
-                return (gid, "sharded", "sharded"), None
+                # sharded engines key on the *sharded* backend name
+                # (segment_min / blocked): a blocked lookup builds a
+                # blocked whole-mesh engine, every other lookup shares
+                # the registry's default
+                sb = (self.shard_backend if backend is None
+                      else _shard_backend_name(backend))
+                return (gid, sb, "sharded"), None
+        backend = (relax.get_backend(backend).name if backend is not None
+                   else self.default_backend)
         if device is None:
             return (gid, backend, None), None
         if isinstance(device, int):
@@ -423,6 +518,7 @@ class GraphRegistry:
                 self._building[key] = fut
                 spec = self._specs[gid]
                 tier = self._tiers[gid]
+                gen = self._gens[gid]
             else:
                 # same-key build in flight: share it (wait off-lock)
                 self.stats.build_waits += 1
@@ -432,6 +528,7 @@ class GraphRegistry:
         # (and producers) proceed
         try:
             eng = self._build(gid, spec, key[1], dev, tier)
+            eng.generation = gen
         except BaseException as exc:
             with self._lock:
                 if self._building.get(key) is fut:   # not replaced by a
@@ -454,9 +551,13 @@ class GraphRegistry:
     def _build(self, gid, spec, backend, device, tier):
         hg = spec() if callable(spec) else spec
         if tier == "sharded":
+            # only the blocked layout's geometry opts apply mesh-side
+            blocked_opts = {k: v for k, v in self.backend_opts.items()
+                            if k in ("block_v", "tile_e")}
             return ShardedGraphEngine(gid, hg, self.alpha, self.beta,
                                       devices=self.shard_devices,
-                                      version=self.shard_version)
+                                      version=self.shard_version,
+                                      backend=backend, **blocked_opts)
         return GraphEngine(gid, hg, backend, self.alpha, self.beta,
                            device=device, **self.backend_opts)
 

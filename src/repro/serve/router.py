@@ -101,8 +101,14 @@ class QueryRouter:
         self._load = [0] * len(self.schedulers)      # outstanding tickets
         self._n_placed = [0] * len(self.schedulers)  # graphs placed
         self._gid_load: Dict[Tuple[int, str], int] = {}
+        self._mesh_gids: set = set()                 # sharded gids served
         self.n_routed = 0
         self.n_replications = 0
+        self.n_rebuilds = 0
+        # replica consistency: a re-register() drops the cached engines,
+        # but an already-placed replica would otherwise serve its next
+        # query from a cold build; rebuild every replica eagerly instead
+        registry.add_invalidation_listener(self._rebuild_replicas)
 
     @property
     def n_devices(self) -> int:
@@ -161,6 +167,39 @@ class QueryRouter:
         self._n_placed[cold] += 1
         self.n_replications += 1
 
+    def _rebuild_replicas(self, gid: str, generation: int) -> None:
+        """Registry invalidation hook: rebuild every placed replica of
+        ``gid`` (and a served sharded-tier engine) at the new generation.
+
+        Runs in the re-registering thread; each build goes through the
+        registry's per-key build futures, so queries racing the rebuild
+        simply share it instead of serving a second cold build.
+        """
+        try:
+            tier = self.registry.tier(gid)
+        except KeyError:
+            return
+        if tier == "sharded":
+            with self._lock:
+                served = gid in self._mesh_gids
+            if served:
+                self.registry.engine(gid, self.backend)
+                with self._lock:
+                    self.n_rebuilds += 1
+            return
+        with self._lock:
+            idxs = list(self._placement.get(gid, ()))
+        seen = set()
+        for idx in idxs:
+            dev = self.devices[idx]
+            dev_key = getattr(dev, "id", dev)
+            if dev_key in seen:     # duplicated devices share one engine
+                continue
+            seen.add(dev_key)
+            self.registry.engine(gid, self.backend, device=dev)
+            with self._lock:
+                self.n_rebuilds += 1
+
     def plan_placement(self, weights: Dict[str, float]) -> Dict[str, list]:
         """Pre-place graphs with replica counts proportional to expected
         load (capacity planning from historical/forecast traffic shares).
@@ -218,6 +257,7 @@ class QueryRouter:
                                              deadline_s=deadline_s)
             with self._lock:
                 self.n_routed += 1
+                self._mesh_gids.add(gid)
             return fut
         with self._lock:
             idx = self._route_locked(gid)
@@ -283,6 +323,8 @@ class QueryRouter:
         rows = []
         for gid in gids:
             if self.registry.tier(gid) == "sharded":
+                with self._lock:
+                    self._mesh_gids.add(gid)
                 rs = self.registry.warmup([gid], backend=self.backend,
                                           kinds=kinds,
                                           batch_sizes=batch_sizes)
@@ -314,6 +356,7 @@ class QueryRouter:
                 "n_devices": self.n_devices,
                 "n_routed": self.n_routed,
                 "n_replications": self.n_replications,
+                "n_rebuilds": self.n_rebuilds,
                 "n_batches": n_batches,
                 "n_done": n_done,
                 "n_expired": sum(s["n_expired"] for s in per),

@@ -56,7 +56,8 @@ class SsspService:
     def __init__(self, g, *, max_batch: int = 8, backend: str = "segment_min",
                  alpha: float = 3.0, beta: float = 0.9, devices=None,
                  shard_threshold_n: Optional[int] = None,
-                 shard_threshold_m: Optional[int] = None, **backend_opts):
+                 shard_threshold_m: Optional[int] = None,
+                 shard_backend: str = "segment_min", **backend_opts):
         if not isinstance(g, (HostGraph, DeviceGraph)):
             raise TypeError(f"expected HostGraph/DeviceGraph, got {type(g)}")
         devices = list(devices) if devices is not None else None
@@ -65,6 +66,7 @@ class SsspService:
                                       alpha=alpha, beta=beta,
                                       shard_threshold_n=shard_threshold_n,
                                       shard_threshold_m=shard_threshold_m,
+                                      shard_backend=shard_backend,
                                       **backend_opts)
         self.registry.register(_GID, g)
         if devices is None:

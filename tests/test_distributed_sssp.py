@@ -1,14 +1,18 @@
 """Distributed SSSP (shard_map) vs oracle and vs the single-device engine —
 runs in a subprocess with 8 forced host devices (the main test process
-keeps 1 device).  With 8 real shards, v1/v2/v3 must still be bitwise
-identical to the single-device engine — dist, parent and every metric
-counter — because all engines dispatch relaxation through the shared
-primitives in core/relax.py (fused bucket waves are exempt from metric
-parity: they intentionally relax local edges extra times)."""
+keeps 1 device).  With 8 real shards, v1/v2/v3 — under both the
+segment_min and the blocked per-shard relaxation backends — must still
+be bitwise identical to the single-device engine: dist, parent and every
+logical metric counter, because all engines dispatch relaxation through
+the shared primitives in core/relax.py (fused bucket waves are exempt
+from metric parity: they intentionally relax local edges extra times;
+the physical n_tiles_* counters are layout-specific and excluded)."""
 import os
 import subprocess
 import sys
 
+import numpy as np
+import jax
 import pytest
 
 SCRIPT = r"""
@@ -18,8 +22,8 @@ import sys
 sys.path.insert(0, sys.argv[1])
 import numpy as np, jax
 from repro.data.generators import kronecker, road_grid
-from repro.core.distributed import shard_graph, sssp_distributed
-from repro.core.sssp import sssp
+from repro.core.distributed import shard_blocked, shard_graph, sssp_distributed
+from repro.core.sssp import LOGICAL_METRIC_FIELDS, sssp
 from repro.core.baselines import dijkstra_host
 
 mesh = jax.make_mesh((8,), ("graph",))
@@ -27,14 +31,20 @@ failures = []
 for name, g in [("kron", kronecker(9, 8, seed=1)),
                 ("road", road_grid(20, seed=2))]:
     sg = shard_graph(g, 8)
+    bl = shard_blocked(sg, block_v=128, tile_e=128)
     src = int(np.argmax(g.deg))
     dref, _ = dijkstra_host(g, src)
     d1, p1, m1 = sssp(g.to_device(), src)
     d1, p1 = np.asarray(d1), np.asarray(p1)
-    for ver, fused in [("v1", 0), ("v2", 0), ("v2", 8), ("v3", 0)]:
+    for ver, fused, be in [("v1", 0, "segment_min"), ("v2", 0, "segment_min"),
+                           ("v2", 8, "segment_min"), ("v3", 0, "segment_min"),
+                           ("v1", 0, "blocked"), ("v2", 0, "blocked"),
+                           ("v3", 0, "blocked")]:
+        kw = {"blocked": bl} if be == "blocked" else {}
         dist, parent, metrics = sssp_distributed(sg, src, mesh, ("graph",),
                                                  version=ver,
-                                                 fused_rounds=fused)
+                                                 fused_rounds=fused,
+                                                 backend=be, **kw)
         dist = np.asarray(dist)[:g.n]
         parent = np.asarray(parent)[:g.n]
         ok = np.allclose(np.where(np.isfinite(dist), dist, -1),
@@ -43,12 +53,15 @@ for name, g in [("kron", kronecker(9, 8, seed=1)),
         same = True if fused else (np.array_equal(dist, d1) and
                                    np.array_equal(parent, p1))
         mdiff = [] if fused else [
-            f for f in m1._fields
+            f for f in LOGICAL_METRIC_FIELDS
             if int(getattr(m1, f)) != int(getattr(metrics, f))]
-        print(f"{name}/{ver}/fused={fused}: ok={ok} parity={same} "
-              f"metric_diffs={mdiff} exchanges={int(metrics.n_rounds)}")
-        if not ok or not same or mdiff:
-            failures.append((name, ver, fused, mdiff))
+        tiles_ok = be == "segment_min" or \
+            0 < int(metrics.n_tiles_scanned) < int(metrics.n_tiles_dense)
+        print(f"{name}/{ver}/fused={fused}/{be}: ok={ok} parity={same} "
+              f"metric_diffs={mdiff} tiles_ok={tiles_ok} "
+              f"exchanges={int(metrics.n_rounds)}")
+        if not ok or not same or mdiff or not tiles_ok:
+            failures.append((name, ver, fused, be, mdiff))
 assert not failures, failures
 print("DISTRIBUTED_OK")
 
@@ -132,3 +145,97 @@ def test_distributed_goal_batch_single_shard():
     with pytest.raises(ValueError):
         sssp_distributed(sg, 0, mesh, ("graph",), goal="p2p",
                          goal_param=n + 1)
+
+
+def test_distributed_blocked_goal_batch_single_shard():
+    """Fast in-process coverage of the blocked backend on the batch +
+    goal entry point (the sharded serving tier's interface)."""
+    from repro.core.distributed import (shard_blocked, shard_graph,
+                                        sssp_distributed_batch)
+    from repro.core.sssp import sssp_batch
+    from repro.data.generators import road_grid
+
+    g = road_grid(12, seed=2)
+    mesh = jax.make_mesh((1,), ("graph",))
+    sg = shard_graph(g, 1)
+    bl = shard_blocked(sg, block_v=64, tile_e=64)
+    srcs = np.array([0, 5], np.int32)
+    tgts = np.array([100, 30], np.int32)
+    dist, parent, metrics = sssp_distributed_batch(
+        sg, srcs, mesh, ("graph",), goal="p2p", goal_params=tgts,
+        backend="blocked", blocked=bl)
+    d_ref, p_ref, m_ref = sssp_batch(g.to_device(), srcs, goal="p2p",
+                                     goal_params=tgts)
+    n = g.n
+    np.testing.assert_array_equal(np.asarray(dist)[:, :n],
+                                  np.asarray(d_ref))
+    np.testing.assert_array_equal(np.asarray(parent)[:, :n],
+                                  np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(metrics.n_rounds),
+                                  np.asarray(m_ref.n_rounds))
+    assert (np.asarray(metrics.n_tiles_scanned) > 0).all()
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device mesh (set XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_blocked_backend_parity_on_all_benchmark_graphs():
+    """The acceptance sweep: distributed v2 with backend="blocked" on the
+    whole nine-graph benchmark suite (scaled down), bitwise dist/parent/
+    logical-metric parity against the single-device engine, with the
+    frontier-compacted schedule visibly undercutting the dense scan."""
+    from repro.core.distributed import (shard_blocked, shard_graph,
+                                        sssp_distributed)
+    from repro.core.sssp import LOGICAL_METRIC_FIELDS, sssp
+    from repro.data.generators import kronecker, road_grid, uniform_random
+
+    scale = 9
+    n = 1 << scale
+    side = int(np.sqrt(n))
+    graphs = {
+        f"gr{scale}_4": kronecker(scale, 4, seed=1),
+        f"gr{scale}_8": kronecker(scale, 8, seed=2),
+        f"gr{scale}_16": kronecker(scale, 16, seed=3),
+        f"gr{scale}_32": kronecker(scale, 32, seed=4),
+        "Road": road_grid(side, seed=5),
+        "Urand": uniform_random(n, 16 * n, seed=6),
+        "Web": kronecker(scale, 30, seed=7),
+        "Twitter": kronecker(scale, 22, seed=8),
+        "Kron": kronecker(scale, 32, seed=9),
+    }
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("graph",))
+    for name, g in graphs.items():
+        sg = shard_graph(g, n_dev)
+        bl = shard_blocked(sg, block_v=64, tile_e=64)
+        src = int(np.argmax(g.deg))
+        d1, p1, m1 = sssp(g.to_device(), src)
+        dist, parent, metrics = sssp_distributed(
+            sg, src, mesh, ("graph",), version="v2", backend="blocked",
+            blocked=bl)
+        np.testing.assert_array_equal(np.asarray(dist)[:g.n],
+                                      np.asarray(d1), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(parent)[:g.n],
+                                      np.asarray(p1), err_msg=name)
+        for f in LOGICAL_METRIC_FIELDS:
+            assert int(getattr(metrics, f)) == int(getattr(m1, f)), \
+                (name, f)
+        assert 0 < int(metrics.n_tiles_scanned) \
+            < int(metrics.n_tiles_dense), name
+
+    # the sharded serving tier over the same backend: representative
+    # graphs through ShardedGraphEngine.run_batch (the tier's interface)
+    from repro.serve.registry import ShardedGraphEngine
+    for name in [f"gr{scale}_8", "Road", "Urand"]:
+        g = graphs[name]
+        eng = ShardedGraphEngine(name, g, 3.0, 0.9, backend="blocked",
+                                 block_v=64, tile_e=64)
+        srcs = [int(np.argmax(g.deg)), 1]
+        dist, parent, _ = eng.run_batch(srcs)
+        for slot, s in enumerate(srcs):
+            d1, p1, _ = sssp(g.to_device(), s)
+            np.testing.assert_array_equal(np.asarray(dist[slot]),
+                                          np.asarray(d1), err_msg=name)
+            np.testing.assert_array_equal(np.asarray(parent[slot]),
+                                          np.asarray(p1), err_msg=name)

@@ -5,12 +5,41 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.edge_relax.ops import edge_relax, edge_relax_ref
+from repro.core.graph import bucket_edges
+from repro.kernels.edge_relax.ops import (edge_relax, edge_relax_ref,
+                                          relax_bucket, schedule_tiles)
 from repro.kernels.flash_attn.ops import flash_attention, flash_attention_ref
 from repro.kernels.embedding_bag.ops import embedding_bag, embedding_bag_ref
 
 
 # --- edge_relax -------------------------------------------------------------
+
+def _bucketize(src, dst, w, *, n_dst_blocks, block_v, tile_e):
+    """Tile-align a random slab for the ragged kernel grid."""
+    se, de, we, td, tf, bne, _ = bucket_edges(
+        src, dst, w, n_dst_blocks=n_dst_blocks, block_v=block_v,
+        tile_e=tile_e)
+    return (jnp.asarray(se), jnp.asarray(de), jnp.asarray(we),
+            jnp.asarray(td), jnp.asarray(tf), jnp.asarray(bne))
+
+
+def _run_both(dist, front, src, dst, w, lb, ub, *, bv, n_dst_blocks,
+              tile_e):
+    se, de, we, td, tf, bne = _bucketize(
+        src, dst, w, n_dst_blocks=n_dst_blocks, block_v=bv, tile_e=tile_e)
+    out_v, out_w, n_tiles = edge_relax(
+        jnp.asarray(dist), jnp.asarray(front), se, de, we, td, tf, bne,
+        lb, ub, block_v=bv, tile_e=tile_e, n_dst_blocks=n_dst_blocks)
+    # the oracle is dense over the same (bucketed) slab — the compacted
+    # schedule must not change any result
+    ref_v, ref_w = edge_relax_ref(
+        jnp.asarray(dist), jnp.asarray(front), se, de, we, lb, ub,
+        block_v=bv, n_dst_blocks=n_dst_blocks)
+    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(out_w), np.asarray(ref_w))
+    assert 1 <= int(n_tiles) <= td.shape[0]
+    return out_v, out_w, int(n_tiles), td.shape[0]
+
 
 @pytest.mark.parametrize("bs,bv,e", [(256, 256, 500), (512, 512, 2000),
                                      (128, 512, 64), (512, 128, 1)])
@@ -24,23 +53,17 @@ def test_edge_relax_shapes(bs, bv, e, window):
     dst = rng.integers(0, bv, e).astype(np.int32)
     w = rng.random(e).astype(np.float32)
     lb, ub = window
-    out_v, out_w = edge_relax(jnp.asarray(dist), jnp.asarray(front),
-                              jnp.asarray(src), jnp.asarray(dst),
-                              jnp.asarray(w), lb, ub, block_v=bv)
-    ref_v, ref_w = edge_relax_ref(jnp.asarray(dist), jnp.asarray(front),
-                                  jnp.asarray(src), jnp.asarray(dst),
-                                  jnp.asarray(w), lb, ub, block_v=bv)
-    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v))
-    np.testing.assert_array_equal(np.asarray(out_w), np.asarray(ref_w))
+    _run_both(dist, front, src, dst, w, lb, ub, bv=bv, n_dst_blocks=1,
+              tile_e=512)
 
 
 @pytest.mark.parametrize("bv,n_dst_blocks,tile_e", [(128, 3, 64),
                                                     (64, 5, 128),
                                                     (256, 2, 256)])
 def test_edge_relax_multi_dst_block(bv, n_dst_blocks, tile_e):
-    """Destinations spanning >1 block must all be computed (the seed kernel's
-    grid=(1, n_tiles) silently produced only block 0) and winners must match
-    the deterministic min-src tiebreak of the reference."""
+    """Destinations spanning >1 block must all be computed through the
+    per-bucket tile ranges, and winners must match the deterministic
+    min-src tiebreak of the reference."""
     rng = np.random.default_rng(bv * n_dst_blocks)
     bs = 200
     e = 3000
@@ -52,19 +75,64 @@ def test_edge_relax_multi_dst_block(bv, n_dst_blocks, tile_e):
     dst = rng.integers(0, n_out, e).astype(np.int32)
     # duplicate candidates force winner tie-breaks
     w = (rng.integers(1, 8, e) / 8.0).astype(np.float32)
-    args = (jnp.asarray(dist), jnp.asarray(front), jnp.asarray(src),
-            jnp.asarray(dst), jnp.asarray(w), 0.1, 1.4)
-    out_v, out_w = edge_relax(*args, block_v=bv, tile_e=tile_e,
-                              n_dst_blocks=n_dst_blocks)
-    ref_v, ref_w = edge_relax_ref(*args, block_v=bv,
-                                  n_dst_blocks=n_dst_blocks)
+    out_v, out_w, _, _ = _run_both(dist, front, src, dst, w, 0.1, 1.4,
+                                   bv=bv, n_dst_blocks=n_dst_blocks,
+                                   tile_e=tile_e)
     assert out_v.shape == (n_out,) and out_w.shape == (n_out,)
     # every dst block must receive candidates (not just block 0)
     finite_per_block = np.isfinite(np.asarray(out_v)).reshape(
         n_dst_blocks, bv).sum(axis=1)
     assert (finite_per_block > 0).all(), finite_per_block
-    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v))
-    np.testing.assert_array_equal(np.asarray(out_w), np.asarray(ref_w))
+
+
+def test_edge_relax_frontier_compaction_skips_tiles():
+    """A narrow frontier schedules only the touched tiles (plus the
+    forced per-bucket first tiles) — and still matches the dense oracle."""
+    bv, n_dst_blocks, tile_e = 64, 4, 32
+    bs = 128
+    rng = np.random.default_rng(7)
+    e = 2000
+    src = rng.integers(0, bs, e).astype(np.int32)
+    dst = rng.integers(0, bv * n_dst_blocks, e).astype(np.int32)
+    w = rng.random(e).astype(np.float32)
+    dist = rng.random(bs).astype(np.float32)
+    # exactly one frontier source
+    front = np.zeros(bs, np.int8)
+    front[17] = 1
+    _, _, n_active, nt = _run_both(dist, front, src, dst, w, 0.0, np.inf,
+                                   bv=bv, n_dst_blocks=n_dst_blocks,
+                                   tile_e=tile_e)
+    assert n_active < nt        # the compacted schedule skipped tiles
+    # empty frontier degenerates to the forced first tiles only
+    _, _, n_empty, _ = _run_both(dist, np.zeros(bs, np.int8), src, dst, w,
+                                 0.0, np.inf, bv=bv,
+                                 n_dst_blocks=n_dst_blocks, tile_e=tile_e)
+    assert n_empty <= n_dst_blocks
+
+
+def test_relax_bucket_ref_path_matches_kernel():
+    """use_kernel=False (the jnp fallback) is bitwise-identical and
+    reports the same schedule size."""
+    bv, nb, tile_e = 64, 3, 32
+    rng = np.random.default_rng(3)
+    e = 700
+    bs = 64
+    src = rng.integers(0, bs, e).astype(np.int32)
+    dst = rng.integers(0, bv * nb, e).astype(np.int32)
+    w = rng.random(e).astype(np.float32)
+    dist = rng.random(bs).astype(np.float32)
+    front = (rng.random(bs) < 0.3).astype(np.int8)
+    se, de, we, td, tf, bne = _bucketize(src, dst, w, n_dst_blocks=nb,
+                                         block_v=bv, tile_e=tile_e)
+    outs = [relax_bucket(jnp.asarray(dist), jnp.asarray(front), se, de,
+                         we, td, tf, bne, 0.1, 0.9, block_v=bv,
+                         n_dst_blocks=nb, tile_e=tile_e, use_kernel=uk)
+            for uk in (True, False)]
+    np.testing.assert_array_equal(np.asarray(outs[0][0]),
+                                  np.asarray(outs[1][0]))
+    np.testing.assert_array_equal(np.asarray(outs[0][1]),
+                                  np.asarray(outs[1][1]))
+    assert int(outs[0][2]) == int(outs[1][2])
 
 
 @settings(max_examples=20, deadline=None)
@@ -73,21 +141,19 @@ def test_edge_relax_property(seed):
     rng = np.random.default_rng(seed)
     bs = int(rng.integers(8, 300))
     bv = int(rng.integers(8, 300))
+    nb = int(rng.integers(1, 4))
+    tile_e = int(2 ** rng.integers(3, 8))
     e = int(rng.integers(1, 800))
     dist = np.where(rng.random(bs) < 0.7,
                     (rng.random(bs) * 3).astype(np.float32), np.inf)
     front = (rng.random(bs) < 0.5).astype(np.int8)
     src = rng.integers(0, bs, e).astype(np.int32)
-    dst = rng.integers(0, bv, e).astype(np.int32)
+    dst = rng.integers(0, bv * nb, e).astype(np.int32)
     w = (rng.random(e) * 2).astype(np.float32)
     lb = float(rng.random() * 2)
     ub = lb + float(rng.random() * 2) + 1e-3
-    args = (jnp.asarray(dist), jnp.asarray(front), jnp.asarray(src),
-            jnp.asarray(dst), jnp.asarray(w), lb, ub)
-    out_v, out_w = edge_relax(*args, block_v=bv)
-    ref_v, ref_w = edge_relax_ref(*args, block_v=bv)
-    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v))
-    np.testing.assert_array_equal(np.asarray(out_w), np.asarray(ref_w))
+    _run_both(dist, front, src, dst, w, lb, ub, bv=bv, n_dst_blocks=nb,
+              tile_e=tile_e)
 
 
 # --- flash attention ---------------------------------------------------------

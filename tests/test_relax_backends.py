@@ -3,7 +3,9 @@
 Every backend — and the distributed engines built from the same shared
 primitives — must produce *identical* dist/parent trees and identical
 logical-traversal metrics: all tie-breaks resolve toward the smallest
-source id, so the results are bitwise-equal, not merely allclose.
+source id, so the results are bitwise-equal, not merely allclose.  The
+physical tile counters (n_tiles_*) describe the blocked layout's work
+and are excluded from cross-backend parity (LOGICAL_METRIC_FIELDS).
 """
 import numpy as np
 import jax
@@ -11,8 +13,9 @@ import pytest
 
 from repro.core import relax
 from repro.core.baselines import dijkstra_host
-from repro.core.distributed import shard_graph, sssp_distributed
-from repro.core.sssp import sssp, sssp_batch
+from repro.core.distributed import (shard_blocked, shard_graph,
+                                    sssp_distributed)
+from repro.core.sssp import LOGICAL_METRIC_FIELDS, sssp, sssp_batch
 from repro.data.generators import kronecker, road_grid, uniform_random
 
 GRAPHS = [
@@ -31,7 +34,7 @@ def _asnp(out):
 def _assert_same(a, b, what):
     np.testing.assert_array_equal(a[0], b[0], err_msg=f"{what}: dist")
     np.testing.assert_array_equal(a[1], b[1], err_msg=f"{what}: parent")
-    for f in a[2]._fields:
+    for f in LOGICAL_METRIC_FIELDS:
         assert int(getattr(a[2], f)) == int(getattr(b[2], f)), (
             what, f, int(getattr(a[2], f)), int(getattr(b[2], f)))
 
@@ -40,6 +43,10 @@ def test_registry():
     assert set(relax.available_backends()) >= {"segment_min",
                                                "blocked_pallas"}
     assert relax.get_backend("segment_min").name == "segment_min"
+    # "blocked" aliases the blocked layout (the distributed engines' name
+    # for it) without appearing as a separate canonical backend
+    assert relax.get_backend("blocked").name == "blocked_pallas"
+    assert "blocked" not in relax.available_backends()
     be = relax.get_backend(relax.get_backend("segment_min"))
     assert be.name == "segment_min"
     with pytest.raises(ValueError, match="unknown relax backend"):
@@ -58,6 +65,11 @@ def test_backend_parity(name, make):
     blocked = _asnp(sssp(dg, src, backend="blocked_pallas", block_v=256,
                          tile_e=256))
     _assert_same(ref, blocked, f"{name}: segment_min vs blocked_pallas")
+    # physical tile metrics: the blocked layout reports its scanned and
+    # dense-comparator tile counts; segment_min has no tiles
+    assert int(ref[2].n_tiles_scanned) == 0
+    assert 0 < int(blocked[2].n_tiles_scanned) \
+        < int(blocked[2].n_tiles_dense)
     dref, _ = dijkstra_host(g, src)
     np.testing.assert_allclose(
         np.where(np.isfinite(ref[0]), ref[0], -1.0),
@@ -81,6 +93,46 @@ def test_distributed_engine_parity(name, make):
         dist, parent, metrics = _asnp(out)
         got = (dist[:g.n], parent[:g.n], metrics)
         _assert_same(ref, got, f"{name}: segment_min vs {version}")
+
+
+@pytest.mark.parametrize("name,make", GRAPHS)
+def test_distributed_blocked_backend_parity(name, make):
+    """backend="blocked" on the distributed engines: per-shard
+    slice_for_shard slabs relax through the tile-indexed bucket path and
+    must match the single-device engine bitwise — dist, parent, and all
+    logical counters — while reporting real tile metrics.  (Multi-shard
+    blocked parity runs in test_distributed_sssp's 8-device subprocess.)"""
+    g = make()
+    src = int(np.argmax(g.deg))
+    ref = _asnp(sssp(g.to_device(), src, backend="segment_min"))
+    mesh = jax.make_mesh((1,), ("graph",))
+    sg = shard_graph(g, 1)
+    blocked = shard_blocked(sg, block_v=256, tile_e=256)
+    for version in ["v1", "v2", "v3"]:
+        out = sssp_distributed(sg, src, mesh, ("graph",), version=version,
+                               backend="blocked", blocked=blocked)
+        dist, parent, metrics = _asnp(out)
+        got = (dist[:g.n], parent[:g.n], metrics)
+        _assert_same(ref, got, f"{name}: segment_min vs {version}/blocked")
+        assert 0 < int(metrics.n_tiles_scanned) \
+            < int(metrics.n_tiles_dense)
+
+
+def test_distributed_blocked_rejects_bad_args():
+    g = road_grid(10, seed=1)
+    sg = shard_graph(g, 1)
+    mesh = jax.make_mesh((1,), ("graph",))
+    bl = shard_blocked(sg, block_v=64, tile_e=64)
+    with pytest.raises(ValueError, match="unknown distributed"):
+        sssp_distributed(sg, 0, mesh, ("graph",), backend="nope")
+    with pytest.raises(ValueError, match="segment_min"):
+        sssp_distributed(sg, 0, mesh, ("graph",), backend="segment_min",
+                         blocked=bl)
+    # a 2-shard layout against a 1-shard graph is a shard-count mismatch
+    bl2 = shard_blocked(g, 2, block_v=64, tile_e=64)
+    with pytest.raises(ValueError, match="shards"):
+        sssp_distributed(sg, 0, mesh, ("graph",), backend="blocked",
+                         blocked=bl2)
 
 
 @pytest.mark.parametrize("backend,opts", [

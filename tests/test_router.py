@@ -208,3 +208,80 @@ def test_router_bitwise_parity_on_all_benchmark_graphs():
                                           d_ref[settled], err_msg=gid)
     # the suite actually exercised several devices
     assert len(served_on) >= 2
+
+
+def test_reregister_rebuilds_placed_replicas_eagerly():
+    """Replica consistency: a re-register() must not leave placed
+    replicas to serve their next query from a cold build — the router's
+    invalidation hook rebuilds them at the new generation immediately."""
+    g1 = road_grid(SIDE, seed=5)
+    g2 = road_grid(SIDE, seed=9)
+    reg = GraphRegistry(capacity=8)
+    reg.register("road", g1)
+    router = QueryRouter(reg, devices=dup_devices(2))
+    f = router.submit(Query(gid="road", source=0))
+    router.drain()
+    assert f.result().dist is not None
+    builds0 = reg.stats.builds
+    reg.register("road", g2)
+    # the placed replica was rebuilt in the registering thread
+    assert router.stats()["n_rebuilds"] == 1
+    assert reg.stats.builds == builds0 + 1
+    eng = reg.peek("road", device=router.devices[0])
+    assert eng is not None and eng.generation == 2
+    # the next query hits the warm rebuilt engine and serves the new spec
+    hits0 = reg.stats.hits
+    f2 = router.submit(Query(gid="road", source=0))
+    router.drain()
+    d_ref, _, _ = sssp(g2.to_device(), 0)
+    np.testing.assert_array_equal(f2.result().dist, np.asarray(d_ref))
+    assert reg.stats.hits > hits0
+    # unplaced gids rebuild nothing
+    reg.register("fresh", road_grid(SIDE, seed=3))
+    reg.register("fresh", road_grid(SIDE, seed=4))
+    assert router.stats()["n_rebuilds"] == 1
+
+
+def test_reregister_rebuilds_served_sharded_engine():
+    g1 = road_grid(SIDE, seed=5)
+    g2 = road_grid(SIDE, seed=9)
+    reg = GraphRegistry(capacity=8, shard_threshold_n=100)
+    reg.register("big", g1)
+    router = QueryRouter(reg, devices=dup_devices(2))
+    f = router.submit(Query(gid="big", source=0))
+    router.drain()
+    assert f.result().dist is not None
+    reg.register("big", g2)
+    assert router.stats()["n_rebuilds"] == 1
+    f2 = router.submit(Query(gid="big", source=0))
+    router.drain()
+    d_ref, _, _ = sssp(g2.to_device(), 0)
+    np.testing.assert_array_equal(f2.result().dist, np.asarray(d_ref))
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device mesh (set XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_sharded_tier_blocked_backend_serves_bitwise():
+    """The sharded serving tier with backend="blocked" (per-shard blocked
+    slabs inside shard_map) over the whole mesh: bitwise parity with the
+    single-device engine through the router path."""
+    g = kronecker(9, 8, seed=2)
+    reg = GraphRegistry(capacity=4, shard_threshold_n=1,
+                        shard_backend="blocked", block_v=64, tile_e=64)
+    reg.register("big", g)
+    router = QueryRouter(reg, max_batch=2)
+    srcs = [3, 99]
+    futs = [router.submit(Query(gid="big", source=s)) for s in srcs]
+    router.start()
+    results = [f.result(timeout=600) for f in futs]
+    router.stop()
+    eng = reg.engine("big")
+    assert isinstance(eng, ShardedGraphEngine)
+    assert eng.backend == "blocked"
+    dg = g.to_device()
+    for s, res in zip(srcs, results):
+        d_ref, p_ref, _ = sssp(dg, s)
+        np.testing.assert_array_equal(res.dist, np.asarray(d_ref))
+        np.testing.assert_array_equal(res.parent, np.asarray(p_ref))

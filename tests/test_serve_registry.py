@@ -238,3 +238,54 @@ def test_eccentricity_hint_ordering():
     eng = reg.engine("g")
     assert isinstance(eng.deg, np.ndarray)
     np.testing.assert_array_equal(eng.ecc_hint, ecc)
+
+
+def test_generation_counter_and_listeners():
+    reg = GraphRegistry(capacity=4)
+    g1 = road_grid(10, seed=5)
+    g2 = road_grid(10, seed=9)
+    events = []
+    reg.add_invalidation_listener(lambda gid, gen: events.append((gid, gen)))
+    reg.register("road", g1)
+    assert reg.generation("road") == 1
+    assert events == []                     # first registration: no replicas
+    eng1 = reg.engine("road")
+    assert eng1.generation == 1
+    reg.register("road", g2)                # re-register bumps + notifies
+    assert reg.generation("road") == 2
+    assert events == [("road", 2)]
+    eng2 = reg.engine("road")
+    assert eng2 is not eng1 and eng2.generation == 2
+    d_ref, _, _ = sssp(g2.to_device(), 0)
+    np.testing.assert_array_equal(np.asarray(eng2.run_batch([0, 0])[0][0]),
+                                  np.asarray(d_ref))
+    with pytest.raises(KeyError):
+        reg.generation("nope")
+
+
+def test_sharded_tier_backend_keys_and_blocked_parity():
+    """The sharded tier keys engines by the sharded backend name: blocked
+    lookups build a blocked whole-mesh engine, default lookups share the
+    registry's shard_backend, and both serve bitwise-equal results."""
+    road = road_grid(12, seed=5)
+    reg = GraphRegistry(capacity=4, shard_threshold_n=100,
+                        block_v=64, tile_e=64)
+    reg.register("big", road)
+    seg = reg.engine("big")
+    blk = reg.engine("big", "blocked")
+    via_alias = reg.engine("big", "blocked_pallas")
+    assert seg is not blk and blk is via_alias
+    assert seg.backend == "segment_min" and blk.backend == "blocked"
+    assert blk.blocked is not None
+    assert set(reg.cached_keys()) == {("big", "segment_min", "sharded"),
+                                      ("big", "blocked", "sharded")}
+    d_s, p_s, _ = seg.run_batch([0, 7])
+    d_b, p_b, m_b = blk.run_batch([0, 7])
+    np.testing.assert_array_equal(np.asarray(d_s), np.asarray(d_b))
+    np.testing.assert_array_equal(np.asarray(p_s), np.asarray(p_b))
+    assert (np.asarray(m_b.n_tiles_scanned) > 0).all()
+    # a registry defaulted to the blocked shard backend serves it on None
+    reg2 = GraphRegistry(capacity=2, shard_threshold_n=100,
+                         shard_backend="blocked", block_v=64, tile_e=64)
+    reg2.register("big", road)
+    assert reg2.engine("big").backend == "blocked"
