@@ -15,10 +15,9 @@ import time
 import numpy as np
 import jax
 
-from repro.core import relax
+from repro.api import EngineConfig, SolveSpec, Solver
 from repro.core.baselines import bellman_ford, delta_stepping, dijkstra_host
-from repro.core.distributed import shard_blocked, shard_graph, sssp_distributed
-from repro.core.sssp import sssp, sssp_batch, sssp_p2p, normalized_metrics
+from repro.core.sssp import normalized_metrics
 from repro.data.generators import kronecker, road_grid, uniform_random
 from repro.data.weights import make_variant
 
@@ -63,48 +62,35 @@ def pick_sources(g, n_sources: int, seed: int = 0):
 
 def run_eic(g, sources, alpha=3.0, beta=0.9, backend="segment_min"):
     """Average EIC metrics + wall time over sources (compile excluded)."""
-    dg = g.to_device()
-    be = relax.get_backend(backend)
-    layout = be.prepare(dg)
+    solver = Solver.open(g, EngineConfig(backend=backend, alpha=alpha,
+                                         beta=beta))
     # warm-up / compile
-    d0, p0, m0 = sssp(dg, int(sources[0]), alpha=alpha, beta=beta,
-                      backend=be, layout=layout)
-    jax.block_until_ready(d0)
+    solver.solve(SolveSpec.tree(int(sources[0]))).block_until_ready()
     t_total, mets = 0.0, []
     for s in sources:
         t0 = time.perf_counter()
-        dist, parent, metrics = sssp(dg, int(s), alpha=alpha, beta=beta,
-                                     backend=be, layout=layout)
-        jax.block_until_ready(dist)
+        res = solver.solve(SolveSpec.tree(int(s))).block_until_ready()
         t_total += time.perf_counter() - t0
-        mets.append(normalized_metrics(g.deg, np.asarray(dist),
-                                       jax.tree.map(np.asarray, metrics)))
+        mets.append(res.normalized())
     avg = {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
     avg["time_s"] = t_total / len(sources)
     return avg
 
 
 def run_eic_batch(g, sources, alpha=3.0, beta=0.9, backend="segment_min"):
-    """One fused multi-source batch (sssp_batch); per-source wall time."""
-    dg = g.to_device()
-    be = relax.get_backend(backend)
-    layout = be.prepare(dg)
-    srcs = np.asarray(sources, np.int32)
-    d0, _, _ = sssp_batch(dg, srcs, alpha=alpha, beta=beta, backend=be,
-                          layout=layout)     # warm-up / compile
-    jax.block_until_ready(d0)
+    """One fused multi-source batch (batched SolveSpec); per-source wall
+    time."""
+    solver = Solver.open(g, EngineConfig(backend=backend, alpha=alpha,
+                                         beta=beta))
+    spec = SolveSpec.tree([int(s) for s in sources])
+    solver.solve(spec).block_until_ready()       # warm-up / compile
     t0 = time.perf_counter()
-    dist, parent, metrics = sssp_batch(dg, srcs, alpha=alpha, beta=beta,
-                                       backend=be, layout=layout)
-    jax.block_until_ready(dist)
+    res = solver.solve(spec).block_until_ready()
     elapsed = time.perf_counter() - t0
-    mets = [normalized_metrics(g.deg, np.asarray(dist[i]),
-                               jax.tree.map(lambda x: np.asarray(x[i]),
-                                            metrics))
-            for i in range(srcs.size)]
+    mets = [res.normalized(slot=i) for i in range(spec.n_slots)]
     avg = {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
-    avg["time_s"] = elapsed / srcs.size
-    avg["batch"] = int(srcs.size)
+    avg["time_s"] = elapsed / spec.n_slots
+    avg["batch"] = spec.n_slots
     return avg
 
 
@@ -112,32 +98,25 @@ def run_p2p_vs_tree(g, pairs, alpha=3.0, beta=0.9, backend="segment_min"):
     """Early-exit head-to-head: p2p queries vs full trees on the same
     (source, target) pairs — raw rounds (nSync) saved and bitwise target
     distance parity (the serving acceptance check)."""
-    dg = g.to_device()
-    be = relax.get_backend(backend)
-    layout = be.prepare(dg)
+    solver = Solver.open(g, EngineConfig(backend=backend, alpha=alpha,
+                                         beta=beta))
     s0, t0 = pairs[0]
-    jax.block_until_ready(sssp(dg, int(s0), backend=be, layout=layout,
-                               alpha=alpha, beta=beta)[0])
-    jax.block_until_ready(sssp_p2p(dg, int(s0), int(t0), backend=be,
-                                   layout=layout, alpha=alpha, beta=beta)[0])
+    solver.solve(SolveSpec.tree(int(s0))).block_until_ready()
+    solver.solve(SolveSpec.p2p(int(s0), int(t0))).block_until_ready()
     rounds_tree, rounds_p2p = [], []
     t_tree = t_p2p = 0.0
     bitwise_equal = True
     for s, t in pairs:
         t0_ = time.perf_counter()
-        d_full, _, m_full = sssp(dg, int(s), backend=be, layout=layout,
-                                 alpha=alpha, beta=beta)
-        jax.block_until_ready(d_full)
+        full = solver.solve(SolveSpec.tree(int(s))).block_until_ready()
         t_tree += time.perf_counter() - t0_
         t0_ = time.perf_counter()
-        d_p2p, _, m_p2p = sssp_p2p(dg, int(s), int(t), backend=be,
-                                   layout=layout, alpha=alpha, beta=beta)
-        jax.block_until_ready(d_p2p)
+        p2p = solver.solve(SolveSpec.p2p(int(s), int(t))).block_until_ready()
         t_p2p += time.perf_counter() - t0_
-        bitwise_equal &= (np.asarray(d_p2p)[t].tobytes()
-                          == np.asarray(d_full)[t].tobytes())
-        rounds_tree.append(int(m_full.n_rounds))
-        rounds_p2p.append(int(m_p2p.n_rounds))
+        bitwise_equal &= (np.asarray(p2p.dist)[t].tobytes()
+                          == np.asarray(full.dist)[t].tobytes())
+        rounds_tree.append(int(full.metrics.n_rounds))
+        rounds_p2p.append(int(p2p.metrics.n_rounds))
     n = len(pairs)
     return {
         "rounds_tree": float(np.mean(rounds_tree)),
@@ -175,12 +154,12 @@ def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
     if capacity is None:
         # room for one engine per (graph, device) replica
         capacity = (len(graphs) + 1) * max(n_dev, 1)
-    registry = GraphRegistry(capacity=capacity,
-                             **({"backend": backend} if backend else {}))
+    cfg = EngineConfig(backend=backend or "segment_min",
+                       max_batch=max_batch, max_pending=max_pending)
+    registry = GraphRegistry(capacity=capacity, config=cfg)
     for gid, g in graphs.items():
         registry.register(gid, g)
-    router = QueryRouter(registry, devices=devices, max_batch=max_batch,
-                         max_pending=max_pending)
+    router = QueryRouter(registry, devices=devices, config=cfg)
     if warm_kinds is None:
         warm_kinds = tuple(dict.fromkeys(it.query.kind for it in traffic))
     # capacity planning: replicate by the traffic's per-graph share (a
@@ -245,18 +224,16 @@ def check_p2p_parity(graphs, results, sample=12):
     'no p2p queries in the sample' is distinguishable from a mismatch."""
     checked = 0
     ok = True
-    engines = {}
+    solvers = {}
     for item, res in results:
         q = item.query
         if q.kind != "p2p":
             continue
-        if q.gid not in engines:
-            dg = graphs[q.gid].to_device()
-            engines[q.gid] = (dg, relax.get_backend("segment_min").prepare(dg))
-        dg, layout = engines[q.gid]
-        d_ref, _, _ = sssp_p2p(dg, q.source, q.target, layout=layout)
+        if q.gid not in solvers:
+            solvers[q.gid] = Solver.open(graphs[q.gid])
+        ref = solvers[q.gid].solve(SolveSpec.p2p(q.source, q.target))
         ok &= (np.float32(res.distance).tobytes()
-               == np.asarray(d_ref)[q.target].tobytes())
+               == np.asarray(ref.dist)[q.target].tobytes())
         checked += 1
         if checked >= sample:
             break
@@ -265,35 +242,24 @@ def check_p2p_parity(graphs, results, sample=12):
 
 def run_distributed(g, sources, alpha=3.0, beta=0.9, version="v2",
                     backend="segment_min", **blocked_opts):
-    """Distributed engine over every available local device.
+    """Sharded-tier facade over every available local device.
 
-    ``backend="blocked"`` pre-builds the per-shard blocked layout once
-    (``blocked_opts`` → :func:`repro.core.distributed.shard_blocked`) and
-    relaxes through it.
+    ``backend="blocked"`` makes the solver pre-build the per-shard
+    blocked layout once (``blocked_opts`` size it) and relax through it.
     """
-    n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("graph",))
-    sg = shard_graph(g, n_dev)
-    blocked = None
-    if backend != "segment_min":
-        blocked = shard_blocked(sg, **blocked_opts)
-    kw = dict(version=version, alpha=alpha, beta=beta, backend=backend,
-              blocked=blocked)
-    d0, _, _ = sssp_distributed(sg, int(sources[0]), mesh, ("graph",), **kw)
-    jax.block_until_ready(d0)
+    solver = Solver.open(g, EngineConfig(
+        tier="sharded", shard_backend=backend, shard_version=version,
+        alpha=alpha, beta=beta, **blocked_opts))
+    solver.solve(SolveSpec.tree(int(sources[0]))).block_until_ready()
     t_total, mets = 0.0, []
     for s in sources:
         t0 = time.perf_counter()
-        dist, parent, metrics = sssp_distributed(
-            sg, int(s), mesh, ("graph",), **kw)
-        jax.block_until_ready(dist)
+        res = solver.solve(SolveSpec.tree(int(s))).block_until_ready()
         t_total += time.perf_counter() - t0
-        mets.append(normalized_metrics(
-            g.deg, np.asarray(dist)[:g.n],
-            jax.tree.map(np.asarray, metrics)))
+        mets.append(res.normalized())
     avg = {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
     avg["time_s"] = t_total / len(sources)
-    avg["n_devices"] = n_dev
+    avg["n_devices"] = solver.resolved.n_shards
     return avg
 
 

@@ -275,9 +275,10 @@ def serving(rows, scale, batch, n_queries=None, seed=0, open_loop=False):
     dg = big.to_device()
     srcs = common.pick_sources(big, min(batch, 4), seed=3)
     for sbe in ["segment_min", "blocked"]:
-        svc = SsspService(big, max_batch=min(batch, 4),
-                          devices=jax.devices(), shard_threshold_n=1,
-                          shard_backend=sbe)
+        svc = SsspService(big, devices=jax.devices(),
+                          config=common.EngineConfig(
+                              max_batch=min(batch, 4), shard_threshold_n=1,
+                              shard_backend=sbe))
         t0 = time.perf_counter()
         reqs = [svc.submit(SsspRequest(rid=i, source=int(s)))
                 for i, s in enumerate(srcs)]
@@ -309,8 +310,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=13)
     ap.add_argument("--sources", type=int, default=3)
+    from repro.core.relax import available_backends
     ap.add_argument("--backend", default="segment_min",
-                    choices=common.relax.available_backends(),
+                    choices=available_backends(),
                     help="relaxation backend for the paper-metric sections")
     ap.add_argument("--batch", type=int, default=4,
                     help="sources per fused sssp_batch call (backends "

@@ -1,6 +1,11 @@
-"""Quickstart: EIC SSSP on a Graph500 Kronecker graph (paper's algorithm).
+"""Quickstart: EIC SSSP on a Graph500 Kronecker graph through the
+declarative solver facade (``repro.api``).
 
     PYTHONPATH=src python examples/quickstart.py [--scale 12]
+
+``Solver.open`` owns layout building and engine-tier resolution; every
+query is a ``SolveSpec`` (tree / p2p / bounded / knear) and every result
+a ``SolveResult`` with lazy path reconstruction.
 """
 import argparse
 import os
@@ -12,7 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
-from repro.core.sssp import sssp, normalized_metrics  # noqa: E402
+from repro.api import SolveSpec, Solver  # noqa: E402
 from repro.core.baselines import dijkstra_host, bellman_ford  # noqa: E402
 from repro.data.generators import kronecker  # noqa: E402
 
@@ -26,22 +31,20 @@ def main():
     print(f"generating Graph500 Kronecker graph: scale={args.scale} "
           f"edge_factor={args.edge_factor}")
     g = kronecker(args.scale, args.edge_factor, seed=1)
-    dg = g.to_device()
     # random source (paper methodology; hub sources inflate the first window)
     src = int(np.random.default_rng(0).choice(np.where(g.deg > 0)[0]))
     print(f"|V|={g.n} |E|={g.m // 2} source={src} (max degree {g.deg.max()})")
 
+    solver = Solver.open(g)                       # default: single device
+    spec = SolveSpec.tree(src)
     t0 = time.perf_counter()
-    dist, parent, metrics = sssp(dg, src)
-    jax.block_until_ready(dist)
+    solver.solve(spec).block_until_ready()
     t_compile = time.perf_counter() - t0
     t0 = time.perf_counter()
-    dist, parent, metrics = sssp(dg, src)
-    jax.block_until_ready(dist)
+    res = solver.solve(spec).block_until_ready()
     t_run = time.perf_counter() - t0
 
-    nm = normalized_metrics(g.deg, np.asarray(dist),
-                            jax.tree.map(np.asarray, metrics))
+    nm = res.normalized()
     print(f"\nEIC heuristic SSSP: {t_run*1e3:.1f} ms "
           f"(+{t_compile - t_run:.1f}s compile, once)")
     print(f"  nFrontier={nm['nFrontier']:.3f}  (paper: 1.01-1.10 — "
@@ -53,21 +56,34 @@ def main():
           f"reachable={nm['reachable']}")
 
     dref, _ = dijkstra_host(g, src)
+    dist = np.asarray(res.dist)
     ok = np.allclose(np.where(np.isfinite(dist), dist, -1),
                      np.where(np.isfinite(dref), dref, -1), rtol=1e-4)
     print(f"\ncorrectness vs Dijkstra oracle: {'OK' if ok else 'MISMATCH'}")
 
+    # an early-exit point-to-point query on the same session (the layout
+    # and jit cache are already warm); the target distance is bitwise
+    # equal to the full tree's, at a fraction of the stepping rounds
+    tgt = int(np.flatnonzero(np.isfinite(dist))[-1])
+    p2p = solver.solve(SolveSpec.p2p(src, tgt)).block_until_ready()
+    path = p2p.paths()
+    print(f"p2p {src}->{tgt}: dist={p2p.distance():.4f} "
+          f"hops={len(path) - 1 if path else None} "
+          f"rounds={int(np.asarray(p2p.metrics.n_rounds))} "
+          f"(tree ran {nm['n_rounds']})")
+
     t0 = time.perf_counter()
-    bf_dist, _, bf_m = bellman_ford(dg, src)
+    bf_dist, _, bf_m = bellman_ford(solver.device_graph, src)
     jax.block_until_ready(bf_dist)
     _ = time.perf_counter() - t0
     t0 = time.perf_counter()
-    bf_dist, _, bf_m = bellman_ford(dg, src)
+    bf_dist, _, bf_m = bellman_ford(solver.device_graph, src)
     jax.block_until_ready(bf_dist)
     t_bf = time.perf_counter() - t0
+    eic_trav = int(np.asarray(res.metrics.n_trav)) \
+        + int(np.asarray(res.metrics.n_pull_trav))
     print(f"Bellman-Ford baseline: {t_bf*1e3:.1f} ms "
-          f"({int(bf_m.n_trav)} traversals vs EIC "
-          f"{int(metrics.n_trav) + int(metrics.n_pull_trav)})")
+          f"({int(bf_m.n_trav)} traversals vs EIC {eic_trav})")
 
 
 if __name__ == "__main__":

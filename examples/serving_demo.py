@@ -22,6 +22,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
+from repro.api import EngineConfig  # noqa: E402
 from repro.data.generators import kronecker, road_grid  # noqa: E402
 from repro.data.traffic import make_traffic  # noqa: E402
 from repro.serve.registry import GraphRegistry  # noqa: E402
@@ -42,12 +43,17 @@ def main():
         "social": kronecker(args.scale, 8, seed=2),      # hottest
         "road": road_grid(int(np.sqrt(n)), seed=5),
     }
-    registry = GraphRegistry(capacity=4 * len(graphs))
+    # one EngineConfig drives the registry and the router (multi-graph
+    # serving keeps the registry/router stack; single-graph sessions can
+    # use Solver.open(g, EngineConfig(tier="routed")) instead)
+    cfg = EngineConfig(max_batch=args.max_batch,
+                       registry_capacity=4 * len(graphs))
+    registry = GraphRegistry(config=cfg)
     for gid, g in graphs.items():
         registry.register(gid, g)
         print(f"registered {gid!r}: |V|={g.n} |E|={g.m // 2}")
 
-    router = QueryRouter(registry, max_batch=args.max_batch)
+    router = QueryRouter(registry, config=cfg)
     print(f"router over {router.n_devices} device(s)")
     traffic = make_traffic(graphs, args.queries, seed=0,
                            rate_qps=args.rate_qps)

@@ -1,0 +1,407 @@
+"""Declarative engine configuration — the one place backend/tier/placement
+options live.
+
+Four PRs of growth scattered a dozen loose keyword arguments
+(``backend=``, ``shard_backend=``, ``shard_threshold_n=``,
+``use_kernel=``, ...) across the single-device engine, the three
+distributed engines, and the serving registry/router/service.  This
+module replaces them with one frozen :class:`EngineConfig` value that
+every layer accepts, plus an explicit, testable :meth:`EngineConfig.resolve`
+step that turns the declarative config (which may say ``tier="auto"``)
+into a concrete :class:`ResolvedEngine` — the engine tier, canonical
+backend names, and device placement a solver session will actually use.
+
+Resolution is deliberately separate from construction:
+
+* ``EngineConfig(...)`` validates *context-free* invariants (known
+  names, positive sizes) so a bad config fails where it is written;
+* ``resolve(n=..., m=..., n_devices=...)`` validates *contextual*
+  invariants (tier/backend conflicts, threshold-driven auto-tiering,
+  device counts) and fails loudly **before** any tracing or layout
+  build — a misconfigured solver never reaches ``jit``.
+
+:class:`FacadeDeprecationWarning` marks the legacy ``sssp_*`` wrapper
+entry points; tier-1 CI escalates it to an error so internal code cannot
+quietly keep calling the shims (see ``pyproject.toml``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ConfigError", "FacadeDeprecationWarning", "EngineConfig",
+           "ResolvedEngine", "TIERS", "SHARD_VERSIONS"]
+
+TIERS = ("auto", "single", "sharded", "routed")
+SHARD_VERSIONS = ("v1", "v2", "v3")
+
+# single-device relax-backend names whose sharded twin is the blocked
+# per-shard layout (kept in sync with repro.core.distributed)
+_BLOCKED_NAMES = ("blocked", "blocked_pallas")
+
+
+class ConfigError(ValueError):
+    """A contradictory or unresolvable :class:`EngineConfig`."""
+
+
+class FacadeDeprecationWarning(DeprecationWarning):
+    """Emitted by the legacy ``sssp_*`` wrapper shims.
+
+    Kept as a dedicated category so the test suite can escalate exactly
+    these to errors (internal code must use the :mod:`repro.api` facade)
+    while parity tests exercise the shims under ``pytest.warns``.
+    """
+
+
+def _canonical_backend(name) -> str:
+    """Resolve a relax-backend name/alias/object to its canonical name."""
+    from . import relax
+    try:
+        return relax.get_backend(name).name
+    except ValueError as exc:
+        raise ConfigError(str(exc)) from None
+
+
+def _canonical_shard_backend(name) -> str:
+    """Resolve a backend name to the distributed engines' backend axis."""
+    canon = _canonical_backend(name) if name not in ("segment_min",
+                                                     "blocked") else name
+    return "blocked" if canon in _BLOCKED_NAMES else canon
+
+
+def resolve_devices(devices):
+    """Concrete jax ``Device`` list for a config's ``devices`` field.
+
+    Integer entries index ``jax.devices()`` (range-checked — a bad index
+    raises :class:`ConfigError` here, not an ``IndexError`` mid-build);
+    ``Device`` objects pass through; ``None`` stays ``None``.  The one
+    conversion point for every config consumer (registry, router,
+    service, solver)."""
+    if devices is None:
+        return None
+    import jax
+    pool = jax.devices()
+    out = []
+    for d in devices:
+        if isinstance(d, int):
+            if not 0 <= d < len(pool):
+                raise ConfigError(f"device index {d} out of range for "
+                                  f"{len(pool)} visible device(s)")
+            out.append(pool[d])
+        else:
+            out.append(d)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Declarative solver/serving configuration (frozen, hashable).
+
+    One value of this type replaces the loose ``backend=`` /
+    ``shard_backend=`` / ``shard_threshold_*`` / ``use_kernel=`` kwargs
+    previously threaded through every layer.  Fields:
+
+    * ``backend`` — single-device relaxation backend
+      (:func:`repro.core.relax.available_backends`); aliases resolve.
+    * ``tier`` — ``"single"`` (one device), ``"sharded"`` (whole-mesh
+      ``shard_map`` engine), ``"routed"`` (multi-device serving plane),
+      or ``"auto"`` (pick single vs sharded from the graph size against
+      ``shard_threshold_n``/``shard_threshold_m``).
+    * ``devices`` — explicit device placement (jax ``Device`` objects or
+      integer indices); ``None`` uses every visible device for
+      sharded/routed tiers and jax's default for single.
+    * ``alpha``/``beta``/``max_iters`` — the stepping heuristic knobs.
+    * ``shard_backend`` — per-shard relaxation of the sharded tier
+      (:data:`repro.core.distributed.DIST_BACKENDS`); ``None`` derives
+      it from ``backend`` (``blocked_pallas`` -> ``blocked``).
+    * ``shard_version``/``fused_rounds``/``compact_capacity`` — the
+      distributed engine variant (v1/v2/v3, bucket-fusion waves, v3's
+      compact-exchange capacity).
+    * ``block_v``/``tile_e``/``use_kernel``/``interpret`` — blocked
+      layout geometry (only meaningful with a blocked backend).
+    * ``max_batch``/``registry_capacity``/``max_pending``/
+      ``ecc_batching`` — serving-plane knobs (routed tier and the
+      registry/scheduler stack).
+
+    Construction validates context-free invariants; call
+    :meth:`resolve` to validate tier/backend conflicts and obtain the
+    concrete :class:`ResolvedEngine`.
+    """
+
+    backend: str = "segment_min"
+    tier: str = "auto"
+    devices: Optional[Tuple] = None
+    alpha: float = 3.0
+    beta: float = 0.9
+    max_iters: int = 1_000_000
+    # sharded tier
+    shard_backend: Optional[str] = None
+    shard_version: str = "v2"
+    fused_rounds: int = 0
+    compact_capacity: int = 0
+    shard_threshold_n: Optional[int] = None
+    shard_threshold_m: Optional[int] = None
+    # blocked layout geometry
+    block_v: Optional[int] = None
+    tile_e: Optional[int] = None
+    use_kernel: Optional[bool] = None
+    interpret: bool = True
+    # serving plane
+    max_batch: int = 8
+    registry_capacity: int = 4
+    max_pending: Optional[int] = None
+    ecc_batching: bool = True
+
+    def __post_init__(self):
+        if self.tier not in TIERS:
+            raise ConfigError(f"unknown tier {self.tier!r}; expected one "
+                              f"of {TIERS}")
+        if self.shard_version not in SHARD_VERSIONS:
+            raise ConfigError(f"unknown shard_version "
+                              f"{self.shard_version!r}; expected one of "
+                              f"{SHARD_VERSIONS}")
+        _canonical_backend(self.backend)        # fail on unknown names now
+        if self.shard_backend is not None:
+            sb = _canonical_shard_backend(self.shard_backend)
+            if sb not in ("segment_min", "blocked"):
+                raise ConfigError(f"unknown shard_backend "
+                                  f"{self.shard_backend!r}")
+        if self.devices is not None:
+            object.__setattr__(self, "devices", tuple(self.devices))
+            if not self.devices:
+                raise ConfigError("devices, when given, must be non-empty")
+        for name in ("alpha", "beta"):
+            if getattr(self, name) <= 0:
+                raise ConfigError(f"{name} must be > 0")
+        for name in ("max_iters", "max_batch", "registry_capacity"):
+            if getattr(self, name) < 1:
+                raise ConfigError(f"{name} must be >= 1")
+        for name in ("fused_rounds", "compact_capacity"):
+            if getattr(self, name) < 0:
+                raise ConfigError(f"{name} must be >= 0")
+        for name in ("shard_threshold_n", "shard_threshold_m", "block_v",
+                     "tile_e", "max_pending"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ConfigError(f"{name} must be >= 1 (or None)")
+
+    # ------------------------------------------------------------------
+    # resolution
+    # ------------------------------------------------------------------
+
+    @property
+    def effective_shard_backend(self) -> str:
+        """The sharded tier's backend: explicit, else derived from
+        ``backend`` (``blocked_pallas`` maps to ``blocked``)."""
+        if self.shard_backend is not None:
+            return _canonical_shard_backend(self.shard_backend)
+        return _canonical_shard_backend(self.backend)
+
+    @property
+    def has_thresholds(self) -> bool:
+        return (self.shard_threshold_n is not None
+                or self.shard_threshold_m is not None)
+
+    def _auto_tier(self, n: Optional[int], m: Optional[int]) -> str:
+        if not self.has_thresholds:
+            return "single"
+        if n is None and m is None:
+            raise ConfigError(
+                "tier='auto' with shard thresholds needs the graph size "
+                "(resolve(n=..., m=...)) to pick single vs sharded")
+        if (self.shard_threshold_n is not None and n is not None
+                and n >= self.shard_threshold_n):
+            return "sharded"
+        if (self.shard_threshold_m is not None and m is not None
+                and m >= self.shard_threshold_m):
+            return "sharded"
+        return "single"
+
+    def validate_serving(self) -> "EngineConfig":
+        """Contextual checks for the serving plane (registry / router /
+        service), where per-graph tiering happens at ``register()`` time
+        and per-lookup backends may override the defaults — so only
+        combinations invalid under *every* possible lookup are rejected
+        (blocked geometry without a blocked default stays legal: a
+        per-lookup blocked backend consumes it)."""
+        if self.compact_capacity and self.shard_version != "v3":
+            raise ConfigError(
+                "compact_capacity selects v3's compact exchange; set "
+                "shard_version='v3' (or drop compact_capacity)")
+        return self
+
+    def resolve(self, *, n: Optional[int] = None, m: Optional[int] = None,
+                n_devices: Optional[int] = None) -> "ResolvedEngine":
+        """Resolve the declarative config against a graph/host context.
+
+        ``n``/``m`` are the graph's vertex/edge counts (needed by
+        ``tier="auto"`` thresholds); ``n_devices`` is the visible device
+        count (defaults to ``len(jax.devices())``, or ``len(devices)``
+        when the config pins devices).  Raises :class:`ConfigError` on
+        any conflicting combination — **before** layouts are built or
+        anything is traced.
+        """
+        backend = _canonical_backend(self.backend)
+        shard_backend = self.effective_shard_backend
+
+        tier = self.tier
+        if tier == "auto":
+            tier = self._auto_tier(n, m)
+        elif self.has_thresholds and tier != "routed":
+            # explicit single/sharded contradicts threshold auto-tiering;
+            # routed keeps them (its registry tiers each graph)
+            raise ConfigError(
+                f"shard_threshold_n/_m only apply to tier='auto' or "
+                f"'routed' (explicit tier {self.tier!r} already decided)")
+
+        # sharded-only options are dead weight on a *necessarily* single
+        # engine (explicit tier, or auto with no thresholds — which can
+        # never resolve sharded).  Auto WITH thresholds legitimately
+        # holds them for the graphs that cross the threshold, so a
+        # deployment config must not fail data-dependently on small
+        # graphs (the serving registry accepts it for the same reason).
+        never_sharded = self.tier == "single" or not self.has_thresholds
+        if tier == "single" and never_sharded:
+            if self.shard_backend is not None:
+                raise ConfigError(
+                    "shard_backend is set but the engine can only "
+                    "resolve to the single-device tier; drop it, set "
+                    "tier='sharded', or add shard thresholds")
+            if self.fused_rounds:
+                raise ConfigError("fused_rounds is a sharded-tier option "
+                                  "(bucket-fusion waves between exchanges)")
+            if self.compact_capacity:
+                raise ConfigError("compact_capacity is a sharded-tier "
+                                  "option (v3's compact exchange)")
+        if tier == "single" and never_sharded and self.devices is not None \
+                and len(self.devices) > 1:
+            # (with thresholds, a multi-device pin on a small graph just
+            # places the single engine on devices[0])
+            raise ConfigError(
+                f"the single tier runs on one device; got "
+                f"{len(self.devices)} (set tier='sharded' or 'routed')")
+        self.validate_serving()
+        if tier == "sharded" and backend != "segment_min" \
+                and self.shard_backend is not None \
+                and shard_backend != _canonical_shard_backend(backend):
+            raise ConfigError(
+                f"backend={self.backend!r} and shard_backend="
+                f"{self.shard_backend!r} disagree for tier='sharded'; "
+                f"set one of them")
+        blocked_anywhere = (backend in _BLOCKED_NAMES
+                            or shard_backend == "blocked")
+        if not blocked_anywhere:
+            for name in ("block_v", "tile_e", "use_kernel"):
+                if getattr(self, name) is not None:
+                    raise ConfigError(
+                        f"{name} is blocked-layout geometry but no blocked "
+                        f"backend is selected (backend={backend!r}, "
+                        f"shard_backend={shard_backend!r})")
+
+        devices = self.devices
+        if devices is not None:
+            resolve_devices(devices)     # range-check int indices now
+            if n_devices is not None and len(devices) != n_devices:
+                raise ConfigError(
+                    f"config pins {len(devices)} device(s) but the "
+                    f"context provides {n_devices}")
+            n_devices = len(devices)
+        elif n_devices is None:
+            import jax
+            n_devices = len(jax.devices())
+        if n_devices < 1:
+            raise ConfigError("need at least one device")
+
+        return ResolvedEngine(
+            tier=tier, backend=backend, shard_backend=shard_backend,
+            devices=devices, n_shards=(len(devices) if devices is not None
+                                       else n_devices),
+            alpha=self.alpha, beta=self.beta, max_iters=self.max_iters,
+            shard_version=self.shard_version,
+            fused_rounds=self.fused_rounds,
+            compact_capacity=self.compact_capacity,
+            shard_threshold_n=self.shard_threshold_n,
+            shard_threshold_m=self.shard_threshold_m,
+            block_v=self.block_v, tile_e=self.tile_e,
+            use_kernel=self.use_kernel, interpret=self.interpret,
+            max_batch=self.max_batch,
+            registry_capacity=self.registry_capacity,
+            max_pending=self.max_pending, ecc_batching=self.ecc_batching,
+            config=self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedEngine:
+    """The concrete engine an :class:`EngineConfig` resolved to.
+
+    Every field is decided: ``tier`` is never ``"auto"``, backend names
+    are canonical, ``n_shards`` is the mesh width the sharded tier would
+    span.  Produced only by :meth:`EngineConfig.resolve`; carried by the
+    :class:`repro.api.Solver` session and accepted (in place of loose
+    kwargs) by the engine entry points.
+    """
+
+    tier: str
+    backend: str
+    shard_backend: str
+    devices: Optional[Tuple]
+    n_shards: int
+    alpha: float
+    beta: float
+    max_iters: int
+    shard_version: str
+    fused_rounds: int
+    compact_capacity: int
+    shard_threshold_n: Optional[int]
+    shard_threshold_m: Optional[int]
+    block_v: Optional[int]
+    tile_e: Optional[int]
+    use_kernel: Optional[bool]
+    interpret: bool
+    max_batch: int
+    registry_capacity: int
+    max_pending: Optional[int]
+    ecc_batching: bool
+    config: EngineConfig
+
+    def require(self, *tiers: str) -> "ResolvedEngine":
+        if self.tier not in tiers:
+            raise ConfigError(f"engine resolved to tier {self.tier!r}; "
+                              f"this entry point needs {tiers}")
+        return self
+
+    def resolve_devices(self):
+        """Pinned devices as concrete jax ``Device`` objects (or None)."""
+        return resolve_devices(self.devices)
+
+    def layout_opts(self) -> dict:
+        """Geometry kwargs for ``RelaxBackend.prepare`` /
+        :func:`repro.core.graph.build_blocked` (only set fields)."""
+        out = {}
+        for name in ("block_v", "tile_e", "use_kernel"):
+            v = getattr(self, name)
+            if v is not None:
+                out[name] = v
+        if self.backend in _BLOCKED_NAMES:
+            out["interpret"] = self.interpret
+        return out
+
+    def blocked_opts(self) -> dict:
+        """Geometry kwargs for :func:`repro.core.distributed.shard_blocked`."""
+        out = {}
+        for name in ("block_v", "tile_e", "use_kernel"):
+            v = getattr(self, name)
+            if v is not None:
+                out[name] = v
+        out["interpret"] = self.interpret
+        return out
+
+
+def as_resolved(config, *, n=None, m=None, n_devices=None) -> ResolvedEngine:
+    """Accept an :class:`EngineConfig` or an already-resolved engine."""
+    if isinstance(config, ResolvedEngine):
+        return config
+    if isinstance(config, EngineConfig):
+        return config.resolve(n=n, m=m, n_devices=n_devices)
+    raise ConfigError(f"expected EngineConfig or ResolvedEngine, got "
+                      f"{type(config)}")

@@ -56,6 +56,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import relax, stats, stepping, traversal
+from .config import ConfigError, as_resolved
 from .graph import (DEFAULT_BLOCK_V, DEFAULT_TILE_E, BlockedEdges,
                     HostGraph, shard_block_v, slice_for_shard)
 from .relax import INF, INT_MAX
@@ -321,8 +322,7 @@ def _resolve_backend(backend: str) -> str:
     return backend
 
 
-def _resolve_blocked(sg: ShardedGraph, backend: str, blocked, block_v: int,
-                     tile_e: int):
+def _resolve_blocked(sg: ShardedGraph, backend: str, blocked, build_opts):
     """Normalize the (backend, blocked layout) pair for the entry points."""
     if _resolve_backend(backend) == "segment_min":
         if blocked is not None:
@@ -332,7 +332,7 @@ def _resolve_blocked(sg: ShardedGraph, backend: str, blocked, block_v: int,
     if blocked is None:
         # convenience one-off build; callers that relax repeatedly should
         # shard_blocked() once and pass the result
-        blocked = shard_blocked(sg, block_v=block_v, tile_e=tile_e)
+        blocked = shard_blocked(sg, **build_opts)
     arrays, bmeta = blocked
     if arrays.src_local.shape[0] != sg.src.shape[0]:
         raise ValueError(
@@ -341,14 +341,42 @@ def _resolve_blocked(sg: ShardedGraph, backend: str, blocked, block_v: int,
     return arrays, bmeta
 
 
+def _dist_engine_args(sg: ShardedGraph, config, version, max_iters,
+                      fused_rounds, alpha, beta, capacity, backend,
+                      block_v, tile_e):
+    """Resolve the distributed engine knobs from either an
+    :class:`~repro.core.config.EngineConfig` or the loose kwargs — never
+    both.  Returns ``(version, max_iters, fused_rounds, params_alpha,
+    params_beta, capacity, backend, blocked_build_opts)``."""
+    if config is not None:
+        loose = (version, max_iters, fused_rounds, alpha, beta, capacity,
+                 backend, block_v, tile_e)
+        if any(v is not None for v in loose):
+            raise ConfigError(
+                "pass engine options through config=, not alongside it")
+        r = as_resolved(config, n=int(sg.n_true), m=int(sg.n_edges2),
+                        n_devices=int(sg.src.shape[0])).require("sharded")
+        return (r.shard_version, r.max_iters, r.fused_rounds, r.alpha,
+                r.beta, r.compact_capacity, r.shard_backend,
+                r.blocked_opts())
+    return ("v2" if version is None else version,
+            1_000_000 if max_iters is None else max_iters,
+            0 if fused_rounds is None else fused_rounds,
+            3.0 if alpha is None else alpha,
+            0.9 if beta is None else beta,
+            0 if capacity is None else capacity,
+            "segment_min" if backend is None else backend,
+            dict(block_v=DEFAULT_BLOCK_V if block_v is None else block_v,
+                 tile_e=DEFAULT_TILE_E if tile_e is None else tile_e))
+
+
 def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
-                     version: str = "v2", max_iters: int = 1_000_000,
-                     fused_rounds: int = 0, alpha: float = 3.0,
-                     beta: float = 0.9, capacity: int = 0,
+                     version=None, max_iters=None,
+                     fused_rounds=None, alpha=None,
+                     beta=None, capacity=None,
                      goal: str = "tree", goal_param=None,
-                     backend: str = "segment_min", blocked=None,
-                     block_v: int = DEFAULT_BLOCK_V,
-                     tile_e: int = DEFAULT_TILE_E):
+                     backend=None, blocked=None,
+                     block_v=None, tile_e=None, config=None):
     """Run distributed EIC SSSP on ``mesh`` (axes flattened over ``axes``).
 
     versions: v1 replicated/pmin, v2 sharded/all_to_all dense exchange,
@@ -366,14 +394,22 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     prebuilt :func:`shard_blocked` layout to amortize bucketing across
     calls (``block_v``/``tile_e`` size the one-off build otherwise).
     Results are bitwise-identical across backends.
+
+    ``config`` accepts an :class:`~repro.core.config.EngineConfig` (or a
+    resolved one, tier ``"sharded"``) in place of every loose engine
+    kwarg above — the :class:`repro.api.Solver` facade's path.
     """
+    (version, max_iters, fused_rounds, alpha, beta, capacity, backend,
+     build_opts) = _dist_engine_args(sg, config, version, max_iters,
+                                     fused_rounds, alpha, beta, capacity,
+                                     backend, block_v, tile_e)
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
     block = sg.deg.shape[1]
     gp = goal_param_array(goal, goal_param)
     _check_goal_bounds(goal, gp, int(sg.n_true))
     axes_key = axes if isinstance(axes, str) else tuple(axes)
-    arrays, bmeta = _resolve_blocked(sg, backend, blocked, block_v, tile_e)
+    arrays, bmeta = _resolve_blocked(sg, backend, blocked, build_opts)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
                        max_iters, fused_rounds, capacity, goal, False,
                        bmeta)
@@ -384,13 +420,13 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
 
 
 def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
-                           *, version: str = "v2",
-                           max_iters: int = 1_000_000, fused_rounds: int = 0,
-                           alpha: float = 3.0, beta: float = 0.9,
-                           capacity: int = 0, goal: str = "tree",
-                           goal_params=None, backend: str = "segment_min",
-                           blocked=None, block_v: int = DEFAULT_BLOCK_V,
-                           tile_e: int = DEFAULT_TILE_E):
+                           *, version=None,
+                           max_iters=None, fused_rounds=None,
+                           alpha=None, beta=None,
+                           capacity=None, goal: str = "tree",
+                           goal_params=None, backend=None,
+                           blocked=None, block_v=None,
+                           tile_e=None, config=None):
     """Batched multi-source distributed SSSP — the sharded serving tier's
     entry point.
 
@@ -402,9 +438,13 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
     once per batch instead of once per source.  All slots share the static
     ``goal`` kind with per-slot ``goal_params``; returns ``(dist, parent,
     metrics)`` with a leading ``[S]`` axis (dist/parent ``[S, n_pad]``).
-    ``backend``/``blocked`` select the per-shard relaxation exactly as in
-    :func:`sssp_distributed`.
+    ``backend``/``blocked``/``config`` select the per-shard relaxation
+    exactly as in :func:`sssp_distributed`.
     """
+    (version, max_iters, fused_rounds, alpha, beta, capacity, backend,
+     build_opts) = _dist_engine_args(sg, config, version, max_iters,
+                                     fused_rounds, alpha, beta, capacity,
+                                     backend, block_v, tile_e)
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
     block = sg.deg.shape[1]
@@ -417,7 +457,7 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
                          f"{sources.shape}")
     _check_goal_bounds(goal, gp, int(sg.n_true))
     axes_key = axes if isinstance(axes, str) else tuple(axes)
-    arrays, bmeta = _resolve_blocked(sg, backend, blocked, block_v, tile_e)
+    arrays, bmeta = _resolve_blocked(sg, backend, blocked, build_opts)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
                        max_iters, fused_rounds, capacity, goal, True,
                        bmeta)

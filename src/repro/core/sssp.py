@@ -38,6 +38,7 @@ Three deliberate, documented deviations:
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -46,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from . import relax, stats, stepping, traversal
+from .config import ConfigError, FacadeDeprecationWarning, as_resolved
 from .graph import DeviceGraph
 from .relax import INF, INT_MAX
 
@@ -319,51 +321,87 @@ def prepare_layout(g: DeviceGraph, backend="segment_min", **backend_opts):
     return relax.get_backend(backend).prepare(g, **backend_opts)
 
 
-def sssp(g: DeviceGraph, source, *, backend="segment_min", layout=None,
-         max_iters: int = 1_000_000, alpha: float = 3.0, beta: float = 0.9,
-         goal: str = "tree", goal_param=None, **backend_opts):
+def _engine_args(g: DeviceGraph, config, backend, max_iters, alpha, beta,
+                 backend_opts):
+    """Resolve the engine knobs from either an
+    :class:`~repro.core.config.EngineConfig` or the loose engine-level
+    kwargs — never both (the config is the one place options live)."""
+    if config is not None:
+        if backend is not None or max_iters is not None \
+                or alpha is not None or beta is not None or backend_opts:
+            raise ConfigError(
+                "pass engine options through config=, not alongside it")
+        r = as_resolved(config, n=g.n, m=g.m).require("single")
+        return (relax.get_backend(r.backend), r.max_iters, r.alpha, r.beta,
+                r.layout_opts())
+    return (relax.get_backend("segment_min" if backend is None else backend),
+            1_000_000 if max_iters is None else max_iters,
+            3.0 if alpha is None else alpha,
+            0.9 if beta is None else beta,
+            backend_opts)
+
+
+def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
+         max_iters=None, alpha=None, beta=None,
+         goal: str = "tree", goal_param=None, config=None, **backend_opts):
     """Run the heuristic SSSP algorithm from ``source``.
 
-    ``backend`` selects the relaxation implementation (see
-    :func:`repro.core.relax.available_backends`); pass a prebuilt
-    ``layout`` (from :func:`prepare_layout`) to amortize backend
-    preprocessing across calls.  ``goal``/``goal_param`` select an
-    early-exit query variant (see :data:`GOALS`; the convenience wrappers
-    :func:`sssp_p2p` / :func:`sssp_bounded` / :func:`sssp_knear` fill them
-    in).  Returns ``(dist, parent, metrics)``.
+    This is the single-device *engine* entry point; prefer the
+    :class:`repro.api.Solver` facade, which owns layout building and
+    tier resolution.  ``config`` accepts an
+    :class:`~repro.core.config.EngineConfig` (or a resolved one) in
+    place of the loose ``backend``/``alpha``/``beta``/``max_iters``
+    kwargs; pass a prebuilt ``layout`` (from :func:`prepare_layout`) to
+    amortize backend preprocessing across calls.  ``goal``/``goal_param``
+    select an early-exit query variant (see :data:`GOALS`).  Returns
+    ``(dist, parent, metrics)``.
     """
-    be = relax.get_backend(backend)
+    be, max_iters, alpha, beta, opts = _engine_args(
+        g, config, backend, max_iters, alpha, beta, backend_opts)
     if layout is None:
-        layout = be.prepare(g, **backend_opts)
+        layout = be.prepare(g, **opts)
     gp = goal_param_array(goal, goal_param)
     _check_goal_bounds(goal, gp, g.n)
     return _sssp_jit(g, layout, jnp.int32(source), be, max_iters, alpha,
                      beta, goal, gp)
 
 
+def _shim(name: str, replacement: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated: open a solver session instead — "
+        f"`repro.api.Solver.open(g).solve({replacement})` (one facade "
+        f"for every goal kind, tier, and backend)",
+        FacadeDeprecationWarning, stacklevel=3)
+
+
 def sssp_p2p(g: DeviceGraph, source, target, **kw):
-    """Point-to-point query: early exit once ``target`` is settled.
+    """Deprecated shim over the p2p goal (see :mod:`repro.api`).
 
     ``dist[target]`` and the parent chain target -> source are bitwise
     equal to the full-tree result; other entries may be tentative."""
+    _shim("sssp_p2p", "SolveSpec.p2p(source, target)")
     return sssp(g, source, goal="p2p", goal_param=target, **kw)
 
 
 def sssp_bounded(g: DeviceGraph, source, bound, **kw):
-    """Distance-bounded query: early exit once every vertex with
+    """Deprecated shim over the distance-bounded goal (see
+    :mod:`repro.api`): early exit once every vertex with
     ``dist <= bound`` is settled (entries above ``bound`` are tentative)."""
+    _shim("sssp_bounded", "SolveSpec.bounded(source, bound)")
     return sssp(g, source, goal="bounded", goal_param=bound, **kw)
 
 
 def sssp_knear(g: DeviceGraph, source, k, **kw):
-    """k-nearest query: early exit once the source plus its ``k`` nearest
-    vertices are settled (their distances are final; the rest tentative)."""
+    """Deprecated shim over the k-nearest goal (see :mod:`repro.api`):
+    early exit once the source plus its ``k`` nearest vertices are
+    settled (their distances are final; the rest tentative)."""
+    _shim("sssp_knear", "SolveSpec.knear(source, k)")
     return sssp(g, source, goal="knear", goal_param=k, **kw)
 
 
-def sssp_batch(g: DeviceGraph, sources, *, backend="segment_min",
-               layout=None, max_iters: int = 1_000_000, alpha: float = 3.0,
-               beta: float = 0.9, goal: str = "tree", goal_params=None,
+def sssp_batch(g: DeviceGraph, sources, *, backend=None,
+               layout=None, max_iters=None, alpha=None, beta=None,
+               goal: str = "tree", goal_params=None, config=None,
                **backend_opts):
     """Batched multi-source SSSP: one fused computation over ``sources``.
 
@@ -371,12 +409,14 @@ def sssp_batch(g: DeviceGraph, sources, *, backend="segment_min",
     leading batch axis via ``vmap``; sources that terminate early are
     masked out by the batched ``while_loop`` while the rest keep stepping.
     All slots share the (static) ``goal`` kind but carry per-slot
-    ``goal_params`` (targets / bounds / k values).  Returns ``(dist,
-    parent, metrics)`` with a leading ``[S]`` axis.
+    ``goal_params`` (targets / bounds / k values).  ``config`` replaces
+    the loose engine kwargs exactly as in :func:`sssp`.  Returns
+    ``(dist, parent, metrics)`` with a leading ``[S]`` axis.
     """
-    be = relax.get_backend(backend)
+    be, max_iters, alpha, beta, opts = _engine_args(
+        g, config, backend, max_iters, alpha, beta, backend_opts)
     if layout is None:
-        layout = be.prepare(g, **backend_opts)
+        layout = be.prepare(g, **opts)
     sources = jnp.asarray(sources, jnp.int32)
     if goal == "tree" and goal_params is None:
         goal_params = [0] * sources.shape[0]

@@ -53,6 +53,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 
 from ..core import relax
+from ..core.config import ConfigError, EngineConfig, resolve_devices
 from ..core.distributed import (blocked_specs, graph_specs, shard_blocked,
                                 shard_graph, sssp_distributed_batch,
                                 ShardedGraph)
@@ -64,9 +65,10 @@ __all__ = ["GraphEngine", "ShardedGraphEngine", "GraphRegistry",
 
 
 def _shard_backend_name(backend) -> str:
-    """Resolve a relax-backend name/alias to the sharded tier's backend."""
-    name = relax.get_backend(backend).name
-    return "blocked" if name == "blocked_pallas" else name
+    """Resolve a relax-backend name/alias to the sharded tier's backend
+    (one shared mapping — see :mod:`repro.core.config`)."""
+    from ..core.config import _canonical_shard_backend
+    return _canonical_shard_backend(backend)
 
 
 class _StrongRef:
@@ -80,25 +82,11 @@ class _StrongRef:
         return self._cb
 
 
-def estimate_eccentricity(hg) -> np.ndarray:
-    """Per-vertex eccentricity estimate, in hops (host-side, O(N + M)).
-
-    One BFS from a max-degree landmark ``L`` gives hop distances
-    ``h(v)``; with ``H = ecc(L)`` (in hops, observed), the triangle
-    inequality bounds ``ecc(v)`` within ``[H - h(v), H + h(v)]`` and we
-    report the upper bound ``H + h(v)``.  The absolute value is crude,
-    but the *ordering* is what batch formation needs: sources far from
-    the landmark run more stepping rounds, so grouping nearby estimates
-    keeps a vmapped batch from paying one outlier's rounds.
-    Disconnected vertices get ``2H + 1`` (worst bucket).
-    """
-    n = hg.n
-    row_ptr = np.asarray(hg.row_ptr, np.int64)
-    dst = np.asarray(hg.dst, np.int64)
+def _hop_bfs(row_ptr: np.ndarray, dst: np.ndarray, n: int,
+             root: int) -> np.ndarray:
+    """Hop distances from ``root`` (-1 where unreached), vectorized BFS."""
     hop = np.full(n, -1, np.int64)
-    if n == 0:
-        return np.zeros(0, np.float32)
-    frontier = np.array([int(np.argmax(np.asarray(hg.deg)))], np.int64)
+    frontier = np.array([root], np.int64)
     hop[frontier] = 0
     level = 0
     while frontier.size:
@@ -114,9 +102,48 @@ def estimate_eccentricity(hg) -> np.ndarray:
         level += 1
         hop[nbrs] = level
         frontier = nbrs
-    h_max = int(hop.max())
-    ecc = np.where(hop >= 0, h_max + hop, 2 * h_max + 1)
-    return ecc.astype(np.float32)
+    return hop
+
+
+def estimate_eccentricity(hg, n_landmarks: int = 4) -> np.ndarray:
+    """Per-vertex eccentricity estimate, in hops (host-side, O(k(N + M))).
+
+    One hop-BFS from a landmark ``L_i`` gives hop distances ``h_i(v)``;
+    with ``H_i = ecc(L_i)`` (in hops, observed), the triangle inequality
+    bounds ``ecc(v) <= H_i + h_i(v)``, and a vertex far from *any*
+    landmark is genuinely eccentric — so the estimate is the **max over
+    the ``n_landmarks`` highest-degree landmarks** of each per-landmark
+    estimate.  A single landmark under-ranks vertices that happen to sit
+    near it but far from the rest of the graph; additional vantage
+    points recover them.  The absolute value is still crude, but the
+    *ordering* is what batch formation needs: sources estimated far run
+    more stepping rounds, so grouping nearby estimates keeps a vmapped
+    batch from paying one outlier's rounds.  Vertices disconnected from
+    a landmark take ``2 * H_i + 1`` for it (worst bucket).
+    """
+    n = hg.n
+    if n == 0:
+        return np.zeros(0, np.float32)
+    if n_landmarks < 1:
+        raise ValueError("n_landmarks must be >= 1")
+    row_ptr = np.asarray(hg.row_ptr, np.int64)
+    dst = np.asarray(hg.dst, np.int64)
+    deg = np.asarray(hg.deg)
+    # k distinct max-degree landmarks, ties broken by vertex id (stable)
+    landmarks = np.argsort(-deg, kind="stable")[:min(n_landmarks, n)]
+    # max over the landmarks that actually *reach* a vertex: on a
+    # disconnected graph a foreign component's landmark would otherwise
+    # contribute a flat disconnection constant that swamps the local
+    # ordering.  Vertices unreached by every landmark share the worst
+    # bucket (they have no ordering information at all).
+    ecc = np.full(n, -1, np.int64)
+    worst = 1
+    for lm in landmarks:
+        hop = _hop_bfs(row_ptr, dst, n, int(lm))
+        h_max = int(hop.max())
+        ecc = np.where(hop >= 0, np.maximum(ecc, h_max + hop), ecc)
+        worst = max(worst, 2 * h_max + 1)
+    return np.where(ecc >= 0, ecc, worst).astype(np.float32)
 
 
 GraphSpec = Union[HostGraph, DeviceGraph, Callable[[], HostGraph]]
@@ -193,11 +220,13 @@ class GraphEngine(_EngineBase):
     tier = "single"
 
     def __init__(self, gid: str, hg, backend: str,
-                 alpha: float, beta: float, device=None, **backend_opts):
+                 alpha: float, beta: float, device=None,
+                 max_iters: int = 1_000_000, **backend_opts):
         super().__init__()
         self.gid = gid
         self.host = hg
         self.device = device
+        self.max_iters = max_iters
         g = hg.to_device() if isinstance(hg, HostGraph) else hg
         if device is not None:
             g = jax.device_put(g, device)
@@ -222,7 +251,7 @@ class GraphEngine(_EngineBase):
         return sssp_batch(
             self.g, np.asarray(sources, np.int32), backend=self.backend,
             layout=self.layout, alpha=self.alpha, beta=self.beta,
-            goal=goal, goal_params=goal_params)
+            max_iters=self.max_iters, goal=goal, goal_params=goal_params)
 
 
 class ShardedGraphEngine(_EngineBase):
@@ -250,7 +279,8 @@ class ShardedGraphEngine(_EngineBase):
 
     def __init__(self, gid: str, hg, alpha: float, beta: float,
                  devices=None, version: str = "v2", fused_rounds: int = 0,
-                 backend: str = "segment_min", **blocked_opts):
+                 backend: str = "segment_min", capacity: int = 0,
+                 max_iters: int = 1_000_000, **blocked_opts):
         super().__init__()
         self.gid = gid
         self.host = hg
@@ -260,6 +290,8 @@ class ShardedGraphEngine(_EngineBase):
         self.beta = beta
         self.version = version
         self.fused_rounds = fused_rounds
+        self.capacity = capacity
+        self.max_iters = max_iters
         self.backend = _shard_backend_name(backend)
         devs = tuple(devices) if devices else tuple(jax.devices())
         self.devices = devs
@@ -283,6 +315,7 @@ class ShardedGraphEngine(_EngineBase):
         dist, parent, metrics = sssp_distributed_batch(
             self.sg, np.asarray(sources, np.int32), self.mesh, ("graph",),
             version=self.version, fused_rounds=self.fused_rounds,
+            capacity=self.capacity, max_iters=self.max_iters,
             alpha=self.alpha, beta=self.beta, goal=goal,
             goal_params=goal_params, backend=self.backend,
             blocked=self.blocked)
@@ -329,16 +362,60 @@ class GraphRegistry:
     eagerly instead of letting the next query pay the cold build.
     """
 
-    def __init__(self, capacity: int = 4, *, backend: str = "segment_min",
+    def __init__(self, capacity: Optional[int] = None, *,
+                 config: Optional[EngineConfig] = None,
+                 backend: str = "segment_min",
                  alpha: float = 3.0, beta: float = 0.9,
                  shard_threshold_n: Optional[int] = None,
                  shard_threshold_m: Optional[int] = None,
                  shard_devices=None, shard_version: str = "v2",
                  shard_backend: str = "segment_min",
                  **backend_opts):
+        if config is not None:
+            # the config is the one option surface — loose kwargs (other
+            # than capacity, which sizes this cache) must stay unset
+            loose = (backend != "segment_min" or alpha != 3.0 or beta != 0.9
+                     or shard_threshold_n is not None
+                     or shard_threshold_m is not None
+                     or shard_devices is not None or shard_version != "v2"
+                     or shard_backend != "segment_min" or backend_opts)
+            if loose:
+                raise ConfigError("pass registry options through config=, "
+                                  "not alongside it")
+            config.validate_serving()
+            backend = config.backend
+            alpha, beta = config.alpha, config.beta
+            shard_threshold_n = config.shard_threshold_n
+            shard_threshold_m = config.shard_threshold_m
+            shard_devices = resolve_devices(config.devices)
+            shard_version = config.shard_version
+            shard_backend = config.effective_shard_backend
+            for name in ("block_v", "tile_e", "use_kernel"):
+                v = getattr(config, name)
+                if v is not None:
+                    backend_opts[name] = v
+            backend_opts["interpret"] = config.interpret
+            if capacity is None:
+                capacity = config.registry_capacity
+        else:
+            config = EngineConfig(
+                backend=relax.get_backend(backend).name, alpha=alpha,
+                beta=beta, shard_threshold_n=shard_threshold_n,
+                shard_threshold_m=shard_threshold_m,
+                shard_version=shard_version,
+                # explicit, so the stored config agrees with this
+                # registry's behavior (the loose default pins the
+                # sharded tier to segment_min; no blocked derivation)
+                shard_backend=_shard_backend_name(shard_backend),
+                interpret=backend_opts.get("interpret", True),
+                **{k: v for k, v in backend_opts.items()
+                   if k in ("block_v", "tile_e", "use_kernel")})
+        if capacity is None:
+            capacity = 4
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
+        self.config = config
         self.default_backend = relax.get_backend(backend).name
         self.alpha = alpha
         self.beta = beta
@@ -348,6 +425,11 @@ class GraphRegistry:
         self.shard_devices = tuple(shard_devices) if shard_devices else None
         self.shard_version = shard_version
         self.shard_backend = _shard_backend_name(shard_backend)
+        # engine-variant knobs ride the config end-to-end (nothing a
+        # resolve()-accepted config declares is silently dropped)
+        self.shard_fused_rounds = config.fused_rounds
+        self.shard_capacity = config.compact_capacity
+        self.max_iters = config.max_iters
         self._lock = threading.RLock()
         self._specs: Dict[str, GraphSpec] = {}
         self._tiers: Dict[str, str] = {}
@@ -553,13 +635,18 @@ class GraphRegistry:
         if tier == "sharded":
             # only the blocked layout's geometry opts apply mesh-side
             blocked_opts = {k: v for k, v in self.backend_opts.items()
-                            if k in ("block_v", "tile_e")}
+                            if k in ("block_v", "tile_e", "use_kernel",
+                                     "interpret")}
             return ShardedGraphEngine(gid, hg, self.alpha, self.beta,
                                       devices=self.shard_devices,
                                       version=self.shard_version,
+                                      fused_rounds=self.shard_fused_rounds,
+                                      capacity=self.shard_capacity,
+                                      max_iters=self.max_iters,
                                       backend=backend, **blocked_opts)
         return GraphEngine(gid, hg, backend, self.alpha, self.beta,
-                           device=device, **self.backend_opts)
+                           device=device, max_iters=self.max_iters,
+                           **self.backend_opts)
 
     def evict(self, gid: str, backend: Optional[str] = None,
               device=None) -> bool:

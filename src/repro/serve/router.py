@@ -30,8 +30,14 @@ every execution unit busy.
   dominates the pool (``replicate_factor`` x the mean of the others, and
   at least ``replicate_min_depth``), the router replicates that device's
   hottest graph onto the least-loaded device; the registry builds the
-  replica engine there on first use (outside every lock).  Replicas are
-  never torn down mid-run — the LRU evicts cold ones naturally.
+  replica engine there on first use (outside every lock).
+* **Replica decay** — the inverse move: routed traffic is accounted in
+  windows of ``decay_window`` placed queries, and a replica whose share
+  of its graph's window traffic stays at ~0 (``<= decay_share``) for
+  ``decay_windows`` consecutive windows is removed from the placement
+  (its cached engine then ages out of the registry LRU naturally).  The
+  replica carrying the graph's largest share is never decayed, so every
+  gid keeps >= 1 placement.
 * **Engine tiers** — graphs the registry classifies as sharded
   (:class:`~repro.serve.registry.ShardedGraphEngine`) span the whole
   mesh, so they bypass per-device placement and run on a dedicated
@@ -48,6 +54,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 
+from ..core.config import ConfigError, EngineConfig, resolve_devices
 from .queries import Query
 from .registry import GraphRegistry
 from .scheduler import QueryScheduler
@@ -64,22 +71,47 @@ class QueryRouter:
     knobs are forwarded to the per-device schedulers (``max_pending``
     bounds *each* device queue — total admission capacity is
     ``P * max_pending``).
+
+    ``config`` accepts an :class:`~repro.core.config.EngineConfig` in
+    place of the loose serving kwargs (``max_batch`` / ``max_pending`` /
+    ``ecc_batching``, and ``devices`` when the config pins them) — the
+    :class:`repro.api.Solver` routed tier's path.
+
+    ``decay_window``/``decay_share``/``decay_windows`` control replica
+    decay (see module docstring); ``decay_window=0`` disables it.
     """
 
     def __init__(self, registry: GraphRegistry, *, devices=None,
+                 config: Optional[EngineConfig] = None,
                  max_batch: int = 8, backend: Optional[str] = None,
                  admit_window: Optional[int] = None,
                  ecc_batching: bool = True,
                  max_pending: Optional[int] = None,
                  feedback: bool = True,
                  replicate_factor: float = 4.0,
-                 replicate_min_depth: int = 16):
+                 replicate_min_depth: int = 16,
+                 decay_window: int = 256,
+                 decay_share: float = 0.05,
+                 decay_windows: int = 3):
+        if config is not None:
+            if (max_batch != 8 or backend is not None
+                    or max_pending is not None or not ecc_batching):
+                raise ConfigError("pass router options through config=, "
+                                  "not alongside it")
+            max_batch = config.max_batch
+            max_pending = config.max_pending
+            ecc_batching = config.ecc_batching
+            if devices is None:
+                devices = resolve_devices(config.devices)
         devices = (list(devices) if devices is not None
                    else list(jax.devices()))
         if not devices:
             raise ValueError("need at least one device")
         if replicate_factor < 1.0:
             raise ValueError("replicate_factor must be >= 1")
+        if decay_window < 0 or decay_windows < 1 or decay_share < 0:
+            raise ValueError("decay_window must be >= 0, decay_windows "
+                             ">= 1, decay_share >= 0")
         self.registry = registry
         self.devices = devices
         self.backend = backend
@@ -102,9 +134,17 @@ class QueryRouter:
         self._n_placed = [0] * len(self.schedulers)  # graphs placed
         self._gid_load: Dict[Tuple[int, str], int] = {}
         self._mesh_gids: set = set()                 # sharded gids served
+        # replica decay accounting (per routing window)
+        self.decay_window = decay_window
+        self.decay_share = decay_share
+        self.decay_windows = decay_windows
+        self._window_routed = 0
+        self._window_traffic: Dict[Tuple[int, str], int] = {}
+        self._cold_streak: Dict[Tuple[int, str], int] = {}
         self.n_routed = 0
         self.n_replications = 0
         self.n_rebuilds = 0
+        self.n_decays = 0
         # replica consistency: a re-register() drops the cached engines,
         # but an already-placed replica would otherwise serve its next
         # query from a cold build; rebuild every replica eagerly instead
@@ -166,6 +206,44 @@ class QueryRouter:
         placed.append(cold)
         self._n_placed[cold] += 1
         self.n_replications += 1
+
+    def _maybe_decay_locked(self) -> None:
+        """Close one routing window; shrink placements of replicas whose
+        traffic share stayed ~0 for ``decay_windows`` consecutive windows
+        (the teardown counterpart of :meth:`_maybe_replicate_locked`)."""
+        if not self.decay_window \
+                or self._window_routed < self.decay_window:
+            return
+        gid_totals: Dict[str, int] = {}
+        for (_, gid), c in self._window_traffic.items():
+            gid_totals[gid] = gid_totals.get(gid, 0) + c
+        for gid, placed in self._placement.items():
+            total = gid_totals.get(gid, 0)
+            if len(placed) < 2 or total == 0:
+                # nothing to shrink / an entirely-cold gid keeps its
+                # placement (decay reacts to *skew*, not absence)
+                for i in placed:
+                    self._cold_streak.pop((i, gid), None)
+                continue
+            shares = {i: self._window_traffic.get((i, gid), 0) / total
+                      for i in placed}
+            # the replica carrying the largest share survives always
+            keep = max(placed, key=lambda i: (shares[i], -i))
+            for i in list(placed):
+                key = (i, gid)
+                if i != keep and shares[i] <= self.decay_share:
+                    streak = self._cold_streak.get(key, 0) + 1
+                    if streak >= self.decay_windows:
+                        placed.remove(i)
+                        self._n_placed[i] = max(self._n_placed[i] - 1, 0)
+                        self._cold_streak.pop(key, None)
+                        self.n_decays += 1
+                    else:
+                        self._cold_streak[key] = streak
+                else:
+                    self._cold_streak.pop(key, None)
+        self._window_traffic = {}
+        self._window_routed = 0
 
     def _rebuild_replicas(self, gid: str, generation: int) -> None:
         """Registry invalidation hook: rebuild every placed replica of
@@ -268,7 +346,11 @@ class QueryRouter:
             self._load[idx] += 1
             self._gid_load[(idx, gid)] = \
                 self._gid_load.get((idx, gid), 0) + 1
+            self._window_routed += 1
+            self._window_traffic[(idx, gid)] = \
+                self._window_traffic.get((idx, gid), 0) + 1
             self._maybe_replicate_locked()
+            self._maybe_decay_locked()
         # outside the router lock: a done future runs the callback inline
         fut.add_done_callback(lambda _f, i=idx, g=gid: self._done(i, g))
         return fut
@@ -357,6 +439,7 @@ class QueryRouter:
                 "n_routed": self.n_routed,
                 "n_replications": self.n_replications,
                 "n_rebuilds": self.n_rebuilds,
+                "n_decays": self.n_decays,
                 "n_batches": n_batches,
                 "n_done": n_done,
                 "n_expired": sum(s["n_expired"] for s in per),

@@ -1,0 +1,309 @@
+"""The solver facade: one EngineConfig + SolveSpec pair must drive all
+four goal kinds on the single-device, sharded, and routed paths with
+bitwise dist/parent (+ logical metric) parity against the pre-facade
+entry points — and the deprecated ``sssp_*`` shims must warn while
+staying bitwise-identical to the facade."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+
+from repro.api import EngineConfig, SolveSpec, Solver
+from repro.core.config import FacadeDeprecationWarning
+from repro.core.sssp import LOGICAL_METRIC_FIELDS, sssp, sssp_batch
+from repro.data.generators import kronecker, road_grid
+
+SIDE = 12
+
+
+@pytest.fixture(scope="module")
+def road():
+    return road_grid(SIDE, seed=2)
+
+
+def all_kind_specs(n, single=True):
+    """One spec per goal kind (scalar or batch shape)."""
+    if single:
+        return [SolveSpec.tree(0), SolveSpec.p2p(0, n - 1),
+                SolveSpec.bounded(0, 2.5), SolveSpec.knear(0, 5)]
+    return [SolveSpec.tree([0, 5]), SolveSpec.p2p([0, 5], [n - 1, 30]),
+            SolveSpec.bounded([0, 5], [2.5, 1.5]),
+            SolveSpec.knear([0, 5], [5, 3])]
+
+
+def engine_reference(dg, spec):
+    """The pre-facade engine call equivalent to ``spec``."""
+    if spec.batched:
+        return sssp_batch(dg, list(spec.sources), goal=spec.kind,
+                          goal_params=spec.slot_params())
+    return sssp(dg, spec.sources, goal=spec.kind,
+                goal_param=spec.goal_param)
+
+
+def assert_bitwise(res, ref, msg=""):
+    d_ref, p_ref, m_ref = ref
+    np.testing.assert_array_equal(np.asarray(res.dist), np.asarray(d_ref),
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(res.parent),
+                                  np.asarray(p_ref), err_msg=msg)
+    for f in LOGICAL_METRIC_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(res.metrics, f)),
+                                      np.asarray(getattr(m_ref, f)),
+                                      err_msg=f"{msg}:{f}")
+
+
+# ---------------------------------------------------------------------------
+# SolveSpec / SolveResult semantics
+# ---------------------------------------------------------------------------
+
+def test_solvespec_validation():
+    with pytest.raises(ValueError):
+        SolveSpec(sources=0, kind="nope")
+    with pytest.raises(ValueError):
+        SolveSpec.p2p(0, None)                      # missing param
+    with pytest.raises(ValueError):
+        SolveSpec(sources=0, kind="tree", target=3)  # foreign param
+    with pytest.raises(ValueError):
+        SolveSpec.p2p(0, -1)
+    with pytest.raises(ValueError):
+        SolveSpec.knear(0, 0)
+    with pytest.raises(ValueError):
+        SolveSpec.bounded(0, -1.0)
+    with pytest.raises(ValueError):
+        SolveSpec.p2p([0, 1], [2])                  # length mismatch
+    with pytest.raises(ValueError):
+        SolveSpec.p2p(0, [1, 2])                    # per-source on scalar
+    with pytest.raises(ValueError):
+        SolveSpec.tree([])
+    # normalization: sequences become tuples, scalars stay scalars
+    spec = SolveSpec.p2p([0, 1], 7)
+    assert spec.sources == (0, 1) and spec.batched
+    assert spec.slot_params() == [7, 7]
+    assert not SolveSpec.tree(3).batched
+
+
+def test_solve_result_tuple_compat_and_lazy_shaping(road):
+    solver = Solver.open(road)
+    res = solver.solve(SolveSpec.p2p(0, 100))
+    dist, parent, metrics = res                      # legacy unpacking
+    assert np.asarray(dist).shape == (road.n,)
+    assert res.distance() == float(np.asarray(dist)[100])
+    path = res.paths()
+    assert path[0] == 0 and path[-1] == 100
+    # every hop is a real parent edge
+    par = np.asarray(parent)
+    assert all(par[path[i + 1]] == path[i] for i in range(len(path) - 1))
+    nm = res.normalized()
+    assert nm["n_rounds"] == int(np.asarray(metrics.n_rounds))
+    # batch shaping: per-slot paths/distances/metrics
+    rb = solver.solve(SolveSpec.p2p([0, 5], [100, 30]))
+    assert rb.distance(slot=1) == float(np.asarray(rb.dist)[1, 30])
+    paths = rb.paths()
+    assert paths[0][-1] == 100 and paths[1][-1] == 30
+    # explicit targets accept any sequence type (and validate length)
+    assert rb.paths(np.array([100, 30])) == paths
+    with pytest.raises(ValueError):
+        rb.paths([100, 30, 7])
+    assert rb.normalized(slot=0)["reachable"] > 0
+    kn = solver.solve(SolveSpec.knear(0, 3))
+    assert len(kn.nearest()) == 3
+
+
+# ---------------------------------------------------------------------------
+# parity: single-device tier
+# ---------------------------------------------------------------------------
+
+def test_single_tier_parity_all_kinds(road):
+    dg = road.to_device()
+    solver = Solver.open(road)
+    for spec in all_kind_specs(road.n) + all_kind_specs(road.n,
+                                                        single=False):
+        assert_bitwise(solver.solve(spec), engine_reference(dg, spec),
+                       msg=f"{spec.kind}/batched={spec.batched}")
+
+
+def test_single_tier_blocked_backend_parity(road):
+    dg = road.to_device()
+    solver = Solver.open(road, EngineConfig(backend="blocked_pallas",
+                                            block_v=64, tile_e=64))
+    for spec in (SolveSpec.tree(0), SolveSpec.p2p([0, 5], [100, 30])):
+        res = solver.solve(spec)
+        ref = engine_reference(dg, spec)             # segment_min reference
+        np.testing.assert_array_equal(np.asarray(res.dist),
+                                      np.asarray(ref[0]))
+        np.testing.assert_array_equal(np.asarray(res.parent),
+                                      np.asarray(ref[1]))
+        assert np.all(np.asarray(res.metrics.n_tiles_scanned) > 0)
+
+
+# ---------------------------------------------------------------------------
+# parity: sharded tier (1-shard in-process; 8-shard in a subprocess below)
+# ---------------------------------------------------------------------------
+
+def test_sharded_tier_parity_all_kinds(road):
+    dg = road.to_device()
+    solver = Solver.open(road, EngineConfig(tier="sharded"))
+    assert solver.resolved.n_shards == len(jax.devices())
+    for spec in all_kind_specs(road.n) + [SolveSpec.tree([0, 5])]:
+        assert_bitwise(solver.solve(spec), engine_reference(dg, spec),
+                       msg=f"sharded/{spec.kind}")
+
+
+def test_sharded_tier_blocked_backend_parity(road):
+    dg = road.to_device()
+    solver = Solver.open(road, EngineConfig(tier="sharded",
+                                            shard_backend="blocked",
+                                            block_v=64, tile_e=64))
+    spec = SolveSpec.p2p([0, 5], [100, 30])
+    res = solver.solve(spec)
+    ref = engine_reference(dg, spec)
+    np.testing.assert_array_equal(np.asarray(res.dist), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(res.parent),
+                                  np.asarray(ref[1]))
+    assert np.all(np.asarray(res.metrics.n_tiles_scanned) > 0)
+
+
+# ---------------------------------------------------------------------------
+# parity: routed serving tier
+# ---------------------------------------------------------------------------
+
+def test_routed_tier_parity_all_kinds(road):
+    """The facade's routed path must serve byte-identical answers to the
+    pre-facade registry/router stack (same finalized masking)."""
+    from repro.serve.queries import Query
+    from repro.serve.registry import GraphRegistry
+    from repro.serve.router import QueryRouter
+
+    with Solver.open(road, EngineConfig(tier="routed",
+                                        max_batch=2)) as solver:
+        reg = GraphRegistry(capacity=4)
+        reg.register("g", road)
+        router = QueryRouter(reg, max_batch=2)
+        for spec in all_kind_specs(road.n):
+            res = solver.solve(spec)
+            kw = {"p2p": {"target": spec.target},
+                  "bounded": {"bound": spec.bound},
+                  "knear": {"k": spec.k}}.get(spec.kind, {})
+            fut = router.submit(Query(gid="g", source=spec.sources,
+                                      kind=spec.kind, **kw))
+            router.drain()
+            ref = fut.result(timeout=60)
+            np.testing.assert_array_equal(np.asarray(res.dist), ref.dist,
+                                          err_msg=spec.kind)
+            np.testing.assert_array_equal(np.asarray(res.parent),
+                                          ref.parent, err_msg=spec.kind)
+            assert res.served_by is not None
+        # batch specs fan out one query per source and stack the answers
+        rb = solver.solve(SolveSpec.tree([0, 5, 9]))
+        assert np.asarray(rb.dist).shape == (3, road.n)
+        d_ref, _, _ = sssp(road.to_device(), 9)
+        np.testing.assert_array_equal(np.asarray(rb.dist)[2],
+                                      np.asarray(d_ref))
+        # batched metrics need an explicit slot on every tier
+        with pytest.raises(ValueError):
+            rb.normalized()
+        assert rb.normalized(slot=1)["reachable"] > 0
+        assert solver.router.stats()["n_done"] >= 7
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_deprecated_wrappers_warn_and_match_facade(road):
+    from repro.core.sssp import sssp_bounded, sssp_knear, sssp_p2p
+    dg = road.to_device()
+    solver = Solver.open(road)
+    for shim, spec in [
+            (lambda: sssp_p2p(dg, 0, 100), SolveSpec.p2p(0, 100)),
+            (lambda: sssp_bounded(dg, 0, 2.5), SolveSpec.bounded(0, 2.5)),
+            (lambda: sssp_knear(dg, 0, 5), SolveSpec.knear(0, 5))]:
+        with pytest.warns(FacadeDeprecationWarning):
+            d_old, p_old, m_old = shim()
+        assert_bitwise(solver.solve(spec), (d_old, p_old, m_old),
+                       msg=spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# 8-shard distributed parity (subprocess: the main process keeps 1 device)
+# ---------------------------------------------------------------------------
+
+SCRIPT_8SHARD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+from repro.api import EngineConfig, SolveSpec, Solver
+from repro.core.sssp import LOGICAL_METRIC_FIELDS
+from repro.data.generators import kronecker, road_grid
+
+for name, g in [("kron", kronecker(9, 8, seed=1)),
+                ("road", road_grid(20, seed=2))]:
+    ref = Solver.open(g)                      # single-device reference
+    for cfg_name, cfg in [
+            ("segment_min", EngineConfig(tier="sharded")),
+            ("blocked", EngineConfig(tier="sharded",
+                                     shard_backend="blocked",
+                                     block_v=128, tile_e=128)),
+            ("v3", EngineConfig(tier="sharded", shard_version="v3"))]:
+        sh = Solver.open(g, cfg)
+        assert sh.resolved.n_shards == 8, sh.resolved
+        for spec in [SolveSpec.tree(int(np.argmax(g.deg))),
+                     SolveSpec.p2p(0, g.n - 1),
+                     SolveSpec.bounded(0, 2.0),
+                     SolveSpec.knear(0, 8),
+                     SolveSpec.tree([0, 5])]:
+            a = sh.solve(spec)
+            b = ref.solve(spec)
+            assert np.array_equal(np.asarray(a.dist), np.asarray(b.dist)), \
+                (name, cfg_name, spec.kind)
+            assert np.array_equal(np.asarray(a.parent),
+                                  np.asarray(b.parent)), \
+                (name, cfg_name, spec.kind)
+            for f in LOGICAL_METRIC_FIELDS:
+                assert np.array_equal(np.asarray(getattr(a.metrics, f)),
+                                      np.asarray(getattr(b.metrics, f))), \
+                    (name, cfg_name, spec.kind, f)
+        print(f"{name}/{cfg_name}: OK")
+print("FACADE_8SHARD_OK")
+"""
+
+
+@pytest.mark.slow
+def test_facade_8shard_parity_subprocess():
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT_8SHARD, src_dir],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    assert "FACADE_8SHARD_OK" in proc.stdout, \
+        f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-2000:]}"
+
+
+# ---------------------------------------------------------------------------
+# service facade rides the same config
+# ---------------------------------------------------------------------------
+
+def test_sssp_service_accepts_engine_config(road):
+    from repro.serve.sssp_service import SsspRequest, SsspService
+    svc = SsspService(road, config=EngineConfig(max_batch=4))
+    reqs = [svc.submit(SsspRequest(rid=i, source=s))
+            for i, s in enumerate((0, 5, 9))]
+    svc.run()
+    d_ref, _, _ = sssp(road.to_device(), 5)
+    np.testing.assert_array_equal(reqs[1].dist, np.asarray(d_ref))
+
+
+def test_batched_result_shaping_requires_slot(road):
+    solver = Solver.open(road)
+    rp = solver.solve(SolveSpec.p2p([0, 5], [100, 30]))
+    with pytest.raises(ValueError, match="slot"):
+        rp.distance()
+    rk = solver.solve(SolveSpec.knear([0, 5], [3, 4]))
+    with pytest.raises(ValueError, match="slot"):
+        rk.nearest()
+    assert len(rk.nearest(slot=1)) == 4

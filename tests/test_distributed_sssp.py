@@ -68,7 +68,7 @@ print("DISTRIBUTED_OK")
 # goal-aware early exit + the batch entry point (the sharded serving
 # tier's interface) keep bitwise parity with the single-device engine
 from repro.core.distributed import sssp_distributed_batch
-from repro.core.sssp import sssp_batch, sssp_p2p
+from repro.core.sssp import sssp_batch, sssp
 
 g = road_grid(20, seed=2)
 sg = shard_graph(g, 8)
@@ -86,7 +86,7 @@ for i, t in enumerate(tgts):
         == np.asarray(d_r)[i, int(t)].tobytes(), i
 assert np.array_equal(np.asarray(m_b.n_rounds), np.asarray(m_r.n_rounds))
 s, t = int(srcs[0]), int(tgts[0])
-ds, _, ms = sssp_p2p(dg, s, t)
+ds, _, ms = sssp(dg, s, goal="p2p", goal_param=t)
 for ver in ["v1", "v2", "v3"]:
     d, p, m = sssp_distributed(sg, s, mesh, ("graph",), version=ver,
                                goal="p2p", goal_param=t)
@@ -115,7 +115,7 @@ def test_distributed_goal_batch_single_shard():
 
     from repro.core.distributed import (shard_graph, sssp_distributed,
                                         sssp_distributed_batch)
-    from repro.core.sssp import sssp_batch
+    from repro.core.sssp import sssp, sssp_batch
     from repro.data.generators import road_grid
 
     g = road_grid(12, seed=2)
@@ -137,8 +137,8 @@ def test_distributed_goal_batch_single_shard():
     # bounded goal on the single-source entry point
     d_b, _, _ = sssp_distributed(sg, 0, mesh, ("graph",), goal="bounded",
                                  goal_param=2.5)
-    from repro.core.sssp import sssp_bounded
-    d_bref, _, _ = sssp_bounded(g.to_device(), 0, 2.5)
+    d_bref, _, _ = sssp(g.to_device(), 0, goal="bounded",
+                        goal_param=2.5)
     np.testing.assert_array_equal(np.asarray(d_b)[:n], np.asarray(d_bref))
     # o-o-b p2p targets are rejected against the real vertex count (a jit
     # gather would clamp silently; padding vertices never settle)

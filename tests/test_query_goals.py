@@ -2,8 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.sssp import (sssp, sssp_batch, sssp_bounded, sssp_knear,
-                             sssp_p2p)
+from repro.core.sssp import sssp, sssp_batch
 from repro.data.generators import kronecker, road_grid, uniform_random
 
 SCALE = 8
@@ -33,7 +32,7 @@ def test_p2p_matches_full_tree_on_all_benchmark_graphs():
         nz = np.where(g.deg > 0)[0]
         s, t = (int(v) for v in rng.choice(nz, 2, replace=False))
         d_full, p_full, m_full = sssp(dg, s)
-        d_p2p, p_p2p, m_p2p = sssp_p2p(dg, s, t)
+        d_p2p, p_p2p, m_p2p = sssp(dg, s, goal="p2p", goal_param=t)
         d_full, d_p2p = np.asarray(d_full), np.asarray(d_p2p)
         # bitwise-equal target distance (and parent, when reachable)
         assert d_p2p[t].tobytes() == d_full[t].tobytes(), name
@@ -48,7 +47,7 @@ def test_p2p_saves_rounds_on_road():
     dg = g.to_device()
     # nearby target on a huge-diameter graph: the window sweep stops early
     d_full, _, m_full = sssp(dg, 0)
-    d_p2p, _, m_p2p = sssp_p2p(dg, 0, 42)
+    d_p2p, _, m_p2p = sssp(dg, 0, goal="p2p", goal_param=42)
     assert np.asarray(d_p2p)[42] == np.asarray(d_full)[42]
     assert int(m_p2p.n_rounds) < int(m_full.n_rounds)
 
@@ -60,7 +59,7 @@ def test_bounded_settles_everything_within_bound():
     d_full, _, m_full = sssp(dg, s)
     d_full = np.asarray(d_full)
     bound = float(np.percentile(d_full[np.isfinite(d_full)], 40))
-    d_b, _, m_b = sssp_bounded(dg, s, bound)
+    d_b, _, m_b = sssp(dg, s, goal="bounded", goal_param=bound)
     d_b = np.asarray(d_b)
     within = d_full <= bound
     np.testing.assert_array_equal(d_b[within], d_full[within])
@@ -73,7 +72,7 @@ def test_knear_returns_k_smallest_final_distances():
     s = int(np.argmax(g.deg))
     k = 12
     d_full, _, _ = sssp(dg, s)
-    d_k, _, _ = sssp_knear(dg, s, k)
+    d_k, _, _ = sssp(dg, s, goal="knear", goal_param=k)
     d_full, d_k = np.asarray(d_full), np.asarray(d_k)
     # the k+1 smallest values (source included) are settled and exact
     np.testing.assert_array_equal(np.sort(d_k)[:k + 1],
@@ -106,6 +105,6 @@ def test_goal_validation():
     with pytest.raises(ValueError):
         sssp_batch(dg, [0, 1], goal="p2p", goal_params=[1])  # shape mismatch
     with pytest.raises(ValueError):
-        sssp_p2p(dg, 0, dg.n + 3)          # o-o-b target would clamp in jit
+        sssp(dg, 0, goal="p2p", goal_param=dg.n + 3)   # o-o-b clamps in jit
     with pytest.raises(ValueError):
         sssp_batch(dg, [0, 1], goal="p2p", goal_params=[1, -2])

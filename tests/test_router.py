@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 import jax
 
-from repro.core.sssp import sssp, sssp_p2p
+from repro.core.sssp import sssp
 from repro.data.generators import kronecker, road_grid, uniform_random
 from repro.serve.queries import Query
 from repro.serve.registry import GraphRegistry, ShardedGraphEngine
@@ -94,7 +94,7 @@ def test_sharded_tier_served_by_mesh_scheduler():
     assert isinstance(reg.peek("big"), ShardedGraphEngine)
     assert f_small.result(timeout=0).served_by != "mesh"
     # sharded-tier answer matches the single-device engine bitwise
-    d_ref, _, _ = sssp_p2p(road.to_device(), 0, 100)
+    d_ref, _, _ = sssp(road.to_device(), 0, goal="p2p", goal_param=100)
     assert np.float32(res.distance).tobytes() \
         == np.asarray(d_ref)[100].tobytes()
     settled = np.isfinite(np.asarray(res.dist))
@@ -285,3 +285,45 @@ def test_sharded_tier_blocked_backend_serves_bitwise():
         d_ref, p_ref, _ = sssp(dg, s)
         np.testing.assert_array_equal(res.dist, np.asarray(d_ref))
         np.testing.assert_array_equal(res.parent, np.asarray(p_ref))
+
+
+def test_replica_decay_shrinks_cold_placement():
+    """A replica whose share of its gid's traffic stays ~0 for
+    decay_windows consecutive routing windows is torn down (and the
+    surviving replica is the one that carried the traffic)."""
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2,
+                         decay_window=8, decay_windows=2, decay_share=0.0)
+    router.plan_placement({"road": 1.0})     # road on both devices
+    router.plan_placement({"kron": 1.0})     # kron on both devices
+    assert sorted(router.stats()["placement"]["road"]) == ["dev0", "dev1"]
+    assert sorted(router.stats()["placement"]["kron"]) == ["dev0", "dev1"]
+    # drain after every submit: the queues are empty at each routing
+    # decision, ties break to dev0, and dev1's share of road traffic
+    # stays 0 through both windows
+    for s in range(16):
+        router.submit(Query(gid="road", source=s % 100))
+        router.drain()
+    st = router.stats()
+    assert st["n_decays"] >= 1
+    assert st["placement"]["road"] == ["dev0"]
+    # an entirely-cold gid keeps its placement: decay reacts to skew
+    # within a gid's traffic, not to the gid being idle
+    assert sorted(st["placement"]["kron"]) == ["dev0", "dev1"]
+    # traffic keeps serving from the surviving replica
+    fut = router.submit(Query(gid="road", source=3))
+    router.drain()
+    assert fut.result(timeout=0).served_by == "dev0"
+
+
+def test_replica_decay_disabled_with_zero_window():
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2,
+                         decay_window=0)
+    router.plan_placement({"road": 1.0})
+    for s in range(12):
+        router.submit(Query(gid="road", source=s))
+        router.drain()
+    st = router.stats()
+    assert st["n_decays"] == 0
+    assert sorted(st["placement"]["road"]) == ["dev0", "dev1"]

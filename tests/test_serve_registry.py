@@ -289,3 +289,43 @@ def test_sharded_tier_backend_keys_and_blocked_parity():
                          shard_backend="blocked", block_v=64, tile_e=64)
     reg2.register("big", road)
     assert reg2.engine("big").backend == "blocked"
+
+
+def test_multi_landmark_eccentricity_dominates_single_landmark():
+    """The default hint is the max over k max-degree landmarks' hop-BFS
+    estimates — pointwise >= the single-landmark estimate (whose landmark
+    is in the set), and still ordering the grid periphery above the hub
+    region."""
+    g = road_grid(14, seed=5)
+    e1 = estimate_eccentricity(g, n_landmarks=1)
+    ek = estimate_eccentricity(g)                 # default: 4 landmarks
+    assert ek.shape == e1.shape
+    assert np.all(ek >= e1)
+    # on a degree-skewed graph the extra vantage points genuinely add
+    # information (on the uniform road grid the top-degree landmarks sit
+    # adjacent, so the estimates coincide — covered by >= above)
+    gk = kronecker(8, 8, seed=2)
+    assert np.any(estimate_eccentricity(gk)
+                  > estimate_eccentricity(gk, n_landmarks=1))
+    with pytest.raises(ValueError):
+        estimate_eccentricity(g, n_landmarks=0)
+    # a graph smaller than k landmarks still works
+    tiny = road_grid(2, seed=0)
+    assert estimate_eccentricity(tiny, n_landmarks=16).shape == (4,)
+
+
+def test_multi_landmark_keeps_ordering_on_disconnected_graphs():
+    """A foreign component's landmark contributes nothing to a vertex it
+    cannot reach — the per-component ordering survives instead of being
+    swamped by a flat disconnection constant."""
+    from repro.core.graph import build_csr
+    a = kronecker(7, 8, seed=3)
+    m = a.src < a.dst
+    eu = np.concatenate([a.src[m], a.src[m] + a.n])
+    ev = np.concatenate([a.dst[m], a.dst[m] + a.n])
+    ew = np.concatenate([a.w[m], a.w[m]])
+    g = build_csr(2 * a.n, eu, ev, ew)     # two identical components
+    ek = estimate_eccentricity(g)          # landmarks land in both copies
+    for lo, hi in ((0, a.n), (a.n, 2 * a.n)):
+        comp = ek[lo:hi][np.asarray(g.deg[lo:hi]) > 0]
+        assert len(set(comp.tolist())) > 1
