@@ -60,10 +60,17 @@ def pick_sources(g, n_sources: int, seed: int = 0):
     return rng.choice(nz, min(n_sources, nz.size), replace=False)
 
 
-def run_eic(g, sources, alpha=3.0, beta=0.9, backend="segment_min"):
-    """Average EIC metrics + wall time over sources (compile excluded)."""
+def run_eic(g, sources, alpha=3.0, beta=0.9, backend="segment_min",
+            fused_rounds=0):
+    """Average EIC metrics + wall time over sources (compile excluded).
+
+    ``fused_rounds`` (blocked backend only) groups that many relaxation
+    rounds into one megakernel invocation — same logical metrics, fewer
+    ``n_invocations``.
+    """
     solver = Solver.open(g, EngineConfig(backend=backend, alpha=alpha,
-                                         beta=beta))
+                                         beta=beta,
+                                         fused_rounds=fused_rounds))
     # warm-up / compile
     solver.solve(SolveSpec.tree(int(sources[0]))).block_until_ready()
     t_total, mets = 0.0, []

@@ -28,6 +28,89 @@ ICI_BW = 50e9            # bytes/s per link
 ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
 
 
+def fused_relax_roofline(scale: int = 10, deg: int = 8,
+                         fused_rounds: int = 4, block_v: int = 256,
+                         tile_e: int = 256, reps: int = 3) -> dict:
+    """Roofline terms for the fused relaxation megakernel (measured).
+
+    Unlike the dry-run artifacts above, this drives the actual
+    ``edge_relax_fused`` megakernel (interpret mode on CPU) through a
+    whole blocked-backend solve and derives per-invocation traffic from
+    the kernel's own counters — the same numbers the in-kernel metrics
+    fold produces, so nothing is recomputed host-side:
+
+      edge bytes  = n_tiles_scanned * tile_e * 16   (src/dst/w reads +
+                    the dist gather, 4 B per edge slot)
+      state bytes = n_rounds * n_out * 21           (dist/parent
+                    read+write + frontier read+write + deg read)
+      FLOPs       = 2 * nTrav + 2 * n_tiles_scanned * tile_e
+                    (add + window compare on in-window edges, plus the
+                    scheduled compare-plane min per edge slot)
+
+    ``achieved_*`` divides those totals by measured wall time;
+    ``peak_frac_*`` compares against the v5e-like constants at the top
+    of this module (tiny on a CPU interpreter — the point is the
+    instrumentation, which carries unchanged to a real TPU run).
+    ``rounds_per_invocation`` is the fusion win itself (1.0 ≡ unfused).
+    """
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.sssp import sssp
+    from repro.data.generators import kronecker
+
+    g = kronecker(scale, deg, seed=2)
+    dg = g.to_device()
+    source = int(np.argmax(np.asarray(g.deg)))
+
+    def solve():
+        d, p, m = sssp(dg, source, backend="blocked_pallas",
+                       fused_rounds=fused_rounds, block_v=block_v,
+                       tile_e=tile_e)
+        jax.block_until_ready(d)
+        return m
+
+    m = solve()                                   # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        m = solve()
+    time_s = (time.perf_counter() - t0) / reps
+
+    inv = max(float(m.n_invocations), 1.0)
+    rounds = float(m.n_rounds)
+    tiles = float(m.n_tiles_scanned)
+    n_out = -(-g.n // block_v) * block_v
+    edge_bytes = tiles * tile_e * 16.0
+    state_bytes = rounds * n_out * 21.0
+    byts = edge_bytes + state_bytes
+    flops = 2.0 * float(m.n_trav) + 2.0 * tiles * tile_e
+    return {
+        "arch": "edge_relax_fused", "shape": f"kron{scale}x{deg}",
+        "mesh": "single",
+        "fused_rounds": fused_rounds,
+        "time_s": time_s,
+        "time_s_per_invocation": time_s / inv,
+        "rounds_per_invocation": rounds / inv,
+        "invocations_per_solve": inv,
+        "bytes_per_invocation": byts / inv,
+        "flops_per_invocation": flops / inv,
+        "achieved_bw": byts / time_s,
+        "achieved_flops": flops / time_s,
+        "peak_frac_bw": byts / time_s / HBM_BW,
+        "peak_frac_flops": flops / time_s / PEAK_FLOPS,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": 0.0,
+        "useful_ratio": None,
+        "roofline_fraction": ((flops / PEAK_FLOPS) /
+                              max(flops / PEAK_FLOPS, byts / HBM_BW)),
+        "dominant": ("memory" if byts / HBM_BW > flops / PEAK_FLOPS
+                     else "compute"),
+    }
+
+
 def model_flops_per_device(art: dict) -> float | None:
     meta = art.get("meta", {})
     n_dev = 1
@@ -112,8 +195,23 @@ def main():
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--md", action="store_true")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--fused", action="store_true",
+                    help="also measure the fused relaxation megakernel "
+                         "(runs a real solve; needs PYTHONPATH=src)")
+    ap.add_argument("--fused-scale", type=int, default=10)
     args = ap.parse_args()
     rows = load_all(args.mesh)
+    if args.fused:
+        r = fused_relax_roofline(scale=args.fused_scale)
+        rows.append(r)
+        print(f"# fused_relax kron{args.fused_scale}: "
+              f"{r['rounds_per_invocation']:.2f} rounds/invocation, "
+              f"{r['bytes_per_invocation']:.3g} B + "
+              f"{r['flops_per_invocation']:.3g} FLOP per invocation, "
+              f"achieved {r['achieved_bw']:.3g} B/s "
+              f"({r['peak_frac_bw']:.2e} of HBM peak) / "
+              f"{r['achieved_flops']:.3g} FLOP/s "
+              f"({r['peak_frac_flops']:.2e} of peak) -> {r['dominant']}")
     if args.md:
         print(to_markdown(rows))
     else:

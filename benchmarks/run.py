@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.run [--scale 14] [--sources 4]
         [--backend segment_min|blocked_pallas] [--batch 4]
-        [--full-variants] [--sections fig4,fig5,fig6,table3,backends]
+        [--full-variants]
+        [--sections fig4,fig5,fig6,table3,backends,roofline,serving]
         [--open-loop]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per graph x metric) and
@@ -21,7 +22,14 @@ Sections:
              (segment_min / blocked), plus the fused multi-source
              sssp_batch at ``--batch`` sources per call.  Blocked rows
              report tiles_per_round / tile_reduction from the kernel's
-             frontier-compaction metrics (the skipped-tile win)
+             frontier-compaction metrics (the skipped-tile win) and run
+             both unfused and ``fused_rounds=4`` (the multi-round
+             megakernel), reporting invocations_per_solve /
+             invocation_reduction / tile_regression
+  roofline — fused-megakernel roofline smoke row: achieved vs peak
+             bytes/FLOPs per invocation and rounds-per-invocation,
+             measured from a real blocked solve (benchmarks/roofline.py
+             hosts the model; ``--fused`` there runs it standalone)
   serving  — the multi-device serving plane under Zipf-skewed
              multi-graph traffic (router -> per-device schedulers ->
              registry tiers; mixed p2p/bounded/knear/tree queries):
@@ -121,8 +129,8 @@ def backends(rows, scale, n_sources, batch):
     ``tile_reduction`` (the dense ``(n_dst_blocks, n_tiles)`` scan cost
     over it) — straight from ``SsspMetrics``, not recomputed host-side.
     """
-    print("# backends: segment_min vs blocked_pallas vs distributed"
-          f" (+ sssp_batch x{batch})")
+    print("# backends: segment_min vs blocked_pallas (unfused/fused) vs"
+          f" distributed (+ sssp_batch x{batch})")
     graphs = common.benchmark_graphs(scale)
     for name in [f"gr{scale}_8", "Road", "Urand"]:
         if name not in graphs:
@@ -130,8 +138,10 @@ def backends(rows, scale, n_sources, batch):
         g = graphs[name]()
         srcs = common.pick_sources(g, max(n_sources, 2))
         base = None
-        for be in ["segment_min", "blocked_pallas"]:
-            m = common.run_eic(g, srcs, backend=be)
+        inv_unfused = tiles_unfused = None
+        for be, fr in [("segment_min", 0), ("blocked_pallas", 0),
+                       ("blocked_pallas", 4)]:
+            m = common.run_eic(g, srcs, backend=be, fused_rounds=fr)
             if base is None:        # `or` would treat a 0.0 timing as unset
                 base = m["time_s"]
             extra = {}
@@ -142,16 +152,34 @@ def backends(rows, scale, n_sources, batch):
                     "tile_reduction":
                         m["n_tiles_dense"] / max(m["n_tiles_scanned"], 1),
                 }
-            emit(rows, f"backends/{name}/{be}", m["time_s"],
+            if m.get("n_invocations"):
+                extra["invocations_per_solve"] = m["n_invocations"]
+                if fr == 0:
+                    inv_unfused = m["n_invocations"]
+                    tiles_unfused = m["n_tiles_scanned"]
+                elif inv_unfused:
+                    # the fused-megakernel acceptance pair: launches drop,
+                    # the compacted tile schedule does not grow
+                    extra["invocation_reduction"] = (inv_unfused /
+                                                     m["n_invocations"])
+                    extra["tile_regression"] = (m["n_tiles_scanned"] /
+                                                max(tiles_unfused, 1))
+            label = f"{be}_fused{fr}" if fr else be
+            emit(rows, f"backends/{name}/{label}", m["time_s"],
                  nTrav=m["nTrav"], nSync=m["nSync"],
                  rel_time=m["time_s"] / base, **extra)
-        for dbe in ["segment_min", "blocked"]:
-            d = common.run_distributed(g, srcs, version="v2", backend=dbe)
+        for dbe, fr in [("segment_min", 0), ("blocked", 0), ("blocked", 4)]:
+            d = common.run_distributed(g, srcs, version="v2", backend=dbe,
+                                       fused_rounds=fr)
             extra = {}
             if d["n_tiles_scanned"]:
                 extra = {"tile_reduction": d["n_tiles_dense"] /
                          max(d["n_tiles_scanned"], 1)}
-            emit(rows, f"backends/{name}/distributed_v2_{dbe}", d["time_s"],
+            if d.get("n_invocations"):
+                extra["invocations_per_solve"] = d["n_invocations"]
+            label = (f"distributed_v2_{dbe}_fused{fr}" if fr
+                     else f"distributed_v2_{dbe}")
+            emit(rows, f"backends/{name}/{label}", d["time_s"],
                  nTrav=d["nTrav"], nSync=d["nSync"],
                  n_devices=d["n_devices"], rel_time=d["time_s"] / base,
                  **extra)
@@ -160,6 +188,27 @@ def backends(rows, scale, n_sources, batch):
         emit(rows, f"backends/{name}/sssp_batch", b["time_s"],
              batch=b["batch"], nTrav=b["nTrav"],
              rel_time=b["time_s"] / base)
+
+
+def roofline(rows, scale):
+    """Fused-megakernel roofline smoke row (see benchmarks/roofline.py).
+
+    One real blocked-backend solve at ``fused_rounds=4``; emits achieved
+    vs peak bytes/FLOPs per kernel invocation and rounds-per-invocation
+    derived from the kernel's in-kernel counters.
+    """
+    from benchmarks import roofline as rl
+
+    print("# roofline: fused relaxation megakernel, measured")
+    r = rl.fused_relax_roofline(scale=min(scale, 10))
+    emit(rows, "roofline/fused_relax", r["time_s"],
+         rounds_per_invocation=r["rounds_per_invocation"],
+         invocations_per_solve=r["invocations_per_solve"],
+         bytes_per_invocation=r["bytes_per_invocation"],
+         flops_per_invocation=r["flops_per_invocation"],
+         peak_frac_bw=r["peak_frac_bw"],
+         peak_frac_flops=r["peak_frac_flops"],
+         dominant=r["dominant"])
 
 
 def serving_open_loop(rows, graphs, base_qps, batch, n_queries, seed,
@@ -345,6 +394,8 @@ def main() -> None:
         table3(rows, args.scale, args.sources, args.backend)
     if "backends" in sections:
         backends(rows, args.scale, args.sources, args.batch)
+    if "roofline" in sections:
+        roofline(rows, args.scale)
     if "serving" in sections:
         serving(rows, args.scale, args.batch, n_queries=args.queries,
                 open_loop=args.open_loop)

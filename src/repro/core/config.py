@@ -186,6 +186,50 @@ class EngineConfig:
                 raise ConfigError(f"{name} must be >= 1 (or None)")
 
     # ------------------------------------------------------------------
+    # loose-kwarg adoption
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_loose(cls, config, what: str, *, defaults=None, **loose
+                   ) -> "EngineConfig":
+        """The one config-XOR-loose-kwargs gate for every entry point.
+
+        Each engine/serving entry point accepts ``config=`` *or* its
+        legacy loose kwargs, never both.  ``None`` is the unset sentinel
+        for every loose kwarg (entry points default them all to None):
+
+        * ``config`` given — every loose kwarg must still be unset, or
+          this raises ``ConfigError("pass <what> options through
+          config=, not alongside it")``; the config passes through.
+        * ``config`` None — the set loose kwargs are layered over
+          ``defaults`` (the entry point's historical defaults) and built
+          into a fresh :class:`EngineConfig`; keys that are not config
+          fields raise ``TypeError`` (unknown option), and values go
+          through the constructor's usual validation.
+
+        ``what`` names the entry point in the error message ("engine",
+        "service", ...).  Relax-backend *objects* are accepted for
+        ``backend`` and canonicalized to their registry name.
+        """
+        set_ = {k: v for k, v in loose.items() if v is not None}
+        if config is not None:
+            if set_:
+                raise ConfigError(f"pass {what} options through config=, "
+                                  f"not alongside it")
+            return config
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(set_) - fields)
+        if unknown:
+            raise TypeError(f"unknown {what} options {unknown}")
+        merged = dict(defaults or {})
+        merged.update(set_)
+        for key in ("backend", "shard_backend"):
+            v = merged.get(key)
+            if v is not None and not isinstance(v, str):
+                merged[key] = _canonical_backend(v)
+        return cls(**merged)
+
+    # ------------------------------------------------------------------
     # resolution
     # ------------------------------------------------------------------
 
@@ -267,9 +311,12 @@ class EngineConfig:
                     "shard_backend is set but the engine can only "
                     "resolve to the single-device tier; drop it, set "
                     "tier='sharded', or add shard thresholds")
-            if self.fused_rounds:
-                raise ConfigError("fused_rounds is a sharded-tier option "
-                                  "(bucket-fusion waves between exchanges)")
+            if self.fused_rounds and backend not in _BLOCKED_NAMES:
+                raise ConfigError(
+                    "fused_rounds on the single-device tier needs a "
+                    "blocked backend (the multi-round fused relaxation "
+                    "megakernel); on segment_min it is a sharded-tier "
+                    "option (bucket-fusion waves between exchanges)")
             if self.compact_capacity:
                 raise ConfigError("compact_capacity is a sharded-tier "
                                   "option (v3's compact exchange)")

@@ -35,12 +35,20 @@ pluggable (``backend=``): ``"segment_min"`` (default) computes it with a
 masked segment reduction over the shard's flat edge slab; ``"blocked"``
 computes it with the sparsity-aware blocked layout — per-shard
 :func:`~repro.core.graph.slice_for_shard` slabs (sources = owner block,
-destinations = the global padded range, per-bucket tile ranges) driving
-the ``kernels/edge_relax`` ragged-grid kernel inside ``shard_map``, so
-the frontier-compaction prepass skips edge tiles whose sources sit
-outside the window band.  Both backends produce bitwise-identical
-``dist``/``parent``/logical metrics; only the physical tile counters
-differ (0 under ``segment_min``).
+destinations = the global padded range, per-bucket tile ranges) relaxed
+by ONE partials-megakernel launch per shard per round
+(:func:`repro.core.relax.blocked_shard_partials_fused`), which folds the
+``n_trav``/``n_relax`` counters into its frontier-compacted tile
+schedule so no flat O(E) candidate pass runs.  Both backends produce
+bitwise-identical ``dist``/``parent``/logical metrics; only the physical
+tile/invocation counters differ (0 under ``segment_min``).
+
+``fused_rounds`` is backend-dependent on the sharded tier: under
+``segment_min`` it is the paper's bucket fusion (local-only waves
+between exchanges — extra local relaxations, so logical metrics are
+exempt from parity); under ``blocked`` it groups up to ``fused_rounds``
+*complete* synchronized rounds per stepping-loop body, which keeps
+bitwise dist/parent/logical-metric parity by construction.
 """
 from __future__ import annotations
 
@@ -56,7 +64,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import relax, stats, stepping, traversal
-from .config import ConfigError, as_resolved
+from .config import EngineConfig, as_resolved
 from .graph import (DEFAULT_BLOCK_V, DEFAULT_TILE_E, BlockedEdges,
                     HostGraph, shard_block_v, slice_for_shard)
 from .relax import INF, INT_MAX
@@ -166,21 +174,23 @@ def shard_blocked(g, n_shards: Optional[int] = None, *,
     pass the result to ``sssp_distributed*(..., backend="blocked",
     blocked=...)`` so repeated calls don't re-bucket.
 
-    ``use_kernel`` defaults to ``not interpret``: on real TPU
-    (``interpret=False``) the ragged-grid Pallas kernel is Mosaic-compiled
-    and is the hot path; in interpret mode (this CPU container) the
-    kernel's interpreter — itself a ``lax.while_loop`` of dynamic slices —
-    deterministically miscompiles under multi-device ``shard_map`` SPMD
-    partitioning (jax 0.4.x: output ranges silently drop, and the
-    failure shifts with unrelated program perturbations), so the
-    distributed engines default to the bitwise-identical jnp reference
-    bucket relax.  Layout, frontier-compaction schedule, and tile
-    metrics are shared by both paths; the single-device
-    ``blocked_pallas`` backend runs the real interpret-mode kernel
-    (jit/vmap, no shard_map) and is where kernel semantics are CI-tested.
+    ``use_kernel`` defaults to True.  Historical note: the pre-megakernel
+    ragged-grid bucket kernel's interpreter (a ``lax.while_loop`` of
+    dynamic slices) deterministically miscompiled under multi-device
+    ``shard_map`` SPMD partitioning on jax 0.4.x (output ranges silently
+    dropped, shifting with unrelated program perturbations), so
+    interpret-mode shards used to fall back to the jnp reference.  The
+    engines now relax through the fixed-grid whole-shard partials
+    megakernel (``edge_relax_partials``: one grid step, state in
+    carries), which re-tested clean on jax 0.4.37 across v1/v2/v3 ×
+    {unfused, fused_rounds=4} × 8 shards — bitwise dist/parent/metric
+    parity with the single-device engine — so interpret mode runs the
+    real kernel too.  Pass ``use_kernel=False`` to pin the
+    bitwise-identical jnp reference (layout, frontier-compaction
+    schedule, and tile metrics are shared by both paths).
     """
     if use_kernel is None:
-        use_kernel = not interpret
+        use_kernel = True
     if isinstance(g, ShardedGraph):
         if n_shards is None:
             n_shards = int(g.src.shape[0])
@@ -346,28 +356,20 @@ def _dist_engine_args(sg: ShardedGraph, config, version, max_iters,
                       block_v, tile_e):
     """Resolve the distributed engine knobs from either an
     :class:`~repro.core.config.EngineConfig` or the loose kwargs — never
-    both.  Returns ``(version, max_iters, fused_rounds, params_alpha,
-    params_beta, capacity, backend, blocked_build_opts)``."""
-    if config is not None:
-        loose = (version, max_iters, fused_rounds, alpha, beta, capacity,
-                 backend, block_v, tile_e)
-        if any(v is not None for v in loose):
-            raise ConfigError(
-                "pass engine options through config=, not alongside it")
-        r = as_resolved(config, n=int(sg.n_true), m=int(sg.n_edges2),
-                        n_devices=int(sg.src.shape[0])).require("sharded")
-        return (r.shard_version, r.max_iters, r.fused_rounds, r.alpha,
-                r.beta, r.compact_capacity, r.shard_backend,
-                r.blocked_opts())
-    return ("v2" if version is None else version,
-            1_000_000 if max_iters is None else max_iters,
-            0 if fused_rounds is None else fused_rounds,
-            3.0 if alpha is None else alpha,
-            0.9 if beta is None else beta,
-            0 if capacity is None else capacity,
-            "segment_min" if backend is None else backend,
-            dict(block_v=DEFAULT_BLOCK_V if block_v is None else block_v,
-                 tile_e=DEFAULT_TILE_E if tile_e is None else tile_e))
+    both (:meth:`EngineConfig.from_loose` is the shared gate, so loose
+    kwargs go through exactly the config validation).  Returns
+    ``(version, max_iters, fused_rounds, params_alpha, params_beta,
+    capacity, backend, blocked_build_opts)``."""
+    config = EngineConfig.from_loose(
+        config, "engine", defaults={"tier": "sharded"},
+        shard_version=version, max_iters=max_iters,
+        fused_rounds=fused_rounds, alpha=alpha, beta=beta,
+        compact_capacity=capacity, shard_backend=backend,
+        block_v=block_v, tile_e=tile_e)
+    r = as_resolved(config, n=int(sg.n_true), m=int(sg.n_edges2),
+                    n_devices=int(sg.src.shape[0])).require("sharded")
+    return (r.shard_version, r.max_iters, r.fused_rounds, r.alpha,
+            r.beta, r.compact_capacity, r.shard_backend, r.blocked_opts())
 
 
 def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
@@ -497,34 +499,47 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
 
         def relax_round(dist, parent, frontier, lb, ub, metrics):
             paths = relax.leaf_pruned(frontier, dist, deg)
-            cand, in_window, active = relax.edge_candidates(
-                dist[src], paths[src], parent[src], dst, w, lb, ub)
             if bmeta is None:
+                cand, in_window, active = relax.edge_candidates(
+                    dist[src], paths[src], parent[src], dst, w, lb, ub)
                 best = jax.lax.pmin(
                     relax.segment_partial_min(cand, dst, n_pad), axes)
                 winner = jax.lax.pmin(
                     relax.winner_partial(cand, active, src, dst, best,
                                          n_pad), axes)
                 n_tiles = jnp.float32(0)
+                touched = jax.lax.psum(
+                    jnp.sum(in_window.astype(jnp.int32)), axes)
+                relaxed = jax.lax.psum(
+                    jnp.sum(active.astype(jnp.int32)), axes)
+                n_inv = jnp.float32(0)
             else:
-                # dist/frontier are replicated; the blocked slab only reads
-                # the shard's owner block (its source range)
+                # dist/frontier are replicated; the partials megakernel
+                # reads only the shard's owner block (its source range)
+                # and folds the n_trav/n_relax sums into its scheduled
+                # tile pass — one launch per shard, no flat O(E)
+                # candidate pass
                 dist_src = jax.lax.dynamic_slice(dist, (base,), (block,))
                 paths_src = jax.lax.dynamic_slice(paths, (base,), (block,))
-                best_l, win_l, nt = relax.blocked_shard_partials(
-                    bl.src_local, bl.dst, bl.w, bl.tile_dst, bl.tile_first,
-                    bl.bucket_nonempty, dist_src, paths_src, base, lb, ub,
-                    block_v=bmeta.block_v, n_dst_blocks=bmeta.n_dst_blocks,
-                    tile_e=bmeta.tile_e, use_kernel=bmeta.use_kernel,
-                    interpret=bmeta.interpret)
+                parent_src = jax.lax.dynamic_slice(parent, (base,),
+                                                   (block,))
+                best_l, win_l, nt, trav, rlx = \
+                    relax.blocked_shard_partials_fused(
+                        bl.src_local, bl.dst, bl.w, bl.tile_dst,
+                        bl.tile_first, dist_src, paths_src, parent_src,
+                        base, lb, ub, block_v=bmeta.block_v,
+                        n_dst_blocks=bmeta.n_dst_blocks,
+                        tile_e=bmeta.tile_e, use_kernel=bmeta.use_kernel,
+                        interpret=bmeta.interpret)
                 best = jax.lax.pmin(best_l, axes)
                 winner = jax.lax.pmin(
                     jnp.where(best_l <= best, win_l, INT_MAX), axes)
                 n_tiles = jax.lax.psum(nt.astype(jnp.float32), axes)
+                touched = jax.lax.psum(trav, axes)
+                relaxed = jax.lax.psum(rlx, axes)
+                n_inv = jax.lax.psum(jnp.float32(1), axes)
             new_dist, new_parent, improved = relax.apply_updates(
                 dist, parent, best, winner)
-            touched = jax.lax.psum(jnp.sum(in_window.astype(jnp.int32)), axes)
-            relaxed = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), axes)
             metrics = metrics._replace(
                 n_rounds=metrics.n_rounds + jnp.where(jnp.any(frontier), 1, 0),
                 n_extended=metrics.n_extended +
@@ -536,6 +551,7 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
                 n_tiles_scanned=metrics.n_tiles_scanned + n_tiles,
                 n_tiles_dense=metrics.n_tiles_dense + jnp.float32(
                     0 if bmeta is None else bmeta.dense_grid_tiles),
+                n_invocations=metrics.n_invocations + n_inv,
             )
             return new_dist, new_parent, improved, metrics
 
@@ -755,15 +771,17 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                                                           dst, n_pad)
             return merge(best_g, win_g)
 
-        def blocked_partials(dist_l, paths, lb, ub):
-            """Blocked backend's push partial: ragged-grid kernel over the
-            shard's tile-indexed slabs (see relax.blocked_shard_partials).
-            The parent-edge exclusion is omitted — relaxing back along the
-            parent edge can never achieve a strictly-improving minimum, so
-            the (best, winner) pair is unchanged."""
-            return relax.blocked_shard_partials(
+        def blocked_partials(dist_l, paths, parent_l, lb, ub):
+            """Blocked backend's push partial: ONE partials-megakernel
+            launch over the shard's stacked tile-indexed slabs
+            (see relax.blocked_shard_partials_fused), returning the
+            ``(best, winner)`` pair plus the in-kernel tile/n_trav/
+            n_relax counters — the flat O(E) candidate pass the
+            segment_min branch needs for its metrics is folded into the
+            kernel's scheduled tile pass."""
+            return relax.blocked_shard_partials_fused(
                 bl.src_local, bl.dst, bl.w, bl.tile_dst, bl.tile_first,
-                bl.bucket_nonempty, dist_l, paths, base, lb, ub,
+                dist_l, paths, parent_l, base, lb, ub,
                 block_v=bmeta.block_v, n_dst_blocks=bmeta.n_dst_blocks,
                 tile_e=bmeta.tile_e, use_kernel=bmeta.use_kernel,
                 interpret=bmeta.interpret)
@@ -797,25 +815,30 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 n_trav=metrics.n_trav + jax.lax.psum(touched, axes))
             return dist_l, parent_l, acc, metrics
 
-        def relax_round(dist_l, parent_l, frontier_l, lb, ub, metrics):
-            if fused_rounds > 0:
-                dist_l, parent_l, frontier_l, metrics = fused_local(
-                    dist_l, parent_l, frontier_l, lb, ub, metrics)
+        def one_round(dist_l, parent_l, frontier_l, lb, ub, metrics):
             paths = relax.leaf_pruned(frontier_l, dist_l, deg_l)
-            cand, in_window, active = relax.edge_candidates(
-                dist_l[src_l], paths[src_l], parent_l[src_l], dst, w, lb, ub)
             if bmeta is None:
+                cand, in_window, active = relax.edge_candidates(
+                    dist_l[src_l], paths[src_l], parent_l[src_l], dst, w,
+                    lb, ub)
                 best_g, win_g = relax.segment_min_with_winner(
                     cand, active, src, dst, n_pad)
                 n_tiles = jnp.float32(0)
+                touched = jax.lax.psum(
+                    jnp.sum(in_window.astype(jnp.int32)), axes)
+                relaxed = jax.lax.psum(
+                    jnp.sum(active.astype(jnp.int32)), axes)
+                n_inv = jnp.float32(0)
             else:
-                best_g, win_g, nt = blocked_partials(dist_l, paths, lb, ub)
+                best_g, win_g, nt, trav, rlx = blocked_partials(
+                    dist_l, paths, parent_l, lb, ub)
                 n_tiles = jax.lax.psum(nt.astype(jnp.float32), axes)
+                touched = jax.lax.psum(trav, axes)
+                relaxed = jax.lax.psum(rlx, axes)
+                n_inv = jax.lax.psum(jnp.float32(1), axes)
             best_l, winner_l = merge(best_g, win_g)
             dist2, parent2, improved = relax.apply_updates(
                 dist_l, parent_l, best_l, winner_l)
-            touched = jax.lax.psum(jnp.sum(in_window.astype(jnp.int32)), axes)
-            relaxed = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), axes)
             nl_upd = jax.lax.psum(
                 jnp.sum((improved & (deg_l > 1)).astype(jnp.int32)), axes)
             upd = jax.lax.psum(jnp.sum(improved.astype(jnp.int32)), axes)
@@ -829,8 +852,48 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 n_updates=metrics.n_updates + upd,
                 n_tiles_scanned=metrics.n_tiles_scanned + n_tiles,
                 n_tiles_dense=metrics.n_tiles_dense + jnp.float32(
-                    0 if bmeta is None else bmeta.dense_grid_tiles))
+                    0 if bmeta is None else bmeta.dense_grid_tiles),
+                n_invocations=metrics.n_invocations + n_inv)
             return dist2, parent2, improved, metrics
+
+        def grouped_rounds(dist_l, parent_l, frontier_l, lb, ub, metrics):
+            """Blocked ``fused_rounds``: up to ``fused_rounds`` COMPLETE
+            synchronized rounds (each with its exchange) per stepping-loop
+            body.  The round sequence — and with it dist/parent and every
+            logical counter — is identical to the unfused engine by
+            construction; only the outer while_loop bookkeeping amortizes.
+            Clamped to a single round while ``lb <= 0`` so the first-step
+            ub bootstrap still applies between rounds."""
+            max_r = jnp.where(lb <= 0.0, jnp.int32(1),
+                              jnp.int32(fused_rounds))
+
+            def cond_f(c):
+                # pure carry reads only — collectives may not appear in a
+                # while_loop cond, so ``go`` is computed in the body
+                return (c[5] > 0) & (c[4] < max_r)
+
+            def body_f(c):
+                dist_l, parent_l, front, metrics, r, _ = c
+                dist2, parent2, improved, metrics = one_round(
+                    dist_l, parent_l, front, lb, ub, metrics)
+                go = jax.lax.pmax(jnp.any(improved).astype(jnp.int32),
+                                  axes)
+                return dist2, parent2, improved, metrics, r + 1, go
+
+            dist_l, parent_l, frontier_l, metrics, _, _ = \
+                jax.lax.while_loop(cond_f, body_f,
+                                   (dist_l, parent_l, frontier_l, metrics,
+                                    jnp.int32(0), jnp.int32(1)))
+            return dist_l, parent_l, frontier_l, metrics
+
+        def relax_round(dist_l, parent_l, frontier_l, lb, ub, metrics):
+            if fused_rounds > 0 and bmeta is not None:
+                return grouped_rounds(dist_l, parent_l, frontier_l, lb, ub,
+                                      metrics)
+            if fused_rounds > 0:
+                dist_l, parent_l, frontier_l, metrics = fused_local(
+                    dist_l, parent_l, frontier_l, lb, ub, metrics)
+            return one_round(dist_l, parent_l, frontier_l, lb, ub, metrics)
 
         def pull_round(dist_l, parent_l, st, lb, ub, metrics):
             # mirrored push from the settled band (undirected store); the

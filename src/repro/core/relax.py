@@ -51,7 +51,7 @@ import jax
 import jax.numpy as jnp
 
 from .graph import DeviceGraph, BlockedGraph, build_blocked
-from ..kernels.edge_relax.ops import relax_bucket
+from ..kernels.edge_relax.ops import relax_bucket, relax_fused, relax_partials
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 INF = jnp.float32(jnp.inf)
@@ -61,20 +61,21 @@ class RoundMetrics(NamedTuple):
     """Per-round relaxation outcome.
 
     The logical counters (trav/relax/updates/extended) are identical
-    across backends; the tile counters are *physical* — they describe the
-    blocked layout's work (0 for layouts without tiles) and are excluded
-    from cross-backend parity.
+    across backends; the tile/invocation counters are *physical* — they
+    describe the blocked layout's work (0 for layouts without tiles) and
+    are excluded from cross-backend parity.
     """
     improved: jnp.ndarray    # [N] bool — vertices whose dist improved
     n_trav: jnp.ndarray      # scalar int32 — in-window edge touches (push)
     n_relax: jnp.ndarray     # scalar int32 — relaxations attempted
     n_updates: jnp.ndarray   # scalar int32 — successful dist improvements
     n_extended: jnp.ndarray  # scalar int32 — non-leaf dist improvements
-    # tile counters are f32: the dense comparator accumulates
+    # physical counters are f32: the dense comparator accumulates
     # n_dst_blocks * n_tiles per round, which overflows int32 on large
     # graphs (and x64 is disabled, so int64 is unavailable)
     n_tiles_scanned: jnp.ndarray  # scalar f32 — edge tiles actually run
     n_tiles_dense: jnp.ndarray    # scalar f32 — dense-grid tile cost
+    n_invocations: jnp.ndarray    # scalar f32 — kernel launches (sync units)
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +223,8 @@ def _segment_min_relax(g: DeviceGraph, dist, parent, frontier, lb, ub):
         n_updates=jnp.sum(improved.astype(jnp.int32)),
         n_extended=jnp.sum((improved & (g.deg > 1)).astype(jnp.int32)),
         n_tiles_scanned=jnp.float32(0),
-        n_tiles_dense=jnp.float32(0))
+        n_tiles_dense=jnp.float32(0),
+        n_invocations=jnp.float32(0))
     return new_dist, new_parent, rm
 
 
@@ -343,10 +345,99 @@ def _blocked_relax(bg: BlockedGraph, dist, parent, frontier, lb, ub):
         n_updates=jnp.sum(improved.astype(jnp.int32)),
         n_extended=jnp.sum((improved & (bg.deg[:n] > 1)).astype(jnp.int32)),
         n_tiles_scanned=n_tiles.astype(jnp.float32),
-        n_tiles_dense=jnp.float32(bg.dense_grid_tiles))
+        n_tiles_dense=jnp.float32(bg.dense_grid_tiles),
+        n_invocations=jnp.float32(bg.n_blocks))
     return new_dist[:n], new_parent[:n], rm
 
 
 BLOCKED_PALLAS = register_backend(RelaxBackend(
     name="blocked_pallas", prepare=_blocked_prepare,
     relax_window=_blocked_relax), aliases=("blocked",))
+
+
+# ---------------------------------------------------------------------------
+# fused megakernel entry points (multi-round single-device / whole-shard
+# partials — see kernels/edge_relax/edge_relax.py for the kernel contract)
+# ---------------------------------------------------------------------------
+
+class FusedSlab(NamedTuple):
+    """A :class:`~repro.core.graph.BlockedGraph`'s per-source-block slabs
+    concatenated into one tile-aligned slab with *global* source ids —
+    the operand layout of the fused megakernel.  Built once per solve
+    (outside the round loop); tile indices stay dst-sorted within each
+    source block, which is all the scheduled scatter-min requires."""
+    src: jnp.ndarray          # [sum NT * tile_e] global source ids
+    dst: jnp.ndarray          # [sum NT * tile_e] global destination ids
+    w: jnp.ndarray            # [sum NT * tile_e] weights (+inf padding)
+    tile_dst: jnp.ndarray     # [sum NT] per-tile destination block
+    tile_first: jnp.ndarray   # [sum NT] forced first tile per bucket
+
+
+def fused_slab(bg: BlockedGraph) -> FusedSlab:
+    """Concatenate a blocked layout's slabs for the fused megakernel."""
+    bv = bg.block_v
+    return FusedSlab(
+        src=jnp.concatenate([s.src_local + i * bv
+                             for i, s in enumerate(bg.slabs)]),
+        dst=jnp.concatenate([s.dst for s in bg.slabs]),
+        w=jnp.concatenate([s.w for s in bg.slabs]),
+        tile_dst=jnp.concatenate([s.tile_dst for s in bg.slabs]),
+        tile_first=jnp.concatenate([s.tile_first for s in bg.slabs]))
+
+
+def blocked_fused_rounds(bg: BlockedGraph, fs: FusedSlab, dist, parent,
+                         frontier, lb, ub, *, fused_rounds: int):
+    """Up to ``fused_rounds`` relaxation rounds in one kernel invocation.
+
+    The fused twin of calling :func:`_blocked_relax` once per round:
+    bitwise-identical dist/parent/frontier and logical counters, but the
+    state stays resident in the kernel across rounds and the counters
+    are folded into the scheduled tile pass (no separate O(E) metrics
+    pass).  Returns ``(dist, parent, frontier, counts)`` over the
+    *unpadded* vertex range; ``counts`` is the kernel's int32
+    ``FUSED_COUNTERS`` vector.
+    """
+    if bg.n_pad != bg.n_out or bg.src_base != 0:
+        raise ValueError(
+            "the fused megakernel needs a whole-graph blocked layout "
+            f"(source range == destination range); got n_pad={bg.n_pad}, "
+            f"n_out={bg.n_out}, src_base={bg.src_base}")
+    n = bg.n
+    pad = bg.n_out - dist.shape[0]
+    dist_p = jnp.pad(dist, (0, pad), constant_values=jnp.inf)
+    parent_p = jnp.pad(parent, (0, pad), constant_values=-1)
+    frontier_p = jnp.pad(frontier, (0, pad))
+    dist2, parent2, front2, cnt = relax_fused(
+        dist_p, parent_p, frontier_p, bg.deg, fs.src, fs.dst, fs.w,
+        fs.tile_dst, fs.tile_first, lb, ub, block_v=bg.block_v,
+        tile_e=bg.tile_e, fused_rounds=fused_rounds,
+        use_kernel=bg.use_kernel, interpret=bg.interpret)
+    return dist2[:n], parent2[:n], front2[:n] > 0, cnt
+
+
+def blocked_shard_partials_fused(src_local, dst, w, tile_dst, tile_first,
+                                 dist_src, paths_src, parent_src, src_base,
+                                 lb, ub, *, block_v: int, n_dst_blocks: int,
+                                 tile_e: int, use_kernel: bool,
+                                 interpret: bool):
+    """Whole-shard fused twin of :func:`blocked_shard_partials`.
+
+    One kernel invocation relaxes ALL of a shard's stacked slabs
+    (``src_local``/``dst``/``w`` ``[S, NT*tile_e]``,
+    ``tile_dst``/``tile_first`` ``[S, NT]``) against the shard's local
+    ``dist_src``/``paths_src``/``parent_src`` slice, folding ``n_trav``/
+    ``n_relax``/tile counts into the scheduled tile pass — replacing one
+    launch per source block plus the flat O(E) metrics pass.  Returns
+    ``(best, winner, n_tiles, n_trav, n_relax)`` with *global* winner
+    ids (``src_base`` applied, INT_MAX preserved).
+    """
+    n_sb = src_local.shape[0]
+    offs = (jnp.arange(n_sb, dtype=jnp.int32) * block_v)[:, None]
+    best, win_local, cnt = relax_partials(
+        dist_src, paths_src, parent_src,
+        (src_local + offs).reshape(-1), dst.reshape(-1), w.reshape(-1),
+        tile_dst.reshape(-1), tile_first.reshape(-1), lb, ub,
+        block_v=block_v, tile_e=tile_e, n_dst_blocks=n_dst_blocks,
+        use_kernel=use_kernel, interpret=interpret)
+    winner = jnp.where(win_local == INT_MAX, INT_MAX, win_local + src_base)
+    return best, winner, cnt[2], cnt[0], cnt[1]

@@ -47,7 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from . import relax, stats, stepping, traversal
-from .config import ConfigError, FacadeDeprecationWarning, as_resolved
+from .config import (ConfigError, EngineConfig, FacadeDeprecationWarning,
+                     as_resolved)
 from .graph import DeviceGraph
 from .relax import INF, INT_MAX
 
@@ -131,13 +132,16 @@ class SsspMetrics(NamedTuple):
     n_updates: jnp.ndarray     # successful relaxations (dist improvements)
     n_tiles_scanned: jnp.ndarray  # blocked layouts: tiles actually run (f32)
     n_tiles_dense: jnp.ndarray    # blocked layouts: dense-grid cost (f32)
+    n_invocations: jnp.ndarray    # kernel launches / sync units (f32)
 
 
-# The counters every backend/engine must agree on bitwise.  The two tile
-# counters are *physical* (layout geometry, 0 outside blocked layouts)
-# and are excluded from cross-backend/engine parity checks.
+# The *physical* counters: layout/launch geometry (0 outside blocked
+# layouts), excluded from cross-backend/engine parity checks.  Everything
+# else is logical and must agree bitwise across backends and tiers.
+PHYSICAL_METRIC_FIELDS = ("n_tiles_scanned", "n_tiles_dense",
+                          "n_invocations")
 LOGICAL_METRIC_FIELDS = tuple(f for f in SsspMetrics._fields
-                              if not f.startswith("n_tiles"))
+                              if f not in PHYSICAL_METRIC_FIELDS)
 
 
 class SsspState(NamedTuple):
@@ -154,8 +158,8 @@ class SsspState(NamedTuple):
 
 def _zero_metrics() -> SsspMetrics:
     z = jnp.int32(0)
-    f = jnp.float32(0)      # tile counters accumulate past int32 range
-    return SsspMetrics(**{name: f if name.startswith("n_tiles") else z
+    f = jnp.float32(0)      # physical counters accumulate past int32 range
+    return SsspMetrics(**{name: f if name in PHYSICAL_METRIC_FIELDS else z
                           for name in SsspMetrics._fields})
 
 
@@ -174,9 +178,38 @@ def _relax_round(backend: relax.RelaxBackend, layout, st_: SsspState
         n_updates=m.n_updates + rm.n_updates,
         n_tiles_scanned=m.n_tiles_scanned + rm.n_tiles_scanned,
         n_tiles_dense=m.n_tiles_dense + rm.n_tiles_dense,
+        n_invocations=m.n_invocations + rm.n_invocations,
     )
     return st_._replace(dist=new_dist, parent=new_parent,
                         frontier=rm.improved, metrics=metrics)
+
+
+def _fused_relax_rounds(bg, fs, st_: SsspState, fused_rounds: int
+                        ) -> SsspState:
+    """Up to ``fused_rounds`` synchronized rounds in ONE megakernel
+    invocation (blocked layouts only) — the fused twin of calling
+    :func:`_relax_round` once per round until the window settles.
+    Bitwise-identical dist/parent/frontier and logical counters; the
+    kernel folds the counters into its scheduled tile pass and reports
+    per-invocation sums (``FUSED_COUNTERS``)."""
+    new_dist, new_parent, new_front, cnt = relax.blocked_fused_rounds(
+        bg, fs, st_.dist, st_.parent, st_.frontier, st_.lb, st_.ub,
+        fused_rounds=fused_rounds)
+    m = st_.metrics
+    metrics = m._replace(
+        n_rounds=m.n_rounds + cnt[4],
+        n_trav=m.n_trav + cnt[0],
+        n_relax=m.n_relax + cnt[1],
+        n_updates=m.n_updates + cnt[2],
+        n_extended=m.n_extended + cnt[3],
+        n_tiles_scanned=m.n_tiles_scanned + cnt[5].astype(jnp.float32),
+        # the dense-grid comparator charges one full grid per round
+        n_tiles_dense=m.n_tiles_dense
+        + cnt[6].astype(jnp.float32) * bg.dense_grid_tiles,
+        n_invocations=m.n_invocations + jnp.float32(1),
+    )
+    return st_._replace(dist=new_dist, parent=new_parent,
+                        frontier=new_front, metrics=metrics)
 
 
 def _bootstrap_ub(g: DeviceGraph, st_: SsspState,
@@ -260,10 +293,23 @@ def _transition(g: DeviceGraph, st_: SsspState,
 
 def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
          max_iters: int, alpha: float, beta: float, goal: str = "tree",
-         goal_param=None):
+         goal_param=None, fused_rounds: int = 0, fused=None):
     """Trace one SSSP computation (shared by sssp / sssp_batch); ``goal``
-    selects the early-exit variant (see GOALS)."""
+    selects the early-exit variant (see GOALS).  ``fused_rounds > 0``
+    (blocked layouts only) runs each window's rounds through the fused
+    megakernel — one kernel invocation per up-to-``fused_rounds`` rounds
+    instead of one per source block per round; ``fused`` carries the
+    prebuilt :class:`~repro.core.relax.FusedSlab` so the concatenation
+    is hoisted out of vmapped batches."""
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
+    if fused_rounds > 0:
+        if not isinstance(layout, relax.BlockedGraph):
+            raise ConfigError(
+                "fused_rounds needs a blocked layout on the single-device "
+                f"tier; got {type(layout).__name__} (set a blocked "
+                "backend, or drop fused_rounds)")
+        if fused is None:
+            fused = relax.fused_slab(layout)
     if goal_param is None:
         goal_param = jnp.int32(0)
     n = g.n
@@ -285,7 +331,10 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
         return (~s.done) & (s.iters < max_iters)
 
     def body(s: SsspState):
-        s = _relax_round(backend, layout, s)
+        if fused_rounds > 0:
+            s = _fused_relax_rounds(layout, fused, s, fused_rounds)
+        else:
+            s = _relax_round(backend, layout, s)
         s = _bootstrap_ub(g, s, high_d0)
         s = jax.lax.cond(jnp.any(s.frontier),
                          lambda x: x,
@@ -299,20 +348,25 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
 
 
 @partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
-                                   "goal"))
+                                   "goal", "fused_rounds"))
 def _sssp_jit(g, layout, source, backend, max_iters, alpha, beta, goal,
-              goal_param):
+              goal_param, fused_rounds=0):
     return _run(g, layout, source, backend, max_iters, alpha, beta, goal,
-                goal_param)
+                goal_param, fused_rounds)
 
 
 @partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
-                                   "goal"))
+                                   "goal", "fused_rounds"))
 def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta,
-                    goal, goal_params):
+                    goal, goal_params, fused_rounds=0):
+    # build the fused slab once, outside vmap, so the concatenation isn't
+    # replicated per batch slot
+    fused = relax.fused_slab(layout) if (
+        fused_rounds > 0 and isinstance(layout, relax.BlockedGraph)) \
+        else None
     return jax.vmap(
         lambda s, gp: _run(g, layout, s, backend, max_iters, alpha, beta,
-                           goal, gp)
+                           goal, gp, fused_rounds, fused)
     )(sources, goal_params)
 
 
@@ -322,27 +376,21 @@ def prepare_layout(g: DeviceGraph, backend="segment_min", **backend_opts):
 
 
 def _engine_args(g: DeviceGraph, config, backend, max_iters, alpha, beta,
-                 backend_opts):
+                 fused_rounds, backend_opts):
     """Resolve the engine knobs from either an
     :class:`~repro.core.config.EngineConfig` or the loose engine-level
-    kwargs — never both (the config is the one place options live)."""
-    if config is not None:
-        if backend is not None or max_iters is not None \
-                or alpha is not None or beta is not None or backend_opts:
-            raise ConfigError(
-                "pass engine options through config=, not alongside it")
-        r = as_resolved(config, n=g.n, m=g.m).require("single")
-        return (relax.get_backend(r.backend), r.max_iters, r.alpha, r.beta,
-                r.layout_opts())
-    return (relax.get_backend("segment_min" if backend is None else backend),
-            1_000_000 if max_iters is None else max_iters,
-            3.0 if alpha is None else alpha,
-            0.9 if beta is None else beta,
-            backend_opts)
+    kwargs — never both (:meth:`EngineConfig.from_loose` is the shared
+    gate, so loose kwargs go through exactly the config validation)."""
+    config = EngineConfig.from_loose(
+        config, "engine", backend=backend, max_iters=max_iters, alpha=alpha,
+        beta=beta, fused_rounds=fused_rounds, **backend_opts)
+    r = as_resolved(config, n=g.n, m=g.m).require("single")
+    return (relax.get_backend(r.backend), r.max_iters, r.alpha, r.beta,
+            r.fused_rounds, r.layout_opts())
 
 
 def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
-         max_iters=None, alpha=None, beta=None,
+         max_iters=None, alpha=None, beta=None, fused_rounds=None,
          goal: str = "tree", goal_param=None, config=None, **backend_opts):
     """Run the heuristic SSSP algorithm from ``source``.
 
@@ -356,14 +404,15 @@ def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
     select an early-exit query variant (see :data:`GOALS`).  Returns
     ``(dist, parent, metrics)``.
     """
-    be, max_iters, alpha, beta, opts = _engine_args(
-        g, config, backend, max_iters, alpha, beta, backend_opts)
+    be, max_iters, alpha, beta, fr, opts = _engine_args(
+        g, config, backend, max_iters, alpha, beta, fused_rounds,
+        backend_opts)
     if layout is None:
         layout = be.prepare(g, **opts)
     gp = goal_param_array(goal, goal_param)
     _check_goal_bounds(goal, gp, g.n)
     return _sssp_jit(g, layout, jnp.int32(source), be, max_iters, alpha,
-                     beta, goal, gp)
+                     beta, goal, gp, fr)
 
 
 def _shim(name: str, replacement: str) -> None:
@@ -401,8 +450,8 @@ def sssp_knear(g: DeviceGraph, source, k, **kw):
 
 def sssp_batch(g: DeviceGraph, sources, *, backend=None,
                layout=None, max_iters=None, alpha=None, beta=None,
-               goal: str = "tree", goal_params=None, config=None,
-               **backend_opts):
+               fused_rounds=None, goal: str = "tree", goal_params=None,
+               config=None, **backend_opts):
     """Batched multi-source SSSP: one fused computation over ``sources``.
 
     The per-source state (dist/parent/frontier/window) is stacked along a
@@ -413,8 +462,9 @@ def sssp_batch(g: DeviceGraph, sources, *, backend=None,
     the loose engine kwargs exactly as in :func:`sssp`.  Returns
     ``(dist, parent, metrics)`` with a leading ``[S]`` axis.
     """
-    be, max_iters, alpha, beta, opts = _engine_args(
-        g, config, backend, max_iters, alpha, beta, backend_opts)
+    be, max_iters, alpha, beta, fr, opts = _engine_args(
+        g, config, backend, max_iters, alpha, beta, fused_rounds,
+        backend_opts)
     if layout is None:
         layout = be.prepare(g, **opts)
     sources = jnp.asarray(sources, jnp.int32)
@@ -426,7 +476,7 @@ def sssp_batch(g: DeviceGraph, sources, *, backend=None,
                          f"{sources.shape}")
     _check_goal_bounds(goal, gp, g.n)
     return _sssp_batch_jit(g, layout, sources, be, max_iters, alpha, beta,
-                           goal, gp)
+                           goal, gp, fr)
 
 
 def normalized_metrics(g_deg, dist, metrics: SsspMetrics) -> dict:
@@ -450,5 +500,6 @@ def normalized_metrics(g_deg, dist, metrics: SsspMetrics) -> dict:
         "n_updates": int(metrics.n_updates),
         "n_tiles_scanned": int(metrics.n_tiles_scanned),
         "n_tiles_dense": int(metrics.n_tiles_dense),
+        "n_invocations": int(metrics.n_invocations),
         "reachable": n_reach,
     }

@@ -42,6 +42,44 @@ what lets the input/output index maps follow a *traced* per-round
 schedule while the grid itself stays static (jit/vmap-compatible).
 Destination blocks with no tiles at all are never visited; their output
 range is masked to +inf / INT_MAX after the call.
+
+**Multi-round fused megakernel.**  :func:`edge_relax_fused` executes up
+to ``fused_rounds`` complete windowed relaxation rounds in ONE Pallas
+invocation over the whole (concatenated, global-source-id) edge slab.
+The VMEM residency contract: ``dist``/``parent``/``frontier`` live in
+the kernel's output refs for the entire invocation — every round reads
+the previous round's state straight from VMEM, recomputes the
+frontier-compacted tile schedule in-kernel (the same prefix-sum
+compaction as :func:`schedule_tiles`), relaxes only the scheduled
+tiles, commits improvements, and exits early once a round improves
+nothing (the window has settled) — no XLA round-trip, no HBM bounce of
+the O(V) state between rounds.  The logical counters (``n_trav``,
+``n_relax``, updates, per-round tile counts) are folded into per-tile
+partial sums over the compacted schedule — exact, because a tile left
+out of the schedule has no frontier source with finite weight, so every
+one of its edges fails the window test and contributes zero — which
+eliminates the separate O(E) per-round metrics pass the unfused path
+pays in ``core/relax.py``.
+
+When ``fused_rounds`` helps vs hurts: fusing pays off when windows are
+wide (many rounds per step, each reusing the resident state — typical
+for the first steps on skewed-degree graphs) and costs nothing when
+they are narrow (the kernel exits after one round).  It can *hurt* on
+small graphs, where per-invocation fixed cost is negligible anyway and
+the fused kernel's whole-slab residency (the full edge slab plus 2
+O(V) carries must fit in VMEM at once) forfeits the per-source-block
+streaming of the unfused path; keep ``fused_rounds=0`` there, or when
+VMEM cannot hold slab + state.  The window bounds stay constant within
+a step, which is what makes in-kernel round chaining exact; during the
+bootstrap step (``lb <= 0``) the upper bound tightens after every
+round, so the wrapper clamps the invocation to a single round there.
+
+:func:`edge_relax_partials` is the single-round partials mode of the
+same tile pass for the sharded engines: one invocation relaxes ALL of a
+shard's source-block slabs (against the shard's local source slice) and
+returns (min, winner) partials plus the in-kernel counter sums, ready
+for the collective exchange — replacing one kernel launch per source
+block and the flat O(E) metrics pass with a single launch per shard.
 """
 from __future__ import annotations
 
@@ -75,11 +113,17 @@ def schedule_tiles(frontier_block, src_local, w, tile_first, tile_e: int):
     nt = tile_first.shape[0]
     touched = (frontier_block[src_local] > 0) & jnp.isfinite(w)
     active = touched.reshape(nt, tile_e).any(axis=1) | tile_first
-    order = jnp.argsort(~active, stable=True).astype(jnp.int32)
-    sched_n = jnp.sum(active.astype(jnp.int32))
-    last = order[jnp.maximum(sched_n - 1, 0)]
+    # segmented prefix-sum scatter: an active tile's exclusive rank is its
+    # slot in the compacted schedule, so layout (dst-sorted) order is
+    # preserved without the O(nt log nt) argsort — inactive tiles scatter
+    # to a dropped out-of-range slot
+    pos = jnp.cumsum(active.astype(jnp.int32)) - 1
+    sched_n = pos[-1] + 1
     idx = jnp.arange(nt, dtype=jnp.int32)
-    sched = jnp.where(idx < sched_n, order, last)
+    sched = jnp.zeros((nt,), jnp.int32).at[
+        jnp.where(active, pos, nt)].set(idx, mode="drop")
+    last = sched[jnp.maximum(sched_n - 1, 0)]
+    sched = jnp.where(idx < sched_n, sched, last)
     return sched, sched_n
 
 
@@ -190,3 +234,253 @@ def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
     visited = jnp.repeat(bucket_nonempty, block_v)
     return (jnp.where(visited, vals, jnp.inf),
             jnp.where(visited, wins, INT_MAX), sched_n)
+
+
+# ---------------------------------------------------------------------------
+# multi-round fused megakernel
+# ---------------------------------------------------------------------------
+
+# counter slots of the fused kernels' in-kernel metric accumulator
+FUSED_COUNTERS = ("n_trav", "n_relax", "n_updates", "n_extended",
+                  "n_rounds", "n_tiles", "n_exec", "_pad")
+PARTIAL_COUNTERS = ("n_trav", "n_relax", "n_tiles", "_pad")
+
+
+def _tile_pass(dist_src, paths_src, parent_src, src, dst, w, tdst, tfirst,
+               lb, ub, n_out: int, *, block_v: int, tile_e: int, go):
+    """One frontier-compacted pass over a whole edge slab (all buckets).
+
+    Pure-value core shared by both fused kernel modes: computes the
+    compacted tile schedule (in-kernel prefix-sum compaction, the
+    broadcast-compare twin of :func:`schedule_tiles`'s scatter), then
+    folds the scheduled tiles' scatter-min AND the logical counters into
+    one loop.  ``dist_src``/``paths_src``/``parent_src`` span the slab's
+    source-id range; ``src`` ids index that range directly (global for
+    the single-device fused slab, shard-local for shard slabs), so the
+    per-tile winner min is already the deterministic min-id tiebreak.
+    ``go`` gates the tile loop (0 => schedule only, zero tiles run).
+
+    Returns ``(val, win, n_trav, n_relax, sched_n)`` over ``n_out``
+    destinations; counters are exact (a tile outside the schedule has no
+    frontier source with finite weight, so every edge in it fails the
+    window test and contributes zero to every counter).
+    """
+    nt = tdst.shape[0]
+    touched = (paths_src[src] > 0) & jnp.isfinite(w)
+    active = touched.reshape(nt, tile_e).any(axis=1) | (tfirst > 0)
+    pos = jnp.cumsum(active.astype(jnp.int32)) - 1
+    sched_n = pos[nt - 1] + 1
+    # prefix-sum compaction as a compare plane (no data-dependent writes
+    # in-kernel): slot k holds the tile whose exclusive rank is k
+    ksel = jax.lax.broadcasted_iota(jnp.int32, (nt, nt), 0)
+    isel = jax.lax.broadcasted_iota(jnp.int32, (nt, nt), 1)
+    hit = (pos[None, :] == ksel) & active[None, :]
+    sched = jnp.min(jnp.where(hit, isel, nt), axis=1)
+
+    def tile_body(k, carry):
+        val, win, trav, rlx = carry
+        t = sched[k]
+        b = tdst[t]
+        lo = t * tile_e
+        src_t = jax.lax.dynamic_slice(src, (lo,), (tile_e,))
+        dst_t = jax.lax.dynamic_slice(dst, (lo,), (tile_e,))
+        w_t = jax.lax.dynamic_slice(w, (lo,), (tile_e,))
+        cand = dist_src[src_t] + w_t
+        ok = (paths_src[src_t] > 0) & (cand >= lb) & (cand < ub)
+        cand = jnp.where(ok, cand, jnp.inf)
+        trav = trav + jnp.sum(ok.astype(jnp.int32))
+        rlx = rlx + jnp.sum(
+            (ok & (dst_t != parent_src[src_t])).astype(jnp.int32))
+        cols = b * block_v + jax.lax.broadcasted_iota(
+            jnp.int32, (tile_e, block_v), 1)
+        hit2 = dst_t[:, None] == cols
+        plane = jnp.where(hit2, cand[:, None], jnp.inf)
+        tile_min = jnp.min(plane, axis=0)
+        winners = jnp.where(hit2 & ok[:, None] & (cand[:, None] <= tile_min),
+                            src_t[:, None], INT_MAX)
+        tile_win = jnp.min(winners, axis=0)
+        off = b * block_v
+        prev_v = jax.lax.dynamic_slice(val, (off,), (block_v,))
+        prev_w = jax.lax.dynamic_slice(win, (off,), (block_v,))
+        better = tile_min < prev_v
+        tie = tile_min == prev_v
+        val = jax.lax.dynamic_update_slice(
+            val, jnp.minimum(prev_v, tile_min), (off,))
+        win = jax.lax.dynamic_update_slice(
+            win, jnp.where(better, tile_win,
+                           jnp.where(tie, jnp.minimum(prev_w, tile_win),
+                                     prev_w)), (off,))
+        return val, win, trav, rlx
+
+    n_eff = jnp.where(go > 0, sched_n, 0)
+    val0 = jnp.full((n_out,), jnp.inf, jnp.float32)
+    win0 = jnp.full((n_out,), INT_MAX, jnp.int32)
+    val, win, trav, rlx = jax.lax.fori_loop(
+        0, n_eff, tile_body, (val0, win0, jnp.int32(0), jnp.int32(0)))
+    return val, win, trav, rlx, sched_n
+
+
+def _fused_kernel(lbub_ref, maxr_ref, dist_in, parent_in, front_in, deg_ref,
+                  src_ref, dst_ref, w_ref, tdst_ref, tfirst_ref,
+                  dist_out, parent_out, front_out, cnt_ref, *,
+                  block_v: int, tile_e: int, fused_cap: int):
+    """Up to ``fused_cap`` windowed rounds, state resident in output refs."""
+    dist_out[...] = dist_in[...]
+    parent_out[...] = parent_in[...]
+    front_out[...] = front_in[...]
+    cnt_ref[...] = jnp.zeros_like(cnt_ref)
+    lb = lbub_ref[0]
+    ub = lbub_ref[1]
+    max_r = maxr_ref[0]
+    deg = deg_ref[...]
+    src = src_ref[...]
+    dst = dst_ref[...]
+    w = w_ref[...]
+    tdst = tdst_ref[...]
+    tfirst = tfirst_ref[...]
+    n_out = deg.shape[0]
+
+    def round_body(r, go):
+        # rounds past the early exit are schedule-only no-ops (go=0)
+        dist = dist_out[...]
+        parent = parent_out[...]
+        front = front_out[...]
+        paths = ((front > 0) & ((dist <= 0.0) | (deg > 1))).astype(jnp.int32)
+        val, win, trav, rlx, sched_n = _tile_pass(
+            dist, paths, parent, src, dst, w, tdst, tfirst, lb, ub,
+            n_out, block_v=block_v, tile_e=tile_e, go=go)
+        improved = val < dist
+        any_imp = jnp.any(improved)
+
+        @pl.when(go > 0)
+        def _commit():
+            dist_out[...] = jnp.where(improved, val, dist)
+            parent_out[...] = jnp.where(improved, win, parent)
+            front_out[...] = improved.astype(jnp.int32)
+            cnt_ref[...] = cnt_ref[...] + jnp.stack([
+                trav, rlx,
+                jnp.sum(improved.astype(jnp.int32)),
+                jnp.sum((improved & (deg > 1)).astype(jnp.int32)),
+                jnp.any(front > 0).astype(jnp.int32),
+                sched_n, jnp.int32(1), jnp.int32(0)])
+
+        return jnp.where(go > 0,
+                         (any_imp & (r + 1 < max_r)).astype(jnp.int32),
+                         jnp.int32(0))
+
+    jax.lax.fori_loop(0, fused_cap, round_body, jnp.int32(1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "tile_e",
+                                             "fused_rounds", "interpret"))
+def edge_relax_fused(dist, parent, frontier, deg, src, dst, w, tile_dst,
+                     tile_first, lb, ub, *, block_v: int = DEFAULT_BLOCK_V,
+                     tile_e: int = DEFAULT_TILE_E, fused_rounds: int = 4,
+                     interpret: bool = True):
+    """Run up to ``fused_rounds`` relaxation rounds in one invocation.
+
+    ``dist``/``parent``/``frontier``/``deg`` span the padded vertex range
+    ``[0, n_out)`` (source range == destination range — the single-device
+    blocked layout); ``src``/``dst``/``w`` are the whole concatenated
+    tile-aligned slab with *global* source ids, ``tile_dst``/``tile_first``
+    its CSR-of-tiles index.  The invocation is clamped to one round while
+    ``lb <= 0`` (the bootstrap step retightens ``ub`` between rounds).
+
+    Returns ``(dist, parent, frontier, counts)`` after the last executed
+    round; ``counts`` is the int32 ``FUSED_COUNTERS`` vector summed over
+    executed rounds.
+    """
+    e = src.shape[0]
+    if e % tile_e != 0 or e == 0:
+        raise ValueError(f"slab length {e} is not tile-aligned "
+                         f"(tile_e={tile_e})")
+    if fused_rounds < 1:
+        raise ValueError(f"fused_rounds must be >= 1, got {fused_rounds}")
+    lbub = jnp.stack([jnp.float32(lb), jnp.float32(ub)])
+    # the bootstrap step tightens ub after every round — chaining rounds
+    # in-kernel there would relax against a stale bound
+    maxr = jnp.where(jnp.float32(lb) <= 0.0, 1, fused_rounds
+                     ).astype(jnp.int32)
+    n_out = dist.shape[0]
+    nt = e // tile_e
+    whole = lambda shape: pl.BlockSpec(shape, lambda i, lu, mr: (0,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # lbub, maxr
+        grid=(1,),
+        in_specs=[whole((n_out,))] * 4 + [whole((e,))] * 3
+        + [whole((nt,))] * 2,
+        out_specs=(whole((n_out,)), whole((n_out,)), whole((n_out,)),
+                   whole((8,))),
+    )
+    dist2, parent2, front2, cnt = pl.pallas_call(
+        functools.partial(_fused_kernel, block_v=block_v, tile_e=tile_e,
+                          fused_cap=fused_rounds),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((n_out,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_out,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_out,), jnp.int32),
+                   jax.ShapeDtypeStruct((8,), jnp.int32)),
+        interpret=interpret,
+    )(lbub, maxr[None], dist, parent, frontier.astype(jnp.int32), deg,
+      src, dst, w, tile_dst, tile_first.astype(jnp.int32))
+    return dist2, parent2, front2, cnt
+
+
+def _partials_kernel(lbub_ref, dist_ref, paths_ref, parent_ref,
+                     src_ref, dst_ref, w_ref, tdst_ref, tfirst_ref,
+                     val_ref, win_ref, cnt_ref, *, block_v: int,
+                     tile_e: int):
+    """Single-round partials over a shard's whole slab set."""
+    lb = lbub_ref[0]
+    ub = lbub_ref[1]
+    val, win, trav, rlx, sched_n = _tile_pass(
+        dist_ref[...], paths_ref[...], parent_ref[...], src_ref[...],
+        dst_ref[...], w_ref[...], tdst_ref[...], tfirst_ref[...], lb, ub,
+        val_ref.shape[0], block_v=block_v, tile_e=tile_e, go=jnp.int32(1))
+    val_ref[...] = val
+    win_ref[...] = win
+    cnt_ref[...] = jnp.stack([trav, rlx, sched_n, jnp.int32(0)])
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "tile_e",
+                                             "n_dst_blocks", "interpret"))
+def edge_relax_partials(dist_src, paths_src, parent_src, src, dst, w,
+                        tile_dst, tile_first, lb, ub, *,
+                        block_v: int = DEFAULT_BLOCK_V,
+                        tile_e: int = DEFAULT_TILE_E, n_dst_blocks: int = 1,
+                        interpret: bool = True):
+    """One invocation of the fused tile pass in partials mode.
+
+    ``dist_src``/``paths_src``/``parent_src`` cover the slab's *local*
+    source range; ``src`` ids index it directly (all of a shard's
+    source-block slabs concatenated, ids offset by their block).  Returns
+    ``(val, win, counts)``: per-destination (min, winner) partials over
+    ``n_dst_blocks * block_v`` — winners are local source ids, lift them
+    with the shard's owner-block offset — and the int32
+    ``PARTIAL_COUNTERS`` vector (``n_trav``/``n_relax``/tile count).
+    """
+    e = src.shape[0]
+    if e % tile_e != 0 or e == 0:
+        raise ValueError(f"slab length {e} is not tile-aligned "
+                         f"(tile_e={tile_e})")
+    lbub = jnp.stack([jnp.float32(lb), jnp.float32(ub)])
+    n_out = n_dst_blocks * block_v
+    n_src = dist_src.shape[0]
+    nt = e // tile_e
+    whole = lambda shape: pl.BlockSpec(shape, lambda i, lu: (0,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,      # lbub
+        grid=(1,),
+        in_specs=[whole((n_src,))] * 3 + [whole((e,))] * 3
+        + [whole((nt,))] * 2,
+        out_specs=(whole((n_out,)), whole((n_out,)), whole((4,))),
+    )
+    return pl.pallas_call(
+        functools.partial(_partials_kernel, block_v=block_v, tile_e=tile_e),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((n_out,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_out,), jnp.int32),
+                   jax.ShapeDtypeStruct((4,), jnp.int32)),
+        interpret=interpret,
+    )(lbub, dist_src, paths_src.astype(jnp.int32), parent_src, src, dst, w,
+      tile_dst, tile_first.astype(jnp.int32))

@@ -1,14 +1,20 @@
-"""jit'd public wrapper for the edge_relax Pallas kernel.
+"""jit'd public wrappers for the edge_relax Pallas kernels.
 
-On this CPU container the kernel always runs with interpret=True (the body
+On this CPU container the kernels always run with interpret=True (the body
 executes in Python/XLA for validation); on TPU set interpret=False.
 """
 from __future__ import annotations
 
-from .edge_relax import edge_relax, schedule_tiles
-from .ref import edge_relax_ref
+from .edge_relax import (FUSED_COUNTERS, PARTIAL_COUNTERS, edge_relax,
+                         edge_relax_fused, edge_relax_partials,
+                         schedule_tiles)
+from .ref import edge_relax_fused_ref, edge_relax_partials_ref, edge_relax_ref
 
-__all__ = ["edge_relax", "edge_relax_ref", "relax_bucket", "schedule_tiles"]
+__all__ = ["edge_relax", "edge_relax_ref", "edge_relax_fused",
+           "edge_relax_fused_ref", "edge_relax_partials",
+           "edge_relax_partials_ref", "relax_bucket", "relax_fused",
+           "relax_partials", "schedule_tiles", "FUSED_COUNTERS",
+           "PARTIAL_COUNTERS"]
 
 
 def relax_bucket(dist_block, frontier_block, src_local, dst_local, w,
@@ -35,3 +41,40 @@ def relax_bucket(dist_block, frontier_block, src_local, dst_local, w,
     _, n_tiles = schedule_tiles(frontier_block, src_local, w, tile_first,
                                 tile_e)
     return vals, wins, n_tiles
+
+
+def relax_fused(dist, parent, frontier, deg, src, dst, w, tile_dst,
+                tile_first, lb, ub, *, block_v: int = 512,
+                tile_e: int = 512, fused_rounds: int = 4,
+                use_kernel: bool = True, interpret: bool = True):
+    """Dispatch for the multi-round fused megakernel (see
+    :func:`..edge_relax.edge_relax_fused`); both paths are bitwise
+    interchangeable, including the ``FUSED_COUNTERS`` vector."""
+    if use_kernel:
+        return edge_relax_fused(dist, parent, frontier, deg, src, dst, w,
+                                tile_dst, tile_first, lb, ub,
+                                block_v=block_v, tile_e=tile_e,
+                                fused_rounds=fused_rounds,
+                                interpret=interpret)
+    return edge_relax_fused_ref(dist, parent, frontier, deg, src, dst, w,
+                                tile_dst, tile_first, lb, ub,
+                                block_v=block_v, tile_e=tile_e,
+                                fused_rounds=fused_rounds)
+
+
+def relax_partials(dist_src, paths_src, parent_src, src, dst, w, tile_dst,
+                   tile_first, lb, ub, *, block_v: int = 512,
+                   tile_e: int = 512, n_dst_blocks: int = 1,
+                   use_kernel: bool = True, interpret: bool = True):
+    """Dispatch for the single-round whole-slab partials pass (see
+    :func:`..edge_relax.edge_relax_partials`)."""
+    if use_kernel:
+        return edge_relax_partials(dist_src, paths_src, parent_src, src,
+                                   dst, w, tile_dst, tile_first, lb, ub,
+                                   block_v=block_v, tile_e=tile_e,
+                                   n_dst_blocks=n_dst_blocks,
+                                   interpret=interpret)
+    return edge_relax_partials_ref(dist_src, paths_src, parent_src, src,
+                                   dst, w, tile_dst, tile_first, lb, ub,
+                                   block_v=block_v, tile_e=tile_e,
+                                   n_dst_blocks=n_dst_blocks)

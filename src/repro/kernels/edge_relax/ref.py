@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the edge_relax kernel."""
+"""Pure-jnp oracles for the edge_relax kernels.
+
+These are the validation twins of the Pallas kernels AND the arrays-only
+fallbacks that actually run where the kernels cannot (``use_kernel=False``
+— e.g. under interpret-mode ``shard_map``); every reduction resolves ties
+exactly like the kernels (min value, then min source id), so the two
+paths are bitwise-interchangeable.
+"""
 from __future__ import annotations
 
 import jax
@@ -20,3 +27,86 @@ def edge_relax_ref(dist_block, frontier_block, src_local, dst_local, w,
     win = jnp.where(ok & (cand <= best[dst_local]), src_local, INT_MAX)
     winner = jax.ops.segment_min(win, dst_local, num_segments=n_out)
     return best, winner
+
+
+def _slab_counters(pa_src, w, dst, p_src, ok, tile_first, tile_e: int):
+    """The fused kernels' logical counters, computed slab-wide (exact:
+    tiles outside the compacted schedule contribute zero to each)."""
+    nt = w.shape[0] // tile_e
+    touched = pa_src & jnp.isfinite(w)
+    active = touched.reshape(nt, tile_e).any(axis=1) | (tile_first > 0)
+    return (jnp.sum(ok.astype(jnp.int32)),
+            jnp.sum((ok & (dst != p_src)).astype(jnp.int32)),
+            jnp.sum(active.astype(jnp.int32)))
+
+
+def edge_relax_fused_ref(dist, parent, frontier, deg, src, dst, w,
+                         tile_dst, tile_first, lb, ub, *,
+                         block_v: int = 512, tile_e: int = 512,
+                         fused_rounds: int = 4):
+    """Arrays-only twin of :func:`..edge_relax.edge_relax_fused`.
+
+    Same contract bit-for-bit: up to ``fused_rounds`` windowed rounds
+    (one while ``lb <= 0``), early exit when a round improves nothing,
+    counters per ``FUSED_COUNTERS``.  The per-round segment-min over the
+    whole slab equals the kernel's scheduled-tile accumulation because
+    min is order-independent and unscheduled tiles only carry
+    out-of-window candidates.
+    """
+    n_out = dist.shape[0]
+    lb = jnp.float32(lb)
+    ub = jnp.float32(ub)
+    maxr = jnp.where(lb <= 0.0, 1, fused_rounds).astype(jnp.int32)
+
+    def cond(c):
+        return c[4] > 0
+
+    def body(c):
+        dist, parent, front, cnt, _go, r = c
+        paths = (front > 0) & ((dist <= 0.0) | (deg > 1))
+        pa_src = paths[src]
+        cand = dist[src] + w
+        ok = pa_src & (cand >= lb) & (cand < ub)
+        cand = jnp.where(ok, cand, jnp.inf)
+        best = jax.ops.segment_min(cand, dst, num_segments=n_out)
+        win = jnp.where(ok & (cand <= best[dst]), src, INT_MAX)
+        winner = jax.ops.segment_min(win, dst, num_segments=n_out)
+        improved = best < dist
+        trav, rlx, sched_n = _slab_counters(pa_src, w, dst, parent[src],
+                                            ok, tile_first, tile_e)
+        cnt = cnt + jnp.stack([
+            trav, rlx,
+            jnp.sum(improved.astype(jnp.int32)),
+            jnp.sum((improved & (deg > 1)).astype(jnp.int32)),
+            jnp.any(front > 0).astype(jnp.int32),
+            sched_n, jnp.int32(1), jnp.int32(0)])
+        go = (jnp.any(improved) & (r + 1 < maxr)).astype(jnp.int32)
+        return (jnp.where(improved, best, dist),
+                jnp.where(improved, winner, parent),
+                improved.astype(jnp.int32), cnt, go, r + 1)
+
+    init = (dist, parent, frontier.astype(jnp.int32),
+            jnp.zeros((8,), jnp.int32), jnp.int32(1), jnp.int32(0))
+    dist2, parent2, front2, cnt, _, _ = jax.lax.while_loop(cond, body, init)
+    return dist2, parent2, front2, cnt
+
+
+def edge_relax_partials_ref(dist_src, paths_src, parent_src, src, dst, w,
+                            tile_dst, tile_first, lb, ub, *,
+                            block_v: int = 512, tile_e: int = 512,
+                            n_dst_blocks: int = 1):
+    """Arrays-only twin of :func:`..edge_relax.edge_relax_partials`:
+    one-shot (min, winner) partials over a whole slab set plus the
+    ``PARTIAL_COUNTERS`` vector."""
+    n_out = n_dst_blocks * block_v
+    pa_src = paths_src[src] > 0
+    cand = dist_src[src] + w
+    ok = pa_src & (cand >= lb) & (cand < ub)
+    cand = jnp.where(ok, cand, jnp.inf)
+    best = jax.ops.segment_min(cand, dst, num_segments=n_out)
+    win = jnp.where(ok & (cand <= best[dst]), src, INT_MAX)
+    winner = jax.ops.segment_min(win, dst, num_segments=n_out)
+    trav, rlx, sched_n = _slab_counters(pa_src, w, dst, parent_src[src],
+                                        ok, tile_first, tile_e)
+    cnt = jnp.stack([trav, rlx, sched_n, jnp.int32(0)])
+    return best, winner, cnt

@@ -53,7 +53,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 
 from ..core import relax
-from ..core.config import ConfigError, EngineConfig, resolve_devices
+from ..core.config import EngineConfig, resolve_devices
 from ..core.distributed import (blocked_specs, graph_specs, shard_blocked,
                                 shard_graph, sssp_distributed_batch,
                                 ShardedGraph)
@@ -221,12 +221,14 @@ class GraphEngine(_EngineBase):
 
     def __init__(self, gid: str, hg, backend: str,
                  alpha: float, beta: float, device=None,
-                 max_iters: int = 1_000_000, **backend_opts):
+                 max_iters: int = 1_000_000, fused_rounds: int = 0,
+                 **backend_opts):
         super().__init__()
         self.gid = gid
         self.host = hg
         self.device = device
         self.max_iters = max_iters
+        self.fused_rounds = fused_rounds
         g = hg.to_device() if isinstance(hg, HostGraph) else hg
         if device is not None:
             g = jax.device_put(g, device)
@@ -251,7 +253,9 @@ class GraphEngine(_EngineBase):
         return sssp_batch(
             self.g, np.asarray(sources, np.int32), backend=self.backend,
             layout=self.layout, alpha=self.alpha, beta=self.beta,
-            max_iters=self.max_iters, goal=goal, goal_params=goal_params)
+            max_iters=self.max_iters,
+            fused_rounds=self.fused_rounds or None,
+            goal=goal, goal_params=goal_params)
 
 
 class ShardedGraphEngine(_EngineBase):
@@ -364,70 +368,56 @@ class GraphRegistry:
 
     def __init__(self, capacity: Optional[int] = None, *,
                  config: Optional[EngineConfig] = None,
-                 backend: str = "segment_min",
-                 alpha: float = 3.0, beta: float = 0.9,
+                 backend: Optional[str] = None,
+                 alpha: Optional[float] = None, beta: Optional[float] = None,
                  shard_threshold_n: Optional[int] = None,
                  shard_threshold_m: Optional[int] = None,
-                 shard_devices=None, shard_version: str = "v2",
-                 shard_backend: str = "segment_min",
+                 shard_devices=None, shard_version: Optional[str] = None,
+                 shard_backend: Optional[str] = None,
                  **backend_opts):
-        if config is not None:
-            # the config is the one option surface — loose kwargs (other
-            # than capacity, which sizes this cache) must stay unset
-            loose = (backend != "segment_min" or alpha != 3.0 or beta != 0.9
-                     or shard_threshold_n is not None
-                     or shard_threshold_m is not None
-                     or shard_devices is not None or shard_version != "v2"
-                     or shard_backend != "segment_min" or backend_opts)
-            if loose:
-                raise ConfigError("pass registry options through config=, "
-                                  "not alongside it")
-            config.validate_serving()
-            backend = config.backend
-            alpha, beta = config.alpha, config.beta
-            shard_threshold_n = config.shard_threshold_n
-            shard_threshold_m = config.shard_threshold_m
-            shard_devices = resolve_devices(config.devices)
-            shard_version = config.shard_version
-            shard_backend = config.effective_shard_backend
-            for name in ("block_v", "tile_e", "use_kernel"):
-                v = getattr(config, name)
-                if v is not None:
-                    backend_opts[name] = v
-            backend_opts["interpret"] = config.interpret
-            if capacity is None:
-                capacity = config.registry_capacity
-        else:
-            config = EngineConfig(
-                backend=relax.get_backend(backend).name, alpha=alpha,
-                beta=beta, shard_threshold_n=shard_threshold_n,
-                shard_threshold_m=shard_threshold_m,
-                shard_version=shard_version,
-                # explicit, so the stored config agrees with this
-                # registry's behavior (the loose default pins the
-                # sharded tier to segment_min; no blocked derivation)
-                shard_backend=_shard_backend_name(shard_backend),
-                interpret=backend_opts.get("interpret", True),
-                **{k: v for k, v in backend_opts.items()
-                   if k in ("block_v", "tile_e", "use_kernel")})
+        # the config is the one option surface — loose kwargs (other than
+        # capacity, which sizes this cache) must stay unset alongside it;
+        # from_loose is the shared sentinel gate, so loose kwargs build
+        # the very config the registry would have been given
+        config = EngineConfig.from_loose(
+            config, "registry",
+            # the loose default pins the sharded tier to segment_min (no
+            # blocked derivation), so the stored config agrees with this
+            # registry's behavior
+            defaults={"shard_backend": "segment_min"},
+            backend=backend, alpha=alpha, beta=beta,
+            shard_threshold_n=shard_threshold_n,
+            shard_threshold_m=shard_threshold_m,
+            shard_version=shard_version, shard_backend=shard_backend,
+            devices=shard_devices, **backend_opts)
+        config.validate_serving()
+        backend_opts = {}
+        for name in ("block_v", "tile_e", "use_kernel"):
+            v = getattr(config, name)
+            if v is not None:
+                backend_opts[name] = v
+        backend_opts["interpret"] = config.interpret
         if capacity is None:
-            capacity = 4
+            capacity = config.registry_capacity
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self.config = config
-        self.default_backend = relax.get_backend(backend).name
-        self.alpha = alpha
-        self.beta = beta
-        self.backend_opts = dict(backend_opts)
-        self.shard_threshold_n = shard_threshold_n
-        self.shard_threshold_m = shard_threshold_m
+        self.default_backend = relax.get_backend(config.backend).name
+        self.alpha = config.alpha
+        self.beta = config.beta
+        self.backend_opts = backend_opts
+        self.shard_threshold_n = config.shard_threshold_n
+        self.shard_threshold_m = config.shard_threshold_m
+        shard_devices = resolve_devices(config.devices)
         self.shard_devices = tuple(shard_devices) if shard_devices else None
-        self.shard_version = shard_version
-        self.shard_backend = _shard_backend_name(shard_backend)
+        self.shard_version = config.shard_version
+        self.shard_backend = config.effective_shard_backend
         # engine-variant knobs ride the config end-to-end (nothing a
-        # resolve()-accepted config declares is silently dropped)
-        self.shard_fused_rounds = config.fused_rounds
+        # resolve()-accepted config declares is silently dropped);
+        # fused_rounds serves both tiers — the blocked single-device
+        # megakernel and the sharded engines' round grouping / waves
+        self.fused_rounds = config.fused_rounds
         self.shard_capacity = config.compact_capacity
         self.max_iters = config.max_iters
         self._lock = threading.RLock()
@@ -640,13 +630,18 @@ class GraphRegistry:
             return ShardedGraphEngine(gid, hg, self.alpha, self.beta,
                                       devices=self.shard_devices,
                                       version=self.shard_version,
-                                      fused_rounds=self.shard_fused_rounds,
+                                      fused_rounds=self.fused_rounds,
                                       capacity=self.shard_capacity,
                                       max_iters=self.max_iters,
                                       backend=backend, **blocked_opts)
+        # fused_rounds is a blocked-megakernel knob on the single-device
+        # tier; a per-lookup segment_min backend must not inherit it
+        fused = (self.fused_rounds
+                 if relax.get_backend(backend).name == "blocked_pallas"
+                 else 0)
         return GraphEngine(gid, hg, backend, self.alpha, self.beta,
                            device=device, max_iters=self.max_iters,
-                           **self.backend_opts)
+                           fused_rounds=fused, **self.backend_opts)
 
     def evict(self, gid: str, backend: Optional[str] = None,
               device=None) -> bool:

@@ -54,7 +54,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 
-from ..core.config import ConfigError, EngineConfig, resolve_devices
+from ..core.config import EngineConfig, resolve_devices
 from .queries import Query
 from .registry import GraphRegistry
 from .scheduler import QueryScheduler
@@ -83,9 +83,10 @@ class QueryRouter:
 
     def __init__(self, registry: GraphRegistry, *, devices=None,
                  config: Optional[EngineConfig] = None,
-                 max_batch: int = 8, backend: Optional[str] = None,
+                 max_batch: Optional[int] = None,
+                 backend: Optional[str] = None,
                  admit_window: Optional[int] = None,
-                 ecc_batching: bool = True,
+                 ecc_batching: Optional[bool] = None,
                  max_pending: Optional[int] = None,
                  feedback: bool = True,
                  replicate_factor: float = 4.0,
@@ -93,14 +94,18 @@ class QueryRouter:
                  decay_window: int = 256,
                  decay_share: float = 0.05,
                  decay_windows: int = 3):
-        if config is not None:
-            if (max_batch != 8 or backend is not None
-                    or max_pending is not None or not ecc_batching):
-                raise ConfigError("pass router options through config=, "
-                                  "not alongside it")
-            max_batch = config.max_batch
-            max_pending = config.max_pending
-            ecc_batching = config.ecc_batching
+        user_config = config is not None
+        config = EngineConfig.from_loose(
+            config, "router", max_batch=max_batch, backend=backend,
+            max_pending=max_pending, ecc_batching=ecc_batching)
+        max_batch = config.max_batch
+        max_pending = config.max_pending
+        ecc_batching = config.ecc_batching
+        if user_config:
+            # the registry already carries the config's backend as its
+            # default; the router-level override stays unset so lookups
+            # defer to it
+            backend = None
             if devices is None:
                 devices = resolve_devices(config.devices)
         devices = (list(devices) if devices is not None

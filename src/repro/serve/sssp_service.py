@@ -19,8 +19,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from ..core import relax
-from ..core.config import ConfigError, EngineConfig, resolve_devices
+from ..core.config import EngineConfig, resolve_devices
 from ..core.graph import DeviceGraph, HostGraph
 from .queries import Query
 from .registry import GraphRegistry
@@ -56,42 +55,32 @@ class SsspService:
     """
 
     def __init__(self, g, *, config: Optional[EngineConfig] = None,
-                 max_batch: int = 8, backend: str = "segment_min",
-                 alpha: float = 3.0, beta: float = 0.9, devices=None,
+                 max_batch: Optional[int] = None,
+                 backend: Optional[str] = None,
+                 alpha: Optional[float] = None,
+                 beta: Optional[float] = None, devices=None,
                  shard_threshold_n: Optional[int] = None,
                  shard_threshold_m: Optional[int] = None,
-                 shard_backend: str = "segment_min", **backend_opts):
+                 shard_backend: Optional[str] = None, **backend_opts):
         if not isinstance(g, (HostGraph, DeviceGraph)):
             raise TypeError(f"expected HostGraph/DeviceGraph, got {type(g)}")
         user_config = config is not None
-        if config is not None:
-            # one option surface: the loose kwargs must stay unset
-            if (max_batch != 8 or backend != "segment_min" or alpha != 3.0
-                    or beta != 0.9 or shard_threshold_n is not None
-                    or shard_threshold_m is not None
-                    or shard_backend != "segment_min" or backend_opts):
-                raise ConfigError("pass service options through config=, "
-                                  "not alongside it")
-            max_batch = config.max_batch
-            if devices is None:
-                devices = resolve_devices(config.devices)
-        else:
-            geometry = {k: v for k, v in backend_opts.items()
-                        if k in ("block_v", "tile_e", "use_kernel")}
-            unknown = set(backend_opts) - set(geometry) - {"interpret"}
-            if unknown:
-                raise TypeError(f"unknown backend options {sorted(unknown)}")
-            config = EngineConfig(
-                backend=relax.get_backend(backend).name, alpha=alpha,
-                beta=beta, shard_threshold_n=shard_threshold_n,
-                shard_threshold_m=shard_threshold_m,
-                # the loose default IS an explicit choice: the sharded
-                # tier stays on segment_min unless asked (a None here
-                # would let effective_shard_backend derive "blocked"
-                # from a blocked single-device backend)
-                shard_backend=shard_backend,
-                max_batch=max_batch,
-                interpret=backend_opts.get("interpret", True), **geometry)
+        # one option surface: config= XOR the loose kwargs (from_loose is
+        # the shared sentinel gate)
+        config = EngineConfig.from_loose(
+            config, "service",
+            # the loose default IS an explicit choice: the sharded tier
+            # stays on segment_min unless asked (an unset shard_backend
+            # would let effective_shard_backend derive "blocked" from a
+            # blocked single-device backend)
+            defaults={"shard_backend": "segment_min"},
+            max_batch=max_batch, backend=backend, alpha=alpha, beta=beta,
+            shard_threshold_n=shard_threshold_n,
+            shard_threshold_m=shard_threshold_m,
+            shard_backend=shard_backend, **backend_opts)
+        max_batch = config.max_batch
+        if user_config and devices is None:
+            devices = resolve_devices(config.devices)
         self.config = config
         devices = list(devices) if devices is not None else None
         # at least one engine slot per (graph, device) replica; a

@@ -41,6 +41,50 @@ def test_auto_tier_resolution_by_thresholds():
         cfg.resolve(n_devices=2)
 
 
+def test_fused_rounds_resolution():
+    # the blocked single-device backend carries fused_rounds through
+    r = EngineConfig(backend="blocked_pallas", fused_rounds=4).resolve(
+        n=10, m=10, n_devices=1)
+    assert r.fused_rounds == 4 and r.tier == "single"
+    # ... but segment_min has no megakernel to fuse into
+    with pytest.raises(ConfigError):
+        EngineConfig(backend="segment_min", fused_rounds=4).resolve(
+            n=10, m=10, n_devices=1)
+    # sharded tier: both backends accept it (waves vs grouped rounds)
+    for sb in ("segment_min", "blocked"):
+        r = EngineConfig(tier="sharded", shard_backend=sb,
+                         fused_rounds=4).resolve(n=10, m=10, n_devices=2)
+        assert r.fused_rounds == 4
+
+
+def test_from_loose_gate():
+    cfg = EngineConfig(backend="blocked_pallas")
+    # config alone passes through untouched
+    assert EngineConfig.from_loose(cfg, "engine", backend=None,
+                                   alpha=None) is cfg
+    # config + any set loose kwarg is ambiguous -> loud error
+    with pytest.raises(ConfigError, match="through config="):
+        EngineConfig.from_loose(cfg, "engine", backend="segment_min")
+    # loose kwargs layer over the entry point's defaults
+    c = EngineConfig.from_loose(None, "engine",
+                                defaults={"shard_backend": "segment_min"},
+                                alpha=2.0, backend=None)
+    assert c.alpha == 2.0 and c.shard_backend == "segment_min"
+    # a set loose kwarg overrides the default
+    c = EngineConfig.from_loose(None, "engine",
+                                defaults={"shard_backend": "segment_min"},
+                                shard_backend="blocked")
+    assert c.shard_backend == "blocked"
+    # unknown loose options fail like a bad keyword argument
+    with pytest.raises(TypeError, match="unknown engine options"):
+        EngineConfig.from_loose(None, "engine", bogus=1)
+    # relax-backend objects are canonicalized to their registry name
+    from repro.core.relax import get_backend
+    c = EngineConfig.from_loose(None, "engine",
+                                backend=get_backend("blocked"))
+    assert c.backend == "blocked_pallas"
+
+
 def test_conflicting_backend_tier_combos():
     # shard options on a single-tier engine
     with pytest.raises(ConfigError):

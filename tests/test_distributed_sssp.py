@@ -4,9 +4,12 @@ keeps 1 device).  With 8 real shards, v1/v2/v3 — under both the
 segment_min and the blocked per-shard relaxation backends — must still
 be bitwise identical to the single-device engine: dist, parent and every
 logical metric counter, because all engines dispatch relaxation through
-the shared primitives in core/relax.py (fused bucket waves are exempt
-from metric parity: they intentionally relax local edges extra times;
-the physical n_tiles_* counters are layout-specific and excluded)."""
+the shared primitives in core/relax.py.  ``fused_rounds`` is
+backend-dependent: segment_min bucket-fusion waves are exempt from
+parity (they intentionally relax local edges extra times), while the
+blocked backend's grouped complete rounds keep FULL bitwise parity —
+each grouped round includes its whole collective exchange (the physical
+n_tiles_* counters are layout-specific and excluded everywhere)."""
 import os
 import subprocess
 import sys
@@ -39,7 +42,8 @@ for name, g in [("kron", kronecker(9, 8, seed=1)),
     for ver, fused, be in [("v1", 0, "segment_min"), ("v2", 0, "segment_min"),
                            ("v2", 8, "segment_min"), ("v3", 0, "segment_min"),
                            ("v1", 0, "blocked"), ("v2", 0, "blocked"),
-                           ("v3", 0, "blocked")]:
+                           ("v2", 4, "blocked"), ("v3", 0, "blocked"),
+                           ("v3", 4, "blocked")]:
         kw = {"blocked": bl} if be == "blocked" else {}
         dist, parent, metrics = sssp_distributed(sg, src, mesh, ("graph",),
                                                  version=ver,
@@ -50,9 +54,12 @@ for name, g in [("kron", kronecker(9, 8, seed=1)),
         ok = np.allclose(np.where(np.isfinite(dist), dist, -1),
                          np.where(np.isfinite(dref), dref, -1),
                          rtol=1e-4, atol=1e-5)
-        same = True if fused else (np.array_equal(dist, d1) and
-                                   np.array_equal(parent, p1))
-        mdiff = [] if fused else [
+        # only segment_min's bucket-fusion waves break parity; the blocked
+        # backend's grouped rounds are exact replays of the unfused body
+        exempt = bool(fused) and be == "segment_min"
+        same = True if exempt else (np.array_equal(dist, d1) and
+                                    np.array_equal(parent, p1))
+        mdiff = [] if exempt else [
             f for f in LOGICAL_METRIC_FIELDS
             if int(getattr(m1, f)) != int(getattr(metrics, f))]
         tiles_ok = be == "segment_min" or \
@@ -181,8 +188,9 @@ def test_distributed_blocked_goal_batch_single_shard():
                     reason="needs a multi-device mesh (set XLA_FLAGS="
                            "--xla_force_host_platform_device_count=8)")
 def test_blocked_backend_parity_on_all_benchmark_graphs():
-    """The acceptance sweep: distributed v2 with backend="blocked" on the
-    whole nine-graph benchmark suite (scaled down), bitwise dist/parent/
+    """The acceptance sweep: distributed v2 with backend="blocked" — both
+    unfused and with ``fused_rounds=4`` grouped rounds — on the whole
+    nine-graph benchmark suite (scaled down), bitwise dist/parent/
     logical-metric parity against the single-device engine, with the
     frontier-compacted schedule visibly undercutting the dense scan."""
     from repro.core.distributed import (shard_blocked, shard_graph,
@@ -211,18 +219,20 @@ def test_blocked_backend_parity_on_all_benchmark_graphs():
         bl = shard_blocked(sg, block_v=64, tile_e=64)
         src = int(np.argmax(g.deg))
         d1, p1, m1 = sssp(g.to_device(), src)
-        dist, parent, metrics = sssp_distributed(
-            sg, src, mesh, ("graph",), version="v2", backend="blocked",
-            blocked=bl)
-        np.testing.assert_array_equal(np.asarray(dist)[:g.n],
-                                      np.asarray(d1), err_msg=name)
-        np.testing.assert_array_equal(np.asarray(parent)[:g.n],
-                                      np.asarray(p1), err_msg=name)
-        for f in LOGICAL_METRIC_FIELDS:
-            assert int(getattr(metrics, f)) == int(getattr(m1, f)), \
-                (name, f)
-        assert 0 < int(metrics.n_tiles_scanned) \
-            < int(metrics.n_tiles_dense), name
+        for fused in (0, 4):
+            dist, parent, metrics = sssp_distributed(
+                sg, src, mesh, ("graph",), version="v2", backend="blocked",
+                fused_rounds=fused, blocked=bl)
+            tag = f"{name}/fused={fused}"
+            np.testing.assert_array_equal(np.asarray(dist)[:g.n],
+                                          np.asarray(d1), err_msg=tag)
+            np.testing.assert_array_equal(np.asarray(parent)[:g.n],
+                                          np.asarray(p1), err_msg=tag)
+            for f in LOGICAL_METRIC_FIELDS:
+                assert int(getattr(metrics, f)) == int(getattr(m1, f)), \
+                    (tag, f)
+            assert 0 < int(metrics.n_tiles_scanned) \
+                < int(metrics.n_tiles_dense), tag
 
     # the sharded serving tier over the same backend: representative
     # graphs through ShardedGraphEngine.run_batch (the tier's interface)

@@ -123,7 +123,7 @@ def test_distributed_blocked_rejects_bad_args():
     sg = shard_graph(g, 1)
     mesh = jax.make_mesh((1,), ("graph",))
     bl = shard_blocked(sg, block_v=64, tile_e=64)
-    with pytest.raises(ValueError, match="unknown distributed"):
+    with pytest.raises(ValueError, match="unknown relax backend"):
         sssp_distributed(sg, 0, mesh, ("graph",), backend="nope")
     with pytest.raises(ValueError, match="segment_min"):
         sssp_distributed(sg, 0, mesh, ("graph",), backend="segment_min",
