@@ -375,6 +375,10 @@ def main() -> None:
                     help="serving section: pace submissions by the "
                          "traffic's Poisson arrival_s and report p50/p99 "
                          "tail latency vs offered load")
+    ap.add_argument("--json", metavar="OUT", default=None, dest="json_out",
+                    help="also write one BENCH_<section>.json per section "
+                         "into this directory (per-row timings + derived "
+                         "metrics, plus the run configuration)")
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
@@ -385,23 +389,45 @@ def main() -> None:
 
     os.makedirs(ART, exist_ok=True)
     rows = []
+    by_section = {}
     sections = set(args.sections.split(","))
     print("name,us_per_call,derived")
+
+    def run_section(sec, fn, *a, **kw):
+        # attribute each section's rows so --json can split them per file
+        start = len(rows)
+        fn(rows, *a, **kw)
+        by_section[sec] = rows[start:]
+
     if sections & {"fig4", "fig5", "fig6"}:
-        fig4_fig5_fig6(rows, args.scale, args.sources, args.full_variants,
-                       args.backend)
+        run_section("fig4", fig4_fig5_fig6, args.scale, args.sources,
+                    args.full_variants, args.backend)
     if "table3" in sections:
-        table3(rows, args.scale, args.sources, args.backend)
+        run_section("table3", table3, args.scale, args.sources, args.backend)
     if "backends" in sections:
-        backends(rows, args.scale, args.sources, args.batch)
+        run_section("backends", backends, args.scale, args.sources,
+                    args.batch)
     if "roofline" in sections:
-        roofline(rows, args.scale)
+        run_section("roofline", roofline, args.scale)
     if "serving" in sections:
-        serving(rows, args.scale, args.batch, n_queries=args.queries,
-                open_loop=args.open_loop)
+        run_section("serving", serving, args.scale, args.batch,
+                    n_queries=args.queries, open_loop=args.open_loop)
     with open(os.path.join(ART, "paper_metrics.json"), "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {len(rows)} rows to benchmarks/artifacts/paper_metrics.json")
+    if args.json_out:
+        import jax
+        os.makedirs(args.json_out, exist_ok=True)
+        cfg = {"scale": args.scale, "sources": args.sources,
+               "backend": args.backend, "batch": args.batch,
+               "platform": jax.devices()[0].platform,
+               "n_devices": len(jax.devices())}
+        for sec, srows in by_section.items():
+            path = os.path.join(args.json_out, f"BENCH_{sec}.json")
+            with open(path, "w") as f:
+                json.dump({"section": sec, "config": cfg,
+                           "n_rows": len(srows), "rows": srows}, f, indent=1)
+            print(f"# wrote {len(srows)} rows to {path}")
 
 
 if __name__ == "__main__":

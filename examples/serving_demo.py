@@ -12,6 +12,12 @@ expected traffic shares, warms every replica engine, starts the
 background workers (one per device), streams a Zipf-skewed mixed query
 load (p2p / bounded / k-nearest / tree) through the router, and prints
 per-kind samples plus placement and serving counters.
+
+At exit it prints the serving plane's metrics snapshot (the one
+registry/scheduler/router ``MetricsRegistry``), then runs one *traced*
+solve on the hottest graph and writes its per-round solve trace as a
+Perfetto/Chrome-trace JSON (``--trace-out``, default
+``serving_demo_trace.json`` — load it at https://ui.perfetto.dev).
 """
 import argparse
 import os
@@ -36,6 +42,8 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--rate-qps", type=float, default=None,
                     help="open-loop arrival pacing (default: closed loop)")
+    ap.add_argument("--trace-out", default="serving_demo_trace.json",
+                    help="write a traced solve's Perfetto JSON here")
     args = ap.parse_args()
 
     n = 1 << args.scale
@@ -119,6 +127,30 @@ def main():
     per_dev = {s["name"]: s["n_done"] for s in stats["schedulers"]
                if s["n_done"]}
     print(f"queries per scheduler: {per_dev}")
+
+    # the same numbers, through the observability plane: one metrics
+    # registry covers the engine registry, every scheduler, and the router
+    print("\nmetrics snapshot (non-zero series):")
+    for name, entry in sorted(registry.metrics.snapshot().items()):
+        if entry["type"] == "histogram":
+            if entry["count"]:
+                print(f"  {name}: count={entry['count']} "
+                      f"p50={entry['p50'] * 1e3:.1f}ms "
+                      f"p99={entry['p99'] * 1e3:.1f}ms")
+        elif entry["value"]:
+            print(f"  {name}: {entry['value']}")
+
+    # one traced solve on the hottest graph -> Perfetto JSON of its
+    # per-round stepping behavior (solve/step/round/invocation tracks)
+    from repro.api import Solver, SolveSpec  # noqa: E402
+    from repro.obs import write_perfetto  # noqa: E402
+
+    hot = max(shares, key=shares.get)
+    with Solver.open(graphs[hot], EngineConfig(trace=True)) as solver:
+        res = solver.solve(SolveSpec.tree(0))
+    write_perfetto(res.trace, args.trace_out, name=f"sssp:{hot}")
+    print(f"\ntraced solve on {hot!r}: {res.trace.n_records} rounds, "
+          f"{int(res.metrics.n_relax)} relaxations -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -55,6 +55,7 @@ from .core.config import (ConfigError, EngineConfig, ResolvedEngine,
                           as_resolved)
 from .core.graph import BlockedGraph, DeviceGraph, HostGraph
 from .core.sssp import GOALS, normalized_metrics, sssp, sssp_batch
+from .obs import profiling
 
 __all__ = ["EngineConfig", "ConfigError", "SolveSpec", "SolveResult",
            "Solver"]
@@ -206,7 +207,13 @@ class SolveResult:
     leaves) on the single/sharded tiers and the per-query normalized
     metric dict(s) on the routed tier.  Iterating the result unpacks
     ``(dist, parent, metrics)``, matching the legacy tuple returns, so
-    migrated call sites keep their destructuring.
+    migrated call sites keep their destructuring (``trace`` rides along
+    as a named field only).
+
+    ``trace`` is None unless the session's config set ``trace=True``
+    (single/sharded tiers): then it is a
+    :class:`~repro.obs.trace.SolveTrace` (or one per slot for batch
+    specs) of per-round records.
 
     Shaping is lazy: :meth:`paths`, :meth:`distance`, :meth:`nearest`
     and :meth:`normalized` walk the arrays only when called.
@@ -219,6 +226,7 @@ class SolveResult:
     deg: np.ndarray
     tier: str
     served_by: Optional[Any] = None     # routed: per-slot scheduler names
+    trace: Optional[Any] = None         # SolveTrace | list[SolveTrace]
 
     def __iter__(self):
         return iter((self.dist, self.parent, self.metrics))
@@ -385,7 +393,8 @@ class Solver:
             self._check_layout(layout)
             self._layout = layout
         else:
-            self._layout = self._backend.prepare(dg, **r.layout_opts())
+            with profiling.annotate(f"repro:engine_build:{r.backend}"):
+                self._layout = self._backend.prepare(dg, **r.layout_opts())
 
     def _check_layout(self, layout) -> None:
         """A foreign layout must match the configured backend *and* cover
@@ -441,10 +450,11 @@ class Solver:
         devs = tuple(devs) if devs is not None else tuple(jax.devices())
         self._devices = devs
         self._mesh = jax.sharding.Mesh(np.array(devs), ("graph",))
-        self._sg = shard_graph(graph, len(devs))
-        self._blocked = None
-        if r.shard_backend == "blocked":
-            self._blocked = shard_blocked(self._sg, **r.blocked_opts())
+        with profiling.annotate("repro:engine_build:sharded"):
+            self._sg = shard_graph(graph, len(devs))
+            self._blocked = None
+            if r.shard_backend == "blocked":
+                self._blocked = shard_blocked(self._sg, **r.blocked_opts())
 
     def _open_routed(self, graph):
         from .serve.registry import GraphRegistry
@@ -476,14 +486,25 @@ class Solver:
             return {"goal": spec.kind, "goal_params": spec.slot_params()}
         return {"goal": spec.kind, "goal_param": spec.goal_param}
 
+    def _materialize_trace(self, out):
+        """Split an engine return into ``(dist, parent, metrics, trace)``,
+        materializing the device trace ring when the config traces."""
+        if self.resolved.trace_cap > 0:
+            from .obs import materialize_trace
+            dist, parent, metrics, buf = out
+            return dist, parent, metrics, materialize_trace(buf)
+        dist, parent, metrics = out
+        return dist, parent, metrics, None
+
     def _solve_single(self, spec: SolveSpec) -> SolveResult:
         fn = sssp_batch if spec.batched else sssp
         srcs = list(spec.sources) if spec.batched else spec.sources
-        dist, parent, metrics = fn(self._dg, srcs, config=self.resolved,
-                                   layout=self._layout,
-                                   **self._goal_args(spec))
+        out = fn(self._dg, srcs, config=self.resolved, layout=self._layout,
+                 **self._goal_args(spec))
+        dist, parent, metrics, trace = self._materialize_trace(out)
         return SolveResult(spec=spec, dist=dist, parent=parent,
-                           metrics=metrics, deg=self.deg, tier=self.tier)
+                           metrics=metrics, deg=self.deg, tier=self.tier,
+                           trace=trace)
 
     def _solve_sharded(self, spec: SolveSpec) -> SolveResult:
         from .core.distributed import (sssp_distributed,
@@ -491,15 +512,16 @@ class Solver:
         fn = sssp_distributed_batch if spec.batched else sssp_distributed
         srcs = np.asarray(spec.sources, np.int32) if spec.batched \
             else spec.sources
-        dist, parent, metrics = fn(self._sg, srcs, self._mesh, ("graph",),
-                                   config=self.resolved,
-                                   blocked=self._blocked,
-                                   **self._goal_args(spec))
+        out = fn(self._sg, srcs, self._mesh, ("graph",),
+                 config=self.resolved, blocked=self._blocked,
+                 **self._goal_args(spec))
+        dist, parent, metrics, trace = self._materialize_trace(out)
         # padding vertices never escape the facade
         dist = dist[..., :self.n]
         parent = parent[..., :self.n]
         return SolveResult(spec=spec, dist=dist, parent=parent,
-                           metrics=metrics, deg=self.deg, tier=self.tier)
+                           metrics=metrics, deg=self.deg, tier=self.tier,
+                           trace=trace)
 
     def _solve_routed(self, spec: SolveSpec) -> SolveResult:
         from .serve.queries import Query

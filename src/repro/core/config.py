@@ -151,6 +151,9 @@ class EngineConfig:
     registry_capacity: int = 4
     max_pending: Optional[int] = None
     ecc_batching: bool = True
+    # observability: per-round solve traces (repro.obs.trace)
+    trace: bool = False
+    trace_capacity: int = 256
 
     def __post_init__(self):
         if self.tier not in TIERS:
@@ -184,6 +187,8 @@ class EngineConfig:
             v = getattr(self, name)
             if v is not None and v < 1:
                 raise ConfigError(f"{name} must be >= 1 (or None)")
+        if self.trace_capacity < 1:
+            raise ConfigError("trace_capacity must be >= 1")
 
     # ------------------------------------------------------------------
     # loose-kwarg adoption
@@ -328,6 +333,12 @@ class EngineConfig:
                 f"the single tier runs on one device; got "
                 f"{len(self.devices)} (set tier='sharded' or 'routed')")
         self.validate_serving()
+        if tier == "routed" and self.trace:
+            raise ConfigError(
+                "trace records per-round solve traces on the single/"
+                "sharded tiers; the routed serving plane reports "
+                "aggregate metrics through its MetricsRegistry instead "
+                "(see repro.obs)")
         if tier == "sharded" and backend != "segment_min" \
                 and self.shard_backend is not None \
                 and shard_backend != _canonical_shard_backend(backend):
@@ -374,6 +385,7 @@ class EngineConfig:
             max_batch=self.max_batch,
             registry_capacity=self.registry_capacity,
             max_pending=self.max_pending, ecc_batching=self.ecc_batching,
+            trace=self.trace, trace_capacity=self.trace_capacity,
             config=self)
 
 
@@ -409,7 +421,15 @@ class ResolvedEngine:
     registry_capacity: int
     max_pending: Optional[int]
     ecc_batching: bool
+    trace: bool
+    trace_capacity: int
     config: EngineConfig
+
+    @property
+    def trace_cap(self) -> int:
+        """The engine-level trace knob: ring capacity, 0 = tracing off
+        (the static jit key — 0 compiles the exact pre-trace program)."""
+        return self.trace_capacity if self.trace else 0
 
     def require(self, *tiers: str) -> "ResolvedEngine":
         if self.tier not in tiers:

@@ -70,8 +70,40 @@ from .graph import (DEFAULT_BLOCK_V, DEFAULT_TILE_E, BlockedEdges,
 from .relax import INF, INT_MAX
 from .sssp import (SsspMetrics, _check_goal_bounds, _goal_reached,
                    _zero_metrics, goal_param_array)
+from ..obs import profiling
+from ..obs.trace import trace_append, trace_init
 
 DIST_BACKENDS = ("segment_min", "blocked")
+
+
+def _dtrace_record(buf, iters, frontier_size, lb, ub, st_, stepped, m0, m1):
+    """Append one per-iteration trace record (inside a shard_map body).
+
+    Every input is replicated across shards by construction — the window
+    scalars are replicated state, the counters are psum-reduced, and
+    ``frontier_size`` is globally reduced by the caller — so the ring is
+    replicated too and exits the shard_map under an out_spec of ``P()``.
+    Same column semantics as the single-device ``_trace_record``.
+    """
+    ivals = {
+        "iter": iters,
+        "frontier": frontier_size,
+        "stepped": stepped.astype(jnp.int32),
+        "n_rounds": m1.n_rounds - m0.n_rounds,
+        "n_steps": m1.n_steps - m0.n_steps,
+        "n_extended": m1.n_extended - m0.n_extended,
+        "n_trav": m1.n_trav - m0.n_trav,
+        "n_pull_trav": m1.n_pull_trav - m0.n_pull_trav,
+        "n_relax": m1.n_relax - m0.n_relax,
+        "n_updates": m1.n_updates - m0.n_updates,
+    }
+    fvals = {
+        "lb": lb, "ub": ub, "st": st_,
+        "n_tiles_scanned": m1.n_tiles_scanned - m0.n_tiles_scanned,
+        "n_tiles_dense": m1.n_tiles_dense - m0.n_tiles_dense,
+        "n_invocations": m1.n_invocations - m0.n_invocations,
+    }
+    return trace_append(buf, ivals, fvals)
 
 
 class ShardedGraph(NamedTuple):
@@ -275,7 +307,8 @@ class _V2State(NamedTuple):
 @lru_cache(maxsize=64)
 def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
                   fused_rounds, capacity, goal="tree", batch=False,
-                  bmeta: Optional[BlockedShardMeta] = None):
+                  bmeta: Optional[BlockedShardMeta] = None,
+                  trace_cap: int = 0):
     """Build + jit one distributed engine (cached so repeated calls with
     the same mesh/shape/config reuse the compiled executable).
 
@@ -285,6 +318,9 @@ def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
     selects the blocked relaxation backend: the engine then takes a
     :class:`BlockedShards` layout as its second argument and computes the
     push partials with the ragged-grid kernel instead of ``segment_min``.
+    ``trace_cap > 0`` adds a replicated per-round trace ring as a fourth
+    output (part of this cache key: 0 compiles the exact untraced
+    program).
     """
     in_specs = (graph_specs(axes), P(), P())
     if bmeta is not None:
@@ -302,21 +338,27 @@ def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
                        ((axes,) if isinstance(axes, str) else axes))
     if version == "v1":
         body = _v1_body(n_pad, block, axes, params, max_iters, goal, batch,
-                        bmeta=bmeta, axis_sizes=axis_sizes)
+                        bmeta=bmeta, axis_sizes=axis_sizes,
+                        trace_cap=trace_cap)
         out_specs = (P(), P(), P())
     elif version == "v2":
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
-                        axis_sizes, goal=goal, batch=batch, bmeta=bmeta)
+                        axis_sizes, goal=goal, batch=batch, bmeta=bmeta,
+                        trace_cap=trace_cap)
     elif version == "v3":
         cap = capacity or max(block // 16, 8)
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                         axis_sizes, goal=goal, batch=batch,
-                        compact_capacity=cap, bmeta=bmeta)
+                        compact_capacity=cap, bmeta=bmeta,
+                        trace_cap=trace_cap)
     else:
         raise ValueError(version)
     if version in ("v2", "v3") and batch:
         # per-shard [S, B] slabs concatenate into a global [S, n_pad]
         out_specs = (P(None, axes), P(None, axes), P())
+    if trace_cap > 0:
+        # the trace ring is computed from replicated values only
+        out_specs = out_specs + (P(),)
 
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
@@ -359,7 +401,7 @@ def _dist_engine_args(sg: ShardedGraph, config, version, max_iters,
     both (:meth:`EngineConfig.from_loose` is the shared gate, so loose
     kwargs go through exactly the config validation).  Returns
     ``(version, max_iters, fused_rounds, params_alpha, params_beta,
-    capacity, backend, blocked_build_opts)``."""
+    capacity, backend, trace_cap, blocked_build_opts)``."""
     config = EngineConfig.from_loose(
         config, "engine", defaults={"tier": "sharded"},
         shard_version=version, max_iters=max_iters,
@@ -369,7 +411,8 @@ def _dist_engine_args(sg: ShardedGraph, config, version, max_iters,
     r = as_resolved(config, n=int(sg.n_true), m=int(sg.n_edges2),
                     n_devices=int(sg.src.shape[0])).require("sharded")
     return (r.shard_version, r.max_iters, r.fused_rounds, r.alpha,
-            r.beta, r.compact_capacity, r.shard_backend, r.blocked_opts())
+            r.beta, r.compact_capacity, r.shard_backend, r.trace_cap,
+            r.blocked_opts())
 
 
 def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
@@ -402,9 +445,9 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     kwarg above — the :class:`repro.api.Solver` facade's path.
     """
     (version, max_iters, fused_rounds, alpha, beta, capacity, backend,
-     build_opts) = _dist_engine_args(sg, config, version, max_iters,
-                                     fused_rounds, alpha, beta, capacity,
-                                     backend, block_v, tile_e)
+     trace_cap, build_opts) = _dist_engine_args(
+        sg, config, version, max_iters, fused_rounds, alpha, beta,
+        capacity, backend, block_v, tile_e)
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
     block = sg.deg.shape[1]
@@ -414,11 +457,12 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     arrays, bmeta = _resolve_blocked(sg, backend, blocked, build_opts)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
                        max_iters, fused_rounds, capacity, goal, False,
-                       bmeta)
-    if arrays is not None:
-        bases = jnp.arange(p, dtype=jnp.int32) * block
-        return fn(sg, arrays, bases, jnp.int32(source), gp)
-    return fn(sg, jnp.int32(source), gp)
+                       bmeta, trace_cap)
+    with profiling.annotate(f"repro:sssp_dist_dispatch:{version}"):
+        if arrays is not None:
+            bases = jnp.arange(p, dtype=jnp.int32) * block
+            return fn(sg, arrays, bases, jnp.int32(source), gp)
+        return fn(sg, jnp.int32(source), gp)
 
 
 def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
@@ -444,9 +488,9 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
     exactly as in :func:`sssp_distributed`.
     """
     (version, max_iters, fused_rounds, alpha, beta, capacity, backend,
-     build_opts) = _dist_engine_args(sg, config, version, max_iters,
-                                     fused_rounds, alpha, beta, capacity,
-                                     backend, block_v, tile_e)
+     trace_cap, build_opts) = _dist_engine_args(
+        sg, config, version, max_iters, fused_rounds, alpha, beta,
+        capacity, backend, block_v, tile_e)
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
     block = sg.deg.shape[1]
@@ -462,17 +506,18 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
     arrays, bmeta = _resolve_blocked(sg, backend, blocked, build_opts)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
                        max_iters, fused_rounds, capacity, goal, True,
-                       bmeta)
-    if arrays is not None:
-        bases = jnp.arange(p, dtype=jnp.int32) * block
-        return fn(sg, arrays, bases, sources, gp)
-    return fn(sg, sources, gp)
+                       bmeta, trace_cap)
+    with profiling.annotate(f"repro:sssp_dist_batch_dispatch:{version}"):
+        if arrays is not None:
+            bases = jnp.arange(p, dtype=jnp.int32) * block
+            return fn(sg, arrays, bases, sources, gp)
+        return fn(sg, sources, gp)
 
 
 # --- v1 -------------------------------------------------------------------
 
 def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
-             bmeta=None, axis_sizes=()):
+             bmeta=None, axis_sizes=(), trace_cap=0):
     axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
 
     def run(sg: ShardedGraph, *args):
@@ -650,8 +695,25 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
             init = (dist0, parent0, frontier0, jnp.float32(0.0), INF,
                     jnp.float32(0.0), jnp.bool_(False), jnp.int32(0),
                     metrics0)
-            out = jax.lax.while_loop(cond, body, init)
-            return out[0], out[1], out[8]
+            if trace_cap <= 0:
+                out = jax.lax.while_loop(cond, body, init)
+                return out[0], out[1], out[8]
+
+            def traced_body(carry):
+                s, buf = carry
+                s1 = body(s)
+                m0, m1 = s[8], s1[8]
+                stepped = (m1.n_steps > m0.n_steps) | (s1[6] & ~s[6])
+                # dist/frontier are replicated in v1: a local sum is global
+                fsz = jnp.sum(s[2].astype(jnp.int32))
+                buf = _dtrace_record(buf, s[7], fsz, s[3], s[4], s[5],
+                                     stepped, m0, m1)
+                return s1, buf
+
+            out, buf = jax.lax.while_loop(
+                lambda c: cond(c[0]), traced_body,
+                (init, trace_init(trace_cap)))
+            return out[0], out[1], out[8], buf
 
         if batch:
             return jax.lax.map(lambda a: run_one(*a), (source, goal_param))
@@ -664,7 +726,7 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
 
 def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
              axis_sizes, goal="tree", batch=False, compact_capacity: int = 0,
-             bmeta=None):
+             bmeta=None, trace_cap=0):
     p = n_pad // block
     axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
 
@@ -997,8 +1059,27 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             init = _V2State(dist0, parent0, frontier0, jnp.float32(0.0), INF,
                             jnp.float32(0.0), jnp.bool_(False), jnp.int32(0),
                             metrics0)
-            out = jax.lax.while_loop(cond, body, init)
-            return out.dist, out.parent, out.metrics
+            if trace_cap <= 0:
+                out = jax.lax.while_loop(cond, body, init)
+                return out.dist, out.parent, out.metrics
+
+            def traced_body(carry):
+                s, buf = carry
+                s1 = body(s)
+                m0, m1 = s.metrics, s1.metrics
+                stepped = (m1.n_steps > m0.n_steps) | (s1.done & ~s.done)
+                # the frontier is block-sharded here: psum the local census
+                # (one extra collective per iteration, traced solves only)
+                fsz = jax.lax.psum(
+                    jnp.sum(s.frontier.astype(jnp.int32)), axes)
+                buf = _dtrace_record(buf, s.iters, fsz, s.lb, s.ub, s.st,
+                                     stepped, m0, m1)
+                return s1, buf
+
+            out, buf = jax.lax.while_loop(
+                lambda c: cond(c[0]), traced_body,
+                (init, trace_init(trace_cap)))
+            return out.dist, out.parent, out.metrics, buf
 
         if batch:
             return jax.lax.map(lambda a: run_one(*a), (source, goal_param))

@@ -179,6 +179,19 @@ _REGISTRY: dict = {}
 
 
 def register_backend(backend: RelaxBackend, aliases=()) -> RelaxBackend:
+    # annotate layout builds at the source: every prepare() — from the
+    # facade, the serving registry, or direct engine calls — shows up as
+    # one repro:relax_prepare:<name> span in jax.profiler captures
+    from ..obs import profiling
+
+    prepare = backend.prepare
+    scope = f"repro:relax_prepare:{backend.name}"
+
+    def profiled_prepare(g, **opts):
+        with profiling.annotate(scope):
+            return prepare(g, **opts)
+
+    backend = dataclasses.replace(backend, prepare=profiled_prepare)
     _REGISTRY[backend.name] = backend
     for alias in aliases:
         _REGISTRY[alias] = backend

@@ -51,9 +51,12 @@ from .config import (ConfigError, EngineConfig, FacadeDeprecationWarning,
                      as_resolved)
 from .graph import DeviceGraph
 from .relax import INF, INT_MAX
+from ..obs import profiling
+from ..obs.trace import trace_append, trace_init
 
 __all__ = ["sssp", "sssp_batch", "sssp_p2p", "sssp_bounded", "sssp_knear",
-           "SsspMetrics", "LOGICAL_METRIC_FIELDS", "normalized_metrics",
+           "SsspMetrics", "LOGICAL_METRIC_FIELDS", "PHYSICAL_METRIC_FIELDS",
+           "metrics_dict", "normalized_metrics",
            "GOALS", "goal_param_array", "INF", "INT_MAX"]
 
 # Early-exit query goals.  A goal turns the full shortest-path-tree
@@ -291,16 +294,53 @@ def _transition(g: DeviceGraph, st_: SsspState,
                         metrics=metrics)
 
 
+def _trace_record(s0: SsspState, s1: SsspState, buf):
+    """Append one per-iteration trace record to ``buf`` (inside jit).
+
+    ``s0``/``s1`` are the loop state before/after the body, so every
+    counter column is the exact int32 delta the iteration contributed —
+    the host-side ``SolveTrace.counter_sums`` parity contract
+    (:mod:`repro.obs.trace`).  Reads state only: dist/parent/metrics
+    stay bitwise-identical with tracing on.
+    """
+    m0, m1 = s0.metrics, s1.metrics
+    # the transition ran iff it advanced a step (or terminated the solve)
+    stepped = ((m1.n_steps > m0.n_steps) | (s1.done & ~s0.done))
+    ivals = {
+        "iter": s0.iters,
+        "frontier": jnp.sum(s0.frontier.astype(jnp.int32)),
+        "stepped": stepped.astype(jnp.int32),
+        "n_rounds": m1.n_rounds - m0.n_rounds,
+        "n_steps": m1.n_steps - m0.n_steps,
+        "n_extended": m1.n_extended - m0.n_extended,
+        "n_trav": m1.n_trav - m0.n_trav,
+        "n_pull_trav": m1.n_pull_trav - m0.n_pull_trav,
+        "n_relax": m1.n_relax - m0.n_relax,
+        "n_updates": m1.n_updates - m0.n_updates,
+    }
+    fvals = {
+        "lb": s0.lb, "ub": s0.ub, "st": s0.st,
+        "n_tiles_scanned": m1.n_tiles_scanned - m0.n_tiles_scanned,
+        "n_tiles_dense": m1.n_tiles_dense - m0.n_tiles_dense,
+        "n_invocations": m1.n_invocations - m0.n_invocations,
+    }
+    return trace_append(buf, ivals, fvals)
+
+
 def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
          max_iters: int, alpha: float, beta: float, goal: str = "tree",
-         goal_param=None, fused_rounds: int = 0, fused=None):
+         goal_param=None, fused_rounds: int = 0, fused=None,
+         trace_capacity: int = 0):
     """Trace one SSSP computation (shared by sssp / sssp_batch); ``goal``
     selects the early-exit variant (see GOALS).  ``fused_rounds > 0``
     (blocked layouts only) runs each window's rounds through the fused
     megakernel — one kernel invocation per up-to-``fused_rounds`` rounds
     instead of one per source block per round; ``fused`` carries the
     prebuilt :class:`~repro.core.relax.FusedSlab` so the concatenation
-    is hoisted out of vmapped batches."""
+    is hoisted out of vmapped batches.  ``trace_capacity > 0`` records a
+    per-round :class:`~repro.obs.trace.TraceBuf` ring (returned as a
+    fourth output; ``None`` otherwise) — the knob is static, so 0
+    compiles the exact untraced program."""
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     if fused_rounds > 0:
         if not isinstance(layout, relax.BlockedGraph):
@@ -343,22 +383,32 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
                          s)
         return s._replace(iters=s.iters + 1)
 
-    out = jax.lax.while_loop(cond, body, init)
-    return out.dist, out.parent, out.metrics
+    if trace_capacity <= 0:
+        out = jax.lax.while_loop(cond, body, init)
+        return out.dist, out.parent, out.metrics, None
+
+    def traced_body(carry):
+        s, buf = carry
+        s1 = body(s)
+        return s1, _trace_record(s, s1, buf)
+
+    out, buf = jax.lax.while_loop(lambda c: cond(c[0]), traced_body,
+                                  (init, trace_init(trace_capacity)))
+    return out.dist, out.parent, out.metrics, buf
 
 
 @partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
-                                   "goal", "fused_rounds"))
+                                   "goal", "fused_rounds", "trace_capacity"))
 def _sssp_jit(g, layout, source, backend, max_iters, alpha, beta, goal,
-              goal_param, fused_rounds=0):
+              goal_param, fused_rounds=0, trace_capacity=0):
     return _run(g, layout, source, backend, max_iters, alpha, beta, goal,
-                goal_param, fused_rounds)
+                goal_param, fused_rounds, trace_capacity=trace_capacity)
 
 
 @partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
-                                   "goal", "fused_rounds"))
+                                   "goal", "fused_rounds", "trace_capacity"))
 def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta,
-                    goal, goal_params, fused_rounds=0):
+                    goal, goal_params, fused_rounds=0, trace_capacity=0):
     # build the fused slab once, outside vmap, so the concatenation isn't
     # replicated per batch slot
     fused = relax.fused_slab(layout) if (
@@ -366,13 +416,16 @@ def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta,
         else None
     return jax.vmap(
         lambda s, gp: _run(g, layout, s, backend, max_iters, alpha, beta,
-                           goal, gp, fused_rounds, fused)
+                           goal, gp, fused_rounds, fused,
+                           trace_capacity=trace_capacity)
     )(sources, goal_params)
 
 
 def prepare_layout(g: DeviceGraph, backend="segment_min", **backend_opts):
     """Build a backend's graph layout once (host-side, outside ``jit``)."""
-    return relax.get_backend(backend).prepare(g, **backend_opts)
+    be = relax.get_backend(backend)
+    with profiling.annotate(f"repro:prepare_layout:{be.name}"):
+        return be.prepare(g, **backend_opts)
 
 
 def _engine_args(g: DeviceGraph, config, backend, max_iters, alpha, beta,
@@ -386,7 +439,7 @@ def _engine_args(g: DeviceGraph, config, backend, max_iters, alpha, beta,
         beta=beta, fused_rounds=fused_rounds, **backend_opts)
     r = as_resolved(config, n=g.n, m=g.m).require("single")
     return (relax.get_backend(r.backend), r.max_iters, r.alpha, r.beta,
-            r.fused_rounds, r.layout_opts())
+            r.fused_rounds, r.trace_cap, r.layout_opts())
 
 
 def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
@@ -402,17 +455,22 @@ def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
     kwargs; pass a prebuilt ``layout`` (from :func:`prepare_layout`) to
     amortize backend preprocessing across calls.  ``goal``/``goal_param``
     select an early-exit query variant (see :data:`GOALS`).  Returns
-    ``(dist, parent, metrics)``.
+    ``(dist, parent, metrics)`` — or ``(dist, parent, metrics,
+    trace_buf)`` when the config enables per-round tracing
+    (``EngineConfig(trace=True)``; materialize the device ring with
+    :func:`repro.obs.materialize_trace`).
     """
-    be, max_iters, alpha, beta, fr, opts = _engine_args(
+    be, max_iters, alpha, beta, fr, tc, opts = _engine_args(
         g, config, backend, max_iters, alpha, beta, fused_rounds,
         backend_opts)
     if layout is None:
         layout = be.prepare(g, **opts)
     gp = goal_param_array(goal, goal_param)
     _check_goal_bounds(goal, gp, g.n)
-    return _sssp_jit(g, layout, jnp.int32(source), be, max_iters, alpha,
-                     beta, goal, gp, fr)
+    with profiling.annotate("repro:sssp_dispatch"):
+        out = _sssp_jit(g, layout, jnp.int32(source), be, max_iters, alpha,
+                        beta, goal, gp, fr, tc)
+    return out if tc > 0 else out[:3]
 
 
 def _shim(name: str, replacement: str) -> None:
@@ -460,9 +518,11 @@ def sssp_batch(g: DeviceGraph, sources, *, backend=None,
     All slots share the (static) ``goal`` kind but carry per-slot
     ``goal_params`` (targets / bounds / k values).  ``config`` replaces
     the loose engine kwargs exactly as in :func:`sssp`.  Returns
-    ``(dist, parent, metrics)`` with a leading ``[S]`` axis.
+    ``(dist, parent, metrics)`` with a leading ``[S]`` axis (plus a
+    batch-stacked trace ring when the config enables tracing, as in
+    :func:`sssp`).
     """
-    be, max_iters, alpha, beta, fr, opts = _engine_args(
+    be, max_iters, alpha, beta, fr, tc, opts = _engine_args(
         g, config, backend, max_iters, alpha, beta, fused_rounds,
         backend_opts)
     if layout is None:
@@ -475,8 +535,26 @@ def sssp_batch(g: DeviceGraph, sources, *, backend=None,
         raise ValueError(f"goal_params shape {gp.shape} != sources shape "
                          f"{sources.shape}")
     _check_goal_bounds(goal, gp, g.n)
-    return _sssp_batch_jit(g, layout, sources, be, max_iters, alpha, beta,
-                           goal, gp, fr)
+    with profiling.annotate("repro:sssp_batch_dispatch"):
+        out = _sssp_batch_jit(g, layout, sources, be, max_iters, alpha,
+                              beta, goal, gp, fr, tc)
+    return out if tc > 0 else out[:3]
+
+
+def metrics_dict(metrics: SsspMetrics) -> dict:
+    """Every ``SsspMetrics`` field as a host-side scalar, one key per
+    field: logical counters (:data:`LOGICAL_METRIC_FIELDS`) as ``int``,
+    physical counters (:data:`PHYSICAL_METRIC_FIELDS`) as ``float``.
+
+    This is the canonical machine-readable export shape — the benchmark
+    JSON emitter and the facade's telemetry both use it, and the export
+    invariants (every field present, every value finite) are pinned by
+    tests."""
+    out = {}
+    for name in SsspMetrics._fields:
+        v = np.asarray(getattr(metrics, name))
+        out[name] = float(v) if name in PHYSICAL_METRIC_FIELDS else int(v)
+    return out
 
 
 def normalized_metrics(g_deg, dist, metrics: SsspMetrics) -> dict:

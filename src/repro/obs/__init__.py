@@ -1,0 +1,35 @@
+"""Observability plane: solve traces, serving metrics, exporters.
+
+Three sub-systems, one package (see ISSUE 7 / README "Observability"):
+
+* :mod:`repro.obs.trace` — opt-in per-round solve traces
+  (``EngineConfig(trace=True)``): an on-device ring of per-round records
+  materialized host-side as :class:`SolveTrace`;
+* :mod:`repro.obs.metrics` — the thread-safe :class:`MetricsRegistry`
+  (counters / gauges / latency histograms) backing every serving-plane
+  ``stats()``;
+* :mod:`repro.obs.export` — Prometheus text exposition, JSONL snapshot
+  dumps, and the Perfetto (Chrome-trace) solve-trace exporter;
+* :mod:`repro.obs.profiling` — ``jax.profiler`` trace annotations
+  around engine builds and relax dispatch.
+
+This package deliberately imports nothing from ``repro.core`` or
+``repro.serve`` so every layer can depend on it without cycles.
+"""
+from .trace import (TRACE_COLUMNS, TRACE_COUNTER_COLUMNS, SolveTrace,
+                    TraceBuf, materialize_trace, trace_append, trace_init)
+from .metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge, Histogram,
+                      MetricsRegistry)
+from .export import (parse_prometheus, to_prometheus, trace_to_perfetto,
+                     write_jsonl_snapshot, write_perfetto)
+from .profiling import PROFILER_AVAILABLE, annotate
+
+__all__ = [
+    "TRACE_COLUMNS", "TRACE_COUNTER_COLUMNS", "SolveTrace", "TraceBuf",
+    "materialize_trace", "trace_append", "trace_init",
+    "DEFAULT_LATENCY_BUCKETS", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry",
+    "parse_prometheus", "to_prometheus", "trace_to_perfetto",
+    "write_jsonl_snapshot", "write_perfetto",
+    "PROFILER_AVAILABLE", "annotate",
+]

@@ -1,0 +1,33 @@
+"""``jax.profiler`` trace-annotation hooks (no-ops when unavailable).
+
+:func:`annotate` wraps host-side phases — engine/layout builds, relax
+dispatch — in a ``jax.profiler.TraceAnnotation`` so they show up as
+named spans in TensorBoard / Perfetto captures taken with
+``jax.profiler.trace()``.  When the profiler is missing (stripped
+builds, very old jax) it degrades to a ``nullcontext``: annotation must
+never be able to break a solve.
+
+These annotate *dispatch*, not traced computation: inside ``jit`` a
+host-side context manager would only fire at trace time, so the
+annotation sites live at the jit call boundaries (see
+``core/sssp.py`` / ``serve/registry.py``).
+"""
+from __future__ import annotations
+
+import contextlib
+
+__all__ = ["annotate", "PROFILER_AVAILABLE"]
+
+try:
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+    PROFILER_AVAILABLE = True
+except Exception:                                   # pragma: no cover
+    _TraceAnnotation = None
+    PROFILER_AVAILABLE = False
+
+
+def annotate(name: str):
+    """Context manager naming the enclosed host-side phase for profilers."""
+    if _TraceAnnotation is None:                    # pragma: no cover
+        return contextlib.nullcontext()
+    return _TraceAnnotation(name)

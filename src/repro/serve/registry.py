@@ -41,7 +41,6 @@ traffic arrives.
 from __future__ import annotations
 
 import collections
-import dataclasses
 import threading
 import time
 import weakref
@@ -59,6 +58,8 @@ from ..core.distributed import (blocked_specs, graph_specs, shard_blocked,
                                 ShardedGraph)
 from ..core.graph import DeviceGraph, HostGraph
 from ..core.sssp import GOALS, sssp_batch
+from ..obs import profiling
+from ..obs.metrics import MetricsRegistry
 
 __all__ = ["GraphEngine", "ShardedGraphEngine", "GraphRegistry",
            "estimate_eccentricity"]
@@ -326,18 +327,56 @@ class ShardedGraphEngine(_EngineBase):
         return dist[:, :self.n], parent[:, :self.n], metrics
 
 
-@dataclasses.dataclass
 class RegistryStats:
-    hits: int = 0
-    misses: int = 0
-    builds: int = 0
-    evictions: int = 0
-    build_waits: int = 0      # lookups that waited on another thread's build
+    """Counter-backed registry stats: the same ``stats.hits`` attribute
+    surface as the old plain dataclass, but every field is a live
+    read-through of a :class:`~repro.obs.metrics.MetricsRegistry` counter
+    (``sssp_registry_<field>_total``), so the legacy accessors and the
+    metrics snapshot/exposition can never disagree."""
+
+    FIELDS = ("hits", "misses", "builds", "evictions", "build_waits")
+
+    _HELP = {
+        "hits": "Engine-cache lookups served from the cache",
+        "misses": "Engine-cache lookups that required a build",
+        "builds": "Engines built (cold or rebuild after re-register)",
+        "evictions": "Engines dropped by LRU capacity pressure",
+        "build_waits": "Lookups that waited on another thread's build",
+    }
+
+    def __init__(self, metrics):
+        self._counters = {
+            f: metrics.counter(f"sssp_registry_{f}_total", help=self._HELP[f])
+            for f in self.FIELDS}
+
+    def inc(self, field: str, amount: int = 1) -> None:
+        self._counters[field].inc(amount)
+
+    @property
+    def hits(self) -> int:
+        return self._counters["hits"].value
+
+    @property
+    def misses(self) -> int:
+        return self._counters["misses"].value
+
+    @property
+    def builds(self) -> int:
+        return self._counters["builds"].value
+
+    @property
+    def evictions(self) -> int:
+        return self._counters["evictions"].value
+
+    @property
+    def build_waits(self) -> int:
+        return self._counters["build_waits"].value
 
     def as_dict(self) -> dict:
-        total = self.hits + self.misses
-        return {**dataclasses.asdict(self),
-                "hit_rate": self.hits / total if total else 1.0}
+        vals = {f: self._counters[f].value for f in self.FIELDS}
+        total = vals["hits"] + vals["misses"]
+        return {**vals,
+                "hit_rate": vals["hits"] / total if total else 1.0}
 
 
 class GraphRegistry:
@@ -374,6 +413,7 @@ class GraphRegistry:
                  shard_threshold_m: Optional[int] = None,
                  shard_devices=None, shard_version: Optional[str] = None,
                  shard_backend: Optional[str] = None,
+                 metrics: Optional[MetricsRegistry] = None,
                  **backend_opts):
         # the config is the one option surface — loose kwargs (other than
         # capacity, which sizes this cache) must stay unset alongside it;
@@ -428,7 +468,11 @@ class GraphRegistry:
         self._engines: "collections.OrderedDict[tuple, object]" \
             = collections.OrderedDict()
         self._building: Dict[tuple, Future] = {}
-        self.stats = RegistryStats()
+        # the metrics registry is the shared sink for the whole serving
+        # plane: schedulers/routers built on top of this registry default
+        # to it, so one snapshot covers every layer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = RegistryStats(self.metrics)
 
     # ------------------------------------------------------------------
     # specs + tiers
@@ -579,10 +623,10 @@ class GraphRegistry:
                                f"(have: {sorted(self._specs)})")
             eng = self._engines.get(key)
             if eng is not None:
-                self.stats.hits += 1
+                self.stats.inc("hits")
                 self._engines.move_to_end(key)
                 return eng
-            self.stats.misses += 1
+            self.stats.inc("misses")
             fut = self._building.get(key)
             owner = fut is None
             if owner:
@@ -593,7 +637,7 @@ class GraphRegistry:
                 gen = self._gens[gid]
             else:
                 # same-key build in flight: share it (wait off-lock)
-                self.stats.build_waits += 1
+                self.stats.inc("build_waits")
         if not owner:
             return fut.result()
         # we own the build: run it outside the lock so other keys' lookups
@@ -610,17 +654,21 @@ class GraphRegistry:
         with self._lock:
             if self._building.get(key) is fut:
                 del self._building[key]
-            self.stats.builds += 1
+            self.stats.inc("builds")
             if self._specs.get(gid) is spec:     # not re-registered mid-build
                 self._engines[key] = eng
                 self._engines.move_to_end(key)
                 while len(self._engines) > self.capacity:
                     self._engines.popitem(last=False)
-                    self.stats.evictions += 1
+                    self.stats.inc("evictions")
         fut.set_result(eng)
         return eng
 
     def _build(self, gid, spec, backend, device, tier):
+        with profiling.annotate(f"repro:engine_build:{gid}:{tier}"):
+            return self._build_inner(gid, spec, backend, device, tier)
+
+    def _build_inner(self, gid, spec, backend, device, tier):
         hg = spec() if callable(spec) else spec
         if tier == "sharded":
             # only the blocked layout's geometry opts apply mesh-side

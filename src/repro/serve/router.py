@@ -50,11 +50,13 @@ devices up to P batches compute while P hosts finalize.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
 
 from ..core.config import EngineConfig, resolve_devices
+from ..obs.metrics import MetricsRegistry
 from .queries import Query
 from .registry import GraphRegistry
 from .scheduler import QueryScheduler
@@ -93,7 +95,9 @@ class QueryRouter:
                  replicate_min_depth: int = 16,
                  decay_window: int = 256,
                  decay_share: float = 0.05,
-                 decay_windows: int = 3):
+                 decay_windows: int = 3,
+                 clock=time.monotonic,
+                 metrics: Optional[MetricsRegistry] = None):
         user_config = config is not None
         config = EngineConfig.from_loose(
             config, "router", max_batch=max_batch, backend=backend,
@@ -123,9 +127,14 @@ class QueryRouter:
         self.max_batch = max_batch
         self.replicate_factor = replicate_factor
         self.replicate_min_depth = replicate_min_depth
+        # one metrics registry for the whole plane: the router, every
+        # per-device scheduler, and the graph registry all write to it,
+        # so a single snapshot/exposition covers every layer
+        self.metrics = metrics if metrics is not None else registry.metrics
         kw = dict(max_batch=max_batch, backend=backend,
                   admit_window=admit_window, ecc_batching=ecc_batching,
-                  max_pending=max_pending, feedback=feedback)
+                  max_pending=max_pending, feedback=feedback,
+                  clock=clock, metrics=self.metrics)
         self.schedulers = [
             QueryScheduler(registry, device=d, name=f"dev{i}", **kw)
             for i, d in enumerate(devices)]
@@ -146,10 +155,17 @@ class QueryRouter:
         self._window_routed = 0
         self._window_traffic: Dict[Tuple[int, str], int] = {}
         self._cold_streak: Dict[Tuple[int, str], int] = {}
-        self.n_routed = 0
-        self.n_replications = 0
-        self.n_rebuilds = 0
-        self.n_decays = 0
+        self._c_routed = self.metrics.counter(
+            "sssp_router_routed_total", help="Queries routed")
+        self._c_replications = self.metrics.counter(
+            "sssp_router_replications_total",
+            help="Hot-graph replications onto an extra device")
+        self._c_rebuilds = self.metrics.counter(
+            "sssp_router_rebuilds_total",
+            help="Replica engines rebuilt after a spec re-register")
+        self._c_decays = self.metrics.counter(
+            "sssp_router_decays_total",
+            help="Cold replicas removed from a graph's placement")
         # replica consistency: a re-register() drops the cached engines,
         # but an already-placed replica would otherwise serve its next
         # query from a cold build; rebuild every replica eagerly instead
@@ -158,6 +174,23 @@ class QueryRouter:
     @property
     def n_devices(self) -> int:
         return len(self.devices)
+
+    # legacy counter attributes: read-throughs of the metrics series
+    @property
+    def n_routed(self) -> int:
+        return self._c_routed.value
+
+    @property
+    def n_replications(self) -> int:
+        return self._c_replications.value
+
+    @property
+    def n_rebuilds(self) -> int:
+        return self._c_rebuilds.value
+
+    @property
+    def n_decays(self) -> int:
+        return self._c_decays.value
 
     def _all_schedulers(self):
         return self.schedulers + [self.mesh_scheduler]
@@ -210,7 +243,7 @@ class QueryRouter:
             return
         placed.append(cold)
         self._n_placed[cold] += 1
-        self.n_replications += 1
+        self._c_replications.inc()
 
     def _maybe_decay_locked(self) -> None:
         """Close one routing window; shrink placements of replicas whose
@@ -242,7 +275,7 @@ class QueryRouter:
                         placed.remove(i)
                         self._n_placed[i] = max(self._n_placed[i] - 1, 0)
                         self._cold_streak.pop(key, None)
-                        self.n_decays += 1
+                        self._c_decays.inc()
                     else:
                         self._cold_streak[key] = streak
                 else:
@@ -267,8 +300,7 @@ class QueryRouter:
                 served = gid in self._mesh_gids
             if served:
                 self.registry.engine(gid, self.backend)
-                with self._lock:
-                    self.n_rebuilds += 1
+                self._c_rebuilds.inc()
             return
         with self._lock:
             idxs = list(self._placement.get(gid, ()))
@@ -280,8 +312,7 @@ class QueryRouter:
                 continue
             seen.add(dev_key)
             self.registry.engine(gid, self.backend, device=dev)
-            with self._lock:
-                self.n_rebuilds += 1
+            self._c_rebuilds.inc()
 
     def plan_placement(self, weights: Dict[str, float]) -> Dict[str, list]:
         """Pre-place graphs with replica counts proportional to expected
@@ -332,22 +363,22 @@ class QueryRouter:
             with self._lock:
                 idx = min(range(len(self.schedulers)),
                           key=lambda i: (self._load[i], i))
-                self.n_routed += 1
+            self._c_routed.inc()
             return self.schedulers[idx].submit(query, priority=priority,
                                                deadline_s=deadline_s)
         if tier == "sharded":
             fut = self.mesh_scheduler.submit(query, priority=priority,
                                              deadline_s=deadline_s)
+            self._c_routed.inc()
             with self._lock:
-                self.n_routed += 1
                 self._mesh_gids.add(gid)
             return fut
         with self._lock:
             idx = self._route_locked(gid)
         fut = self.schedulers[idx].submit(query, priority=priority,
                                           deadline_s=deadline_s)
+        self._c_routed.inc()
         with self._lock:
-            self.n_routed += 1
             self._load[idx] += 1
             self._gid_load[(idx, gid)] = \
                 self._gid_load.get((idx, gid), 0) + 1

@@ -54,6 +54,7 @@ import jax
 
 from .queries import ExecutionPlan, Query, finalize, plan
 from .registry import GraphRegistry
+from ..obs.metrics import MetricsRegistry
 
 __all__ = ["DeadlineExceeded", "QueueFull", "QueryScheduler"]
 
@@ -102,7 +103,9 @@ class QueryScheduler:
                  ecc_batching: bool = True,
                  device=None, name: Optional[str] = None,
                  max_pending: Optional[int] = None,
-                 feedback: bool = True, feedback_gamma: float = 0.25):
+                 feedback: bool = True, feedback_gamma: float = 0.25,
+                 clock=time.monotonic,
+                 metrics: Optional[MetricsRegistry] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if admit_window is None:
@@ -123,6 +126,9 @@ class QueryScheduler:
         self.max_pending = max_pending
         self.feedback = feedback
         self.feedback_gamma = feedback_gamma
+        # every deadline/latency read goes through the injectable clock
+        # (monotonic seconds), so expiry/histogram tests run on fake time
+        self._clock = clock
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._pending: List[_Ticket] = []
@@ -131,27 +137,65 @@ class QueryScheduler:
         self._stop = False
         self._inflight_n = 0
         # serving counters (the benchmark's occupancy/throughput inputs)
-        self.n_batches = 0
-        self.n_done = 0
-        self.n_expired = 0
-        self.n_rejected = 0
+        # live in the shared MetricsRegistry — one series per scheduler
+        # name; the legacy attributes below read through to them
+        self.metrics = metrics if metrics is not None else registry.metrics
+        lbl = {"scheduler": self.name}
+        self._c_batches = self.metrics.counter(
+            "sssp_scheduler_batches_total", "fused batches executed", lbl)
+        self._c_done = self.metrics.counter(
+            "sssp_scheduler_queries_done_total", "queries resolved", lbl)
+        self._c_expired = self.metrics.counter(
+            "sssp_scheduler_expired_total",
+            "queries expired before admission", lbl)
+        self._c_rejected = self.metrics.counter(
+            "sssp_scheduler_rejected_total",
+            "queries rejected at submit (queue full)", lbl)
+        self._g_pending = self.metrics.gauge(
+            "sssp_scheduler_pending", "tickets queued", lbl)
+        self._g_inflight = self.metrics.gauge(
+            "sssp_scheduler_inflight", "tickets dispatched, unfinalized",
+            lbl)
+        self._h_latency = self.metrics.histogram(
+            "sssp_query_latency_seconds",
+            "submit-to-result latency per query", lbl)
+
+    # legacy counter attributes read through to the metrics registry
+    @property
+    def n_batches(self) -> int:
+        return self._c_batches.value
+
+    @property
+    def n_done(self) -> int:
+        return self._c_done.value
+
+    @property
+    def n_expired(self) -> int:
+        return self._c_expired.value
+
+    @property
+    def n_rejected(self) -> int:
+        return self._c_rejected.value
 
     # ------------------------------------------------------------------
     # producer side
     # ------------------------------------------------------------------
 
     def submit(self, query: Query, *, priority: int = 0,
-               deadline_s: Optional[float] = None) -> Future:
+               deadline_s: Optional[float] = None,
+               _now: Optional[float] = None) -> Future:
         """Enqueue a query; higher ``priority`` is served first (FIFO
         within a priority level), ``deadline_s`` seconds from now bounds
         its queueing time.  Raises :class:`QueueFull` (and counts the
-        rejection) when a bounded queue is at ``max_pending``."""
-        now = time.monotonic()
+        rejection) when a bounded queue is at ``max_pending``.
+        ``_now`` overrides the scheduler clock for this one call (tests);
+        construct with ``clock=`` to fake time everywhere."""
+        now = self._clock() if _now is None else _now
         fut: Future = Future()
         with self._work:
             if (self.max_pending is not None
                     and len(self._pending) >= self.max_pending):
-                self.n_rejected += 1
+                self._c_rejected.inc()
                 raise QueueFull(
                     f"admission queue full ({self.max_pending} pending) "
                     f"on scheduler {self.name!r}; query {query} rejected")
@@ -161,6 +205,7 @@ class QueryScheduler:
                 priority=priority,
                 deadline=None if deadline_s is None else now + deadline_s,
                 future=fut, t_submit=now))
+            self._g_pending.set(len(self._pending))
             self._work.notify()
         return fut
 
@@ -179,7 +224,7 @@ class QueryScheduler:
         live = []
         for t in self._pending:
             if t.deadline is not None and now > t.deadline:
-                self.n_expired += 1
+                self._c_expired.inc()
                 try:
                     t.future.set_exception(DeadlineExceeded(
                         f"query {t.query} missed its deadline by "
@@ -238,10 +283,12 @@ class QueryScheduler:
                       ) -> Tuple[bool, Optional[_Inflight]]:
         """Admit one batch and dispatch it to the device (non-blocking)."""
         with self._lock:
-            self._expire_locked(time.monotonic() if _now is None else _now)
+            self._expire_locked(self._clock() if _now is None else _now)
             if not self._pending:
+                self._g_pending.set(len(self._pending))
                 return False, None
             batch = self._select_locked()
+            self._g_pending.set(len(self._pending))
         batch = [t for t in batch if t.future.set_running_or_notify_cancel()]
         if not batch:
             return True, None   # all cancelled — the queue made progress
@@ -281,6 +328,7 @@ class QueryScheduler:
             return None              # futures carry the error; keep serving
         with self._lock:
             self._inflight_n += len(batch)
+            self._g_inflight.set(self._inflight_n)
         return _Inflight(batch=batch, eng=eng,
                          sources=sources[:len(batch)],
                          dist=dist, parent=parent, metrics=metrics)
@@ -298,6 +346,7 @@ class QueryScheduler:
                 t.future.set_exception(exc)
             with self._lock:
                 self._inflight_n -= len(batch)
+                self._g_inflight.set(self._inflight_n)
             return
         if self.feedback:
             try:
@@ -308,17 +357,19 @@ class QueryScheduler:
                                   gamma=self.feedback_gamma)
             except Exception:
                 pass                 # a hint failure must not fail results
-        now = time.monotonic()
+        now = self._clock()
         for slot, t in enumerate(batch):
             res = finalize(t.query, eng.deg, dist[slot], parent[slot],
                            _slot_tree(metrics, slot))
             res.latency_s = now - t.t_submit
             res.served_by = self.name
+            self._h_latency.observe(res.latency_s)
             t.future.set_result(res)
         with self._lock:
-            self.n_batches += 1
-            self.n_done += len(batch)
+            self._c_batches.inc()
+            self._c_done.inc(len(batch))
             self._inflight_n -= len(batch)
+            self._g_inflight.set(self._inflight_n)
 
     def drain(self, max_steps: int = 10_000) -> int:
         """Synchronously run batches until the queue empties."""
@@ -386,11 +437,15 @@ class QueryScheduler:
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
+        """The legacy per-scheduler dict; every value is read from the
+        shared :class:`~repro.obs.metrics.MetricsRegistry` series, so
+        this and ``metrics.snapshot()`` can never disagree."""
         with self._lock:
-            occ = (self.n_done / (self.n_batches * self.max_batch)
-                   if self.n_batches else 0.0)
-            return {"name": self.name, "n_batches": self.n_batches,
-                    "n_done": self.n_done, "n_expired": self.n_expired,
+            n_batches, n_done = self.n_batches, self.n_done
+            occ = (n_done / (n_batches * self.max_batch)
+                   if n_batches else 0.0)
+            return {"name": self.name, "n_batches": n_batches,
+                    "n_done": n_done, "n_expired": self.n_expired,
                     "rejected": self.n_rejected, "occupancy": occ,
                     "pending": len(self._pending),
                     "inflight": self._inflight_n,

@@ -15,12 +15,14 @@ queries); this facade only speaks full shortest-path trees, FIFO.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Tuple
 
 import numpy as np
 
 from ..core.config import EngineConfig, resolve_devices
 from ..core.graph import DeviceGraph, HostGraph
+from ..obs.export import to_prometheus, write_jsonl_snapshot
 from .queries import Query
 from .registry import GraphRegistry
 from .router import QueryRouter
@@ -61,7 +63,8 @@ class SsspService:
                  beta: Optional[float] = None, devices=None,
                  shard_threshold_n: Optional[int] = None,
                  shard_threshold_m: Optional[int] = None,
-                 shard_backend: Optional[str] = None, **backend_opts):
+                 shard_backend: Optional[str] = None,
+                 clock=time.monotonic, **backend_opts):
         if not isinstance(g, (HostGraph, DeviceGraph)):
             raise TypeError(f"expected HostGraph/DeviceGraph, got {type(g)}")
         user_config = config is not None
@@ -97,12 +100,14 @@ class SsspService:
             self.scheduler = QueryScheduler(self.registry,
                                             max_batch=max_batch,
                                             max_pending=config.max_pending,
-                                            ecc_batching=False)
+                                            ecc_batching=False,
+                                            clock=clock)
         else:
             self.router = QueryRouter(self.registry, devices=devices,
                                       max_batch=max_batch,
                                       max_pending=config.max_pending,
-                                      ecc_batching=False)
+                                      ecc_batching=False,
+                                      clock=clock)
             self.scheduler = None
         self.max_batch = max_batch
         self.n = int(g.n)
@@ -167,3 +172,35 @@ class SsspService:
             steps = self.scheduler.drain(max_steps)
         self._collect()
         return steps
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    @property
+    def metrics(self):
+        """The serving plane's one :class:`~repro.obs.metrics.MetricsRegistry`
+        — the registry, every scheduler, and the router (when routed) all
+        write their series here."""
+        return self.registry.metrics
+
+    def metrics_snapshot(self) -> dict:
+        """One consistent ``{series_name: entry}`` snapshot covering the
+        engine registry, the scheduler(s), and (routed) the router —
+        counters/gauges as ``{"type", "value"}``, latency histograms with
+        cumulative buckets, count/sum, and interpolated p50/p90/p99."""
+        return self.metrics.snapshot()
+
+    def metrics_exposition(self) -> str:
+        """The snapshot in Prometheus text exposition format
+        (``# HELP``/``# TYPE`` + samples; histograms expand to
+        ``_bucket{le=...}``/``_sum``/``_count`` series)."""
+        return to_prometheus(self.metrics_snapshot())
+
+    def dump_metrics_jsonl(self, path, **meta) -> dict:
+        """Append one timestamped JSONL line holding the full snapshot to
+        ``path`` (plus any ``meta`` fields, e.g. a run id); returns the
+        snapshot that was written."""
+        snap = self.metrics_snapshot()
+        write_jsonl_snapshot(snap, path, meta=meta or None)
+        return snap

@@ -1,0 +1,196 @@
+"""Unit tests for the serving metrics registry and its exporters.
+
+These are pure host-side tests (no solver involved): counter/gauge/
+histogram semantics, the get-or-create identity and conflict rules,
+histogram percentile interpolation against hand-computed values, the
+Prometheus text exposition round-trip, and the JSONL snapshot dump.
+"""
+import json
+import math
+import threading
+
+import pytest
+
+from repro.obs.export import (parse_prometheus, to_prometheus,
+                              write_jsonl_snapshot)
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
+                               Histogram, MetricsRegistry)
+
+
+# ----------------------------------------------------------------------
+# counters / gauges
+# ----------------------------------------------------------------------
+
+def test_counter_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", help="requests")
+    assert c.value == 0
+    c.inc()
+    c.inc(5)
+    assert c.value == 6
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 6
+
+
+def test_gauge_basics():
+    reg = MetricsRegistry()
+    g = reg.gauge("depth")
+    g.set(7)
+    assert g.value == 7
+    g.inc(2)
+    g.dec()
+    assert g.value == 8
+
+
+def test_get_or_create_identity_and_labels():
+    reg = MetricsRegistry()
+    a = reg.counter("hits_total", labels={"dev": "0"})
+    b = reg.counter("hits_total", labels={"dev": "0"})
+    c = reg.counter("hits_total", labels={"dev": "1"})
+    assert a is b
+    assert a is not c
+    a.inc()
+    assert b.value == 1 and c.value == 0
+    snap = reg.snapshot()
+    assert snap['hits_total{dev="0"}']["value"] == 1
+    assert snap['hits_total{dev="1"}']["value"] == 0
+
+
+def test_type_conflict_rejected():
+    reg = MetricsRegistry()
+    reg.counter("x_total")
+    with pytest.raises(ValueError):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError):
+        reg.histogram("x_total")
+
+
+def test_invalid_names_rejected():
+    reg = MetricsRegistry()
+    for bad in ("1leading_digit", "has space", "has-dash", ""):
+        with pytest.raises(ValueError):
+            reg.counter(bad)
+    with pytest.raises(ValueError):
+        reg.counter("ok_total", labels={"bad-label": "v"})
+
+
+# ----------------------------------------------------------------------
+# histograms
+# ----------------------------------------------------------------------
+
+def test_histogram_count_sum_and_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 100.0):
+        h.observe(v)
+    assert h.count == 4
+    assert h.sum == pytest.approx(105.0)
+    snap = reg.snapshot()["lat"]
+    # cumulative per-bucket counts, +Inf implicit
+    assert snap["buckets"]["1"] == 1
+    assert snap["buckets"]["2"] == 2
+    assert snap["buckets"]["4"] == 3
+    assert snap["buckets"]["+Inf"] == 4
+
+
+def test_histogram_percentile_interpolation():
+    # 100 observations uniform in (0, 1]: within the single (0.0, 1.0]
+    # bucket the estimate interpolates linearly, exactly like
+    # histogram_quantile
+    h = Histogram("lat", "", {}, threading.Lock(), buckets=(1.0, 2.0))
+    for i in range(100):
+        h.observe((i + 1) / 100.0)
+    assert h.percentile(0.5) == pytest.approx(0.5)
+    assert h.percentile(0.9) == pytest.approx(0.9)
+    # all mass in one bucket whose lower bound is 0 -> p99 still inside it
+    assert 0.0 < h.percentile(0.99) <= 1.0
+
+
+def test_histogram_percentile_empty_and_overflow():
+    h = Histogram("lat", "", {}, threading.Lock(), buckets=(1.0,))
+    assert math.isnan(h.percentile(0.5))
+    h.observe(50.0)     # lands in +Inf: reports the finite lower bound
+    assert h.percentile(0.5) == pytest.approx(1.0)
+
+
+def test_histogram_rejects_bad_buckets():
+    lock = threading.Lock()
+    with pytest.raises(ValueError):
+        Histogram("lat", "", {}, lock, buckets=())
+    with pytest.raises(ValueError):
+        Histogram("lat", "", {}, lock, buckets=(2.0, 1.0))
+
+
+def test_default_latency_buckets_are_increasing():
+    assert list(DEFAULT_LATENCY_BUCKETS) == sorted(DEFAULT_LATENCY_BUCKETS)
+    assert len(set(DEFAULT_LATENCY_BUCKETS)) == len(DEFAULT_LATENCY_BUCKETS)
+
+
+def test_thread_safety_under_contention():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total")
+    h = reg.histogram("h", buckets=(1.0, 2.0))
+
+    def work():
+        for _ in range(1000):
+            c.inc()
+            h.observe(0.5)
+
+    threads = [threading.Thread(target=work) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 8000
+    assert h.count == 8000
+
+
+# ----------------------------------------------------------------------
+# exporters
+# ----------------------------------------------------------------------
+
+def _populated_registry():
+    reg = MetricsRegistry()
+    reg.counter("sssp_requests_total", help="total requests",
+                labels={"scheduler": "dev0"}).inc(3)
+    reg.gauge("sssp_pending", labels={"scheduler": "dev0"}).set(2)
+    h = reg.histogram("sssp_latency_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    return reg
+
+
+def test_prometheus_round_trip():
+    reg = _populated_registry()
+    text = to_prometheus(reg.snapshot())
+    assert "# TYPE sssp_requests_total counter" in text
+    assert "# TYPE sssp_latency_seconds histogram" in text
+    parsed = parse_prometheus(text)
+    assert parsed['sssp_requests_total{scheduler="dev0"}'] == 3
+    assert parsed['sssp_pending{scheduler="dev0"}'] == 2
+    assert parsed['sssp_latency_seconds_bucket{le="0.1"}'] == 1
+    assert parsed['sssp_latency_seconds_bucket{le="+Inf"}'] == 2
+    assert parsed["sssp_latency_seconds_count"] == 2
+    assert parsed["sssp_latency_seconds_sum"] == pytest.approx(0.55)
+
+
+def test_prometheus_parser_is_strict():
+    with pytest.raises(ValueError):
+        parse_prometheus("not a metric line at all!\n")
+    with pytest.raises(ValueError):
+        parse_prometheus("a_total 1\na_total 2\n")   # duplicate sample
+
+
+def test_jsonl_snapshot(tmp_path):
+    reg = _populated_registry()
+    path = tmp_path / "metrics.jsonl"
+    write_jsonl_snapshot(reg.snapshot(), path, meta={"run": "t1"})
+    write_jsonl_snapshot(reg.snapshot(), path)
+    lines = path.read_text().strip().split("\n")
+    assert len(lines) == 2
+    rec = json.loads(lines[0])
+    assert rec["run"] == "t1"
+    assert rec["ts"] > 0
+    name = 'sssp_requests_total{scheduler="dev0"}'
+    assert rec["metrics"][name]["value"] == 3
