@@ -137,7 +137,8 @@ def run_p2p_vs_tree(g, pairs, alpha=3.0, beta=0.9, backend="segment_min"):
 
 def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
                         capacity=None, backend=None, warm_kinds=None,
-                        max_pending=None, open_loop=False):
+                        max_pending=None, open_loop=False,
+                        jsonl_path=None, jsonl_meta=None):
     """Serve a traffic list through a :class:`QueryRouter` and measure it.
 
     ``devices`` selects the serving plane width (default: every local
@@ -152,6 +153,11 @@ def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
     of closed-loop drain behaviour; submissions shed by a bounded queue
     (``QueueFull``) are counted, not retried, as an open-loop client
     would.  The result gains ``offered_qps`` and ``shed``.
+
+    ``jsonl_path`` appends one line to that JSONL stream: the serving
+    plane's full metrics snapshot with the run's shed/latency summary
+    (and any ``jsonl_meta``) as the line's meta — the same exportable
+    telemetry format the observability plane and the tuner write.
     """
     from repro.serve.registry import GraphRegistry
     from repro.serve.router import QueryRouter
@@ -222,6 +228,16 @@ def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
     if open_loop:
         span = max(traffic[-1].arrival_s, 1e-9) if traffic else 1e-9
         out["offered_qps"] = len(traffic) / span
+    if jsonl_path:
+        from repro.obs.export import write_jsonl_snapshot
+        meta = dict(jsonl_meta or {})
+        meta.update(qps=out["qps"], p50_ms=out["p50_ms"],
+                    p99_ms=out["p99_ms"], shed=shed,
+                    occupancy=out["occupancy"], n_devices=n_dev)
+        if open_loop:
+            meta["offered_qps"] = out["offered_qps"]
+        write_jsonl_snapshot(router.metrics.snapshot(), jsonl_path,
+                             meta=meta)
     return out
 
 

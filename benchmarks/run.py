@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run [--scale 14] [--sources 4]
         [--backend segment_min|blocked_pallas] [--batch 4]
         [--full-variants]
-        [--sections fig4,fig5,fig6,table3,backends,roofline,serving]
+        [--sections fig4,fig5,fig6,table3,backends,roofline,serving,tuner]
         [--open-loop]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per graph x metric) and
@@ -41,7 +41,17 @@ Sections:
              for a CPU device mesh.  With ``--open-loop``, submissions
              are paced by the traffic's Poisson ``arrival_s`` at several
              fractions of the measured closed-loop capacity and the
-             section reports p50/p99 tail latency vs offered load.
+             section reports p50/p99 tail latency vs offered load; each
+             load point also appends its shed/latency curve + the
+             serving plane's metrics snapshot to
+             benchmarks/artifacts/serving_open_loop.jsonl (the same
+             JSONL snapshot stream the tuner writes).
+  tuner    — the per-graph EngineConfig auto-tuner (repro.tune) on three
+             graph families: default vs tuned trace objective, the
+             reduction, bitwise dist/parent parity of the winner, and
+             the evaluation counts.  Winners persist to
+             benchmarks/artifacts/tuned.json; the search trajectory
+             streams to benchmarks/artifacts/tuner.jsonl.
 
 ``--backend`` selects the relaxation backend used by the paper-metric
 sections (fig4/5/6, table3); the ``backends`` section always sweeps all
@@ -214,9 +224,16 @@ def roofline(rows, scale):
 def serving_open_loop(rows, graphs, base_qps, batch, n_queries, seed,
                       load_fracs=(0.3, 0.6, 0.9)):
     """Open-loop mode: Poisson arrivals at fractions of the measured
-    closed-loop capacity; reports p50/p99 tail latency vs offered load."""
+    closed-loop capacity; reports p50/p99 tail latency vs offered load.
+
+    Each load point's shed/latency curve also lands in the JSONL
+    snapshot stream (``serving_open_loop.jsonl``) together with the
+    serving plane's full metrics snapshot, so the curves are queryable
+    alongside the other exported telemetry instead of only living in
+    the per-section BENCH json."""
     from repro.data.traffic import make_traffic
 
+    jsonl = os.path.join(ART, "serving_open_loop.jsonl")
     for frac in load_fracs:
         rate = max(base_qps * frac, 0.5)
         traffic = make_traffic(graphs, n_queries, seed=seed, rate_qps=rate)
@@ -225,11 +242,59 @@ def serving_open_loop(rows, graphs, base_qps, batch, n_queries, seed,
         # admission control for the p99-vs-load curve to mean anything
         r = common.run_serving_traffic(graphs, traffic, max_batch=batch,
                                        open_loop=True,
-                                       max_pending=8 * batch)
+                                       max_pending=8 * batch,
+                                       jsonl_path=jsonl,
+                                       jsonl_meta={
+                                           "kind": "serving_open_loop",
+                                           "load_frac": frac,
+                                           "n_queries": n_queries,
+                                       })
         emit(rows, f"serving/open_loop/{frac:g}x", r["time_s"],
              offered_qps=r["offered_qps"], achieved_qps=r["qps"],
              p50_ms=r["p50_ms"], p99_ms=r["p99_ms"], shed=r["shed"],
              occupancy=r["occupancy"], n_queries=n_queries)
+
+
+def tuner(rows, scale, budget=14, seed=0):
+    """Per-graph EngineConfig auto-tuner (``repro.tune``) on three graph
+    families: default vs tuned trace objective + reduction, winner's
+    bitwise parity (the tuner accepts only parity-identical candidates,
+    so rejects are also reported), and the evaluation budget spent.
+
+    Winners persist to ``benchmarks/artifacts/tuned.json``; the full
+    search trajectory streams to ``benchmarks/artifacts/tuner.jsonl``
+    (one line per candidate + a final metrics snapshot per graph).
+    """
+    import time
+
+    from repro.data.generators import kronecker, road_grid, uniform_random
+    from repro.tune import TunedStore, tune
+
+    sc = min(scale, 10)
+    n = 1 << sc
+    side = int(np.sqrt(n))
+    graphs = {
+        f"kron{sc}": kronecker(sc, 8, seed=2),
+        "road": road_grid(side, seed=5),
+        "urand": uniform_random(n, 8 * n, seed=6),
+    }
+    store = TunedStore(os.path.join(ART, "tuned.json"))
+    jsonl = os.path.join(ART, "tuner.jsonl")
+    print(f"# tuner: {len(graphs)} graphs, budget={budget} evals each, "
+          f"seed={seed}")
+    for gid, g in graphs.items():
+        t0 = time.perf_counter()
+        res = tune(g, gid=gid, budget=budget, seed=seed, store=store,
+                   jsonl_path=jsonl)
+        best = res.best_config
+        emit(rows, f"tuner/{gid}", time.perf_counter() - t0,
+             baseline_objective=res.baseline_objective,
+             tuned_objective=res.best_objective,
+             reduction=res.reduction, improved=int(res.improved),
+             n_evals=res.n_evals, accepted=res.n_accepted,
+             parity_rejects=res.n_parity_rejects, invalid=res.n_invalid,
+             alpha=best.alpha, beta=best.beta, policy=best.policy,
+             fused_rounds=best.fused_rounds)
 
 
 def serving(rows, scale, batch, n_queries=None, seed=0, open_loop=False):
@@ -371,6 +436,9 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=None,
                     help="query count for the serving section "
                          "(default: max(48, 8*batch))")
+    ap.add_argument("--tune-budget", type=int, default=14,
+                    help="tuner section: candidate evaluations per graph "
+                         "(baseline included)")
     ap.add_argument("--open-loop", action="store_true",
                     help="serving section: pace submissions by the "
                          "traffic's Poisson arrival_s and report p50/p99 "
@@ -386,6 +454,8 @@ def main() -> None:
         ap.error("--sources must be >= 1")
     if args.queries is not None and args.queries < 1:
         ap.error("--queries must be >= 1")
+    if args.tune_budget < 1:
+        ap.error("--tune-budget must be >= 1")
 
     os.makedirs(ART, exist_ok=True)
     rows = []
@@ -412,6 +482,9 @@ def main() -> None:
     if "serving" in sections:
         run_section("serving", serving, args.scale, args.batch,
                     n_queries=args.queries, open_loop=args.open_loop)
+    if "tuner" in sections:
+        run_section("tuner", tuner, args.scale,
+                    budget=args.tune_budget)
     with open(os.path.join(ART, "paper_metrics.json"), "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {len(rows)} rows to benchmarks/artifacts/paper_metrics.json")

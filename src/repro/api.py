@@ -333,11 +333,12 @@ class Solver:
     """
 
     def __init__(self, graph, resolved: ResolvedEngine, *, layout=None,
-                 gid: str = "default"):
+                 gid: str = "default", tuned=None):
         self.resolved = resolved
         self.config = resolved.config
         self.tier = resolved.tier
         self.gid = gid
+        self._tuned = tuned
         self._host = graph
         self.deg = np.asarray(graph.deg)
         self.n = int(self.deg.shape[0])
@@ -364,7 +365,7 @@ class Solver:
 
     @classmethod
     def open(cls, graph, config: Optional[EngineConfig] = None, *,
-             layout=None, gid: str = "default") -> "Solver":
+             layout=None, gid: str = "default", tuned=None) -> "Solver":
         """Open a solver session on ``graph``.
 
         ``graph`` is a :class:`~repro.core.graph.HostGraph` or
@@ -373,14 +374,31 @@ class Solver:
         ``layout`` optionally reuses a prebuilt single-tier backend
         layout (validated against the config — a mismatched or partial
         layout fails here, not at trace time).
+
+        ``tuned`` is a :class:`~repro.tune.TunedStore` (or a path to
+        one): the store's per-``gid`` offline-tuned perf fields
+        (``alpha``/``beta``/``policy``/geometry — see
+        :data:`repro.tune.TUNED_FIELDS`) are overlaid onto ``config``
+        before resolution on the single/sharded tiers, and handed to the
+        routed tier's registry for per-graph application.  A missing or
+        stale entry (the graph changed since the tune) leaves ``config``
+        untouched.
         """
         if not isinstance(graph, (HostGraph, DeviceGraph)):
             raise TypeError(f"expected HostGraph or DeviceGraph, got "
                             f"{type(graph)}")
         if config is None:
             config = EngineConfig()
-        resolved = as_resolved(config, n=int(graph.n), m=int(graph.m))
-        return cls(graph, resolved, layout=layout, gid=gid)
+        if tuned is not None and not hasattr(tuned, "apply"):
+            from .tune.store import TunedStore
+            tuned = TunedStore(tuned)
+        n, m = int(graph.n), int(graph.m)
+        resolved = as_resolved(config, n=n, m=m)
+        if tuned is not None and resolved.tier != "routed":
+            tuned_cfg = tuned.apply(gid, graph, config, n=n, m=m)
+            if tuned_cfg != config:
+                resolved = as_resolved(tuned_cfg, n=n, m=m)
+        return cls(graph, resolved, layout=layout, gid=gid, tuned=tuned)
 
     def _open_single(self, graph, layout):
         r = self.resolved
@@ -460,7 +478,8 @@ class Solver:
         from .serve.registry import GraphRegistry
         from .serve.router import QueryRouter
         r = self.resolved
-        self._registry = GraphRegistry(config=self.config)
+        self._registry = GraphRegistry(config=self.config,
+                                       tuned=self._tuned)
         self._registry.register(self.gid, graph)
         self._router = QueryRouter(self._registry,
                                    devices=r.resolve_devices(),

@@ -30,10 +30,12 @@ import dataclasses
 from typing import Optional, Tuple
 
 __all__ = ["ConfigError", "FacadeDeprecationWarning", "EngineConfig",
-           "ResolvedEngine", "TIERS", "SHARD_VERSIONS"]
+           "ResolvedEngine", "TIERS", "SHARD_VERSIONS", "STEP_POLICIES"]
 
 TIERS = ("auto", "single", "sharded", "routed")
 SHARD_VERSIONS = ("v1", "v2", "v3")
+# stepping-policy names (kept in sync with repro.core.stepping.POLICIES)
+STEP_POLICIES = ("static", "adaptive")
 
 # single-device relax-backend names whose sharded twin is the blocked
 # per-shard layout (kept in sync with repro.core.distributed)
@@ -111,6 +113,11 @@ class EngineConfig:
       integer indices); ``None`` uses every visible device for
       sharded/routed tiers and jax's default for single.
     * ``alpha``/``beta``/``max_iters`` — the stepping heuristic knobs.
+    * ``policy`` — stepping policy: ``"static"`` (the paper's fixed
+      Eq. 1-3 parameters) or ``"adaptive"`` (per-step feedback on
+      ``alpha``/``beta`` and a window multiplier; see
+      :mod:`repro.core.stepping`).  Scheduling-only: dist/parent match
+      the static policy bitwise on graphs without exact float ties.
     * ``shard_backend`` — per-shard relaxation of the sharded tier
       (:data:`repro.core.distributed.DIST_BACKENDS`); ``None`` derives
       it from ``backend`` (``blocked_pallas`` -> ``blocked``).
@@ -133,6 +140,7 @@ class EngineConfig:
     devices: Optional[Tuple] = None
     alpha: float = 3.0
     beta: float = 0.9
+    policy: str = "static"
     max_iters: int = 1_000_000
     # sharded tier
     shard_backend: Optional[str] = None
@@ -159,6 +167,9 @@ class EngineConfig:
         if self.tier not in TIERS:
             raise ConfigError(f"unknown tier {self.tier!r}; expected one "
                               f"of {TIERS}")
+        if self.policy not in STEP_POLICIES:
+            raise ConfigError(f"unknown policy {self.policy!r}; expected "
+                              f"one of {STEP_POLICIES}")
         if self.shard_version not in SHARD_VERSIONS:
             raise ConfigError(f"unknown shard_version "
                               f"{self.shard_version!r}; expected one of "
@@ -374,7 +385,8 @@ class EngineConfig:
             tier=tier, backend=backend, shard_backend=shard_backend,
             devices=devices, n_shards=(len(devices) if devices is not None
                                        else n_devices),
-            alpha=self.alpha, beta=self.beta, max_iters=self.max_iters,
+            alpha=self.alpha, beta=self.beta, policy=self.policy,
+            max_iters=self.max_iters,
             shard_version=self.shard_version,
             fused_rounds=self.fused_rounds,
             compact_capacity=self.compact_capacity,
@@ -407,6 +419,7 @@ class ResolvedEngine:
     n_shards: int
     alpha: float
     beta: float
+    policy: str
     max_iters: int
     shard_version: str
     fused_rounds: int

@@ -269,17 +269,22 @@ def shard_blocked(g, n_shards: Optional[int] = None, *,
 # shared distributed statistics (local partial + psum)
 # ---------------------------------------------------------------------------
 
-def _dstats_gap(dist_l, deg_l, rtow, n_edges2, x, params, axes):
+def _dstats_gap(dist_l, deg_l, rtow, n_edges2, x, params, axes, mult=None):
     hist = jax.lax.psum(stats.degree_hist(dist_l, deg_l, x), axes)
     hd = stats.high_d_from_hist(hist)
     sd = jax.lax.psum(stats.sum_d(dist_l, deg_l, x), axes)
-    return stepping.gap_from_stats(sd, hd, rtow, n_edges2, params), sd, hd
+    # the psum'd partials are replicated, so an adaptive ``mult`` (itself
+    # replicated loop state) keeps the gap replicated across shards
+    return (stepping.gap_from_stats(sd, hd, rtow, n_edges2, params, mult),
+            sd, hd)
 
 
-def _dstats_compute_st(dist_l, deg_l, rtow, n_edges2, lb, ub, params, axes):
-    gap_lb, _, _ = _dstats_gap(dist_l, deg_l, rtow, n_edges2, lb, params, axes)
+def _dstats_compute_st(dist_l, deg_l, rtow, n_edges2, lb, ub, params, axes,
+                       mult=None):
+    gap_lb, _, _ = _dstats_gap(dist_l, deg_l, rtow, n_edges2, lb, params,
+                               axes, mult)
     gap_ub, sd_ub, _ = _dstats_gap(dist_l, deg_l, rtow, n_edges2, ub, params,
-                                   axes)
+                                   axes, mult)
     grid = traversal.st_grid_points(ub)
     ghist = jax.lax.psum(stats.grid_hist(dist_l, deg_l, grid), axes)
     sd_grid = stats.sum_d_grid_from_hist(ghist)
@@ -308,7 +313,7 @@ class _V2State(NamedTuple):
 def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
                   fused_rounds, capacity, goal="tree", batch=False,
                   bmeta: Optional[BlockedShardMeta] = None,
-                  trace_cap: int = 0):
+                  trace_cap: int = 0, policy: str = "static"):
     """Build + jit one distributed engine (cached so repeated calls with
     the same mesh/shape/config reuse the compiled executable).
 
@@ -339,18 +344,18 @@ def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
     if version == "v1":
         body = _v1_body(n_pad, block, axes, params, max_iters, goal, batch,
                         bmeta=bmeta, axis_sizes=axis_sizes,
-                        trace_cap=trace_cap)
+                        trace_cap=trace_cap, policy=policy)
         out_specs = (P(), P(), P())
     elif version == "v2":
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                         axis_sizes, goal=goal, batch=batch, bmeta=bmeta,
-                        trace_cap=trace_cap)
+                        trace_cap=trace_cap, policy=policy)
     elif version == "v3":
         cap = capacity or max(block // 16, 8)
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                         axis_sizes, goal=goal, batch=batch,
                         compact_capacity=cap, bmeta=bmeta,
-                        trace_cap=trace_cap)
+                        trace_cap=trace_cap, policy=policy)
     else:
         raise ValueError(version)
     if version in ("v2", "v3") and batch:
@@ -395,24 +400,24 @@ def _resolve_blocked(sg: ShardedGraph, backend: str, blocked, build_opts):
 
 def _dist_engine_args(sg: ShardedGraph, config, version, max_iters,
                       fused_rounds, alpha, beta, capacity, backend,
-                      block_v, tile_e):
+                      block_v, tile_e, policy=None):
     """Resolve the distributed engine knobs from either an
     :class:`~repro.core.config.EngineConfig` or the loose kwargs — never
     both (:meth:`EngineConfig.from_loose` is the shared gate, so loose
     kwargs go through exactly the config validation).  Returns
     ``(version, max_iters, fused_rounds, params_alpha, params_beta,
-    capacity, backend, trace_cap, blocked_build_opts)``."""
+    capacity, backend, trace_cap, policy, blocked_build_opts)``."""
     config = EngineConfig.from_loose(
         config, "engine", defaults={"tier": "sharded"},
         shard_version=version, max_iters=max_iters,
         fused_rounds=fused_rounds, alpha=alpha, beta=beta,
         compact_capacity=capacity, shard_backend=backend,
-        block_v=block_v, tile_e=tile_e)
+        block_v=block_v, tile_e=tile_e, policy=policy)
     r = as_resolved(config, n=int(sg.n_true), m=int(sg.n_edges2),
                     n_devices=int(sg.src.shape[0])).require("sharded")
     return (r.shard_version, r.max_iters, r.fused_rounds, r.alpha,
             r.beta, r.compact_capacity, r.shard_backend, r.trace_cap,
-            r.blocked_opts())
+            r.policy, r.blocked_opts())
 
 
 def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
@@ -421,7 +426,7 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
                      beta=None, capacity=None,
                      goal: str = "tree", goal_param=None,
                      backend=None, blocked=None,
-                     block_v=None, tile_e=None, config=None):
+                     block_v=None, tile_e=None, policy=None, config=None):
     """Run distributed EIC SSSP on ``mesh`` (axes flattened over ``axes``).
 
     versions: v1 replicated/pmin, v2 sharded/all_to_all dense exchange,
@@ -445,9 +450,9 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     kwarg above — the :class:`repro.api.Solver` facade's path.
     """
     (version, max_iters, fused_rounds, alpha, beta, capacity, backend,
-     trace_cap, build_opts) = _dist_engine_args(
+     trace_cap, policy, build_opts) = _dist_engine_args(
         sg, config, version, max_iters, fused_rounds, alpha, beta,
-        capacity, backend, block_v, tile_e)
+        capacity, backend, block_v, tile_e, policy)
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
     block = sg.deg.shape[1]
@@ -457,7 +462,7 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     arrays, bmeta = _resolve_blocked(sg, backend, blocked, build_opts)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
                        max_iters, fused_rounds, capacity, goal, False,
-                       bmeta, trace_cap)
+                       bmeta, trace_cap, policy)
     with profiling.annotate(f"repro:sssp_dist_dispatch:{version}"):
         if arrays is not None:
             bases = jnp.arange(p, dtype=jnp.int32) * block
@@ -472,7 +477,7 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
                            capacity=None, goal: str = "tree",
                            goal_params=None, backend=None,
                            blocked=None, block_v=None,
-                           tile_e=None, config=None):
+                           tile_e=None, policy=None, config=None):
     """Batched multi-source distributed SSSP — the sharded serving tier's
     entry point.
 
@@ -488,9 +493,9 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
     exactly as in :func:`sssp_distributed`.
     """
     (version, max_iters, fused_rounds, alpha, beta, capacity, backend,
-     trace_cap, build_opts) = _dist_engine_args(
+     trace_cap, policy, build_opts) = _dist_engine_args(
         sg, config, version, max_iters, fused_rounds, alpha, beta,
-        capacity, backend, block_v, tile_e)
+        capacity, backend, block_v, tile_e, policy)
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
     p, _ = sg.src.shape
     block = sg.deg.shape[1]
@@ -506,7 +511,7 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
     arrays, bmeta = _resolve_blocked(sg, backend, blocked, build_opts)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
                        max_iters, fused_rounds, capacity, goal, True,
-                       bmeta, trace_cap)
+                       bmeta, trace_cap, policy)
     with profiling.annotate(f"repro:sssp_dist_batch_dispatch:{version}"):
         if arrays is not None:
             bases = jnp.arange(p, dtype=jnp.int32) * block
@@ -517,8 +522,9 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
 # --- v1 -------------------------------------------------------------------
 
 def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
-             bmeta=None, axis_sizes=(), trace_cap=0):
+             bmeta=None, axis_sizes=(), trace_cap=0, policy="static"):
     axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
+    adaptive = policy == "adaptive"
 
     def run(sg: ShardedGraph, *args):
         if bmeta is not None:
@@ -626,19 +632,29 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
             )
             return new_dist, new_parent, metrics
 
-        def transition(dist, parent, lb, ub, metrics, gp):
+        def transition(dist, parent, lb, ub, metrics, gp, ps=None):
             pend = dist[src] + w
             pend = jnp.where(pend >= ub, pend, INF)
             min_pending = jax.lax.pmin(jnp.min(pend), axes)
             done = ~jnp.isfinite(min_pending)
+            if ps is not None:
+                # observe -> adapt: the counters are psum'd/replicated, so
+                # the policy state stays replicated too
+                ps = stepping.adaptive_update(ps, metrics.n_rounds,
+                                              metrics.n_relax,
+                                              metrics.n_updates)
+                tparams = stepping.effective_params(ps)
+                mult = ps.mult
+            else:
+                tparams, mult = params, None
             st_next = traversal.compute_st(dist, deg, rtow, n_edges2, lb, ub,
-                                           params)
+                                           tparams, mult=mult)
             lb2 = ub
-            gap2 = stepping.gap(dist, deg, rtow, n_edges2, lb2, params)
+            gap2 = stepping.gap(dist, deg, rtow, n_edges2, lb2, tparams, mult)
             ub2 = lb2 + gap2
             ffwd = (min_pending >= ub2) & ~done
             lb2 = jnp.where(ffwd, min_pending, lb2)
-            gap3 = stepping.gap(dist, deg, rtow, n_edges2, lb2, params)
+            gap3 = stepping.gap(dist, deg, rtow, n_edges2, lb2, tparams, mult)
             ub2 = jnp.where(ffwd, lb2 + gap3, ub2)
             st_next = jnp.minimum(st_next, lb2)
 
@@ -654,11 +670,13 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
                                              max_w) & ~done
             metrics = metrics._replace(
                 n_steps=metrics.n_steps + jnp.where(done, 0, 1))
-            return dist, parent, frontier, lb2, ub2, st_next, done, metrics
+            out = (dist, parent, frontier, lb2, ub2, st_next, done, metrics)
+            return out if ps is None else out + (ps,)
 
         def cond(s):
-            (dist, parent, frontier, lb, ub, st_, done, iters, metrics) = s
-            return (~done) & (iters < max_iters)
+            # index access: the carry is a 9-tuple (static policy) or a
+            # 10-tuple with the trailing PolicyState (adaptive)
+            return (~s[6]) & (s[7] < max_iters)
 
         def run_one(source, gp):
             dist0 = jnp.full((n_pad,), INF, jnp.float32).at[source].set(0.0)
@@ -669,7 +687,7 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
 
             def body(s):
                 (dist, parent, frontier, lb, ub, st_, done, iters,
-                 metrics) = s
+                 metrics) = s[:9]
                 dist, parent, frontier, metrics = relax_round(
                     dist, parent, frontier, lb, ub, metrics)
                 # first-step ub bootstrap
@@ -678,6 +696,22 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
                     return jnp.minimum(ub,
                                        jnp.min(jnp.where(mask, dist, INF)))
                 ub = jax.lax.cond(lb <= 0.0, tighten, lambda u: u, ub)
+
+                if adaptive:
+                    def trans(args):
+                        return transition(*args[:5], gp, ps=args[5])
+
+                    def keep(args):
+                        dist, parent, lb, ub, metrics, ps = args
+                        return (dist, parent, frontier, lb, ub, st_, done,
+                                metrics, ps)
+
+                    (dist, parent, frontier, lb, ub, st2, done, metrics,
+                     ps) = jax.lax.cond(jnp.any(frontier), keep, trans,
+                                        (dist, parent, lb, ub, metrics,
+                                         s[9]))
+                    return (dist, parent, frontier, lb, ub, st2, done,
+                            iters + 1, metrics, ps)
 
                 def trans(args):
                     return transition(*args, gp)
@@ -695,6 +729,8 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
             init = (dist0, parent0, frontier0, jnp.float32(0.0), INF,
                     jnp.float32(0.0), jnp.bool_(False), jnp.int32(0),
                     metrics0)
+            if adaptive:
+                init = init + (stepping.policy_init(params),)
             if trace_cap <= 0:
                 out = jax.lax.while_loop(cond, body, init)
                 return out[0], out[1], out[8]
@@ -726,9 +762,10 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
 
 def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
              axis_sizes, goal="tree", batch=False, compact_capacity: int = 0,
-             bmeta=None, trace_cap=0):
+             bmeta=None, trace_cap=0, policy="static"):
     p = n_pad // block
     axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
+    adaptive = policy == "adaptive"
 
     def run(sg: ShardedGraph, *args):
         if bmeta is not None:
@@ -983,23 +1020,33 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 n_rounds=metrics.n_rounds + 1)
             return dist2, parent2, metrics
 
-        def dgap(dist_l, x):
-            g_, _, _ = _dstats_gap(dist_l, deg_l, rtow, n_edges2, x, params,
-                                   axes)
+        def dgap(dist_l, x, tparams=params, mult=None):
+            g_, _, _ = _dstats_gap(dist_l, deg_l, rtow, n_edges2, x, tparams,
+                                   axes, mult)
             return g_
 
-        def transition(dist_l, parent_l, lb, ub, metrics, gp):
+        def transition(dist_l, parent_l, lb, ub, metrics, gp, ps=None):
             pend = dist_l[src_l] + w
             pend = jnp.where(pend >= ub, pend, INF)
             min_pending = jax.lax.pmin(jnp.min(pend), axes)
             done = ~jnp.isfinite(min_pending)
+            if ps is not None:
+                # observe -> adapt: the metrics counters are psum'd, so the
+                # policy state stays replicated across shards
+                ps = stepping.adaptive_update(ps, metrics.n_rounds,
+                                              metrics.n_relax,
+                                              metrics.n_updates)
+                tparams = stepping.effective_params(ps)
+                mult = ps.mult
+            else:
+                tparams, mult = params, None
             st_next, gap_ub = _dstats_compute_st(
-                dist_l, deg_l, rtow, n_edges2, lb, ub, params, axes)
+                dist_l, deg_l, rtow, n_edges2, lb, ub, tparams, axes, mult)
             lb2 = ub
             ub2 = lb2 + gap_ub
             ffwd = (min_pending >= ub2) & ~done
             lb2 = jnp.where(ffwd, min_pending, lb2)
-            gap3 = dgap(dist_l, lb2)
+            gap3 = dgap(dist_l, lb2, tparams, mult)
             ub2 = jnp.where(ffwd, lb2 + gap3, ub2)
             st_next = jnp.minimum(st_next, lb2)
 
@@ -1015,7 +1062,9 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                                              max_w) & ~done
             metrics = metrics._replace(
                 n_steps=metrics.n_steps + jnp.where(done, 0, 1))
-            return dist_l, parent_l, frontier, lb2, ub2, st_next, done, metrics
+            out = (dist_l, parent_l, frontier, lb2, ub2, st_next, done,
+                   metrics)
+            return out if ps is None else out + (ps,)
 
         def cond(s):
             return (~s.done) & (s.iters < max_iters)
@@ -1056,29 +1105,86 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 return _V2State(dist_l, parent_l, frontier, lb, ub, st2,
                                 done, s.iters + 1, metrics)
 
+            def body_a(carry):
+                s, ps = carry
+                dist_l, parent_l, frontier, metrics = relax_round(
+                    s.dist, s.parent, s.frontier, s.lb, s.ub, s.metrics)
+
+                def tighten(ub):
+                    mask = (deg_l.astype(jnp.float32) >= high_d0) \
+                        & (dist_l > 0)
+                    local = jnp.min(jnp.where(mask, dist_l, INF))
+                    return jnp.minimum(ub, jax.lax.pmin(local, axes))
+                ub = jax.lax.cond(s.lb <= 0.0, tighten, lambda u: u, s.ub)
+
+                any_front = jax.lax.pmax(jnp.any(frontier).astype(jnp.int32),
+                                         axes) > 0
+
+                def keep(args):
+                    dist_l, parent_l, lb, ub, metrics, ps = args
+                    return (dist_l, parent_l, frontier, lb, ub, s.st, s.done,
+                            metrics, ps)
+
+                def trans(args):
+                    return transition(args[0], args[1], args[2], args[3],
+                                      args[4], gp, ps=args[5])
+
+                (dist_l, parent_l, frontier, lb, ub, st2, done, metrics,
+                 ps) = jax.lax.cond(any_front, keep, trans,
+                                    (dist_l, parent_l, s.lb, ub, metrics,
+                                     ps))
+                return _V2State(dist_l, parent_l, frontier, lb, ub, st2,
+                                done, s.iters + 1, metrics), ps
+
             init = _V2State(dist0, parent0, frontier0, jnp.float32(0.0), INF,
                             jnp.float32(0.0), jnp.bool_(False), jnp.int32(0),
                             metrics0)
+            if not adaptive:
+                if trace_cap <= 0:
+                    out = jax.lax.while_loop(cond, body, init)
+                    return out.dist, out.parent, out.metrics
+
+                def traced_body(carry):
+                    s, buf = carry
+                    s1 = body(s)
+                    m0, m1 = s.metrics, s1.metrics
+                    stepped = (m1.n_steps > m0.n_steps) | (s1.done & ~s.done)
+                    # the frontier is block-sharded here: psum the local
+                    # census (one extra collective per iteration, traced
+                    # solves only)
+                    fsz = jax.lax.psum(
+                        jnp.sum(s.frontier.astype(jnp.int32)), axes)
+                    buf = _dtrace_record(buf, s.iters, fsz, s.lb, s.ub, s.st,
+                                         stepped, m0, m1)
+                    return s1, buf
+
+                out, buf = jax.lax.while_loop(
+                    lambda c: cond(c[0]), traced_body,
+                    (init, trace_init(trace_cap)))
+                return out.dist, out.parent, out.metrics, buf
+
+            init_a = (init, stepping.policy_init(params))
             if trace_cap <= 0:
-                out = jax.lax.while_loop(cond, body, init)
+                out, _ = jax.lax.while_loop(lambda c: cond(c[0]), body_a,
+                                            init_a)
                 return out.dist, out.parent, out.metrics
 
-            def traced_body(carry):
-                s, buf = carry
-                s1 = body(s)
+            def traced_body_a(carry):
+                c, buf = carry
+                s = c[0]
+                c1 = body_a(c)
+                s1 = c1[0]
                 m0, m1 = s.metrics, s1.metrics
                 stepped = (m1.n_steps > m0.n_steps) | (s1.done & ~s.done)
-                # the frontier is block-sharded here: psum the local census
-                # (one extra collective per iteration, traced solves only)
                 fsz = jax.lax.psum(
                     jnp.sum(s.frontier.astype(jnp.int32)), axes)
                 buf = _dtrace_record(buf, s.iters, fsz, s.lb, s.ub, s.st,
                                      stepped, m0, m1)
-                return s1, buf
+                return c1, buf
 
-            out, buf = jax.lax.while_loop(
-                lambda c: cond(c[0]), traced_body,
-                (init, trace_init(trace_cap)))
+            (out, _), buf = jax.lax.while_loop(
+                lambda c: cond(c[0][0]), traced_body_a,
+                (init_a, trace_init(trace_cap)))
             return out.dist, out.parent, out.metrics, buf
 
         if batch:

@@ -254,8 +254,16 @@ def _pull_phase(g: DeviceGraph, dist, parent, st, lb, ub, metrics):
 
 def _transition(g: DeviceGraph, st_: SsspState,
                 params: stepping.SteppingParams, goal: str,
-                goal_param) -> SsspState:
-    """Step transition (Algo 2 l.22 + Function 1/2 + fast-forward/termination)."""
+                goal_param, ps: stepping.PolicyState = None):
+    """Step transition (Algo 2 l.22 + Function 1/2 + fast-forward/termination).
+
+    With the adaptive policy, ``ps`` carries the traced
+    :class:`~repro.core.stepping.PolicyState`: the transition first folds
+    the counters observed since the previous step into it (observe →
+    adapt), then sizes the next window from the adapted parameters, and
+    returns ``(state, ps)``.  ``ps is None`` (static policy) compiles the
+    exact pre-policy program and returns the state alone.
+    """
     dist, parent = st_.dist, st_.parent
     lb, ub = st_.lb, st_.ub
 
@@ -265,15 +273,23 @@ def _transition(g: DeviceGraph, st_: SsspState,
     min_pending = jnp.min(pend)
     done = ~jnp.isfinite(min_pending)
 
+    if ps is not None:
+        m = st_.metrics
+        ps = stepping.adaptive_update(ps, m.n_rounds, m.n_relax,
+                                      m.n_updates)
+        params = stepping.effective_params(ps)
+        mult = ps.mult
+    else:
+        mult = None
     st_next = traversal.compute_st(dist, g.deg, g.rtow, g.n_edges2, lb, ub,
-                                   params)
+                                   params, mult=mult)
     lb2 = ub
-    gap2 = stepping.gap(dist, g.deg, g.rtow, g.n_edges2, lb2, params)
+    gap2 = stepping.gap(dist, g.deg, g.rtow, g.n_edges2, lb2, params, mult)
     ub2 = lb2 + gap2
     # empty-window fast-forward (exact; see module docstring)
     ffwd = (min_pending >= ub2) & ~done
     lb2 = jnp.where(ffwd, min_pending, lb2)
-    gap3 = stepping.gap(dist, g.deg, g.rtow, g.n_edges2, lb2, params)
+    gap3 = stepping.gap(dist, g.deg, g.rtow, g.n_edges2, lb2, params, mult)
     ub2 = jnp.where(ffwd, lb2 + gap3, ub2)
     st_next = jnp.minimum(st_next, lb2)
 
@@ -289,9 +305,10 @@ def _transition(g: DeviceGraph, st_: SsspState,
     frontier = relax.window_frontier(dist, st_next, lb2, ub2, g.rtow[-1])
     frontier = frontier & ~done
     metrics = metrics._replace(n_steps=metrics.n_steps + jnp.where(done, 0, 1))
-    return st_._replace(dist=dist, parent=parent, frontier=frontier,
-                        lb=lb2, ub=ub2, st=st_next, done=done,
-                        metrics=metrics)
+    out = st_._replace(dist=dist, parent=parent, frontier=frontier,
+                       lb=lb2, ub=ub2, st=st_next, done=done,
+                       metrics=metrics)
+    return out if ps is None else (out, ps)
 
 
 def _trace_record(s0: SsspState, s1: SsspState, buf):
@@ -330,7 +347,7 @@ def _trace_record(s0: SsspState, s1: SsspState, buf):
 def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
          max_iters: int, alpha: float, beta: float, goal: str = "tree",
          goal_param=None, fused_rounds: int = 0, fused=None,
-         trace_capacity: int = 0):
+         trace_capacity: int = 0, policy: str = "static"):
     """Trace one SSSP computation (shared by sssp / sssp_batch); ``goal``
     selects the early-exit variant (see GOALS).  ``fused_rounds > 0``
     (blocked layouts only) runs each window's rounds through the fused
@@ -340,8 +357,15 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
     is hoisted out of vmapped batches.  ``trace_capacity > 0`` records a
     per-round :class:`~repro.obs.trace.TraceBuf` ring (returned as a
     fourth output; ``None`` otherwise) — the knob is static, so 0
-    compiles the exact untraced program."""
+    compiles the exact untraced program.  ``policy`` is static too:
+    ``"static"`` compiles the exact pre-policy program, ``"adaptive"``
+    carries a :class:`~repro.core.stepping.PolicyState` in the loop and
+    re-sizes the window at each step transition."""
     params = stepping.SteppingParams(alpha=alpha, beta=beta)
+    adaptive = policy == "adaptive"
+    if policy not in stepping.POLICIES:
+        raise ConfigError(f"unknown policy {policy!r}; expected one of "
+                          f"{stepping.POLICIES}")
     if fused_rounds > 0:
         if not isinstance(layout, relax.BlockedGraph):
             raise ConfigError(
@@ -383,32 +407,68 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
                          s)
         return s._replace(iters=s.iters + 1)
 
+    def body_adaptive(carry):
+        s, ps = carry
+        if fused_rounds > 0:
+            s = _fused_relax_rounds(layout, fused, s, fused_rounds)
+        else:
+            s = _relax_round(backend, layout, s)
+        s = _bootstrap_ub(g, s, high_d0)
+        s, ps = jax.lax.cond(jnp.any(s.frontier),
+                             lambda c: c,
+                             lambda c: _transition(g, c[0], params, goal,
+                                                   goal_param, ps=c[1]),
+                             (s, ps))
+        return s._replace(iters=s.iters + 1), ps
+
+    if not adaptive:
+        if trace_capacity <= 0:
+            out = jax.lax.while_loop(cond, body, init)
+            return out.dist, out.parent, out.metrics, None
+
+        def traced_body(carry):
+            s, buf = carry
+            s1 = body(s)
+            return s1, _trace_record(s, s1, buf)
+
+        out, buf = jax.lax.while_loop(lambda c: cond(c[0]), traced_body,
+                                      (init, trace_init(trace_capacity)))
+        return out.dist, out.parent, out.metrics, buf
+
+    init_a = (init, stepping.policy_init(params))
     if trace_capacity <= 0:
-        out = jax.lax.while_loop(cond, body, init)
+        out, _ = jax.lax.while_loop(lambda c: cond(c[0]), body_adaptive,
+                                    init_a)
         return out.dist, out.parent, out.metrics, None
 
-    def traced_body(carry):
-        s, buf = carry
-        s1 = body(s)
-        return s1, _trace_record(s, s1, buf)
+    def traced_adaptive(carry):
+        c, buf = carry
+        c1 = body_adaptive(c)
+        return c1, _trace_record(c[0], c1[0], buf)
 
-    out, buf = jax.lax.while_loop(lambda c: cond(c[0]), traced_body,
-                                  (init, trace_init(trace_capacity)))
+    (out, _), buf = jax.lax.while_loop(lambda c: cond(c[0][0]),
+                                       traced_adaptive,
+                                       (init_a, trace_init(trace_capacity)))
     return out.dist, out.parent, out.metrics, buf
 
 
 @partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
-                                   "goal", "fused_rounds", "trace_capacity"))
+                                   "goal", "fused_rounds", "trace_capacity",
+                                   "policy"))
 def _sssp_jit(g, layout, source, backend, max_iters, alpha, beta, goal,
-              goal_param, fused_rounds=0, trace_capacity=0):
+              goal_param, fused_rounds=0, trace_capacity=0,
+              policy="static"):
     return _run(g, layout, source, backend, max_iters, alpha, beta, goal,
-                goal_param, fused_rounds, trace_capacity=trace_capacity)
+                goal_param, fused_rounds, trace_capacity=trace_capacity,
+                policy=policy)
 
 
 @partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
-                                   "goal", "fused_rounds", "trace_capacity"))
+                                   "goal", "fused_rounds", "trace_capacity",
+                                   "policy"))
 def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta,
-                    goal, goal_params, fused_rounds=0, trace_capacity=0):
+                    goal, goal_params, fused_rounds=0, trace_capacity=0,
+                    policy="static"):
     # build the fused slab once, outside vmap, so the concatenation isn't
     # replicated per batch slot
     fused = relax.fused_slab(layout) if (
@@ -417,7 +477,7 @@ def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta,
     return jax.vmap(
         lambda s, gp: _run(g, layout, s, backend, max_iters, alpha, beta,
                            goal, gp, fused_rounds, fused,
-                           trace_capacity=trace_capacity)
+                           trace_capacity=trace_capacity, policy=policy)
     )(sources, goal_params)
 
 
@@ -429,22 +489,23 @@ def prepare_layout(g: DeviceGraph, backend="segment_min", **backend_opts):
 
 
 def _engine_args(g: DeviceGraph, config, backend, max_iters, alpha, beta,
-                 fused_rounds, backend_opts):
+                 fused_rounds, policy, backend_opts):
     """Resolve the engine knobs from either an
     :class:`~repro.core.config.EngineConfig` or the loose engine-level
     kwargs — never both (:meth:`EngineConfig.from_loose` is the shared
     gate, so loose kwargs go through exactly the config validation)."""
     config = EngineConfig.from_loose(
         config, "engine", backend=backend, max_iters=max_iters, alpha=alpha,
-        beta=beta, fused_rounds=fused_rounds, **backend_opts)
+        beta=beta, fused_rounds=fused_rounds, policy=policy, **backend_opts)
     r = as_resolved(config, n=g.n, m=g.m).require("single")
     return (relax.get_backend(r.backend), r.max_iters, r.alpha, r.beta,
-            r.fused_rounds, r.trace_cap, r.layout_opts())
+            r.fused_rounds, r.trace_cap, r.policy, r.layout_opts())
 
 
 def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
          max_iters=None, alpha=None, beta=None, fused_rounds=None,
-         goal: str = "tree", goal_param=None, config=None, **backend_opts):
+         policy=None, goal: str = "tree", goal_param=None, config=None,
+         **backend_opts):
     """Run the heuristic SSSP algorithm from ``source``.
 
     This is the single-device *engine* entry point; prefer the
@@ -460,8 +521,8 @@ def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
     (``EngineConfig(trace=True)``; materialize the device ring with
     :func:`repro.obs.materialize_trace`).
     """
-    be, max_iters, alpha, beta, fr, tc, opts = _engine_args(
-        g, config, backend, max_iters, alpha, beta, fused_rounds,
+    be, max_iters, alpha, beta, fr, tc, pol, opts = _engine_args(
+        g, config, backend, max_iters, alpha, beta, fused_rounds, policy,
         backend_opts)
     if layout is None:
         layout = be.prepare(g, **opts)
@@ -469,7 +530,7 @@ def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
     _check_goal_bounds(goal, gp, g.n)
     with profiling.annotate("repro:sssp_dispatch"):
         out = _sssp_jit(g, layout, jnp.int32(source), be, max_iters, alpha,
-                        beta, goal, gp, fr, tc)
+                        beta, goal, gp, fr, tc, pol)
     return out if tc > 0 else out[:3]
 
 
@@ -508,8 +569,8 @@ def sssp_knear(g: DeviceGraph, source, k, **kw):
 
 def sssp_batch(g: DeviceGraph, sources, *, backend=None,
                layout=None, max_iters=None, alpha=None, beta=None,
-               fused_rounds=None, goal: str = "tree", goal_params=None,
-               config=None, **backend_opts):
+               fused_rounds=None, policy=None, goal: str = "tree",
+               goal_params=None, config=None, **backend_opts):
     """Batched multi-source SSSP: one fused computation over ``sources``.
 
     The per-source state (dist/parent/frontier/window) is stacked along a
@@ -522,8 +583,8 @@ def sssp_batch(g: DeviceGraph, sources, *, backend=None,
     batch-stacked trace ring when the config enables tracing, as in
     :func:`sssp`).
     """
-    be, max_iters, alpha, beta, fr, tc, opts = _engine_args(
-        g, config, backend, max_iters, alpha, beta, fused_rounds,
+    be, max_iters, alpha, beta, fr, tc, pol, opts = _engine_args(
+        g, config, backend, max_iters, alpha, beta, fused_rounds, policy,
         backend_opts)
     if layout is None:
         layout = be.prepare(g, **opts)
@@ -537,7 +598,7 @@ def sssp_batch(g: DeviceGraph, sources, *, backend=None,
     _check_goal_bounds(goal, gp, g.n)
     with profiling.annotate("repro:sssp_batch_dispatch"):
         out = _sssp_batch_jit(g, layout, sources, be, max_iters, alpha,
-                              beta, goal, gp, fr, tc)
+                              beta, goal, gp, fr, tc, pol)
     return out if tc > 0 else out[:3]
 
 

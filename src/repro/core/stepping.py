@@ -1,4 +1,4 @@
-"""Dynamic-stepping heuristic (paper §3.1, Eqs. 1-3).
+"""Dynamic-stepping heuristic (paper §3.1, Eqs. 1-3) and its policy family.
 
 Given the current scheduling threshold ``x`` (and the latest dist[]), choose
 the window width ``gap(x)`` so the next pair ``<x, x+gap(x)>``:
@@ -11,19 +11,130 @@ the window width ``gap(x)`` so the next pair ``<x, x+gap(x)>``:
     ratio(x) = 1 - (1 - prob(x)) ** (1 / (prob(x) * highD(x)))           (2)
     gap(x)   = maxW(G, 1)        if highD(x) <= alpha                    (3)
                maxW(G, ratio(x)) otherwise
+
+Two policies share these equations (:data:`POLICIES`):
+
+* ``"static"`` — the paper's policy: one fixed ``SteppingParams`` for the
+  whole solve.  This is the default, and with it every engine compiles
+  the *literally identical* program it did before the policy family
+  existed (the adaptive state and the ``mult`` rescale below are only
+  woven in when the static ``policy`` knob selects them).
+* ``"adaptive"`` — a feedback variant: a small :class:`PolicyState` rides
+  in the solve loop's carry, and at every step transition the observed
+  per-step round count and relaxation waste (both already maintained in
+  ``SsspMetrics``) multiplicatively adjust ``alpha``/``beta`` and a
+  window multiplier ``mult``.  Windows are pure scheduling — any
+  positive width yields the same fixpoint — so adapting them trades
+  rounds against wasted relaxations without touching correctness.
+
+The feedback rule (:func:`adaptive_update`) is deliberately simple:
+
+* too many relaxation rounds per step, or mostly-wasted relaxations
+  (``1 - updates/relaxes`` above ``waste_hi``) ⇒ the window is too wide —
+  shrink ``mult`` (and gently ``alpha``/``beta``) by ``1/step``;
+* few rounds *and* productive relaxations ⇒ the window is too narrow —
+  grow by ``step``.
+
+Everything is clamped (``mult_min``..``mult_max`` etc.) and the widened /
+narrowed gap is re-clamped to the same ``w_floor`` as the static policy,
+so adaptive windows inherit the positivity guarantee.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
 from . import stats
 
+#: Stepping-policy names accepted by ``EngineConfig(policy=...)``.
+POLICIES = ("static", "adaptive")
+
 
 class SteppingParams(NamedTuple):
     alpha: float = 3.0   # paper default
     beta: float = 0.9    # paper default
+
+
+class AdaptivePolicy(NamedTuple):
+    """Static hyper-knobs of the ``"adaptive"`` policy (jit-constant)."""
+    rounds_lo: float = 2.0    # <= this many rounds/step: window too narrow
+    rounds_hi: float = 6.0    # > this many rounds/step: window too wide
+    waste_hi: float = 0.6     # wasted-relaxation fraction that means "too wide"
+    step: float = 1.3         # multiplicative feedback factor (> 1)
+    mult_min: float = 0.25    # clamps for the window multiplier ...
+    mult_max: float = 4.0
+    alpha_min: float = 1.0    # ... and for the adapted Eq. 1-3 parameters
+    alpha_max: float = 64.0
+    beta_min: float = 0.3
+    beta_max: float = 0.995
+
+
+DEFAULT_ADAPTIVE = AdaptivePolicy()
+
+
+class PolicyState(NamedTuple):
+    """Traced per-solve state of the adaptive policy (loop-carried).
+
+    ``alpha``/``beta``/``mult`` are the adapted Eq. 1-3 parameters plus
+    the window multiplier; ``last_*`` snapshot the ``SsspMetrics``
+    counters at the previous step transition so the next transition can
+    form per-step deltas.
+    """
+    alpha: jnp.ndarray          # f32 scalar
+    beta: jnp.ndarray           # f32 scalar
+    mult: jnp.ndarray           # f32 scalar
+    last_rounds: jnp.ndarray    # i32 counter snapshots
+    last_relax: jnp.ndarray
+    last_updates: jnp.ndarray
+
+
+def policy_init(params: SteppingParams) -> PolicyState:
+    """Fresh adaptive state: start at the static parameters, mult=1."""
+    return PolicyState(
+        alpha=jnp.float32(params.alpha),
+        beta=jnp.float32(params.beta),
+        mult=jnp.float32(1.0),
+        last_rounds=jnp.int32(0),
+        last_relax=jnp.int32(0),
+        last_updates=jnp.int32(0),
+    )
+
+
+def effective_params(ps: PolicyState) -> SteppingParams:
+    """The adapted (traced) parameters as a ``SteppingParams``."""
+    return SteppingParams(alpha=ps.alpha, beta=ps.beta)
+
+
+def adaptive_update(ps: PolicyState, n_rounds: jnp.ndarray,
+                    n_relax: jnp.ndarray, n_updates: jnp.ndarray,
+                    pol: AdaptivePolicy = DEFAULT_ADAPTIVE) -> PolicyState:
+    """One feedback step from the counters observed since the last step.
+
+    Runs inside the jitted solve loop at each step transition; all inputs
+    are the *cumulative* ``SsspMetrics`` counters, deltas are formed
+    against the snapshots carried in ``ps``.
+    """
+    rounds_d = (n_rounds - ps.last_rounds).astype(jnp.float32)
+    relax_d = (n_relax - ps.last_relax).astype(jnp.float32)
+    upd_d = (n_updates - ps.last_updates).astype(jnp.float32)
+    waste = 1.0 - upd_d / jnp.maximum(relax_d, 1.0)
+    too_wide = (rounds_d > pol.rounds_hi) | (waste > pol.waste_hi)
+    too_narrow = (rounds_d <= pol.rounds_lo) & ~too_wide
+    f = jnp.where(too_wide, jnp.float32(1.0 / pol.step),
+                  jnp.where(too_narrow, jnp.float32(pol.step),
+                            jnp.float32(1.0)))
+    # mult takes the full factor; alpha/beta move gently (sqrt of it) so
+    # the Eq. 1-3 shape degrades gracefully rather than slamming to a clamp
+    fs = jnp.sqrt(f)
+    return PolicyState(
+        alpha=jnp.clip(ps.alpha * fs, pol.alpha_min, pol.alpha_max),
+        beta=jnp.clip(ps.beta * fs, pol.beta_min, pol.beta_max),
+        mult=jnp.clip(ps.mult * f, pol.mult_min, pol.mult_max),
+        last_rounds=n_rounds,
+        last_relax=n_relax,
+        last_updates=n_updates,
+    )
 
 
 def prob(sum_d_x: jnp.ndarray, n_edges2: jnp.ndarray,
@@ -44,8 +155,14 @@ def ratio(prob_x: jnp.ndarray, high_d_x: jnp.ndarray) -> jnp.ndarray:
 
 def gap_from_stats(sd: jnp.ndarray, hd: jnp.ndarray, rtow: jnp.ndarray,
                    n_edges2: jnp.ndarray,
-                   params: SteppingParams = SteppingParams()) -> jnp.ndarray:
-    """Eq. (3) given precomputed (possibly psum-reduced) sumD/highD."""
+                   params: SteppingParams = SteppingParams(),
+                   mult: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Eq. (3) given precomputed (possibly psum-reduced) sumD/highD.
+
+    ``mult`` is the adaptive policy's window multiplier; ``None`` (the
+    static policy) adds no operations, keeping the compiled program
+    byte-identical to the pre-policy one.
+    """
     p = prob(sd, n_edges2, params.beta)
     r = ratio(p, hd)
     g_adaptive = stats.max_w_of(rtow, r)
@@ -56,13 +173,19 @@ def gap_from_stats(sd: jnp.ndarray, hd: jnp.ndarray, rtow: jnp.ndarray,
     # outer loop; clamp to the smallest positive LUT entry.
     positive = jnp.where(rtow > 0, rtow, rtow[-1])
     w_floor = jnp.minimum(jnp.min(positive), g_full)
-    return jnp.maximum(g, jnp.maximum(w_floor, jnp.float32(1e-12)))
+    floor = jnp.maximum(w_floor, jnp.float32(1e-12))
+    if mult is None:
+        return jnp.maximum(g, floor)
+    # rescaled windows re-clamp to the same floor, so adaptive widths
+    # inherit the static policy's positivity guarantee
+    return jnp.maximum(jnp.maximum(g, floor) * mult, floor)
 
 
 def gap(dist: jnp.ndarray, deg: jnp.ndarray, rtow: jnp.ndarray,
         n_edges2: jnp.ndarray, x: jnp.ndarray,
-        params: SteppingParams = SteppingParams()) -> jnp.ndarray:
+        params: SteppingParams = SteppingParams(),
+        mult: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Eq. (3): window width for the scheduling threshold ``x``."""
     hd = stats.high_d(dist, deg, x)
     sd = stats.sum_d(dist, deg, x)
-    return gap_from_stats(sd, hd, rtow, n_edges2, params)
+    return gap_from_stats(sd, hd, rtow, n_edges2, params, mult)

@@ -54,15 +54,16 @@ def profit_terms(x: jnp.ndarray, lb: jnp.ndarray, y: jnp.ndarray,
 def compute_st(dist: jnp.ndarray, deg: jnp.ndarray, rtow: jnp.ndarray,
                n_edges2: jnp.ndarray, lb: jnp.ndarray, ub: jnp.ndarray,
                params: stepping.SteppingParams = stepping.SteppingParams(),
-               st_num: int = ST_NUM) -> jnp.ndarray:
+               st_num: int = ST_NUM, mult=None) -> jnp.ndarray:
     """Function 2: selection threshold for the *next* pair ``<ub, ub+gap(ub)>``.
 
     Returns ``st in [0, ub]``; ``st == ub`` disables the pull model
-    (``st == lb`` case of Function 1).
+    (``st == lb`` case of Function 1).  ``mult`` is the adaptive policy's
+    window multiplier (``None`` for the static policy — no extra ops).
     """
     sd_ub = stats.sum_d(dist, deg, ub)
-    gap_lb = stepping.gap(dist, deg, rtow, n_edges2, lb, params)
-    gap_ub = stepping.gap(dist, deg, rtow, n_edges2, ub, params)
+    gap_lb = stepping.gap(dist, deg, rtow, n_edges2, lb, params, mult)
+    gap_ub = stepping.gap(dist, deg, rtow, n_edges2, ub, params, mult)
     grid = st_grid_points(ub, st_num)
     sd_grid = stats.sum_d_grid(dist, deg, grid)
     return compute_st_from_stats(grid, sd_grid, sd_ub, gap_lb, gap_ub,

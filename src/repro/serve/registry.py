@@ -223,13 +223,14 @@ class GraphEngine(_EngineBase):
     def __init__(self, gid: str, hg, backend: str,
                  alpha: float, beta: float, device=None,
                  max_iters: int = 1_000_000, fused_rounds: int = 0,
-                 **backend_opts):
+                 policy: str = "static", **backend_opts):
         super().__init__()
         self.gid = gid
         self.host = hg
         self.device = device
         self.max_iters = max_iters
         self.fused_rounds = fused_rounds
+        self.policy = policy
         g = hg.to_device() if isinstance(hg, HostGraph) else hg
         if device is not None:
             g = jax.device_put(g, device)
@@ -256,6 +257,7 @@ class GraphEngine(_EngineBase):
             layout=self.layout, alpha=self.alpha, beta=self.beta,
             max_iters=self.max_iters,
             fused_rounds=self.fused_rounds or None,
+            policy=None if self.policy == "static" else self.policy,
             goal=goal, goal_params=goal_params)
 
 
@@ -285,7 +287,8 @@ class ShardedGraphEngine(_EngineBase):
     def __init__(self, gid: str, hg, alpha: float, beta: float,
                  devices=None, version: str = "v2", fused_rounds: int = 0,
                  backend: str = "segment_min", capacity: int = 0,
-                 max_iters: int = 1_000_000, **blocked_opts):
+                 max_iters: int = 1_000_000, policy: str = "static",
+                 **blocked_opts):
         super().__init__()
         self.gid = gid
         self.host = hg
@@ -295,6 +298,7 @@ class ShardedGraphEngine(_EngineBase):
         self.beta = beta
         self.version = version
         self.fused_rounds = fused_rounds
+        self.policy = policy
         self.capacity = capacity
         self.max_iters = max_iters
         self.backend = _shard_backend_name(backend)
@@ -321,8 +325,9 @@ class ShardedGraphEngine(_EngineBase):
             self.sg, np.asarray(sources, np.int32), self.mesh, ("graph",),
             version=self.version, fused_rounds=self.fused_rounds,
             capacity=self.capacity, max_iters=self.max_iters,
-            alpha=self.alpha, beta=self.beta, goal=goal,
-            goal_params=goal_params, backend=self.backend,
+            alpha=self.alpha, beta=self.beta,
+            policy=None if self.policy == "static" else self.policy,
+            goal=goal, goal_params=goal_params, backend=self.backend,
             blocked=self.blocked)
         return dist[:, :self.n], parent[:, :self.n], metrics
 
@@ -414,7 +419,7 @@ class GraphRegistry:
                  shard_devices=None, shard_version: Optional[str] = None,
                  shard_backend: Optional[str] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 **backend_opts):
+                 tuned=None, **backend_opts):
         # the config is the one option surface — loose kwargs (other than
         # capacity, which sizes this cache) must stay unset alongside it;
         # from_loose is the shared sentinel gate, so loose kwargs build
@@ -473,6 +478,15 @@ class GraphRegistry:
         # to it, so one snapshot covers every layer
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.stats = RegistryStats(self.metrics)
+        # offline-tuned per-gid configs (see repro.tune): a TunedStore or
+        # a path to one; consulted at engine build, never on the hot path
+        if tuned is not None and not hasattr(tuned, "apply"):
+            from ..tune.store import TunedStore
+            tuned = TunedStore(tuned)
+        self.tuned = tuned
+        self._tuned_builds = self.metrics.counter(
+            "sssp_registry_tuned_builds_total",
+            help="Engines built with a TunedStore override applied")
 
     # ------------------------------------------------------------------
     # specs + tiers
@@ -670,26 +684,52 @@ class GraphRegistry:
 
     def _build_inner(self, gid, spec, backend, device, tier):
         hg = spec() if callable(spec) else spec
+        # per-gid tuned overlay: only the perf fields move (TUNED_FIELDS);
+        # a stale fingerprint or an overlay this config can't carry falls
+        # back inside TunedStore.apply, so the build never fails on it
+        cfg = self.config
+        if self.tuned is not None:
+            tuned_cfg = self.tuned.apply(gid, hg, cfg,
+                                         n=int(hg.n), m=int(hg.m))
+            if tuned_cfg != cfg:
+                cfg = tuned_cfg
+                self._tuned_builds.inc()
         if tier == "sharded":
             # only the blocked layout's geometry opts apply mesh-side
             blocked_opts = {k: v for k, v in self.backend_opts.items()
                             if k in ("block_v", "tile_e", "use_kernel",
                                      "interpret")}
-            return ShardedGraphEngine(gid, hg, self.alpha, self.beta,
+            if backend == "blocked":
+                for nm in ("block_v", "tile_e"):
+                    v = getattr(cfg, nm)
+                    if v is None:
+                        blocked_opts.pop(nm, None)
+                    else:
+                        blocked_opts[nm] = v
+            return ShardedGraphEngine(gid, hg, cfg.alpha, cfg.beta,
                                       devices=self.shard_devices,
                                       version=self.shard_version,
-                                      fused_rounds=self.fused_rounds,
-                                      capacity=self.shard_capacity,
+                                      fused_rounds=cfg.fused_rounds,
+                                      capacity=cfg.compact_capacity,
                                       max_iters=self.max_iters,
-                                      backend=backend, **blocked_opts)
+                                      backend=backend, policy=cfg.policy,
+                                      **blocked_opts)
+        backend_opts = dict(self.backend_opts)
+        is_blocked = relax.get_backend(backend).name == "blocked_pallas"
+        if is_blocked:
+            for nm in ("block_v", "tile_e"):
+                v = getattr(cfg, nm)
+                if v is None:
+                    backend_opts.pop(nm, None)
+                else:
+                    backend_opts[nm] = v
         # fused_rounds is a blocked-megakernel knob on the single-device
         # tier; a per-lookup segment_min backend must not inherit it
-        fused = (self.fused_rounds
-                 if relax.get_backend(backend).name == "blocked_pallas"
-                 else 0)
-        return GraphEngine(gid, hg, backend, self.alpha, self.beta,
+        fused = cfg.fused_rounds if is_blocked else 0
+        return GraphEngine(gid, hg, backend, cfg.alpha, cfg.beta,
                            device=device, max_iters=self.max_iters,
-                           fused_rounds=fused, **self.backend_opts)
+                           fused_rounds=fused, policy=cfg.policy,
+                           **backend_opts)
 
     def evict(self, gid: str, backend: Optional[str] = None,
               device=None) -> bool:

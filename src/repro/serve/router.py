@@ -81,6 +81,10 @@ class QueryRouter:
 
     ``decay_window``/``decay_share``/``decay_windows`` control replica
     decay (see module docstring); ``decay_window=0`` disables it.
+    ``decay_min_traffic`` gates decay on a graph's absolute window
+    traffic (a gid below it keeps its placement), and replicas
+    pre-placed by :meth:`plan_placement` are exempt from decay until
+    their forecast traffic actually arrives.
     """
 
     def __init__(self, registry: GraphRegistry, *, devices=None,
@@ -96,6 +100,7 @@ class QueryRouter:
                  decay_window: int = 256,
                  decay_share: float = 0.05,
                  decay_windows: int = 3,
+                 decay_min_traffic: int = 1,
                  clock=time.monotonic,
                  metrics: Optional[MetricsRegistry] = None):
         user_config = config is not None
@@ -118,9 +123,11 @@ class QueryRouter:
             raise ValueError("need at least one device")
         if replicate_factor < 1.0:
             raise ValueError("replicate_factor must be >= 1")
-        if decay_window < 0 or decay_windows < 1 or decay_share < 0:
+        if decay_window < 0 or decay_windows < 1 or decay_share < 0 \
+                or decay_min_traffic < 0:
             raise ValueError("decay_window must be >= 0, decay_windows "
-                             ">= 1, decay_share >= 0")
+                             ">= 1, decay_share >= 0, decay_min_traffic "
+                             ">= 0")
         self.registry = registry
         self.devices = devices
         self.backend = backend
@@ -152,9 +159,13 @@ class QueryRouter:
         self.decay_window = decay_window
         self.decay_share = decay_share
         self.decay_windows = decay_windows
+        self.decay_min_traffic = decay_min_traffic
         self._window_routed = 0
         self._window_traffic: Dict[Tuple[int, str], int] = {}
         self._cold_streak: Dict[Tuple[int, str], int] = {}
+        # capacity-planned replicas (plan_placement): protected from
+        # share-based decay until they have carried real traffic
+        self._planned: set = set()
         self._c_routed = self.metrics.counter(
             "sssp_router_routed_total", help="Queries routed")
         self._c_replications = self.metrics.counter(
@@ -257,9 +268,9 @@ class QueryRouter:
             gid_totals[gid] = gid_totals.get(gid, 0) + c
         for gid, placed in self._placement.items():
             total = gid_totals.get(gid, 0)
-            if len(placed) < 2 or total == 0:
-                # nothing to shrink / an entirely-cold gid keeps its
-                # placement (decay reacts to *skew*, not absence)
+            if len(placed) < 2 or total < max(1, self.decay_min_traffic):
+                # nothing to shrink / a cold or below-threshold gid keeps
+                # its placement (decay reacts to *skew*, not absence)
                 for i in placed:
                     self._cold_streak.pop((i, gid), None)
                 continue
@@ -269,6 +280,14 @@ class QueryRouter:
             keep = max(placed, key=lambda i: (shares[i], -i))
             for i in list(placed):
                 key = (i, gid)
+                if key in self._planned:
+                    # capacity-planned replica: forecast traffic hasn't
+                    # arrived yet — protected until it carries a real
+                    # share, then it competes like any other replica
+                    if shares[i] > self.decay_share:
+                        self._planned.discard(key)
+                    self._cold_streak.pop(key, None)
+                    continue
                 if i != keep and shares[i] <= self.decay_share:
                     streak = self._cold_streak.get(key, 0) + 1
                     if streak >= self.decay_windows:
@@ -342,6 +361,9 @@ class QueryRouter:
                     idx = min(free, key=lambda i: (self._n_placed[i], i))
                     placed.append(idx)
                     self._n_placed[idx] += 1
+                # the plan endorses this placement: protect it from
+                # share-based decay until its forecast traffic shows up
+                self._planned.update((i, gid) for i in placed)
             return {gid: [self.schedulers[i].name for i in idxs]
                     for gid, idxs in self._placement.items()}
 

@@ -64,7 +64,7 @@ class SsspService:
                  shard_threshold_n: Optional[int] = None,
                  shard_threshold_m: Optional[int] = None,
                  shard_backend: Optional[str] = None,
-                 clock=time.monotonic, **backend_opts):
+                 clock=time.monotonic, tuned=None, **backend_opts):
         if not isinstance(g, (HostGraph, DeviceGraph)):
             raise TypeError(f"expected HostGraph/DeviceGraph, got {type(g)}")
         user_config = config is not None
@@ -92,7 +92,10 @@ class SsspService:
         capacity = 1 if devices is None else len(devices) + 1
         if user_config:
             capacity = max(capacity, config.registry_capacity)
-        self.registry = GraphRegistry(capacity=capacity, config=config)
+        # tuned= (a repro.tune.TunedStore or a path) lets the registry
+        # overlay per-graph offline-tuned perf fields at engine build
+        self.registry = GraphRegistry(capacity=capacity, config=config,
+                                      tuned=tuned)
         self.registry.register(_GID, g)
         if devices is None:
             # FIFO facade: no eccentricity reordering, no priorities

@@ -1,0 +1,19 @@
+"""Offline per-graph auto-tuning (see ISSUE/ROADMAP: trace-driven tuner).
+
+``tune/objective.py`` turns one traced solve into a scalar cost,
+``tune/search.py`` runs a budgeted, parity-validated search over the
+:class:`~repro.core.config.EngineConfig` space, and ``tune/store.py``
+persists winners in a :class:`TunedStore` keyed by gid + graph
+fingerprint — consulted by the serving registry and ``Solver.open`` via
+their ``tuned=`` passthrough.
+"""
+from .objective import (DEFAULT_WEIGHTS, ObjectiveWeights,
+                        objective_from_counters, trace_objective)
+from .search import TuneResult, tune
+from .store import TUNED_FIELDS, TunedStore, graph_fingerprint
+
+__all__ = [
+    "ObjectiveWeights", "DEFAULT_WEIGHTS", "objective_from_counters",
+    "trace_objective", "tune", "TuneResult", "TunedStore",
+    "graph_fingerprint", "TUNED_FIELDS",
+]

@@ -1,0 +1,276 @@
+"""Budgeted EngineConfig search: coordinate descent + random restarts.
+
+:func:`tune` searches the perf-relevant :class:`EngineConfig` axes
+(``alpha``/``beta``/``policy``/``fused_rounds``/blocked geometry/
+``compact_capacity``) for one graph, scoring each candidate by the
+trace objective (:mod:`repro.tune.objective`) of a few traced solves.
+
+Correctness gate: a candidate is accepted **only** when its dist/parent
+arrays are *bitwise identical* to the incumbent baseline's on every
+probe source.  Windows are pure scheduling, so every valid candidate
+should pass — the gate catches anything that doesn't (a miscompiled
+geometry, a policy that changes a parent via an exact float tie) and
+records it as a ``parity_reject`` instead of shipping it.
+
+Determinism: the only randomness is a seeded ``numpy`` Generator (probe
+sources + restart proposals); the search trajectory is a pure function
+of ``(graph, base config, seed, budget, space)``.
+
+The search exports its trajectory through the PR-7 observability plane:
+per-candidate counters/gauge on a ``MetricsRegistry`` and, with
+``jsonl_path=``, one ``tuner_candidate`` JSONL line per evaluation plus
+a final snapshot line — the same stream the serving benchmarks write.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..core.config import ConfigError, EngineConfig
+from .objective import DEFAULT_WEIGHTS, ObjectiveWeights, trace_objective
+from .store import TUNED_FIELDS, TunedStore
+
+__all__ = ["TuneResult", "tune", "default_space"]
+
+# generous default ring: probe solves must not overflow the trace ring or
+# the objective under-counts early rounds
+_TRACE_CAP = 4096
+
+_BLOCKED_SINGLE = ("blocked", "blocked_pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one :func:`tune` run (see fields; ``trajectory`` holds
+    one dict per evaluated candidate, in evaluation order)."""
+    gid: str
+    best_config: EngineConfig
+    best_objective: float
+    baseline_objective: float
+    n_evals: int
+    n_accepted: int
+    n_parity_rejects: int
+    n_invalid: int
+    seed: int
+    trajectory: tuple
+
+    @property
+    def improved(self) -> bool:
+        return self.best_objective < self.baseline_objective
+
+    @property
+    def reduction(self) -> float:
+        """Fractional objective reduction vs the default config."""
+        if self.baseline_objective <= 0:
+            return 0.0
+        return 1.0 - self.best_objective / self.baseline_objective
+
+
+def default_space(base: EngineConfig, n: int) -> dict:
+    """The searched axes for ``base`` on an ``n``-vertex graph.
+
+    Axes that the base engine cannot carry (blocked geometry on a
+    segment_min engine, ``compact_capacity`` off v3) are omitted up
+    front; individual invalid combinations that survive are caught per
+    candidate and counted as ``invalid``.
+    """
+    space = {
+        "alpha": (1.5, 3.0, 6.0, 12.0),
+        "beta": (0.5, 0.7, 0.9, 0.99),
+        "policy": ("static", "adaptive"),
+    }
+    blocked_single = base.backend in _BLOCKED_SINGLE
+    sharded = base.tier == "sharded"
+    blocked_shard = sharded and base.effective_shard_backend == "blocked"
+    if blocked_single or blocked_shard or sharded:
+        space["fused_rounds"] = (0, 2, 4, 8)
+    if blocked_single or blocked_shard:
+        space["block_v"] = (None, max(64, min(256, n // 4)))
+        space["tile_e"] = (None, 128, 512)
+    if sharded and base.shard_version == "v3":
+        space["compact_capacity"] = (0, 32, 128)
+    return space
+
+
+def _evaluate(graph, config: EngineConfig, sources,
+              weights: ObjectiveWeights, trace_capacity: int):
+    """Score ``config``: one traced tree solve per probe source.
+
+    Returns ``(dist, parent, objective)`` with dist/parent stacked
+    ``[S, n]`` host arrays for the parity gate.  Module-level so tests
+    can monkeypatch a deliberately-broken evaluator.
+    """
+    from ..api import SolveSpec, Solver
+
+    cfg = dataclasses.replace(config, trace=True,
+                              trace_capacity=trace_capacity)
+    dists, parents, obj = [], [], 0.0
+    with Solver.open(graph, cfg) as s:
+        for src in sources:
+            res = s.solve(SolveSpec.tree(int(src)))
+            dists.append(np.asarray(res.dist))
+            parents.append(np.asarray(res.parent))
+            obj += trace_objective(res.trace, weights)
+    return np.stack(dists), np.stack(parents), obj
+
+
+def _probe_sources(graph, n_sources: int, rng) -> list:
+    """Deterministic probe set: the max-degree vertex (the hard solve)
+    plus seeded uniform picks."""
+    deg = np.asarray(graph.deg)
+    n = deg.shape[0]
+    srcs = [int(np.argmax(deg))]
+    while len(srcs) < min(n_sources, n):
+        c = int(rng.integers(0, n))
+        if c not in srcs:
+            srcs.append(c)
+    return srcs
+
+
+def tune(graph, base: Optional[EngineConfig] = None, *, gid: str = "default",
+         budget: int = 24, seed: int = 0, restarts: int = 1,
+         n_sources: int = 3, sources=None,
+         weights: ObjectiveWeights = DEFAULT_WEIGHTS,
+         space: Optional[dict] = None, store: Optional[TunedStore] = None,
+         metrics=None, jsonl_path=None,
+         trace_capacity: int = _TRACE_CAP) -> TuneResult:
+    """Search the config space for ``graph`` within ``budget`` candidate
+    evaluations (baseline included); returns the :class:`TuneResult`.
+
+    Coordinate descent over :func:`default_space` (or ``space``), with
+    ``restarts`` seeded random proposals when a sweep stops improving.
+    Every accepted candidate is bitwise dist/parent-identical to the
+    baseline.  With ``store=``, the winner is persisted under ``gid``
+    (even when it ties the default: the entry records the tune
+    happened).  ``metrics``/``jsonl_path`` export the trajectory through
+    the observability plane.
+    """
+    base = base if base is not None else EngineConfig()
+    n = int(np.asarray(graph.deg).shape[0])
+    space = dict(space) if space is not None else default_space(base, n)
+    rng = np.random.default_rng(seed)
+    srcs = (list(map(int, sources)) if sources is not None
+            else _probe_sources(graph, n_sources, rng))
+
+    if metrics is None:
+        from ..obs.metrics import MetricsRegistry
+        metrics = MetricsRegistry()
+    c_cand = metrics.counter("sssp_tuner_candidates_total",
+                             "Tuner candidate configs evaluated")
+    c_acc = metrics.counter("sssp_tuner_accepted_total",
+                            "Tuner candidates accepted as the new best")
+    c_par = metrics.counter("sssp_tuner_parity_rejects_total",
+                            "Tuner candidates rejected for dist/parent "
+                            "parity mismatch")
+    c_inv = metrics.counter("sssp_tuner_invalid_total",
+                            "Tuner candidates rejected as invalid configs")
+    g_best = metrics.gauge("sssp_tuner_best_objective",
+                           "Best trace objective so far",
+                           labels={"gid": gid})
+
+    trajectory = []
+
+    def log_row(row):
+        trajectory.append(row)
+        if jsonl_path:
+            with open(jsonl_path, "a") as f:
+                f.write(json.dumps({"kind": "tuner_candidate", "gid": gid,
+                                    "seed": seed, "ts": time.time(), **row})
+                        + "\n")
+
+    # baseline = incumbent: its dist/parent are the parity reference
+    ref_dist, ref_parent, base_obj = _evaluate(graph, base, srcs, weights,
+                                               trace_capacity)
+    c_cand.inc()
+    g_best.set(base_obj)
+    n_evals, n_par, n_inv = 1, 0, 0
+    best, best_obj = base, base_obj
+    log_row({"eval": 0, "origin": "baseline", "objective": base_obj,
+             "accepted": True, "parity": True,
+             "config": {f: getattr(base, f) for f in TUNED_FIELDS}})
+
+    def try_candidate(cand: EngineConfig, origin: str) -> bool:
+        """Evaluate one candidate; returns whether it became the best."""
+        nonlocal n_evals, n_par, n_inv, best, best_obj
+        try:
+            cand.resolve(n=n, m=int(graph.m))
+        except ConfigError:
+            n_inv += 1
+            c_inv.inc()
+            return False
+        d, p, obj = _evaluate(graph, cand, srcs, weights, trace_capacity)
+        n_evals += 1
+        c_cand.inc()
+        parity = (np.array_equal(d, ref_dist)
+                  and np.array_equal(p, ref_parent))
+        accepted = parity and obj < best_obj - 1e-9
+        if not parity:
+            n_par += 1
+            c_par.inc()
+        if accepted:
+            best, best_obj = cand, obj
+            c_acc.inc()
+            g_best.set(best_obj)
+        log_row({"eval": n_evals - 1, "origin": origin, "objective": obj,
+                 "accepted": accepted, "parity": parity,
+                 "config": {f: getattr(cand, f) for f in TUNED_FIELDS}})
+        return accepted
+
+    def replace_valid(cfg, **kw):
+        try:
+            return dataclasses.replace(cfg, **kw)
+        except ConfigError:
+            return None
+
+    for round_ in range(restarts + 1):
+        if round_ > 0:
+            if n_evals >= budget:
+                break
+            # random restart: one seeded proposal over every axis at once
+            kw = {dim: vals[int(rng.integers(0, len(vals)))]
+                  for dim, vals in space.items()}
+            cand = replace_valid(best, **kw)
+            if cand is None or cand == best:
+                n_inv += 1
+                c_inv.inc()
+            else:
+                try_candidate(cand, f"restart{round_}")
+        improved = True
+        while improved and n_evals < budget:
+            improved = False
+            for dim, values in space.items():
+                for v in values:
+                    if n_evals >= budget:
+                        break
+                    if v == getattr(best, dim):
+                        continue
+                    cand = replace_valid(best, **{dim: v})
+                    if cand is None:
+                        n_inv += 1
+                        c_inv.inc()
+                        continue
+                    if try_candidate(cand, f"descent/{dim}"):
+                        improved = True
+
+    result = TuneResult(
+        gid=gid, best_config=best, best_objective=best_obj,
+        baseline_objective=base_obj, n_evals=n_evals,
+        n_accepted=sum(1 for r in trajectory[1:] if r["accepted"]),
+        n_parity_rejects=n_par, n_invalid=n_inv, seed=seed,
+        trajectory=tuple(trajectory))
+    if store is not None:
+        store.put(gid, graph, best, objective=best_obj, baseline=base_obj,
+                  meta={"seed": seed, "n_evals": n_evals,
+                        "sources": srcs})
+    if jsonl_path:
+        from ..obs.export import write_jsonl_snapshot
+        write_jsonl_snapshot(metrics.snapshot(), jsonl_path,
+                             meta={"kind": "tuner_summary", "gid": gid,
+                                   "seed": seed, "best": best_obj,
+                                   "baseline": base_obj,
+                                   "n_evals": n_evals})
+    return result

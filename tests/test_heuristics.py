@@ -103,6 +103,64 @@ def test_profit_terms_signs(graph):
     assert p[0] >= p[-1] - 1e-3
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.0, 1e6), st.floats(0.0, 1e6), st.floats(0.25, 4.0))
+def test_gap_positive_on_degenerate_luts(sd, hd, mult):
+    """w_floor clamp: every window is strictly positive — static and
+    adaptive (``mult``-rescaled) alike — even on degenerate weight LUTs
+    (all-zero, all-duplicate, and zero-heavy quantile tables)."""
+    two_e = jnp.float32(1000.0)
+    for lut in (np.zeros(64), np.full(64, 0.5),
+                np.concatenate([np.zeros(63), [2.0]])):
+        rtow = jnp.asarray(lut, jnp.float32)
+        g0 = float(stepping.gap_from_stats(jnp.float32(sd), jnp.float32(hd),
+                                           rtow, two_e))
+        ga = float(stepping.gap_from_stats(jnp.float32(sd), jnp.float32(hd),
+                                           rtow, two_e,
+                                           mult=jnp.float32(mult)))
+        # both inherit the >= max(w_floor, 1e-12) clamp: a shrunken
+        # adaptive window can never hit zero and stall the solve loop
+        assert g0 >= 1e-12, (lut[:3], sd, hd)
+        assert ga >= 1e-12, (lut[:3], sd, hd, mult)
+
+
+def test_gap_mult_one_matches_static(graph):
+    """mult=1 reproduces the static window bitwise (the adaptive policy
+    starts from the static program's exact widths)."""
+    g = graph.to_device()
+    dist = jnp.asarray(
+        np.random.default_rng(5).random(graph.n).astype(np.float32))
+    for x in [0.0, 0.3, 0.9]:
+        g_static = stepping.gap(dist, g.deg, g.rtow, g.n_edges2,
+                                jnp.float32(x))
+        g_mult = stepping.gap(dist, g.deg, g.rtow, g.n_edges2,
+                              jnp.float32(x), mult=jnp.float32(1.0))
+        assert np.float32(g_static) == np.float32(g_mult)
+
+
+def test_adaptive_update_clamps_and_snapshots():
+    """Feedback clamps hold under extreme counters, and the counter
+    snapshots always advance to the observed values."""
+    pol = stepping.DEFAULT_ADAPTIVE
+    ps = stepping.policy_init(stepping.SteppingParams())
+    # hammer the "too wide" signal: mult must stop at mult_min
+    for r in range(1, 30):
+        ps = stepping.adaptive_update(ps, jnp.int32(100 * r),
+                                      jnp.int32(1000 * r), jnp.int32(0))
+    assert float(ps.mult) == pytest.approx(pol.mult_min)
+    assert float(ps.alpha) >= pol.alpha_min
+    assert float(ps.beta) >= pol.beta_min
+    assert int(ps.last_rounds) == 100 * 29
+    # hammer "too narrow": mult must stop at mult_max
+    ps2 = stepping.policy_init(stepping.SteppingParams())
+    for r in range(1, 30):
+        ps2 = stepping.adaptive_update(ps2, jnp.int32(r),
+                                       jnp.int32(10 * r), jnp.int32(10 * r))
+    assert float(ps2.mult) == pytest.approx(pol.mult_max)
+    assert float(ps2.alpha) <= pol.alpha_max
+    assert float(ps2.beta) <= pol.beta_max
+
+
 def test_compute_st_within_bounds(graph):
     g = graph.to_device()
     dist = jnp.asarray(

@@ -289,8 +289,9 @@ def test_sharded_tier_blocked_backend_serves_bitwise():
 
 def test_replica_decay_shrinks_cold_placement():
     """A replica whose share of its gid's traffic stays ~0 for
-    decay_windows consecutive routing windows is torn down (and the
-    surviving replica is the one that carried the traffic)."""
+    decay_windows consecutive routing windows is torn down once its
+    plan_placement protection has lapsed (the surviving replica is the
+    one that carried the traffic)."""
     reg = two_graph_registry()
     router = QueryRouter(reg, devices=dup_devices(2), max_batch=2,
                          decay_window=8, decay_windows=2, decay_share=0.0)
@@ -298,9 +299,16 @@ def test_replica_decay_shrinks_cold_placement():
     router.plan_placement({"kron": 1.0})     # kron on both devices
     assert sorted(router.stats()["placement"]["road"]) == ["dev0", "dev1"]
     assert sorted(router.stats()["placement"]["kron"]) == ["dev0", "dev1"]
-    # drain after every submit: the queues are empty at each routing
-    # decision, ties break to dev0, and dev1's share of road traffic
-    # stays 0 through both windows
+    # window 1: submit pairs before draining so the queue-depth
+    # tie-break spreads each pair across both replicas — the planned
+    # replicas carry real traffic, which lapses their decay protection
+    for s in range(4):
+        router.submit(Query(gid="road", source=s))
+        router.submit(Query(gid="road", source=s + 50))
+        router.drain()
+    # windows 2-3: drain after every submit, the queues are empty at
+    # each routing decision, ties break to dev0, and dev1's share of
+    # road traffic stays 0 through both windows
     for s in range(16):
         router.submit(Query(gid="road", source=s % 100))
         router.drain()
@@ -314,6 +322,50 @@ def test_replica_decay_shrinks_cold_placement():
     fut = router.submit(Query(gid="road", source=3))
     router.drain()
     assert fut.result(timeout=0).served_by == "dev0"
+
+
+def test_planned_replicas_protected_from_decay():
+    """plan_placement pre-placements are exempt from share-based decay
+    until their forecast traffic actually arrives: a provisioned replica
+    that never carries a query is not torn down."""
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2,
+                         decay_window=8, decay_windows=2, decay_share=0.0)
+    router.plan_placement({"road": 1.0})
+    # every query lands on dev0 (queues drained, ties break low): dev1's
+    # planned replica sits at 0 share for four windows and survives
+    for s in range(32):
+        router.submit(Query(gid="road", source=s % 100))
+        router.drain()
+    st = router.stats()
+    assert st["n_decays"] == 0
+    assert sorted(st["placement"]["road"]) == ["dev0", "dev1"]
+
+
+def test_decay_min_traffic_gates_decay():
+    """Below ``decay_min_traffic`` total window traffic a skewed window
+    does not decay replicas; once the gate is met the same skew does."""
+    reg = two_graph_registry()
+    router = QueryRouter(reg, devices=dup_devices(2), max_batch=2,
+                         decay_window=8, decay_windows=1, decay_share=0.0,
+                         decay_min_traffic=9)
+    # a non-planned two-replica placement (as hot replication leaves it)
+    with router._lock:
+        router._placement["road"] = [0, 1]
+        router._n_placed[0] += 1
+        router._n_placed[1] += 1
+    for s in range(8):                       # skewed, but 8 < 9: gated
+        router.submit(Query(gid="road", source=s))
+        router.drain()
+    assert router.stats()["n_decays"] == 0
+    assert sorted(router.stats()["placement"]["road"]) == ["dev0", "dev1"]
+    router.decay_min_traffic = 1
+    for s in range(8):                       # same skew, gate met
+        router.submit(Query(gid="road", source=s))
+        router.drain()
+    st = router.stats()
+    assert st["n_decays"] == 1
+    assert st["placement"]["road"] == ["dev0"]
 
 
 def test_replica_decay_disabled_with_zero_window():

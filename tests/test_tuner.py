@@ -1,0 +1,224 @@
+"""Tests for the trace-driven auto-tuner (repro.tune) and its plumbing:
+policy parity, search determinism + parity gating, TunedStore staleness,
+and the serving registry's tuned-build path."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import SolveSpec, Solver
+from repro.core.config import ConfigError, EngineConfig
+from repro.data.generators import kronecker
+from repro.tune import (TunedStore, graph_fingerprint, trace_objective,
+                        tune)
+from repro.tune import search as tsearch
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return kronecker(8, 6, seed=4)
+
+
+@pytest.fixture(scope="module")
+def reference(graph):
+    res = Solver.open(graph).solve(SolveSpec.tree(0))
+    return np.asarray(res.dist), np.asarray(res.parent)
+
+
+# ---------------------------------------------------------------------------
+# adaptive policy: engine-level parity
+# ---------------------------------------------------------------------------
+
+def test_adaptive_policy_bitwise_parity(graph, reference):
+    """policy='adaptive' reschedules windows but returns bitwise-identical
+    dist/parent (windows are pure scheduling)."""
+    d_ref, p_ref = reference
+    res = Solver.open(graph, EngineConfig(policy="adaptive")) \
+        .solve(SolveSpec.tree(0))
+    np.testing.assert_array_equal(np.asarray(res.dist), d_ref)
+    np.testing.assert_array_equal(np.asarray(res.parent), p_ref)
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ConfigError, match="policy"):
+        EngineConfig(policy="annealed")
+
+
+# ---------------------------------------------------------------------------
+# search: determinism + parity gate
+# ---------------------------------------------------------------------------
+
+def _fake_evaluate(n, *, break_alpha=None):
+    """Deterministic stand-in for tsearch._evaluate: the objective is a
+    pure function of (alpha, beta, policy) with its optimum inside the
+    search space; ``break_alpha`` makes that config return *different*
+    dist arrays (a deliberately-broken candidate)."""
+
+    def fake(graph, config, sources, weights, trace_capacity):
+        dist = np.zeros((len(sources), n), np.float32)
+        parent = np.full((len(sources), n), -1, np.int32)
+        if break_alpha is not None and config.alpha == break_alpha:
+            dist = dist + 1.0
+        obj = (abs(config.alpha - 6.0) + abs(config.beta - 0.7)
+               + (0.5 if config.policy == "adaptive" else 0.0) + 1.0)
+        return dist, parent, obj
+
+    return fake
+
+
+def test_tuner_seed_determinism(graph, monkeypatch):
+    monkeypatch.setattr(tsearch, "_evaluate", _fake_evaluate(int(graph.n)))
+    a = tune(graph, budget=20, seed=7, restarts=2)
+    b = tune(graph, budget=20, seed=7, restarts=2)
+    assert [r["config"] for r in a.trajectory] \
+        == [r["config"] for r in b.trajectory]
+    assert a.best_config == b.best_config
+    assert a.best_objective == b.best_objective
+    # the fake objective's optimum is reachable by coordinate descent
+    assert a.best_config.alpha == 6.0
+    assert a.best_config.beta == 0.7
+    assert a.best_config.policy == "static"
+    assert a.improved and a.reduction > 0
+
+
+def test_tuner_rejects_parity_breaking_candidate(graph, monkeypatch):
+    """A candidate with a *better* objective but different dist arrays
+    must be rejected and counted, never accepted."""
+    fake = _fake_evaluate(int(graph.n), break_alpha=6.0)
+    monkeypatch.setattr(tsearch, "_evaluate", fake)
+    res = tune(graph, budget=20, seed=0)
+    assert res.n_parity_rejects >= 1
+    assert res.best_config.alpha != 6.0
+    broken = [r for r in res.trajectory if r["config"]["alpha"] == 6.0]
+    assert broken and not any(r["accepted"] for r in broken)
+    assert not any(r["parity"] for r in broken)
+
+
+def test_tuner_budget_cap(graph, monkeypatch):
+    monkeypatch.setattr(tsearch, "_evaluate", _fake_evaluate(int(graph.n)))
+    res = tune(graph, budget=5, seed=0, restarts=3)
+    assert res.n_evals <= 5
+
+
+def test_tuner_real_solve_improves_and_persists(graph, tmp_path):
+    """A tiny real tune: the winner ties-or-beats the default objective,
+    every accepted candidate passed the bitwise gate, and the store entry
+    round-trips with objective bookkeeping."""
+    store = TunedStore(tmp_path / "tuned.json")
+    jsonl = tmp_path / "tuner.jsonl"
+    res = tune(graph, budget=5, seed=0, restarts=0, n_sources=2,
+               store=store, gid="g8", jsonl_path=str(jsonl))
+    assert res.n_evals <= 5
+    assert res.best_objective <= res.baseline_objective
+    assert res.n_parity_rejects == 0
+    assert store.get("g8", graph) == res.best_config
+    entry = store.entry("g8")
+    assert entry["objective"] == pytest.approx(res.best_objective)
+    assert entry["baseline"] == pytest.approx(res.baseline_objective)
+    lines = [json.loads(s) for s in jsonl.read_text().splitlines()]
+    cands = [l for l in lines if l.get("kind") == "tuner_candidate"]
+    assert len(cands) == res.n_evals
+    assert any(l.get("meta", {}).get("kind") == "tuner_summary"
+               or l.get("kind") == "tuner_summary" for l in lines)
+
+
+def test_trace_objective_counts_rounds(graph):
+    cfg = EngineConfig(trace=True, trace_capacity=512)
+    res = Solver.open(graph, cfg).solve(SolveSpec.tree(0))
+    obj = trace_objective(res.trace)
+    sums = res.trace.counter_sums()
+    assert obj >= float(sums["n_rounds"])
+
+
+# ---------------------------------------------------------------------------
+# TunedStore
+# ---------------------------------------------------------------------------
+
+def test_store_round_trip_and_stale_fingerprint(graph, tmp_path):
+    path = tmp_path / "tuned.json"
+    store = TunedStore(path)
+    cfg = EngineConfig(alpha=9.0, beta=0.95, policy="adaptive")
+    store.put("kg", graph, cfg, objective=10.0, baseline=20.0)
+    # a fresh handle re-reads from disk
+    assert TunedStore(path).get("kg", graph) == cfg
+    assert TunedStore(path).get("kg") == cfg          # no-graph lookup
+    # a different graph -> stale fingerprint -> None / untouched apply
+    other = kronecker(8, 6, seed=9)
+    assert graph_fingerprint(other) != graph_fingerprint(graph)
+    assert TunedStore(path).get("kg", other) is None
+    base = EngineConfig()
+    assert TunedStore(path).apply("kg", other, base) == base
+    # matching fingerprint -> perf fields overlaid, serving knobs kept
+    applied = TunedStore(path).apply("kg", graph,
+                                     EngineConfig(max_batch=16))
+    assert applied.alpha == 9.0 and applied.policy == "adaptive"
+    assert applied.max_batch == 16
+    # invalidate drops the entry durably
+    assert store.invalidate("kg")
+    assert not store.invalidate("kg")
+    assert TunedStore(path).get("kg", graph) is None
+
+
+def test_store_corrupt_file_degrades_to_empty(graph, tmp_path):
+    path = tmp_path / "tuned.json"
+    path.write_text("{not json")
+    store = TunedStore(path)
+    assert store.get("kg", graph) is None
+    store.put("kg", graph, EngineConfig(alpha=5.0))      # recovers
+    assert TunedStore(path).get("kg", graph).alpha == 5.0
+
+
+def test_store_apply_falls_back_on_invalid_overlay(graph, tmp_path):
+    """An overlay the target config can't carry (fused_rounds on a
+    single-tier segment_min engine) degrades to the params-only overlay
+    instead of failing the build."""
+    store = TunedStore(tmp_path / "tuned.json")
+    tuned = EngineConfig(backend="blocked_pallas", alpha=7.0,
+                         fused_rounds=4)
+    store.put("kg", graph, tuned)
+    base = EngineConfig()           # segment_min: fused_rounds invalid
+    applied = store.apply("kg", graph, base,
+                          n=int(graph.n), m=int(graph.m))
+    assert applied.alpha == 7.0
+    assert applied.fused_rounds == 0
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+def test_registry_builds_from_tuned_store(graph, reference, tmp_path):
+    from repro.serve.registry import GraphRegistry
+
+    d_ref, p_ref = reference
+    store = TunedStore(tmp_path / "tuned.json")
+    store.put("kg", graph, EngineConfig(alpha=12.0, beta=0.99,
+                                        policy="adaptive"))
+    reg = GraphRegistry(config=EngineConfig(), tuned=store)
+    reg.register("kg", graph)
+    eng = reg.engine("kg")
+    assert eng.alpha == 12.0 and eng.policy == "adaptive"
+    assert reg._tuned_builds.value == 1
+    dist, parent, _ = eng.run_batch([0])
+    np.testing.assert_array_equal(np.asarray(dist)[0], d_ref)
+    np.testing.assert_array_equal(np.asarray(parent)[0], p_ref)
+    # a gid without an entry builds with the registry defaults
+    reg.register("plain", graph)
+    assert reg.engine("plain").alpha == EngineConfig().alpha
+    assert reg._tuned_builds.value == 1
+
+
+def test_solver_open_tuned_overlay(graph, reference, tmp_path):
+    d_ref, p_ref = reference
+    path = tmp_path / "tuned.json"
+    TunedStore(path).put("kg", graph,
+                         EngineConfig(alpha=12.0, policy="adaptive"))
+    s = Solver.open(graph, tuned=str(path), gid="kg")   # path accepted too
+    assert s.config.alpha == 12.0 and s.config.policy == "adaptive"
+    res = s.solve(SolveSpec.tree(0))
+    np.testing.assert_array_equal(np.asarray(res.dist), d_ref)
+    np.testing.assert_array_equal(np.asarray(res.parent), p_ref)
+    # stale entry (different graph) leaves the config untouched
+    other = kronecker(8, 6, seed=9)
+    s2 = Solver.open(other, tuned=str(path), gid="kg")
+    assert s2.config == EngineConfig()
