@@ -135,6 +135,79 @@ def run_p2p_vs_tree(g, pairs, alpha=3.0, beta=0.9, backend="segment_min"):
     }
 
 
+def run_p2p_alt(g, pairs, *, n_landmarks=8, strategy="farthest",
+                backend="segment_min", modes=("tree", "p2p", "alt",
+                                              "bidi")):
+    """Goal-directed p2p ladder on one graph: full tree -> early-exit
+    p2p -> p2p + ALT pruning -> bidirectional ALT, same (source, target)
+    pairs throughout.
+
+    Every rung must return the bitwise-identical d(s, t) and parent
+    chain (the ALT exactness contract); the ladder reports the work
+    counters that motivate each rung — rounds (nSync), relaxations, and
+    the ALT rungs' pruned-candidate counts — plus the landmark build
+    cost (amortized across every p2p query the graph ever serves).
+    """
+    from repro.core.landmarks import build_landmarks
+    from repro.serve.queries import reconstruct_path
+
+    t0 = time.perf_counter()
+    dg = g.to_device()
+    lm = build_landmarks(dg, n_landmarks=n_landmarks, strategy=strategy)
+    jax.block_until_ready(lm.D)
+    build_s = time.perf_counter() - t0
+
+    solvers = {
+        "tree": Solver.open(g, EngineConfig(backend=backend)),
+        "p2p": Solver.open(g, EngineConfig(backend=backend)),
+        "alt": Solver.open(g, EngineConfig(
+            backend=backend, use_alt=True, n_landmarks=n_landmarks,
+            landmark_strategy=strategy)),
+        "bidi": Solver.open(g, EngineConfig(
+            backend=backend, use_alt=True, n_landmarks=n_landmarks,
+            landmark_strategy=strategy, p2p_mode="bidirectional")),
+    }
+    out = {"build_s": build_s, "n_landmarks": n_landmarks,
+           "bitwise_equal": True}
+    ref = {}
+    for mode in modes:
+        solver = solvers[mode]
+        spec0 = (SolveSpec.tree(int(pairs[0][0])) if mode == "tree" else
+                 SolveSpec.p2p(int(pairs[0][0]), int(pairs[0][1])))
+        solver.solve(spec0).block_until_ready()     # warm-up / compile
+        rounds, relax, pruned, t_total = [], [], [], 0.0
+        for s, t in pairs:
+            spec = (SolveSpec.tree(int(s)) if mode == "tree" else
+                    SolveSpec.p2p(int(s), int(t)))
+            t0 = time.perf_counter()
+            res = solver.solve(spec).block_until_ready()
+            t_total += time.perf_counter() - t0
+            rounds.append(int(res.metrics.n_rounds))
+            relax.append(int(res.metrics.n_relax))
+            pruned.append(int(res.metrics.n_pruned))
+            key = (int(s), int(t))
+            got = (np.asarray(res.dist)[int(t)].tobytes(),
+                   reconstruct_path(np.asarray(res.parent), int(s),
+                                    int(t)))
+            if key in ref:
+                out["bitwise_equal"] &= got == ref[key]
+            else:
+                ref[key] = got
+        out[f"rounds_{mode}"] = float(np.mean(rounds))
+        out[f"relax_{mode}"] = float(np.mean(relax))
+        out[f"pruned_{mode}"] = float(np.mean(pruned))
+        out[f"time_s_{mode}"] = t_total / len(pairs)
+    out["time_s"] = out.get("time_s_alt", out["time_s_p2p"])
+    for mode in modes:
+        if mode == "p2p":
+            continue
+        out[f"relax_ratio_{mode}"] = (out["relax_p2p"] /
+                                      max(out[f"relax_{mode}"], 1.0))
+        out[f"round_ratio_{mode}"] = (out["rounds_p2p"] /
+                                      max(out[f"rounds_{mode}"], 1.0))
+    return out
+
+
 def run_serving_traffic(graphs, traffic, *, devices=None, max_batch=8,
                         capacity=None, backend=None, warm_kinds=None,
                         max_pending=None, open_loop=False,

@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run [--scale 14] [--sources 4]
         [--backend segment_min|blocked_pallas] [--batch 4]
         [--full-variants]
-        [--sections fig4,fig5,fig6,table3,backends,roofline,serving,tuner]
+        [--sections fig4,fig5,fig6,table3,backends,roofline,serving,p2p,tuner]
         [--open-loop]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per graph x metric) and
@@ -46,6 +46,15 @@ Sections:
              serving plane's metrics snapshot to
              benchmarks/artifacts/serving_open_loop.jsonl (the same
              JSONL snapshot stream the tuner writes).
+  p2p      — goal-directed point-to-point ladder on the benchmark suite
+             (incl. Road and the kron analogues): full tree vs early-exit
+             p2p vs p2p + ALT landmark pruning vs bidirectional
+             meet-in-the-middle, same (source, target) pairs.  Every rung
+             is bitwise-exact (same d(s,t) + parent chain); rows report
+             rounds / relaxations / pruned candidates per rung, the
+             relax/round reduction ratios of the ALT rungs, and the
+             one-off landmark build cost.  Committed as
+             benchmarks/baselines/BENCH_p2p.json via --json
   tuner    — the per-graph EngineConfig auto-tuner (repro.tune) on three
              graph families: default vs tuned trace objective, the
              reduction, bitwise dist/parent parity of the winner, and
@@ -253,6 +262,38 @@ def serving_open_loop(rows, graphs, base_qps, batch, n_queries, seed,
              offered_qps=r["offered_qps"], achieved_qps=r["qps"],
              p50_ms=r["p50_ms"], p99_ms=r["p99_ms"], shed=r["shed"],
              occupancy=r["occupancy"], n_queries=n_queries)
+
+
+def p2p(rows, scale, n_pairs=4, n_landmarks=8):
+    """Goal-directed p2p ladder (tree / p2p / +ALT / bidirectional) —
+    see :func:`benchmarks.common.run_p2p_alt`.  The ALT rungs must stay
+    bitwise-exact while cutting relaxations (the issue's acceptance
+    floor is >= 1.5x on Road and the kron analogue)."""
+    print(f"# p2p: tree vs p2p vs p2p+ALT vs bidirectional, "
+          f"{n_pairs} pairs, {n_landmarks} landmarks")
+    graphs = common.benchmark_graphs(scale)
+    for name in ["Road", f"gr{scale}_8", f"gr{scale}_16", "Urand",
+                 "Kron"]:
+        if name not in graphs:
+            continue
+        g = graphs[name]()
+        srcs = common.pick_sources(g, n_pairs, seed=1)
+        tgts = common.pick_sources(g, n_pairs, seed=2)
+        m = common.run_p2p_alt(g, list(zip(srcs, tgts)),
+                               n_landmarks=n_landmarks)
+        emit(rows, f"p2p/{name}", m["time_s"],
+             bitwise_equal=int(m["bitwise_equal"]),
+             rounds_tree=m["rounds_tree"], rounds_p2p=m["rounds_p2p"],
+             rounds_alt=m["rounds_alt"], rounds_bidi=m["rounds_bidi"],
+             relax_p2p=m["relax_p2p"], relax_alt=m["relax_alt"],
+             relax_bidi=m["relax_bidi"], pruned_alt=m["pruned_alt"],
+             pruned_bidi=m["pruned_bidi"],
+             relax_ratio_alt=m["relax_ratio_alt"],
+             round_ratio_alt=m["round_ratio_alt"],
+             relax_ratio_bidi=m["relax_ratio_bidi"],
+             landmark_build_s=m["build_s"],
+             time_s_p2p=m["time_s_p2p"], time_s_alt=m["time_s_alt"],
+             time_s_bidi=m["time_s_bidi"])
 
 
 def tuner(rows, scale, budget=14, seed=0):
@@ -482,6 +523,8 @@ def main() -> None:
     if "serving" in sections:
         run_section("serving", serving, args.scale, args.batch,
                     n_queries=args.queries, open_loop=args.open_loop)
+    if "p2p" in sections:
+        run_section("p2p", p2p, args.scale)
     if "tuner" in sections:
         run_section("tuner", tuner, args.scale,
                     budget=args.tune_budget)

@@ -413,6 +413,20 @@ class Solver:
         else:
             with profiling.annotate(f"repro:engine_build:{r.backend}"):
                 self._layout = self._backend.prepare(dg, **r.layout_opts())
+        self._build_landmarks(dg)
+
+    def _build_landmarks(self, g) -> None:
+        """Session-owned ALT artifact: with ``use_alt`` the landmark set
+        is built once at open (amortized like the layout) and threaded
+        into every p2p solve — without it the engine entry points would
+        rebuild the ``[L, N]`` matrix per call."""
+        self._landmarks = None
+        if self.resolved.use_alt:
+            from .core.landmarks import build_landmarks
+            with profiling.annotate("repro:landmark_build"):
+                self._landmarks = build_landmarks(
+                    g, self.resolved.n_landmarks,
+                    self.resolved.landmark_strategy)
 
     def _check_layout(self, layout) -> None:
         """A foreign layout must match the configured backend *and* cover
@@ -473,6 +487,7 @@ class Solver:
             self._blocked = None
             if r.shard_backend == "blocked":
                 self._blocked = shard_blocked(self._sg, **r.blocked_opts())
+        self._build_landmarks(graph)
 
     def _open_routed(self, graph):
         from .serve.registry import GraphRegistry
@@ -500,6 +515,75 @@ class Solver:
                 "sharded": self._solve_sharded,
                 "routed": self._solve_routed}[self.tier](spec)
 
+    def solve_many(self, specs) -> list:
+        """Solve several specs — mixed goal kinds welcome — one
+        :class:`SolveResult` per input spec, in order.
+
+        One compiled engine serves one goal kind, so the specs are
+        grouped into *plan-compatible sub-batches* (the same grouping
+        the serving scheduler applies to its queue): all slots of one
+        kind fuse into a single batched solve, and each spec's rows are
+        sliced back out of its group's result.  The routed tier submits
+        every query up front and drains once, letting its schedulers
+        form the sub-batches themselves.
+        """
+        specs = list(specs)
+        for spec in specs:
+            if not isinstance(spec, SolveSpec):
+                raise TypeError(f"expected SolveSpec, got {type(spec)}")
+        if self._closed:
+            raise RuntimeError("solver is closed")
+        for spec in specs:
+            spec.check_bounds(self.n)
+        if not specs:
+            return []
+        if self.tier == "routed" or len(specs) == 1:
+            # routed: the scheduler already groups plan-compatibly, and
+            # submitting everything before the drain lets one step batch
+            # across specs; single spec: nothing to group
+            return [self.solve(s) for s in specs]
+        # group spec indices by goal kind (the plan-compatibility key on
+        # one graph), preserving submission order within a group
+        groups: dict = {}
+        for i, spec in enumerate(specs):
+            groups.setdefault(spec.kind, []).append(i)
+        solve = {"single": self._solve_single,
+                 "sharded": self._solve_sharded}[self.tier]
+        results: list = [None] * len(specs)
+        for kind, idxs in groups.items():
+            srcs: list = []
+            params: list = []
+            slots: list = []                  # [start, stop) per spec
+            for i in idxs:
+                s = specs[i]
+                start = len(srcs)
+                srcs.extend(s.sources if s.batched else (s.sources,))
+                p = s.slot_params()
+                params.extend(p if p is not None else [])
+                slots.append((start, len(srcs)))
+            merged = SolveSpec(
+                sources=tuple(srcs), kind=kind,
+                **({} if kind == "tree" else
+                   {{"p2p": "target", "bounded": "bound",
+                     "knear": "k"}[kind]: tuple(params)}))
+            out = solve(merged)
+            for i, (lo, hi) in zip(idxs, slots):
+                spec = specs[i]
+                sl = (slice(lo, hi) if spec.batched
+                      else lo)                # singleton drops the axis
+                metrics = jax.tree.map(
+                    lambda x: np.asarray(x)[sl], out.metrics)
+                trace = None
+                if out.trace is not None:
+                    trace = (out.trace[lo:hi] if spec.batched
+                             else out.trace[lo])
+                results[i] = SolveResult(
+                    spec=spec, dist=np.asarray(out.dist)[sl],
+                    parent=np.asarray(out.parent)[sl],
+                    metrics=metrics, deg=self.deg, tier=self.tier,
+                    trace=trace)
+        return results
+
     def _goal_args(self, spec: SolveSpec) -> dict:
         if spec.batched:
             return {"goal": spec.kind, "goal_params": spec.slot_params()}
@@ -519,7 +603,7 @@ class Solver:
         fn = sssp_batch if spec.batched else sssp
         srcs = list(spec.sources) if spec.batched else spec.sources
         out = fn(self._dg, srcs, config=self.resolved, layout=self._layout,
-                 **self._goal_args(spec))
+                 landmarks=self._landmarks, **self._goal_args(spec))
         dist, parent, metrics, trace = self._materialize_trace(out)
         return SolveResult(spec=spec, dist=dist, parent=parent,
                            metrics=metrics, deg=self.deg, tier=self.tier,
@@ -533,7 +617,7 @@ class Solver:
             else spec.sources
         out = fn(self._sg, srcs, self._mesh, ("graph",),
                  config=self.resolved, blocked=self._blocked,
-                 **self._goal_args(spec))
+                 landmarks=self._landmarks, **self._goal_args(spec))
         dist, parent, metrics, trace = self._materialize_trace(out)
         # padding vertices never escape the facade
         dist = dist[..., :self.n]
@@ -580,6 +664,14 @@ class Solver:
     def device_graph(self):
         """The single tier's device-resident graph — None elsewhere."""
         return getattr(self, "_dg", None)
+
+    @property
+    def landmarks(self):
+        """The session's ALT :class:`~repro.core.landmarks.LandmarkSet`
+        (``use_alt`` configs, single/sharded tiers) — None otherwise.
+        The routed tier's sets live in its registry
+        (:meth:`~repro.serve.registry.GraphRegistry.landmark_set`)."""
+        return getattr(self, "_landmarks", None)
 
     @property
     def router(self):

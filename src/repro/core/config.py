@@ -30,12 +30,17 @@ import dataclasses
 from typing import Optional, Tuple
 
 __all__ = ["ConfigError", "FacadeDeprecationWarning", "EngineConfig",
-           "ResolvedEngine", "TIERS", "SHARD_VERSIONS", "STEP_POLICIES"]
+           "ResolvedEngine", "TIERS", "SHARD_VERSIONS", "STEP_POLICIES",
+           "P2P_MODES", "LANDMARK_STRATEGIES"]
 
 TIERS = ("auto", "single", "sharded", "routed")
 SHARD_VERSIONS = ("v1", "v2", "v3")
 # stepping-policy names (kept in sync with repro.core.stepping.POLICIES)
 STEP_POLICIES = ("static", "adaptive")
+# p2p search directions (kept in sync with repro.core.sssp)
+P2P_MODES = ("unidirectional", "bidirectional")
+# landmark selection strategies (kept in sync with repro.core.landmarks)
+LANDMARK_STRATEGIES = ("farthest", "max_degree")
 
 # single-device relax-backend names whose sharded twin is the blocked
 # per-shard layout (kept in sync with repro.core.distributed)
@@ -162,6 +167,11 @@ class EngineConfig:
     # observability: per-round solve traces (repro.obs.trace)
     trace: bool = False
     trace_capacity: int = 256
+    # goal-directed p2p: ALT landmark lower bounds + search direction
+    use_alt: bool = False
+    n_landmarks: int = 8
+    landmark_strategy: str = "farthest"
+    p2p_mode: str = "unidirectional"
 
     def __post_init__(self):
         if self.tier not in TIERS:
@@ -200,6 +210,30 @@ class EngineConfig:
                 raise ConfigError(f"{name} must be >= 1 (or None)")
         if self.trace_capacity < 1:
             raise ConfigError("trace_capacity must be >= 1")
+        if self.p2p_mode not in P2P_MODES:
+            raise ConfigError(f"unknown p2p_mode {self.p2p_mode!r}; "
+                              f"expected one of {P2P_MODES}")
+        if self.landmark_strategy not in LANDMARK_STRATEGIES:
+            raise ConfigError(
+                f"unknown landmark_strategy {self.landmark_strategy!r}; "
+                f"expected one of {LANDMARK_STRATEGIES}")
+        if self.n_landmarks < 1:
+            raise ConfigError("n_landmarks must be >= 1")
+        if self.p2p_mode == "bidirectional":
+            # the meet-in-the-middle search prunes both frontiers against
+            # the shared meet bound, which only exists with ALT landmark
+            # lower bounds; scheduling is forward-authoritative and fixed
+            if not self.use_alt:
+                raise ConfigError("p2p_mode='bidirectional' needs "
+                                  "use_alt=True (the meet bound prunes "
+                                  "through the ALT lower-bound machinery)")
+            if self.policy != "static":
+                raise ConfigError("p2p_mode='bidirectional' supports only "
+                                  "policy='static'")
+            if self.trace:
+                raise ConfigError("p2p_mode='bidirectional' does not "
+                                  "record per-round solve traces; drop "
+                                  "trace=True")
 
     # ------------------------------------------------------------------
     # loose-kwarg adoption
@@ -357,6 +391,12 @@ class EngineConfig:
                 f"backend={self.backend!r} and shard_backend="
                 f"{self.shard_backend!r} disagree for tier='sharded'; "
                 f"set one of them")
+        if tier == "sharded" and self.p2p_mode == "bidirectional":
+            raise ConfigError(
+                "p2p_mode='bidirectional' runs on the single-device tier "
+                "(the alternating forward/backward windows share one "
+                "resident dist pair); use unidirectional ALT pruning on "
+                "the sharded tier")
         blocked_anywhere = (backend in _BLOCKED_NAMES
                             or shard_backend == "blocked")
         if not blocked_anywhere:
@@ -398,6 +438,9 @@ class EngineConfig:
             registry_capacity=self.registry_capacity,
             max_pending=self.max_pending, ecc_batching=self.ecc_batching,
             trace=self.trace, trace_capacity=self.trace_capacity,
+            use_alt=self.use_alt, n_landmarks=self.n_landmarks,
+            landmark_strategy=self.landmark_strategy,
+            p2p_mode=self.p2p_mode,
             config=self)
 
 
@@ -436,6 +479,10 @@ class ResolvedEngine:
     ecc_batching: bool
     trace: bool
     trace_capacity: int
+    use_alt: bool
+    n_landmarks: int
+    landmark_strategy: str
+    p2p_mode: str
     config: EngineConfig
 
     @property

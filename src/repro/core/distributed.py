@@ -76,6 +76,30 @@ from ..obs.trace import trace_append, trace_init
 DIST_BACKENDS = ("segment_min", "blocked")
 
 
+class _AltCtx(NamedTuple):
+    """Per-solve ALT pruning context (closed over by the loop bodies, not
+    part of any loop carry — every field is loop-invariant)."""
+    lb: jnp.ndarray      # [n_pad] f32 per-vertex lower bound to the target
+    seed: jnp.ndarray    # f32 landmark-seeded upper bound on d(s, t)
+    infl: jnp.ndarray    # f32 prune-bound inflation (1 + 4 delta)
+    tgt: jnp.ndarray     # int32 target vertex
+
+
+def _make_alt_ctx(alt_d, source, gp, n_pad):
+    """Build the :class:`_AltCtx` for one (source, target) p2p solve.
+
+    ``alt_d`` is the replicated :class:`~repro.core.relax.AltData`
+    bundle; the bound vector is padded with +inf so block-padding
+    vertices (which hold no real edges) index safely."""
+    infl = 1.0 + 4.0 * alt_d.delta
+    lb_v = relax.alt_lower_bounds(alt_d.D, gp, alt_d.delta, alt_d.sym)
+    lb_v = jnp.pad(lb_v, (0, n_pad - lb_v.shape[0]),
+                   constant_values=jnp.inf)
+    seed = relax.alt_seed_ub(alt_d.D, source, gp, infl, alt_d.sym)
+    return _AltCtx(lb=lb_v, seed=seed, infl=infl,
+                   tgt=jnp.asarray(gp, jnp.int32))
+
+
 def _dtrace_record(buf, iters, frontier_size, lb, ub, st_, stepped, m0, m1):
     """Append one per-iteration trace record (inside a shard_map body).
 
@@ -96,6 +120,7 @@ def _dtrace_record(buf, iters, frontier_size, lb, ub, st_, stepped, m0, m1):
         "n_pull_trav": m1.n_pull_trav - m0.n_pull_trav,
         "n_relax": m1.n_relax - m0.n_relax,
         "n_updates": m1.n_updates - m0.n_updates,
+        "n_pruned": m1.n_pruned - m0.n_pruned,
     }
     fvals = {
         "lb": lb, "ub": ub, "st": st_,
@@ -313,7 +338,8 @@ class _V2State(NamedTuple):
 def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
                   fused_rounds, capacity, goal="tree", batch=False,
                   bmeta: Optional[BlockedShardMeta] = None,
-                  trace_cap: int = 0, policy: str = "static"):
+                  trace_cap: int = 0, policy: str = "static",
+                  alt: bool = False):
     """Build + jit one distributed engine (cached so repeated calls with
     the same mesh/shape/config reuse the compiled executable).
 
@@ -325,7 +351,10 @@ def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
     push partials with the ragged-grid kernel instead of ``segment_min``.
     ``trace_cap > 0`` adds a replicated per-round trace ring as a fourth
     output (part of this cache key: 0 compiles the exact untraced
-    program).
+    program).  ``alt`` appends a replicated
+    :class:`~repro.core.relax.AltData` operand (p2p goal-directed
+    pruning; part of the cache key, so non-ALT solves compile the exact
+    pre-ALT program).
     """
     in_specs = (graph_specs(axes), P(), P())
     if bmeta is not None:
@@ -337,6 +366,10 @@ def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
         # in a nested while, jax 0.4.x) — data sidesteps it entirely.
         in_specs = (graph_specs(axes), blocked_specs(axes), P(axes), P(),
                     P())
+    if alt:
+        # the landmark matrix is replicated across the mesh (the serving
+        # registry places it with a replicated NamedSharding up front)
+        in_specs = in_specs + (relax.AltData(D=P(), delta=P(), sym=P()),)
     out_specs = (P(axes), P(axes), P())
 
     axis_sizes = tuple(mesh.shape[a] for a in
@@ -344,18 +377,18 @@ def _build_engine(mesh, axes, version, block, n_pad, params, max_iters,
     if version == "v1":
         body = _v1_body(n_pad, block, axes, params, max_iters, goal, batch,
                         bmeta=bmeta, axis_sizes=axis_sizes,
-                        trace_cap=trace_cap, policy=policy)
+                        trace_cap=trace_cap, policy=policy, alt=alt)
         out_specs = (P(), P(), P())
     elif version == "v2":
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                         axis_sizes, goal=goal, batch=batch, bmeta=bmeta,
-                        trace_cap=trace_cap, policy=policy)
+                        trace_cap=trace_cap, policy=policy, alt=alt)
     elif version == "v3":
         cap = capacity or max(block // 16, 8)
         body = _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                         axis_sizes, goal=goal, batch=batch,
                         compact_capacity=cap, bmeta=bmeta,
-                        trace_cap=trace_cap, policy=policy)
+                        trace_cap=trace_cap, policy=policy, alt=alt)
     else:
         raise ValueError(version)
     if version in ("v2", "v3") and batch:
@@ -426,7 +459,8 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
                      beta=None, capacity=None,
                      goal: str = "tree", goal_param=None,
                      backend=None, blocked=None,
-                     block_v=None, tile_e=None, policy=None, config=None):
+                     block_v=None, tile_e=None, policy=None, config=None,
+                     landmarks=None):
     """Run distributed EIC SSSP on ``mesh`` (axes flattened over ``axes``).
 
     versions: v1 replicated/pmin, v2 sharded/all_to_all dense exchange,
@@ -448,6 +482,11 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     ``config`` accepts an :class:`~repro.core.config.EngineConfig` (or a
     resolved one, tier ``"sharded"``) in place of every loose engine
     kwarg above — the :class:`repro.api.Solver` facade's path.
+
+    ``landmarks`` (a :class:`~repro.core.landmarks.LandmarkSet` or raw
+    :class:`~repro.core.relax.AltData`) enables exact ALT goal-directed
+    pruning for p2p goals — the facade/registry build and cache the set
+    per graph and pass it here.
     """
     (version, max_iters, fused_rounds, alpha, beta, capacity, backend,
      trace_cap, policy, build_opts) = _dist_engine_args(
@@ -460,14 +499,18 @@ def sssp_distributed(sg: ShardedGraph, source: int, mesh, axes=("graph",), *,
     _check_goal_bounds(goal, gp, int(sg.n_true))
     axes_key = axes if isinstance(axes, str) else tuple(axes)
     arrays, bmeta = _resolve_blocked(sg, backend, blocked, build_opts)
+    alt_data = None
+    if goal == "p2p" and landmarks is not None:
+        alt_data = getattr(landmarks, "alt_data", landmarks)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
                        max_iters, fused_rounds, capacity, goal, False,
-                       bmeta, trace_cap, policy)
+                       bmeta, trace_cap, policy, alt_data is not None)
+    alt_op = () if alt_data is None else (alt_data,)
     with profiling.annotate(f"repro:sssp_dist_dispatch:{version}"):
         if arrays is not None:
             bases = jnp.arange(p, dtype=jnp.int32) * block
-            return fn(sg, arrays, bases, jnp.int32(source), gp)
-        return fn(sg, jnp.int32(source), gp)
+            return fn(sg, arrays, bases, jnp.int32(source), gp, *alt_op)
+        return fn(sg, jnp.int32(source), gp, *alt_op)
 
 
 def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
@@ -477,7 +520,8 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
                            capacity=None, goal: str = "tree",
                            goal_params=None, backend=None,
                            blocked=None, block_v=None,
-                           tile_e=None, policy=None, config=None):
+                           tile_e=None, policy=None, config=None,
+                           landmarks=None):
     """Batched multi-source distributed SSSP — the sharded serving tier's
     entry point.
 
@@ -509,24 +553,33 @@ def sssp_distributed_batch(sg: ShardedGraph, sources, mesh, axes=("graph",),
     _check_goal_bounds(goal, gp, int(sg.n_true))
     axes_key = axes if isinstance(axes, str) else tuple(axes)
     arrays, bmeta = _resolve_blocked(sg, backend, blocked, build_opts)
+    alt_data = None
+    if goal == "p2p" and landmarks is not None:
+        alt_data = getattr(landmarks, "alt_data", landmarks)
     fn = _build_engine(mesh, axes_key, version, block, p * block, params,
                        max_iters, fused_rounds, capacity, goal, True,
-                       bmeta, trace_cap, policy)
+                       bmeta, trace_cap, policy, alt_data is not None)
+    alt_op = () if alt_data is None else (alt_data,)
     with profiling.annotate(f"repro:sssp_dist_batch_dispatch:{version}"):
         if arrays is not None:
             bases = jnp.arange(p, dtype=jnp.int32) * block
-            return fn(sg, arrays, bases, sources, gp)
-        return fn(sg, sources, gp)
+            return fn(sg, arrays, bases, sources, gp, *alt_op)
+        return fn(sg, sources, gp, *alt_op)
 
 
 # --- v1 -------------------------------------------------------------------
 
 def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
-             bmeta=None, axis_sizes=(), trace_cap=0, policy="static"):
+             bmeta=None, axis_sizes=(), trace_cap=0, policy="static",
+             alt=False):
     axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
     adaptive = policy == "adaptive"
 
     def run(sg: ShardedGraph, *args):
+        if alt:
+            args, alt_d = args[:-1], args[-1]
+        else:
+            alt_d = None
         if bmeta is not None:
             bl, base_arr, source, goal_param = args
             bl = jax.tree.map(lambda x: x[0], bl)    # drop the shard axis
@@ -548,11 +601,19 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
         max_w = rtow[-1]
         high_d0 = stats.high_d(jnp.zeros((n_pad,), jnp.float32), deg, 0.0)
 
-        def relax_round(dist, parent, frontier, lb, ub, metrics):
+        def relax_round(dist, parent, frontier, lb, ub, metrics, ac=None,
+                        pb=None):
             paths = relax.leaf_pruned(frontier, dist, deg)
+            n_prn = jnp.int32(0)
             if bmeta is None:
                 cand, in_window, active = relax.edge_candidates(
                     dist[src], paths[src], parent[src], dst, w, lb, ub)
+                if ac is not None:
+                    active, pruned = relax.alt_prune(cand, active,
+                                                     ac.lb[dst], pb)
+                    cand = jnp.where(active, cand, INF)
+                    n_prn = jax.lax.psum(
+                        jnp.sum(pruned.astype(jnp.int32)), axes)
                 best = jax.lax.pmin(
                     relax.segment_partial_min(cand, dst, n_pad), axes)
                 winner = jax.lax.pmin(
@@ -574,20 +635,23 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
                 paths_src = jax.lax.dynamic_slice(paths, (base,), (block,))
                 parent_src = jax.lax.dynamic_slice(parent, (base,),
                                                    (block,))
-                best_l, win_l, nt, trav, rlx = \
+                best_l, win_l, nt, trav, rlx, prn = \
                     relax.blocked_shard_partials_fused(
                         bl.src_local, bl.dst, bl.w, bl.tile_dst,
                         bl.tile_first, dist_src, paths_src, parent_src,
                         base, lb, ub, block_v=bmeta.block_v,
                         n_dst_blocks=bmeta.n_dst_blocks,
                         tile_e=bmeta.tile_e, use_kernel=bmeta.use_kernel,
-                        interpret=bmeta.interpret)
+                        interpret=bmeta.interpret,
+                        alt_lb=None if ac is None else ac.lb,
+                        prune_bound=pb)
                 best = jax.lax.pmin(best_l, axes)
                 winner = jax.lax.pmin(
                     jnp.where(best_l <= best, win_l, INT_MAX), axes)
                 n_tiles = jax.lax.psum(nt.astype(jnp.float32), axes)
                 touched = jax.lax.psum(trav, axes)
                 relaxed = jax.lax.psum(rlx, axes)
+                n_prn = jax.lax.psum(prn, axes)
                 n_inv = jax.lax.psum(jnp.float32(1), axes)
             new_dist, new_parent, improved = relax.apply_updates(
                 dist, parent, best, winner)
@@ -599,6 +663,7 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
                 n_relax=metrics.n_relax + relaxed,
                 n_updates=metrics.n_updates +
                 jnp.sum(improved.astype(jnp.int32)),
+                n_pruned=metrics.n_pruned + n_prn,
                 n_tiles_scanned=metrics.n_tiles_scanned + n_tiles,
                 n_tiles_dense=metrics.n_tiles_dense + jnp.float32(
                     0 if bmeta is None else bmeta.dense_grid_tiles),
@@ -606,11 +671,21 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
             )
             return new_dist, new_parent, improved, metrics
 
-        def pull_round(dist, parent, st, lb, ub, metrics):
-            # mirrored push from the settled band (undirected store)
+        def pull_round(dist, parent, st, lb, ub, metrics, ac=None, pb=None):
+            # mirrored push from the settled band (undirected store); the
+            # requester receiving the update is ``dst`` here, so ALT cuts
+            # requests with cand + lb[dst] > bound (the mirrored twin of
+            # the single-device requester-side alt_lb[src] cut — the
+            # directed edge sets pair up one-to-one, so counts match)
             dv = dist[src]
             mask = (dv >= st) & (dv < lb) & (dv + w < ub)
             cand = jnp.where(mask, dv + w, INF)
+            n_prn = jnp.int32(0)
+            if ac is not None:
+                mask, pruned = relax.alt_prune(cand, mask, ac.lb[dst], pb)
+                cand = jnp.where(mask, cand, INF)
+                n_prn = jax.lax.psum(
+                    jnp.sum(pruned.astype(jnp.int32)), axes)
             best = jax.lax.pmin(
                 relax.segment_partial_min(cand, dst, n_pad), axes)
             winner = jax.lax.pmin(
@@ -628,13 +703,20 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
                 n_relax=metrics.n_relax + requests,
                 n_updates=metrics.n_updates +
                 jnp.sum(improved.astype(jnp.int32)),
+                n_pruned=metrics.n_pruned + n_prn,
                 n_rounds=metrics.n_rounds + 1,
             )
             return new_dist, new_parent, metrics
 
-        def transition(dist, parent, lb, ub, metrics, gp, ps=None):
+        def transition(dist, parent, lb, ub, metrics, gp, ps=None, ac=None):
             pend = dist[src] + w
             pend = jnp.where(pend >= ub, pend, INF)
+            if ac is not None:
+                # a pending candidate the ALT bound would cut can never
+                # improve the target, so skipping it in fast-forward/
+                # termination is exact for the p2p contract
+                bound_eff = jnp.minimum(ac.seed, dist[ac.tgt] * ac.infl)
+                pend = jnp.where(pend + ac.lb[dst] > bound_eff, INF, pend)
             min_pending = jax.lax.pmin(jnp.min(pend), axes)
             done = ~jnp.isfinite(min_pending)
             if ps is not None:
@@ -659,7 +741,8 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
             st_next = jnp.minimum(st_next, lb2)
 
             def with_pull(args):
-                return pull_round(*args[:2], st_next, lb2, ub2, args[2])
+                return pull_round(*args[:2], st_next, lb2, ub2, args[2],
+                                  ac, None if ac is None else bound_eff)
 
             dist, parent, metrics = jax.lax.cond(
                 st_next < lb2, with_pull, lambda a: a,
@@ -684,12 +767,18 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
                                jnp.int32).at[source].set(source)
             frontier0 = jnp.zeros((n_pad,), bool).at[source].set(True)
             metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
+            ac = None if alt_d is None else _make_alt_ctx(alt_d, source,
+                                                          gp, n_pad)
 
             def body(s):
                 (dist, parent, frontier, lb, ub, st_, done, iters,
                  metrics) = s[:9]
+                # per-round prune bound from dist at round start (the
+                # same recompute the single-device fused kernel does)
+                pb = None if ac is None else jnp.minimum(
+                    ac.seed, dist[ac.tgt] * ac.infl)
                 dist, parent, frontier, metrics = relax_round(
-                    dist, parent, frontier, lb, ub, metrics)
+                    dist, parent, frontier, lb, ub, metrics, ac, pb)
                 # first-step ub bootstrap
                 def tighten(ub):
                     mask = (deg.astype(jnp.float32) >= high_d0) & (dist > 0)
@@ -699,7 +788,7 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
 
                 if adaptive:
                     def trans(args):
-                        return transition(*args[:5], gp, ps=args[5])
+                        return transition(*args[:5], gp, ps=args[5], ac=ac)
 
                     def keep(args):
                         dist, parent, lb, ub, metrics, ps = args
@@ -714,7 +803,7 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
                             iters + 1, metrics, ps)
 
                 def trans(args):
-                    return transition(*args, gp)
+                    return transition(*args, gp, ac=ac)
 
                 def keep(args):
                     dist, parent, lb, ub, metrics = args
@@ -762,12 +851,16 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
 
 def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
              axis_sizes, goal="tree", batch=False, compact_capacity: int = 0,
-             bmeta=None, trace_cap=0, policy="static"):
+             bmeta=None, trace_cap=0, policy="static", alt=False):
     p = n_pad // block
     axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
     adaptive = policy == "adaptive"
 
     def run(sg: ShardedGraph, *args):
+        if alt:
+            args, alt_d = args[:-1], args[-1]
+        else:
+            alt_d = None
         if bmeta is not None:
             bl, base_arr, source, goal_param = args
             bl = jax.tree.map(lambda x: x[0], bl)    # drop the shard axis
@@ -814,6 +907,15 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                     relax.settled_mask(dist_l, lb).astype(jnp.int32)), axes)
                 return n_settled >= gp + 1
             raise ValueError(f"unknown goal {goal!r}")
+
+        def alt_bound(dist_l, ac):
+            """The replicated per-round ALT prune bound: ``dist[target]``
+            lives on its owner block, so one pmin broadcasts it (same
+            own/loc pattern as the p2p goal test)."""
+            own = (ac.tgt // block) == me
+            loc = jnp.clip(ac.tgt - base, 0, block - 1)
+            td = jax.lax.pmin(jnp.where(own, dist_l[loc], INF), axes)
+            return jnp.minimum(ac.seed, td * ac.infl)
 
         def dense_exchange(best_g, win_g):
             """all_to_all reduce-scatter-min of per-block candidate partials."""
@@ -870,12 +972,13 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                                                           dst, n_pad)
             return merge(best_g, win_g)
 
-        def blocked_partials(dist_l, paths, parent_l, lb, ub):
+        def blocked_partials(dist_l, paths, parent_l, lb, ub, ac=None,
+                             pb=None):
             """Blocked backend's push partial: ONE partials-megakernel
             launch over the shard's stacked tile-indexed slabs
             (see relax.blocked_shard_partials_fused), returning the
             ``(best, winner)`` pair plus the in-kernel tile/n_trav/
-            n_relax counters — the flat O(E) candidate pass the
+            n_relax/n_pruned counters — the flat O(E) candidate pass the
             segment_min branch needs for its metrics is folded into the
             kernel's scheduled tile pass."""
             return relax.blocked_shard_partials_fused(
@@ -883,7 +986,8 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 dist_l, paths, parent_l, base, lb, ub,
                 block_v=bmeta.block_v, n_dst_blocks=bmeta.n_dst_blocks,
                 tile_e=bmeta.tile_e, use_kernel=bmeta.use_kernel,
-                interpret=bmeta.interpret)
+                interpret=bmeta.interpret,
+                alt_lb=None if ac is None else ac.lb, prune_bound=pb)
 
         local_edge = (dst // block) == me
         dst_local = jnp.clip(dst - base, 0, block - 1)
@@ -914,12 +1018,23 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 n_trav=metrics.n_trav + jax.lax.psum(touched, axes))
             return dist_l, parent_l, acc, metrics
 
-        def one_round(dist_l, parent_l, frontier_l, lb, ub, metrics):
+        def one_round(dist_l, parent_l, frontier_l, lb, ub, metrics,
+                      ac=None):
             paths = relax.leaf_pruned(frontier_l, dist_l, deg_l)
+            # per-round prune bound from dist at round start (the same
+            # recompute the single-device fused kernel does per round)
+            pb = None if ac is None else alt_bound(dist_l, ac)
+            n_prn = jnp.int32(0)
             if bmeta is None:
                 cand, in_window, active = relax.edge_candidates(
                     dist_l[src_l], paths[src_l], parent_l[src_l], dst, w,
                     lb, ub)
+                if ac is not None:
+                    active, pruned = relax.alt_prune(cand, active,
+                                                     ac.lb[dst], pb)
+                    cand = jnp.where(active, cand, INF)
+                    n_prn = jax.lax.psum(
+                        jnp.sum(pruned.astype(jnp.int32)), axes)
                 best_g, win_g = relax.segment_min_with_winner(
                     cand, active, src, dst, n_pad)
                 n_tiles = jnp.float32(0)
@@ -929,11 +1044,12 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                     jnp.sum(active.astype(jnp.int32)), axes)
                 n_inv = jnp.float32(0)
             else:
-                best_g, win_g, nt, trav, rlx = blocked_partials(
-                    dist_l, paths, parent_l, lb, ub)
+                best_g, win_g, nt, trav, rlx, prn = blocked_partials(
+                    dist_l, paths, parent_l, lb, ub, ac, pb)
                 n_tiles = jax.lax.psum(nt.astype(jnp.float32), axes)
                 touched = jax.lax.psum(trav, axes)
                 relaxed = jax.lax.psum(rlx, axes)
+                n_prn = jax.lax.psum(prn, axes)
                 n_inv = jax.lax.psum(jnp.float32(1), axes)
             best_l, winner_l = merge(best_g, win_g)
             dist2, parent2, improved = relax.apply_updates(
@@ -949,13 +1065,15 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 n_trav=metrics.n_trav + touched,
                 n_relax=metrics.n_relax + relaxed,
                 n_updates=metrics.n_updates + upd,
+                n_pruned=metrics.n_pruned + n_prn,
                 n_tiles_scanned=metrics.n_tiles_scanned + n_tiles,
                 n_tiles_dense=metrics.n_tiles_dense + jnp.float32(
                     0 if bmeta is None else bmeta.dense_grid_tiles),
                 n_invocations=metrics.n_invocations + n_inv)
             return dist2, parent2, improved, metrics
 
-        def grouped_rounds(dist_l, parent_l, frontier_l, lb, ub, metrics):
+        def grouped_rounds(dist_l, parent_l, frontier_l, lb, ub, metrics,
+                           ac=None):
             """Blocked ``fused_rounds``: up to ``fused_rounds`` COMPLETE
             synchronized rounds (each with its exchange) per stepping-loop
             body.  The round sequence — and with it dist/parent and every
@@ -974,7 +1092,7 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             def body_f(c):
                 dist_l, parent_l, front, metrics, r, _ = c
                 dist2, parent2, improved, metrics = one_round(
-                    dist_l, parent_l, front, lb, ub, metrics)
+                    dist_l, parent_l, front, lb, ub, metrics, ac)
                 go = jax.lax.pmax(jnp.any(improved).astype(jnp.int32),
                                   axes)
                 return dist2, parent2, improved, metrics, r + 1, go
@@ -985,22 +1103,36 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                                     jnp.int32(0), jnp.int32(1)))
             return dist_l, parent_l, frontier_l, metrics
 
-        def relax_round(dist_l, parent_l, frontier_l, lb, ub, metrics):
+        def relax_round(dist_l, parent_l, frontier_l, lb, ub, metrics,
+                        ac=None):
             if fused_rounds > 0 and bmeta is not None:
                 return grouped_rounds(dist_l, parent_l, frontier_l, lb, ub,
-                                      metrics)
+                                      metrics, ac)
             if fused_rounds > 0:
+                # segment_min bucket fusion's local waves stay unpruned
+                # (metrics-exempt already; the full rounds still prune)
                 dist_l, parent_l, frontier_l, metrics = fused_local(
                     dist_l, parent_l, frontier_l, lb, ub, metrics)
-            return one_round(dist_l, parent_l, frontier_l, lb, ub, metrics)
+            return one_round(dist_l, parent_l, frontier_l, lb, ub, metrics,
+                             ac)
 
-        def pull_round(dist_l, parent_l, st, lb, ub, metrics):
+        def pull_round(dist_l, parent_l, st, lb, ub, metrics, ac=None,
+                       pb=None):
             # mirrored push from the settled band (undirected store); the
             # requester's dist is remote, so the unsettled gate applies on
             # the local (destination-owner) side after the exchange.
+            # Under ALT the requester receiving the update is ``dst``, so
+            # requests with cand + lb[dst] > bound are cut (the mirrored
+            # twin of the single-device requester-side alt_lb[src] cut).
             dv = dist_l[src_l]
             mask = (dv >= st) & (dv < lb) & (dv + w < ub)
             cand = jnp.where(mask, dv + w, INF)
+            n_prn = jnp.int32(0)
+            if ac is not None:
+                mask, pruned = relax.alt_prune(cand, mask, ac.lb[dst], pb)
+                cand = jnp.where(mask, cand, INF)
+                n_prn = jax.lax.psum(
+                    jnp.sum(pruned.astype(jnp.int32)), axes)
             best_l, winner_l = exchange(cand, mask)
             dist2, parent2, improved = relax.apply_updates(
                 dist_l, parent_l, best_l, winner_l, gate=dist_l > lb)
@@ -1017,6 +1149,7 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                 n_extended=metrics.n_extended + nl_upd,
                 n_relax=metrics.n_relax + reqs,
                 n_updates=metrics.n_updates + upd,
+                n_pruned=metrics.n_pruned + n_prn,
                 n_rounds=metrics.n_rounds + 1)
             return dist2, parent2, metrics
 
@@ -1025,9 +1158,16 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                                    axes, mult)
             return g_
 
-        def transition(dist_l, parent_l, lb, ub, metrics, gp, ps=None):
+        def transition(dist_l, parent_l, lb, ub, metrics, gp, ps=None,
+                       ac=None):
             pend = dist_l[src_l] + w
             pend = jnp.where(pend >= ub, pend, INF)
+            if ac is not None:
+                # a pending candidate the ALT bound would cut can never
+                # improve the target, so skipping it in fast-forward/
+                # termination is exact for the p2p contract
+                bound_eff = alt_bound(dist_l, ac)
+                pend = jnp.where(pend + ac.lb[dst] > bound_eff, INF, pend)
             min_pending = jax.lax.pmin(jnp.min(pend), axes)
             done = ~jnp.isfinite(min_pending)
             if ps is not None:
@@ -1052,7 +1192,8 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
 
             def with_pull(args):
                 return pull_round(args[0], args[1], st_next, lb2, ub2,
-                                  args[2])
+                                  args[2], ac,
+                                  None if ac is None else bound_eff)
 
             dist_l, parent_l, metrics = jax.lax.cond(
                 st_next < lb2, with_pull, lambda a: a,
@@ -1075,10 +1216,13 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
                                 -1).astype(jnp.int32)
             frontier0 = (jnp.arange(block) + base) == source
             metrics0 = _zero_metrics()._replace(n_extended=jnp.int32(1))
+            ac = None if alt_d is None else _make_alt_ctx(alt_d, source,
+                                                          gp, n_pad)
 
             def body(s: _V2State):
                 dist_l, parent_l, frontier, metrics = relax_round(
-                    s.dist, s.parent, s.frontier, s.lb, s.ub, s.metrics)
+                    s.dist, s.parent, s.frontier, s.lb, s.ub, s.metrics,
+                    ac)
 
                 def tighten(ub):
                     mask = (deg_l.astype(jnp.float32) >= high_d0) \
@@ -1097,7 +1241,7 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
 
                 def trans(args):
                     return transition(args[0], args[1], args[2], args[3],
-                                      args[4], gp)
+                                      args[4], gp, ac=ac)
 
                 (dist_l, parent_l, frontier, lb, ub, st2, done, metrics) = \
                     jax.lax.cond(any_front, keep, trans,
@@ -1108,7 +1252,8 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
             def body_a(carry):
                 s, ps = carry
                 dist_l, parent_l, frontier, metrics = relax_round(
-                    s.dist, s.parent, s.frontier, s.lb, s.ub, s.metrics)
+                    s.dist, s.parent, s.frontier, s.lb, s.ub, s.metrics,
+                    ac)
 
                 def tighten(ub):
                     mask = (deg_l.astype(jnp.float32) >= high_d0) \
@@ -1127,7 +1272,7 @@ def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,
 
                 def trans(args):
                     return transition(args[0], args[1], args[2], args[3],
-                                      args[4], gp, ps=args[5])
+                                      args[4], gp, ps=args[5], ac=ac)
 
                 (dist_l, parent_l, frontier, lb, ub, st2, done, metrics,
                  ps) = jax.lax.cond(any_front, keep, trans,

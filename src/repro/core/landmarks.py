@@ -1,0 +1,221 @@
+"""ALT landmark artifacts: selection, weighted distances, float-safety.
+
+The serving plane has carried hop-BFS *eccentricity hints* since the
+registry landed; this module promotes the same machinery into real ALT
+(A*, Landmarks, Triangle inequality) preprocessing.  A
+:class:`LandmarkSet` holds per-landmark **weighted** distance vectors
+``D[l, v] = d(L_l, v)`` — built with the repo's own SSSP engines, not a
+host Dijkstra — from which a p2p solve derives admissible per-vertex
+lower bounds ``lb[v] = max_l |d(L_l, t) - d(L_l, v)|`` on d(v, t)
+(:func:`repro.core.relax.alt_lower_bounds`).
+
+Exactness contract: pruning with these bounds must leave d(s, t) and
+the reconstructed parent chain bitwise-identical to the unpruned solve.
+Float32 path sums accumulate rounding, so the raw triangle-inequality
+difference is *not* safely admissible as-is; :class:`LandmarkSet`
+carries a slack factor ``delta = 2^-24 * (2 H + 64)`` (``H`` = the max
+finite hop count observed by the selection BFS) and the bound/prune
+machinery in :mod:`repro.core.relax` deflates bounds and inflates the
+prune threshold by it.  Directed (non-symmetrized) graphs only get the
+forward difference; the host-side symmetry check here decides that once
+per build.
+
+Selection strategies (:data:`repro.core.config.LANDMARK_STRATEGIES`):
+
+* ``"farthest"`` — farthest-point traversal in the hop metric: start
+  at the max-degree vertex, repeatedly add the vertex maximizing the
+  min hop distance to the chosen set.  Spreads landmarks toward the
+  periphery, which is where ALT bounds are tight.
+* ``"max_degree"`` — the k distinct highest-degree vertices (ties by
+  id), matching the registry's historical eccentricity-hint picks.
+
+The shared :func:`hop_bfs` here is the single host-side BFS — the
+registry's ``estimate_eccentricity`` imports it instead of keeping its
+own copy, and reuses a LandmarkSet's choices when one exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import LANDMARK_STRATEGIES, ConfigError
+from .graph import DeviceGraph, HostGraph
+from .relax import AltData
+
+__all__ = ["hop_bfs", "LandmarkSet", "build_landmarks", "select_landmarks"]
+
+# one f32 ulp-scale rounding unit; the slack budget per landmark-sum is
+# delta = _EPS * (2 H + 64): a path of h hops accumulates at most
+# ~h ulps of relative error in either the engine's or the landmark's
+# float32 sum, and the engine's own p2p search never runs more than a
+# small multiple of the BFS hop bound H rounds of extensions.  The +64
+# floor absorbs short-path noise.  The 9-graph bitwise parity gate in
+# tests/test_alt_p2p.py is the enforcement: a graph violating the
+# margin fails loudly there, not silently in serving.
+_EPS = float(np.float32(2.0) ** -24)
+
+
+def hop_bfs(row_ptr: np.ndarray, dst: np.ndarray, n: int,
+            root: int) -> np.ndarray:
+    """Hop distances from ``root`` (-1 where unreached), vectorized BFS.
+
+    The one host-side BFS shared by landmark selection and the serving
+    registry's eccentricity hints (O(N + M) per root)."""
+    hop = np.full(n, -1, np.int64)
+    frontier = np.array([root], np.int64)
+    hop[frontier] = 0
+    level = 0
+    while frontier.size:
+        starts = row_ptr[frontier]
+        counts = row_ptr[frontier + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            break
+        offsets = np.repeat(
+            starts - np.concatenate(([0], np.cumsum(counts)[:-1])), counts)
+        nbrs = dst[offsets + np.arange(total)]
+        nbrs = np.unique(nbrs[hop[nbrs] < 0])
+        level += 1
+        hop[nbrs] = level
+        frontier = nbrs
+    return hop
+
+
+def _check_symmetric(src: np.ndarray, dst: np.ndarray,
+                     w: np.ndarray) -> bool:
+    """True iff the directed edge multiset equals its own reverse
+    (exact weight match) — the condition for the reverse ALT difference
+    d(v,L) = d(L,v) and the landmark-seeded d(s,t) upper bound."""
+    fwd = np.lexsort((w, dst, src))
+    rev = np.lexsort((w, src, dst))
+    return (np.array_equal(src[fwd], dst[rev])
+            and np.array_equal(dst[fwd], src[rev])
+            and np.array_equal(w[fwd], w[rev]))
+
+
+def select_landmarks(row_ptr: np.ndarray, dst: np.ndarray,
+                     deg: np.ndarray, n_landmarks: int,
+                     strategy: str) -> tuple:
+    """Pick landmark vertex ids host-side.
+
+    Returns ``(landmarks int64[L], max_hops int)`` where ``max_hops``
+    is the largest finite hop distance any selection BFS observed (the
+    ``H`` in the float-safety slack); the ``max_degree`` strategy runs
+    one BFS per pick too, purely to measure ``H``.
+    """
+    n = deg.shape[0]
+    k = min(n_landmarks, n)
+    max_hops = 1
+    if strategy == "max_degree":
+        landmarks = np.argsort(-deg, kind="stable")[:k].astype(np.int64)
+        for lm in landmarks:
+            hop = hop_bfs(row_ptr, dst, n, int(lm))
+            max_hops = max(max_hops, int(hop.max()))
+        return landmarks, max_hops
+    if strategy != "farthest":
+        raise ConfigError(f"unknown landmark strategy {strategy!r}; "
+                          f"expected one of {LANDMARK_STRATEGIES}")
+    # farthest-point traversal in the hop metric, seeded at the
+    # max-degree vertex; unreached vertices count as infinitely far so
+    # disconnected components each attract a landmark
+    chosen = [int(np.argmax(deg))]
+    min_hop = np.full(n, np.iinfo(np.int64).max, np.int64)
+    for _ in range(k):
+        hop = hop_bfs(row_ptr, dst, n, chosen[-1])
+        max_hops = max(max_hops, int(hop.max()))
+        reached = hop >= 0
+        min_hop[reached] = np.minimum(min_hop[reached], hop[reached])
+        if len(chosen) == k:
+            break
+        cand = min_hop.copy()
+        cand[np.asarray(chosen, np.int64)] = -1
+        chosen.append(int(np.argmax(cand)))
+    return np.asarray(chosen, np.int64), max_hops
+
+
+@dataclasses.dataclass(frozen=True)
+class LandmarkSet:
+    """The per-graph ALT artifact (weighted landmark distances).
+
+    ``D`` is the device-resident ``[L, N]`` f32 distance matrix
+    (``D[l, v] = d(landmarks[l], v)``, +inf where unreached), built by
+    the repo's own SSSP engines so its rounding profile matches the
+    solver that will consume the bounds.  ``sym`` records the host-side
+    symmetry verdict, ``max_hops`` the BFS hop bound behind ``delta``,
+    and ``generation`` the registry generation the set was built
+    against (the PR-4 invalidation counter; -1 = unmanaged/standalone).
+    """
+    landmarks: np.ndarray          # [L] int64 vertex ids
+    D: jnp.ndarray                 # [L, N] f32 weighted distances
+    strategy: str
+    sym: bool
+    max_hops: int
+    generation: int = -1
+
+    @property
+    def n_landmarks(self) -> int:
+        return int(self.landmarks.shape[0])
+
+    @property
+    def delta(self) -> float:
+        """The float-safety slack factor (see module docstring)."""
+        return _EPS * (2.0 * self.max_hops + 64.0)
+
+    @property
+    def alt_data(self) -> AltData:
+        """The traced pytree a solve carries through ``jit``."""
+        return AltData(D=self.D,
+                       delta=jnp.float32(self.delta),
+                       sym=jnp.float32(1.0 if self.sym else 0.0))
+
+    def params(self) -> tuple:
+        """The build parameters a cache / tuned-config fingerprint must
+        invalidate on."""
+        return (self.n_landmarks, self.strategy)
+
+    def placed(self, sharding) -> "LandmarkSet":
+        """A copy with ``D`` placed under ``sharding`` (the sharded
+        tier replicates the matrix across the mesh)."""
+        import jax
+        return dataclasses.replace(
+            self, D=jax.device_put(self.D, sharding))
+
+
+def build_landmarks(g: Union[DeviceGraph, HostGraph],
+                    n_landmarks: int = 8,
+                    strategy: str = "farthest",
+                    *, config=None,
+                    generation: int = -1) -> LandmarkSet:
+    """Build a :class:`LandmarkSet` for ``g`` with the SSSP engines.
+
+    ``g`` may be a :class:`~repro.core.graph.DeviceGraph` or a host
+    graph (converted once).  ``config`` optionally carries an
+    :class:`~repro.core.config.EngineConfig` for the build solves
+    (default: the stock single-device engine).  The build runs one
+    batched tree solve over the selected landmarks — the same code path
+    every other query takes, so D inherits the engine's exact rounding
+    behaviour.
+    """
+    from .sssp import sssp_batch
+    if n_landmarks < 1:
+        raise ConfigError("n_landmarks must be >= 1")
+    dg = g if isinstance(g, DeviceGraph) else g.to_device()
+    if dg.n == 0:
+        raise ConfigError("cannot build landmarks for an empty graph")
+    row_ptr = np.asarray(dg.row_ptr, np.int64)
+    dst = np.asarray(dg.dst, np.int64)
+    deg = np.asarray(dg.deg, np.int64)
+    landmarks, max_hops = select_landmarks(row_ptr, dst, deg,
+                                           n_landmarks, strategy)
+    sym = _check_symmetric(np.asarray(dg.src, np.int64), dst,
+                           np.asarray(dg.w, np.float32))
+    if config is not None:
+        out = sssp_batch(dg, landmarks, goal="tree", config=config)
+    else:
+        out = sssp_batch(dg, landmarks, goal="tree")
+    D = jnp.asarray(out[0], jnp.float32)
+    return LandmarkSet(landmarks=landmarks, D=D, strategy=strategy,
+                       sym=sym, max_hops=max_hops, generation=generation)

@@ -70,6 +70,7 @@ class RoundMetrics(NamedTuple):
     n_relax: jnp.ndarray     # scalar int32 — relaxations attempted
     n_updates: jnp.ndarray   # scalar int32 — successful dist improvements
     n_extended: jnp.ndarray  # scalar int32 — non-leaf dist improvements
+    n_pruned: jnp.ndarray    # scalar int32 — candidates cut by the ALT bound
     # physical counters are f32: the dense comparator accumulates
     # n_dst_blocks * n_tiles per round, which overflows int32 on large
     # graphs (and x64 is disabled, so int64 is unavailable)
@@ -159,6 +160,88 @@ def settled_mask(dist, lb):
 
 
 # ---------------------------------------------------------------------------
+# ALT (A*, landmarks, triangle inequality) goal-directed pruning primitives
+# ---------------------------------------------------------------------------
+#
+# With per-landmark distance vectors D[l, v] = d(L_l, v), the triangle
+# inequality gives an admissible lower bound on the remaining distance
+# v -> t:  d(L,t) <= d(L,v) + d(v,t)  =>  d(L,t) - d(L,v) <= d(v,t)
+# (valid on directed graphs); on symmetric graphs the reverse difference
+# d(L,v) - d(L,t) <= d(t,v) = d(v,t) holds too, so |.| applies.  A p2p
+# candidate with dist[v] + w + lb[v] provably above the best known s->t
+# length can never lie on an improving s->t path and is dropped inside
+# the relaxation.
+#
+# Exactness under f32: the engine's committed distances, the landmark
+# vectors, and the prune bound are all independently rounded path sums,
+# so the raw triangle inequality can be violated by accumulated rounding
+# even though it holds in exact arithmetic.  Both sides therefore carry
+# a margin derived from the worst-case relative error of a length-H f32
+# nonneg sum (H = hop bound from the landmark BFS, delta ~ H * 2^-24):
+# the per-vertex bound is *deflated* by delta * (D[l,t] + D[l,v]) — an
+# absolute slack covering the error of both landmark sums — and the
+# prune bound is *inflated* by (1 + 4 delta).  Every candidate on the
+# engine's own returned shortest path then survives pruning, which is
+# what keeps pruned d(s,t)/parent chains bitwise-identical to the
+# unpruned solve (the gate tests in tests/test_alt_p2p.py).
+
+def alt_lower_bounds(D, t, delta, sym):
+    """Admissible per-vertex lower bounds ``lb[v] <~ d(v, t)``.
+
+    ``D`` is the ``[L, N]`` f32 landmark distance matrix, ``t`` the
+    target id, ``delta`` the f32 rounding-slack factor and ``sym`` a
+    traced 0/1 f32 flag (1 => the graph is symmetric and the reverse
+    difference is admissible too).  Unreachable pairs resolve exactly:
+    both-infinite differences contribute 0; a one-sided infinity means v
+    and t lie in different components of the landmark's reach, where an
+    infinite bound is correct.
+    """
+    Dt = D[:, t][:, None]                      # [L, 1]
+    fwd = Dt - D                               # d(L,t) - d(L,v)
+    rev = jnp.where(sym > 0, D - Dt, -INF)
+    diff = jnp.maximum(fwd, rev)
+    # deflate finite bounds by the accumulated-rounding slack; infinite
+    # bounds stay infinite (different components), nan (inf - inf, both
+    # unreachable from L) carries no information -> 0
+    adj = jnp.where(jnp.isinf(diff), diff, diff - delta * (D + Dt))
+    adj = jnp.where(jnp.isnan(adj), 0.0, adj)
+    return jnp.max(jnp.maximum(adj, 0.0), axis=0)
+
+
+def alt_seed_ub(D, source, t, infl, sym):
+    """Landmark-seeded upper bound on d(source, t) (symmetric graphs):
+    ``min_l d(L,s) + d(L,t)``, inflated by ``infl`` so it dominates the
+    engine's own f32 path sum.  +inf when the graph is not symmetric
+    (d(s,L) is unknown there) or no landmark reaches both endpoints."""
+    seed = jnp.min(D[:, source] + D[:, t]) * infl
+    return jnp.where(sym > 0, seed, INF)
+
+
+def alt_prune(cand, active, lb_dst, prune_bound):
+    """Split ``active`` candidates by the ALT test: returns
+    ``(kept, pruned)`` masks where pruned candidates satisfy
+    ``cand + lb[dst] > prune_bound`` (cand is +inf outside ``active``,
+    so inactive lanes land in neither)."""
+    pruned = active & (cand + lb_dst > prune_bound)
+    return active & ~pruned, pruned
+
+
+class AltData(NamedTuple):
+    """The traced ALT operand bundle a p2p solve carries through ``jit``.
+
+    ``D`` is the ``[L, N]`` f32 landmark distance matrix, ``delta`` the
+    scalar f32 rounding-slack factor (``2^-24 * (2 H + 64)`` for hop
+    bound ``H``) and ``sym`` a scalar f32 0/1 flag (1 => the graph is
+    symmetric, enabling the reverse difference and the landmark-seeded
+    upper bound).  Built by :class:`repro.core.landmarks.LandmarkSet`;
+    a plain pytree so presence/absence is the only retrace axis.
+    """
+    D: jnp.ndarray
+    delta: jnp.ndarray
+    sym: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------
 
@@ -222,10 +305,16 @@ def _segment_min_prepare(g: DeviceGraph, **_opts) -> DeviceGraph:
     return g            # the flat edge list is its own layout
 
 
-def _segment_min_relax(g: DeviceGraph, dist, parent, frontier, lb, ub):
+def _segment_min_relax(g: DeviceGraph, dist, parent, frontier, lb, ub,
+                       alt_lb=None, prune_bound=None):
     paths = leaf_pruned(frontier, dist, g.deg)
     cand, in_window, active = edge_candidates(
         dist[g.src], paths[g.src], parent[g.src], g.dst, g.w, lb, ub)
+    n_pruned = jnp.int32(0)
+    if alt_lb is not None:
+        active, pruned = alt_prune(cand, active, alt_lb[g.dst], prune_bound)
+        cand = jnp.where(active, cand, INF)
+        n_pruned = jnp.sum(pruned.astype(jnp.int32))
     best, winner = segment_min_with_winner(cand, active, g.src, g.dst, g.n)
     new_dist, new_parent, improved = apply_updates(dist, parent, best,
                                                    winner)
@@ -235,6 +324,7 @@ def _segment_min_relax(g: DeviceGraph, dist, parent, frontier, lb, ub):
         n_relax=jnp.sum(active.astype(jnp.int32)),
         n_updates=jnp.sum(improved.astype(jnp.int32)),
         n_extended=jnp.sum((improved & (g.deg > 1)).astype(jnp.int32)),
+        n_pruned=n_pruned,
         n_tiles_scanned=jnp.float32(0),
         n_tiles_dense=jnp.float32(0),
         n_invocations=jnp.float32(0))
@@ -256,7 +346,8 @@ def _blocked_prepare(g, **opts) -> BlockedGraph:
 
 def _combine_bucket_partials(slab_of, n_src_blocks, dist_src, paths_src,
                              src_base, lb, ub, *, block_v, n_dst_blocks,
-                             tile_e, use_kernel, interpret):
+                             tile_e, use_kernel, interpret, alt_lb=None,
+                             prune_bound=None):
     """Shared core of the blocked partial computations: relax every
     source block's bucketed slab, lift winners to global source ids
     (deterministic INT_MAX-preserving offset), combine deterministically.
@@ -271,7 +362,8 @@ def _combine_bucket_partials(slab_of, n_src_blocks, dist_src, paths_src,
             dist_src[lo:lo + block_v], paths_i8[lo:lo + block_v],
             *slab_of(s), lb, ub, block_v=block_v,
             n_dst_blocks=n_dst_blocks, tile_e=tile_e,
-            use_kernel=use_kernel, interpret=interpret)
+            use_kernel=use_kernel, interpret=interpret, alt_lb=alt_lb,
+            prune_bound=prune_bound)
         vals.append(best_sb)
         wins.append(jnp.where(win_local == INT_MAX, INT_MAX,
                               win_local + (src_base + lo)))
@@ -280,7 +372,8 @@ def _combine_bucket_partials(slab_of, n_src_blocks, dist_src, paths_src,
     return best, winner, n_tiles
 
 
-def blocked_partials(bg: BlockedGraph, dist_src, paths_src, lb, ub):
+def blocked_partials(bg: BlockedGraph, dist_src, paths_src, lb, ub,
+                     alt_lb=None, prune_bound=None):
     """Per-destination (min, winner) partials of one blocked layout.
 
     ``dist_src``/``paths_src`` cover the layout's *source* range
@@ -296,13 +389,15 @@ def blocked_partials(bg: BlockedGraph, dist_src, paths_src, lb, ub):
         lambda s: bg.slabs[s], bg.n_blocks, dist_src, paths_src,
         bg.src_base, lb, ub, block_v=bg.block_v,
         n_dst_blocks=bg.n_dst_blocks, tile_e=bg.tile_e,
-        use_kernel=bg.use_kernel, interpret=bg.interpret)
+        use_kernel=bg.use_kernel, interpret=bg.interpret, alt_lb=alt_lb,
+        prune_bound=prune_bound)
 
 
 def blocked_shard_partials(src_local, dst, w, tile_dst, tile_first,
                            bucket_nonempty, dist_src, paths_src, src_base,
                            lb, ub, *, block_v: int, n_dst_blocks: int,
-                           tile_e: int, use_kernel: bool, interpret: bool):
+                           tile_e: int, use_kernel: bool, interpret: bool,
+                           alt_lb=None, prune_bound=None):
     """`shard_map` twin of :func:`blocked_partials`.
 
     Same computation over one shard's *stacked* uniform slabs
@@ -320,18 +415,23 @@ def blocked_shard_partials(src_local, dst, w, tile_dst, tile_first,
                    bucket_nonempty[s]),
         src_local.shape[0], dist_src, paths_src, src_base, lb, ub,
         block_v=block_v, n_dst_blocks=n_dst_blocks, tile_e=tile_e,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, alt_lb=alt_lb,
+        prune_bound=prune_bound)
 
 
-def _blocked_relax(bg: BlockedGraph, dist, parent, frontier, lb, ub):
+def _blocked_relax(bg: BlockedGraph, dist, parent, frontier, lb, ub,
+                   alt_lb=None, prune_bound=None):
     bv = bg.block_v
     pad = bg.n_out - dist.shape[0]
     dist_p = jnp.pad(dist, (0, pad), constant_values=jnp.inf)
     parent_p = jnp.pad(parent, (0, pad), constant_values=-1)
     frontier_p = jnp.pad(frontier, (0, pad))
     paths = leaf_pruned(frontier_p, dist_p, bg.deg)
+    alt_p = None if alt_lb is None else jnp.pad(
+        alt_lb, (0, bg.n_out - alt_lb.shape[0]), constant_values=jnp.inf)
 
-    best, winner, n_tiles = blocked_partials(bg, dist_p, paths, lb, ub)
+    best, winner, n_tiles = blocked_partials(bg, dist_p, paths, lb, ub,
+                                             alt_p, prune_bound)
 
     # Traversal counters are cheap jnp reductions over the slabs (the
     # kernel owns only the scatter-min); the parent-edge exclusion in
@@ -339,11 +439,16 @@ def _blocked_relax(bg: BlockedGraph, dist, parent, frontier, lb, ub):
     # along the parent edge never improves the parent's dist.
     n_trav = jnp.int32(0)
     n_relax = jnp.int32(0)
+    n_pruned = jnp.int32(0)
     for sb, slab in enumerate(bg.slabs):
         src_g = slab.src_local + sb * bv
-        _, in_window, active = edge_candidates(
+        cand, in_window, active = edge_candidates(
             dist_p[src_g], paths[src_g], parent_p[src_g], slab.dst,
             slab.w, lb, ub)
+        if alt_p is not None:
+            active, pruned = alt_prune(cand, active, alt_p[slab.dst],
+                                       prune_bound)
+            n_pruned = n_pruned + jnp.sum(pruned.astype(jnp.int32))
         n_trav = n_trav + jnp.sum(in_window.astype(jnp.int32))
         n_relax = n_relax + jnp.sum(active.astype(jnp.int32))
 
@@ -357,6 +462,7 @@ def _blocked_relax(bg: BlockedGraph, dist, parent, frontier, lb, ub):
         n_relax=n_relax,
         n_updates=jnp.sum(improved.astype(jnp.int32)),
         n_extended=jnp.sum((improved & (bg.deg[:n] > 1)).astype(jnp.int32)),
+        n_pruned=n_pruned,
         n_tiles_scanned=n_tiles.astype(jnp.float32),
         n_tiles_dense=jnp.float32(bg.dense_grid_tiles),
         n_invocations=jnp.float32(bg.n_blocks))
@@ -399,7 +505,9 @@ def fused_slab(bg: BlockedGraph) -> FusedSlab:
 
 
 def blocked_fused_rounds(bg: BlockedGraph, fs: FusedSlab, dist, parent,
-                         frontier, lb, ub, *, fused_rounds: int):
+                         frontier, lb, ub, *, fused_rounds: int,
+                         alt_lb=None, prune_ub=None, prune_infl=None,
+                         prune_tgt=None):
     """Up to ``fused_rounds`` relaxation rounds in one kernel invocation.
 
     The fused twin of calling :func:`_blocked_relax` once per round:
@@ -409,6 +517,12 @@ def blocked_fused_rounds(bg: BlockedGraph, fs: FusedSlab, dist, parent,
     pass).  Returns ``(dist, parent, frontier, counts)`` over the
     *unpadded* vertex range; ``counts`` is the kernel's int32
     ``FUSED_COUNTERS`` vector.
+
+    With ``alt_lb`` (ALT p2p pruning) the kernel recomputes the prune
+    bound at every in-kernel round start as
+    ``min(prune_ub, dist[prune_tgt] * prune_infl)`` — exactly what the
+    unfused path computes per round — so fused and unfused pruning
+    decisions (and the ``n_pruned`` counter) stay bitwise-identical.
     """
     if bg.n_pad != bg.n_out or bg.src_base != 0:
         raise ValueError(
@@ -420,11 +534,14 @@ def blocked_fused_rounds(bg: BlockedGraph, fs: FusedSlab, dist, parent,
     dist_p = jnp.pad(dist, (0, pad), constant_values=jnp.inf)
     parent_p = jnp.pad(parent, (0, pad), constant_values=-1)
     frontier_p = jnp.pad(frontier, (0, pad))
+    alt_p = None if alt_lb is None else jnp.pad(
+        alt_lb, (0, bg.n_out - alt_lb.shape[0]), constant_values=jnp.inf)
     dist2, parent2, front2, cnt = relax_fused(
         dist_p, parent_p, frontier_p, bg.deg, fs.src, fs.dst, fs.w,
         fs.tile_dst, fs.tile_first, lb, ub, block_v=bg.block_v,
         tile_e=bg.tile_e, fused_rounds=fused_rounds,
-        use_kernel=bg.use_kernel, interpret=bg.interpret)
+        use_kernel=bg.use_kernel, interpret=bg.interpret, alt_lb=alt_p,
+        prune_ub=prune_ub, prune_infl=prune_infl, prune_tgt=prune_tgt)
     return dist2[:n], parent2[:n], front2[:n] > 0, cnt
 
 
@@ -432,7 +549,8 @@ def blocked_shard_partials_fused(src_local, dst, w, tile_dst, tile_first,
                                  dist_src, paths_src, parent_src, src_base,
                                  lb, ub, *, block_v: int, n_dst_blocks: int,
                                  tile_e: int, use_kernel: bool,
-                                 interpret: bool):
+                                 interpret: bool, alt_lb=None,
+                                 prune_bound=None):
     """Whole-shard fused twin of :func:`blocked_shard_partials`.
 
     One kernel invocation relaxes ALL of a shard's stacked slabs
@@ -441,8 +559,8 @@ def blocked_shard_partials_fused(src_local, dst, w, tile_dst, tile_first,
     ``dist_src``/``paths_src``/``parent_src`` slice, folding ``n_trav``/
     ``n_relax``/tile counts into the scheduled tile pass — replacing one
     launch per source block plus the flat O(E) metrics pass.  Returns
-    ``(best, winner, n_tiles, n_trav, n_relax)`` with *global* winner
-    ids (``src_base`` applied, INT_MAX preserved).
+    ``(best, winner, n_tiles, n_trav, n_relax, n_pruned)`` with *global*
+    winner ids (``src_base`` applied, INT_MAX preserved).
     """
     n_sb = src_local.shape[0]
     offs = (jnp.arange(n_sb, dtype=jnp.int32) * block_v)[:, None]
@@ -451,6 +569,7 @@ def blocked_shard_partials_fused(src_local, dst, w, tile_dst, tile_first,
         (src_local + offs).reshape(-1), dst.reshape(-1), w.reshape(-1),
         tile_dst.reshape(-1), tile_first.reshape(-1), lb, ub,
         block_v=block_v, tile_e=tile_e, n_dst_blocks=n_dst_blocks,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, alt_lb=alt_lb,
+        prune_bound=prune_bound)
     winner = jnp.where(win_local == INT_MAX, INT_MAX, win_local + src_base)
-    return best, winner, cnt[2], cnt[0], cnt[1]
+    return best, winner, cnt[2], cnt[0], cnt[1], cnt[3]

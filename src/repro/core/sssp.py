@@ -47,8 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from . import relax, stats, stepping, traversal
-from .config import (ConfigError, EngineConfig, FacadeDeprecationWarning,
-                     as_resolved)
+from .config import (P2P_MODES, ConfigError, EngineConfig,
+                     FacadeDeprecationWarning, as_resolved)
 from .graph import DeviceGraph
 from .relax import INF, INT_MAX
 from ..obs import profiling
@@ -133,6 +133,7 @@ class SsspMetrics(NamedTuple):
     n_pull_trav: jnp.ndarray   # edge traversals, pull model (requests)
     n_relax: jnp.ndarray       # relaxation attempts (created paths)
     n_updates: jnp.ndarray     # successful relaxations (dist improvements)
+    n_pruned: jnp.ndarray      # candidates cut by the ALT goal-directed bound
     n_tiles_scanned: jnp.ndarray  # blocked layouts: tiles actually run (f32)
     n_tiles_dense: jnp.ndarray    # blocked layouts: dense-grid cost (f32)
     n_invocations: jnp.ndarray    # kernel launches / sync units (f32)
@@ -166,12 +167,15 @@ def _zero_metrics() -> SsspMetrics:
                           for name in SsspMetrics._fields})
 
 
-def _relax_round(backend: relax.RelaxBackend, layout, st_: SsspState
-                 ) -> SsspState:
+def _relax_round(backend: relax.RelaxBackend, layout, st_: SsspState,
+                 alt_lb=None, prune_bound=None) -> SsspState:
     """One synchronized round of push-model edge relaxations (Algo 2 l.8-17),
-    dispatched through the selected relaxation backend."""
+    dispatched through the selected relaxation backend.  ``alt_lb``/
+    ``prune_bound`` (p2p with landmarks) enable the ALT goal-directed cut
+    inside the relaxation (see :func:`repro.core.relax.alt_prune`)."""
     new_dist, new_parent, rm = backend.relax_window(
-        layout, st_.dist, st_.parent, st_.frontier, st_.lb, st_.ub)
+        layout, st_.dist, st_.parent, st_.frontier, st_.lb, st_.ub,
+        alt_lb, prune_bound)
     m = st_.metrics
     metrics = m._replace(
         n_rounds=m.n_rounds + jnp.where(jnp.any(st_.frontier), 1, 0),
@@ -179,6 +183,7 @@ def _relax_round(backend: relax.RelaxBackend, layout, st_: SsspState
         n_trav=m.n_trav + rm.n_trav,
         n_relax=m.n_relax + rm.n_relax,
         n_updates=m.n_updates + rm.n_updates,
+        n_pruned=m.n_pruned + rm.n_pruned,
         n_tiles_scanned=m.n_tiles_scanned + rm.n_tiles_scanned,
         n_tiles_dense=m.n_tiles_dense + rm.n_tiles_dense,
         n_invocations=m.n_invocations + rm.n_invocations,
@@ -187,8 +192,9 @@ def _relax_round(backend: relax.RelaxBackend, layout, st_: SsspState
                         frontier=rm.improved, metrics=metrics)
 
 
-def _fused_relax_rounds(bg, fs, st_: SsspState, fused_rounds: int
-                        ) -> SsspState:
+def _fused_relax_rounds(bg, fs, st_: SsspState, fused_rounds: int,
+                        alt_lb=None, prune_ub=None, prune_infl=None,
+                        prune_tgt=None) -> SsspState:
     """Up to ``fused_rounds`` synchronized rounds in ONE megakernel
     invocation (blocked layouts only) — the fused twin of calling
     :func:`_relax_round` once per round until the window settles.
@@ -197,7 +203,8 @@ def _fused_relax_rounds(bg, fs, st_: SsspState, fused_rounds: int
     per-invocation sums (``FUSED_COUNTERS``)."""
     new_dist, new_parent, new_front, cnt = relax.blocked_fused_rounds(
         bg, fs, st_.dist, st_.parent, st_.frontier, st_.lb, st_.ub,
-        fused_rounds=fused_rounds)
+        fused_rounds=fused_rounds, alt_lb=alt_lb, prune_ub=prune_ub,
+        prune_infl=prune_infl, prune_tgt=prune_tgt)
     m = st_.metrics
     metrics = m._replace(
         n_rounds=m.n_rounds + cnt[4],
@@ -205,6 +212,7 @@ def _fused_relax_rounds(bg, fs, st_: SsspState, fused_rounds: int
         n_relax=m.n_relax + cnt[1],
         n_updates=m.n_updates + cnt[2],
         n_extended=m.n_extended + cnt[3],
+        n_pruned=m.n_pruned + cnt[7],
         n_tiles_scanned=m.n_tiles_scanned + cnt[5].astype(jnp.float32),
         # the dense-grid comparator charges one full grid per round
         n_tiles_dense=m.n_tiles_dense
@@ -227,15 +235,24 @@ def _bootstrap_ub(g: DeviceGraph, st_: SsspState,
     return st_._replace(ub=ub)
 
 
-def _pull_phase(g: DeviceGraph, dist, parent, st, lb, ub, metrics):
+def _pull_phase(g: DeviceGraph, dist, parent, st, lb, ub, metrics,
+                alt_lb=None, prune_bound=None):
     """Function 1's pull phase: settled band [st, lb) answers requests from
-    unsettled vertices (built from the shared relax primitives)."""
+    unsettled vertices (built from the shared relax primitives).  Under
+    ALT the *requester* (``g.src``) is the vertex receiving the update,
+    so requests with ``cand + alt_lb[src] > prune_bound`` are cut."""
     dv = dist[g.dst]
     # edges a pull scan touches: requester unsettled, weight short enough
     scan = (dist[g.src] > lb) & (g.w < ub - st)
     # requests created (responder side; w < ub - st is implied)
     mask = (dv >= st) & (dv < lb) & (dv + g.w < ub)
     cand = jnp.where(mask, dv + g.w, INF)
+    n_pruned = jnp.int32(0)
+    if alt_lb is not None:
+        mask, pruned = relax.alt_prune(cand, mask, alt_lb[g.src],
+                                       prune_bound)
+        cand = jnp.where(mask, cand, INF)
+        n_pruned = jnp.sum(pruned.astype(jnp.int32))
     best, winner = relax.segment_min_with_winner(cand, mask, g.dst, g.src,
                                                  g.n)
     new_dist, new_parent, improved = relax.apply_updates(
@@ -247,6 +264,7 @@ def _pull_phase(g: DeviceGraph, dist, parent, st, lb, ub, metrics):
         jnp.sum(nonleaf_upd.astype(jnp.int32)),
         n_relax=metrics.n_relax + jnp.sum(mask.astype(jnp.int32)),
         n_updates=metrics.n_updates + jnp.sum(improved.astype(jnp.int32)),
+        n_pruned=metrics.n_pruned + n_pruned,
         n_rounds=metrics.n_rounds + 1,  # the pull phase is a round/sync
     )
     return new_dist, new_parent, metrics
@@ -254,7 +272,8 @@ def _pull_phase(g: DeviceGraph, dist, parent, st, lb, ub, metrics):
 
 def _transition(g: DeviceGraph, st_: SsspState,
                 params: stepping.SteppingParams, goal: str,
-                goal_param, ps: stepping.PolicyState = None):
+                goal_param, ps: stepping.PolicyState = None,
+                alt_lb=None, bound_of=None):
     """Step transition (Algo 2 l.22 + Function 1/2 + fast-forward/termination).
 
     With the adaptive policy, ``ps`` carries the traced
@@ -270,6 +289,12 @@ def _transition(g: DeviceGraph, st_: SsspState,
     # smallest pending candidate path length (>= ub); inf <=> computation done
     pend = dist[g.src] + g.w
     pend = jnp.where(pend >= ub, pend, INF)
+    if alt_lb is not None:
+        # a pending candidate the ALT bound would cut can never improve
+        # the goal vertex, so it neither blocks termination nor anchors
+        # the fast-forward: skipping it is exact for the p2p contract
+        bound_eff = bound_of(dist)
+        pend = jnp.where(pend + alt_lb[g.dst] > bound_eff, INF, pend)
     min_pending = jnp.min(pend)
     done = ~jnp.isfinite(min_pending)
 
@@ -295,7 +320,9 @@ def _transition(g: DeviceGraph, st_: SsspState,
 
     def with_pull(args):
         dist, parent, metrics = args
-        return _pull_phase(g, dist, parent, st_next, lb2, ub2, metrics)
+        return _pull_phase(g, dist, parent, st_next, lb2, ub2, metrics,
+                           alt_lb,
+                           None if alt_lb is None else bound_eff)
 
     dist, parent, metrics = jax.lax.cond(
         st_next < lb2, with_pull, lambda a: a, (dist, parent, st_.metrics))
@@ -334,6 +361,7 @@ def _trace_record(s0: SsspState, s1: SsspState, buf):
         "n_pull_trav": m1.n_pull_trav - m0.n_pull_trav,
         "n_relax": m1.n_relax - m0.n_relax,
         "n_updates": m1.n_updates - m0.n_updates,
+        "n_pruned": m1.n_pruned - m0.n_pruned,
     }
     fvals = {
         "lb": s0.lb, "ub": s0.ub, "st": s0.st,
@@ -347,7 +375,8 @@ def _trace_record(s0: SsspState, s1: SsspState, buf):
 def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
          max_iters: int, alpha: float, beta: float, goal: str = "tree",
          goal_param=None, fused_rounds: int = 0, fused=None,
-         trace_capacity: int = 0, policy: str = "static"):
+         trace_capacity: int = 0, policy: str = "static",
+         alt_data=None, p2p_mode: str = "unidirectional"):
     """Trace one SSSP computation (shared by sssp / sssp_batch); ``goal``
     selects the early-exit variant (see GOALS).  ``fused_rounds > 0``
     (blocked layouts only) runs each window's rounds through the fused
@@ -376,8 +405,33 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
             fused = relax.fused_slab(layout)
     if goal_param is None:
         goal_param = jnp.int32(0)
+    if p2p_mode not in P2P_MODES:
+        raise ConfigError(f"unknown p2p_mode {p2p_mode!r}; expected one "
+                          f"of {P2P_MODES}")
     n = g.n
     source = jnp.asarray(source, jnp.int32)
+    alt = alt_data is not None and goal == "p2p"
+    if goal == "p2p" and p2p_mode == "bidirectional":
+        if not alt:
+            raise ConfigError("p2p_mode='bidirectional' needs a landmark "
+                              "set (use_alt=True / landmarks=...)")
+        if adaptive or trace_capacity > 0:
+            raise ConfigError("p2p_mode='bidirectional' supports only "
+                              "policy='static' without tracing")
+        return _run_bidi(g, layout, source, backend, max_iters, params,
+                         goal_param, fused_rounds, fused, alt_data)
+    if alt:
+        tgt = jnp.asarray(goal_param, jnp.int32)
+        alt_lb = relax.alt_lower_bounds(alt_data.D, tgt, alt_data.delta,
+                                        alt_data.sym)
+        infl = 1.0 + 4.0 * alt_data.delta
+        prune_ub = relax.alt_seed_ub(alt_data.D, source, tgt, infl,
+                                     alt_data.sym)
+        # best-known s->t length this round, inflated so the engine's own
+        # f32 path sums always survive the cut (see relax.py)
+        bound_of = lambda dist: jnp.minimum(prune_ub, dist[tgt] * infl)
+    else:
+        alt_lb = bound_of = None
     dist0 = jnp.full((n,), INF, jnp.float32).at[source].set(0.0)
     parent0 = jnp.full((n,), -1, jnp.int32).at[source].set(source)
     frontier0 = jnp.zeros((n,), bool).at[source].set(True)
@@ -394,30 +448,38 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
     def cond(s: SsspState):
         return (~s.done) & (s.iters < max_iters)
 
-    def body(s: SsspState):
+    def relax_step(s: SsspState) -> SsspState:
         if fused_rounds > 0:
-            s = _fused_relax_rounds(layout, fused, s, fused_rounds)
-        else:
-            s = _relax_round(backend, layout, s)
+            if alt:
+                return _fused_relax_rounds(layout, fused, s, fused_rounds,
+                                           alt_lb, prune_ub, infl, tgt)
+            return _fused_relax_rounds(layout, fused, s, fused_rounds)
+        if alt:
+            return _relax_round(backend, layout, s, alt_lb,
+                                bound_of(s.dist))
+        return _relax_round(backend, layout, s)
+
+    def body(s: SsspState):
+        s = relax_step(s)
         s = _bootstrap_ub(g, s, high_d0)
         s = jax.lax.cond(jnp.any(s.frontier),
                          lambda x: x,
                          lambda x: _transition(g, x, params, goal,
-                                               goal_param),
+                                               goal_param, alt_lb=alt_lb,
+                                               bound_of=bound_of),
                          s)
         return s._replace(iters=s.iters + 1)
 
     def body_adaptive(carry):
         s, ps = carry
-        if fused_rounds > 0:
-            s = _fused_relax_rounds(layout, fused, s, fused_rounds)
-        else:
-            s = _relax_round(backend, layout, s)
+        s = relax_step(s)
         s = _bootstrap_ub(g, s, high_d0)
         s, ps = jax.lax.cond(jnp.any(s.frontier),
                              lambda c: c,
                              lambda c: _transition(g, c[0], params, goal,
-                                                   goal_param, ps=c[1]),
+                                                   goal_param, ps=c[1],
+                                                   alt_lb=alt_lb,
+                                                   bound_of=bound_of),
                              (s, ps))
         return s._replace(iters=s.iters + 1), ps
 
@@ -452,23 +514,106 @@ def _run(g: DeviceGraph, layout, source, backend: relax.RelaxBackend,
     return out.dist, out.parent, out.metrics, buf
 
 
+def _run_bidi(g: DeviceGraph, layout, source, backend, max_iters,
+              params: stepping.SteppingParams, target, fused_rounds, fused,
+              alt_data):
+    """Bidirectional meet-in-the-middle p2p (goal="p2p" only).
+
+    A forward solve (from ``source``) and a backward solve (from
+    ``target``, over the same symmetric graph) alternate windows —
+    whichever side's window lower bound trails advances one iteration.
+    Every advance tightens the shared meet bound
+    ``mu = min_v dist_f[v] + dist_b[v]`` (a valid s->t path length on a
+    symmetric graph), which feeds BOTH sides' ALT prune bounds through
+    ``min(seed_ub, mu * infl)`` — strictly more pruning pressure than
+    either side alone.
+
+    The forward solve stays *authoritative*: it terminates by the
+    standard p2p criterion (target settled), and since the extra
+    pruning is exact, its ``dist[target]``/parent chain are
+    bitwise-identical to the unidirectional solve (mu never finalizes
+    values — a mu-based finalize would break the bitwise contract).
+    The backward side freezes once its goal settles or
+    ``lb_f + lb_b >= mu`` (its windows can no longer tighten mu).
+    Metrics are summed over both sides: total work, which is what the
+    benchmark comparisons need.
+    """
+    n = g.n
+    target = jnp.asarray(target, jnp.int32)
+    D, delta, sym = alt_data.D, alt_data.delta, alt_data.sym
+    infl = 1.0 + 4.0 * delta
+    lb_f = relax.alt_lower_bounds(D, target, delta, sym)
+    lb_b = relax.alt_lower_bounds(D, source, delta, sym)
+    seed = relax.alt_seed_ub(D, source, target, infl, sym)
+    high_d0 = stats.high_d(jnp.zeros((n,), jnp.float32), g.deg,
+                           jnp.float32(0.0))
+
+    def init_state(s):
+        return SsspState(
+            dist=jnp.full((n,), INF, jnp.float32).at[s].set(0.0),
+            parent=jnp.full((n,), -1, jnp.int32).at[s].set(s),
+            frontier=jnp.zeros((n,), bool).at[s].set(True),
+            lb=jnp.float32(0.0), ub=INF, st=jnp.float32(0.0),
+            done=jnp.bool_(False), iters=jnp.int32(0),
+            metrics=_zero_metrics()._replace(n_extended=jnp.int32(1)))
+
+    def side_body(s, alt_lb_s, goal_v, mu):
+        ub_eff = jnp.minimum(seed, mu * infl)
+        bound_of = lambda dist: jnp.minimum(ub_eff, dist[goal_v] * infl)
+        if fused_rounds > 0:
+            s = _fused_relax_rounds(layout, fused, s, fused_rounds,
+                                    alt_lb_s, ub_eff, infl, goal_v)
+        else:
+            s = _relax_round(backend, layout, s, alt_lb_s,
+                             bound_of(s.dist))
+        s = _bootstrap_ub(g, s, high_d0)
+        s = jax.lax.cond(jnp.any(s.frontier),
+                         lambda x: x,
+                         lambda x: _transition(g, x, params, "p2p", goal_v,
+                                               alt_lb=alt_lb_s,
+                                               bound_of=bound_of),
+                         s)
+        return s._replace(iters=s.iters + 1)
+
+    def cond(c):
+        sf, sb, mu = c
+        return (~sf.done) & (sf.iters + sb.iters < 2 * max_iters)
+
+    def body(c):
+        sf, sb, mu = c
+        frozen = sb.done | (sf.lb + sb.lb >= mu)
+        fwd = frozen | (sf.lb <= sb.lb)
+        sf = jax.lax.cond(fwd, lambda x: side_body(x, lb_f, target, mu),
+                          lambda x: x, sf)
+        sb = jax.lax.cond(fwd, lambda x: x,
+                          lambda x: side_body(x, lb_b, source, mu), sb)
+        mu = jnp.minimum(mu, jnp.min(sf.dist + sb.dist))
+        return sf, sb, mu
+
+    sf, sb, _mu = jax.lax.while_loop(
+        cond, body, (init_state(source), init_state(target), INF))
+    metrics = SsspMetrics(*[a + b for a, b in zip(sf.metrics, sb.metrics)])
+    return sf.dist, sf.parent, metrics, None
+
+
 @partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
                                    "goal", "fused_rounds", "trace_capacity",
-                                   "policy"))
+                                   "policy", "p2p_mode"))
 def _sssp_jit(g, layout, source, backend, max_iters, alpha, beta, goal,
               goal_param, fused_rounds=0, trace_capacity=0,
-              policy="static"):
+              policy="static", alt_data=None, p2p_mode="unidirectional"):
     return _run(g, layout, source, backend, max_iters, alpha, beta, goal,
                 goal_param, fused_rounds, trace_capacity=trace_capacity,
-                policy=policy)
+                policy=policy, alt_data=alt_data, p2p_mode=p2p_mode)
 
 
 @partial(jax.jit, static_argnames=("backend", "max_iters", "alpha", "beta",
                                    "goal", "fused_rounds", "trace_capacity",
-                                   "policy"))
+                                   "policy", "p2p_mode"))
 def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta,
                     goal, goal_params, fused_rounds=0, trace_capacity=0,
-                    policy="static"):
+                    policy="static", alt_data=None,
+                    p2p_mode="unidirectional"):
     # build the fused slab once, outside vmap, so the concatenation isn't
     # replicated per batch slot
     fused = relax.fused_slab(layout) if (
@@ -477,7 +622,8 @@ def _sssp_batch_jit(g, layout, sources, backend, max_iters, alpha, beta,
     return jax.vmap(
         lambda s, gp: _run(g, layout, s, backend, max_iters, alpha, beta,
                            goal, gp, fused_rounds, fused,
-                           trace_capacity=trace_capacity, policy=policy)
+                           trace_capacity=trace_capacity, policy=policy,
+                           alt_data=alt_data, p2p_mode=p2p_mode)
     )(sources, goal_params)
 
 
@@ -499,13 +645,31 @@ def _engine_args(g: DeviceGraph, config, backend, max_iters, alpha, beta,
         beta=beta, fused_rounds=fused_rounds, policy=policy, **backend_opts)
     r = as_resolved(config, n=g.n, m=g.m).require("single")
     return (relax.get_backend(r.backend), r.max_iters, r.alpha, r.beta,
-            r.fused_rounds, r.trace_cap, r.policy, r.layout_opts())
+            r.fused_rounds, r.trace_cap, r.policy, r.layout_opts(), r)
+
+
+def _resolve_alt(g: DeviceGraph, landmarks, r, goal: str):
+    """The traced :class:`~repro.core.relax.AltData` bundle for this
+    solve, or None.  An explicit ``landmarks`` (a
+    :class:`~repro.core.landmarks.LandmarkSet` or a raw ``AltData``)
+    wins; otherwise a resolved ``use_alt=True`` config builds a set on
+    the fly — uncached, so prefer the facade/registry, which cache per
+    graph.  ALT bounds need a target: only p2p goals use them."""
+    if goal != "p2p":
+        return None
+    if landmarks is None and getattr(r, "use_alt", False):
+        from .landmarks import build_landmarks
+        landmarks = build_landmarks(g, n_landmarks=r.n_landmarks,
+                                    strategy=r.landmark_strategy)
+    if landmarks is None:
+        return None
+    return getattr(landmarks, "alt_data", landmarks)
 
 
 def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
          max_iters=None, alpha=None, beta=None, fused_rounds=None,
          policy=None, goal: str = "tree", goal_param=None, config=None,
-         **backend_opts):
+         landmarks=None, **backend_opts):
     """Run the heuristic SSSP algorithm from ``source``.
 
     This is the single-device *engine* entry point; prefer the
@@ -519,18 +683,22 @@ def sssp(g: DeviceGraph, source, *, backend=None, layout=None,
     ``(dist, parent, metrics)`` — or ``(dist, parent, metrics,
     trace_buf)`` when the config enables per-round tracing
     (``EngineConfig(trace=True)``; materialize the device ring with
-    :func:`repro.obs.materialize_trace`).
+    :func:`repro.obs.materialize_trace`).  ``landmarks`` (a
+    :class:`~repro.core.landmarks.LandmarkSet`) enables exact ALT
+    goal-directed pruning for p2p goals; with ``use_alt=True`` in the
+    config and no explicit set, one is built on the fly.
     """
-    be, max_iters, alpha, beta, fr, tc, pol, opts = _engine_args(
+    be, max_iters, alpha, beta, fr, tc, pol, opts, r = _engine_args(
         g, config, backend, max_iters, alpha, beta, fused_rounds, policy,
         backend_opts)
     if layout is None:
         layout = be.prepare(g, **opts)
     gp = goal_param_array(goal, goal_param)
     _check_goal_bounds(goal, gp, g.n)
+    alt_data = _resolve_alt(g, landmarks, r, goal)
     with profiling.annotate("repro:sssp_dispatch"):
         out = _sssp_jit(g, layout, jnp.int32(source), be, max_iters, alpha,
-                        beta, goal, gp, fr, tc, pol)
+                        beta, goal, gp, fr, tc, pol, alt_data, r.p2p_mode)
     return out if tc > 0 else out[:3]
 
 
@@ -570,7 +738,8 @@ def sssp_knear(g: DeviceGraph, source, k, **kw):
 def sssp_batch(g: DeviceGraph, sources, *, backend=None,
                layout=None, max_iters=None, alpha=None, beta=None,
                fused_rounds=None, policy=None, goal: str = "tree",
-               goal_params=None, config=None, **backend_opts):
+               goal_params=None, config=None, landmarks=None,
+               **backend_opts):
     """Batched multi-source SSSP: one fused computation over ``sources``.
 
     The per-source state (dist/parent/frontier/window) is stacked along a
@@ -583,7 +752,7 @@ def sssp_batch(g: DeviceGraph, sources, *, backend=None,
     batch-stacked trace ring when the config enables tracing, as in
     :func:`sssp`).
     """
-    be, max_iters, alpha, beta, fr, tc, pol, opts = _engine_args(
+    be, max_iters, alpha, beta, fr, tc, pol, opts, r = _engine_args(
         g, config, backend, max_iters, alpha, beta, fused_rounds, policy,
         backend_opts)
     if layout is None:
@@ -596,9 +765,11 @@ def sssp_batch(g: DeviceGraph, sources, *, backend=None,
         raise ValueError(f"goal_params shape {gp.shape} != sources shape "
                          f"{sources.shape}")
     _check_goal_bounds(goal, gp, g.n)
+    alt_data = _resolve_alt(g, landmarks, r, goal)
     with profiling.annotate("repro:sssp_batch_dispatch"):
         out = _sssp_batch_jit(g, layout, sources, be, max_iters, alpha,
-                              beta, goal, gp, fr, tc, pol)
+                              beta, goal, gp, fr, tc, pol, alt_data,
+                              r.p2p_mode)
     return out if tc > 0 else out[:3]
 
 
@@ -637,6 +808,7 @@ def normalized_metrics(g_deg, dist, metrics: SsspMetrics) -> dict:
         "n_rounds": int(metrics.n_rounds),
         "n_relax": int(metrics.n_relax),
         "n_updates": int(metrics.n_updates),
+        "n_pruned": int(metrics.n_pruned),
         "n_tiles_scanned": int(metrics.n_tiles_scanned),
         "n_tiles_dense": int(metrics.n_tiles_dense),
         "n_invocations": int(metrics.n_invocations),

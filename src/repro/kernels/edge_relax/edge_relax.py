@@ -128,7 +128,12 @@ def schedule_tiles(frontier_block, src_local, w, tile_first, tile_e: int):
 
 
 def _kernel(sched_ref, sd_ref, na_ref, lbub_ref, dist_ref, frontier_ref,
-            src_ref, dst_ref, w_ref, val_ref, win_ref, *, block_v: int):
+            src_ref, dst_ref, w_ref, *rest, block_v: int,
+            alt: bool = False):
+    if alt:
+        alt_ref, val_ref, win_ref = rest
+    else:
+        val_ref, win_ref = rest
     i = pl.program_id(0)
     b = sd_ref[i]                               # this tile's dst block
     prev = jnp.maximum(i - 1, 0)
@@ -150,6 +155,13 @@ def _kernel(sched_ref, sd_ref, na_ref, lbub_ref, dist_ref, frontier_ref,
         front = frontier_ref[src]
         cand = d_src + w
         ok = (front > 0) & (cand >= lb) & (cand < ub)
+        if alt:
+            # ALT goal-directed cut: a candidate whose admissible
+            # remaining-distance bound already exceeds the best known
+            # s->t length can never improve it (alt_ref is this dst
+            # block's slice of the per-vertex bound array)
+            loc = jnp.clip(dst - b * block_v, 0, block_v - 1)
+            ok = ok & (cand + alt_ref[loc] <= lbub_ref[2])
         cand = jnp.where(ok, cand, jnp.inf)
         # dense scatter-min: [TILE_E, BLOCK_V] compare plane for dst block b
         cols = b * block_v + jax.lax.broadcasted_iota(
@@ -174,7 +186,8 @@ def _kernel(sched_ref, sd_ref, na_ref, lbub_ref, dist_ref, frontier_ref,
 @functools.partial(jax.jit, static_argnames=("block_v", "tile_e",
                                              "n_dst_blocks", "interpret"))
 def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
-               tile_dst, tile_first, bucket_nonempty, lb, ub, *,
+               tile_dst, tile_first, bucket_nonempty, lb, ub,
+               alt_lb=None, prune_bound=None, *,
                block_v: int = DEFAULT_BLOCK_V, tile_e: int = DEFAULT_TILE_E,
                n_dst_blocks: int = 1, interpret: bool = True):
     """Relax one source-block edge slab against its active tile schedule.
@@ -203,32 +216,43 @@ def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
     sched, sched_n = schedule_tiles(frontier_block, src_local, w,
                                     tile_first, tile_e)
     sched_dst = tile_dst[sched]
-    lbub = jnp.stack([jnp.float32(lb), jnp.float32(ub)])
+    alt = alt_lb is not None
+    scal = [jnp.float32(lb), jnp.float32(ub)]
+    if alt:
+        scal.append(jnp.float32(prune_bound))
+    lbub = jnp.stack(scal)
     n_out = n_dst_blocks * block_v
 
     # lbub rides in the scalar-prefetch (SMEM) path with the schedule —
     # window bounds are genuinely scalars, which is what SMEM is for.
+    in_specs = [
+        pl.BlockSpec(dist_block.shape, lambda i, *_: (0,)),
+        pl.BlockSpec(frontier_block.shape, lambda i, *_: (0,)),
+        pl.BlockSpec((tile_e,), lambda i, s, *_: (s[i],)),
+        pl.BlockSpec((tile_e,), lambda i, s, *_: (s[i],)),
+        pl.BlockSpec((tile_e,), lambda i, s, *_: (s[i],)),
+    ]
+    operands = [sched, sched_dst, sched_n[None], lbub, dist_block,
+                frontier_block.astype(jnp.int8), src_local, dst_local, w]
+    if alt:
+        # the bound slice follows the output index map: one dst block
+        in_specs.append(pl.BlockSpec((block_v,), lambda i, s, d, *_:
+                                     (d[i],)))
+        operands.append(alt_lb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,      # sched, sched_dst, n_active, lbub
         grid=(nt,),
-        in_specs=[
-            pl.BlockSpec(dist_block.shape, lambda i, s, d, n, b: (0,)),
-            pl.BlockSpec(frontier_block.shape, lambda i, s, d, n, b: (0,)),
-            pl.BlockSpec((tile_e,), lambda i, s, d, n, b: (s[i],)),
-            pl.BlockSpec((tile_e,), lambda i, s, d, n, b: (s[i],)),
-            pl.BlockSpec((tile_e,), lambda i, s, d, n, b: (s[i],)),
-        ],
-        out_specs=(pl.BlockSpec((block_v,), lambda i, s, d, n, b: (d[i],)),
-                   pl.BlockSpec((block_v,), lambda i, s, d, n, b: (d[i],))),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((block_v,), lambda i, s, d, *_: (d[i],)),
+                   pl.BlockSpec((block_v,), lambda i, s, d, *_: (d[i],))),
     )
     vals, wins = pl.pallas_call(
-        functools.partial(_kernel, block_v=block_v),
+        functools.partial(_kernel, block_v=block_v, alt=alt),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((n_out,), jnp.float32),
                    jax.ShapeDtypeStruct((n_out,), jnp.int32)),
         interpret=interpret,
-    )(sched, sched_dst, sched_n[None], lbub, dist_block,
-      frontier_block.astype(jnp.int8), src_local, dst_local, w)
+    )(*operands)
     # destination blocks without any tile are never visited by the grid:
     # mask their (uninitialized) output range to the no-candidate value
     visited = jnp.repeat(bucket_nonempty, block_v)
@@ -242,12 +266,13 @@ def edge_relax(dist_block, frontier_block, src_local, dst_local, w,
 
 # counter slots of the fused kernels' in-kernel metric accumulator
 FUSED_COUNTERS = ("n_trav", "n_relax", "n_updates", "n_extended",
-                  "n_rounds", "n_tiles", "n_exec", "_pad")
-PARTIAL_COUNTERS = ("n_trav", "n_relax", "n_tiles", "_pad")
+                  "n_rounds", "n_tiles", "n_exec", "n_pruned")
+PARTIAL_COUNTERS = ("n_trav", "n_relax", "n_tiles", "n_pruned")
 
 
 def _tile_pass(dist_src, paths_src, parent_src, src, dst, w, tdst, tfirst,
-               lb, ub, n_out: int, *, block_v: int, tile_e: int, go):
+               lb, ub, n_out: int, *, block_v: int, tile_e: int, go,
+               alt_lb=None, prune_bound=None):
     """One frontier-compacted pass over a whole edge slab (all buckets).
 
     Pure-value core shared by both fused kernel modes: computes the
@@ -260,10 +285,17 @@ def _tile_pass(dist_src, paths_src, parent_src, src, dst, w, tdst, tfirst,
     per-tile winner min is already the deterministic min-id tiebreak.
     ``go`` gates the tile loop (0 => schedule only, zero tiles run).
 
-    Returns ``(val, win, n_trav, n_relax, sched_n)`` over ``n_out``
-    destinations; counters are exact (a tile outside the schedule has no
-    frontier source with finite weight, so every edge in it fails the
-    window test and contributes zero to every counter).
+    With ``alt_lb`` (the per-vertex ALT bound over the full destination
+    range) candidates with ``cand + alt_lb[dst] > prune_bound`` are
+    dropped before the scatter-min; parent-excluded drops are counted so
+    ``n_relax(unpruned) == n_relax(pruned) + n_pruned`` holds per round
+    (mirroring :func:`repro.core.relax.alt_prune` — ``n_trav`` stays the
+    in-window count, unaffected by pruning).
+
+    Returns ``(val, win, n_trav, n_relax, n_pruned, sched_n)`` over
+    ``n_out`` destinations; counters are exact (a tile outside the
+    schedule has no frontier source with finite weight, so every edge in
+    it fails the window test and contributes zero to every counter).
     """
     nt = tdst.shape[0]
     touched = (paths_src[src] > 0) & jnp.isfinite(w)
@@ -278,7 +310,7 @@ def _tile_pass(dist_src, paths_src, parent_src, src, dst, w, tdst, tfirst,
     sched = jnp.min(jnp.where(hit, isel, nt), axis=1)
 
     def tile_body(k, carry):
-        val, win, trav, rlx = carry
+        val, win, trav, rlx, prn = carry
         t = sched[k]
         b = tdst[t]
         lo = t * tile_e
@@ -287,10 +319,14 @@ def _tile_pass(dist_src, paths_src, parent_src, src, dst, w, tdst, tfirst,
         w_t = jax.lax.dynamic_slice(w, (lo,), (tile_e,))
         cand = dist_src[src_t] + w_t
         ok = (paths_src[src_t] > 0) & (cand >= lb) & (cand < ub)
-        cand = jnp.where(ok, cand, jnp.inf)
         trav = trav + jnp.sum(ok.astype(jnp.int32))
-        rlx = rlx + jnp.sum(
-            (ok & (dst_t != parent_src[src_t])).astype(jnp.int32))
+        notpar = dst_t != parent_src[src_t]
+        if alt_lb is not None:
+            fail = cand + alt_lb[dst_t] > prune_bound
+            prn = prn + jnp.sum((ok & notpar & fail).astype(jnp.int32))
+            ok = ok & ~fail
+        cand = jnp.where(ok, cand, jnp.inf)
+        rlx = rlx + jnp.sum((ok & notpar).astype(jnp.int32))
         cols = b * block_v + jax.lax.broadcasted_iota(
             jnp.int32, (tile_e, block_v), 1)
         hit2 = dst_t[:, None] == cols
@@ -310,21 +346,36 @@ def _tile_pass(dist_src, paths_src, parent_src, src, dst, w, tdst, tfirst,
             win, jnp.where(better, tile_win,
                            jnp.where(tie, jnp.minimum(prev_w, tile_win),
                                      prev_w)), (off,))
-        return val, win, trav, rlx
+        return val, win, trav, rlx, prn
 
     n_eff = jnp.where(go > 0, sched_n, 0)
     val0 = jnp.full((n_out,), jnp.inf, jnp.float32)
     win0 = jnp.full((n_out,), INT_MAX, jnp.int32)
-    val, win, trav, rlx = jax.lax.fori_loop(
-        0, n_eff, tile_body, (val0, win0, jnp.int32(0), jnp.int32(0)))
-    return val, win, trav, rlx, sched_n
+    val, win, trav, rlx, prn = jax.lax.fori_loop(
+        0, n_eff, tile_body,
+        (val0, win0, jnp.int32(0), jnp.int32(0), jnp.int32(0)))
+    return val, win, trav, rlx, prn, sched_n
 
 
-def _fused_kernel(lbub_ref, maxr_ref, dist_in, parent_in, front_in, deg_ref,
-                  src_ref, dst_ref, w_ref, tdst_ref, tfirst_ref,
-                  dist_out, parent_out, front_out, cnt_ref, *,
-                  block_v: int, tile_e: int, fused_cap: int):
-    """Up to ``fused_cap`` windowed rounds, state resident in output refs."""
+def _fused_kernel(*refs, block_v: int, tile_e: int, fused_cap: int,
+                  alt: bool = False):
+    """Up to ``fused_cap`` windowed rounds, state resident in output refs.
+
+    With ``alt`` the prefetch path carries ``lbub = [lb, ub, prune_ub,
+    infl]`` plus the target id, and the prune bound is recomputed from
+    the *resident* dist at every round start as
+    ``min(prune_ub, dist[tgt] * infl)`` — the exact bound the unfused
+    path computes between kernel invocations, which is what keeps the
+    fused/unfused pruning decisions (and ``n_pruned``) bitwise-equal.
+    """
+    if alt:
+        (lbub_ref, maxr_ref, tgt_ref, dist_in, parent_in, front_in,
+         deg_ref, src_ref, dst_ref, w_ref, tdst_ref, tfirst_ref, alt_ref,
+         dist_out, parent_out, front_out, cnt_ref) = refs
+    else:
+        (lbub_ref, maxr_ref, dist_in, parent_in, front_in, deg_ref,
+         src_ref, dst_ref, w_ref, tdst_ref, tfirst_ref,
+         dist_out, parent_out, front_out, cnt_ref) = refs
     dist_out[...] = dist_in[...]
     parent_out[...] = parent_in[...]
     front_out[...] = front_in[...]
@@ -338,6 +389,7 @@ def _fused_kernel(lbub_ref, maxr_ref, dist_in, parent_in, front_in, deg_ref,
     w = w_ref[...]
     tdst = tdst_ref[...]
     tfirst = tfirst_ref[...]
+    alt_lb = alt_ref[...] if alt else None
     n_out = deg.shape[0]
 
     def round_body(r, go):
@@ -346,9 +398,12 @@ def _fused_kernel(lbub_ref, maxr_ref, dist_in, parent_in, front_in, deg_ref,
         parent = parent_out[...]
         front = front_out[...]
         paths = ((front > 0) & ((dist <= 0.0) | (deg > 1))).astype(jnp.int32)
-        val, win, trav, rlx, sched_n = _tile_pass(
+        bound = (jnp.minimum(lbub_ref[2], dist[tgt_ref[0]] * lbub_ref[3])
+                 if alt else None)
+        val, win, trav, rlx, prn, sched_n = _tile_pass(
             dist, paths, parent, src, dst, w, tdst, tfirst, lb, ub,
-            n_out, block_v=block_v, tile_e=tile_e, go=go)
+            n_out, block_v=block_v, tile_e=tile_e, go=go,
+            alt_lb=alt_lb, prune_bound=bound)
         improved = val < dist
         any_imp = jnp.any(improved)
 
@@ -362,7 +417,7 @@ def _fused_kernel(lbub_ref, maxr_ref, dist_in, parent_in, front_in, deg_ref,
                 jnp.sum(improved.astype(jnp.int32)),
                 jnp.sum((improved & (deg > 1)).astype(jnp.int32)),
                 jnp.any(front > 0).astype(jnp.int32),
-                sched_n, jnp.int32(1), jnp.int32(0)])
+                sched_n, jnp.int32(1), prn])
 
         return jnp.where(go > 0,
                          (any_imp & (r + 1 < max_r)).astype(jnp.int32),
@@ -374,7 +429,9 @@ def _fused_kernel(lbub_ref, maxr_ref, dist_in, parent_in, front_in, deg_ref,
 @functools.partial(jax.jit, static_argnames=("block_v", "tile_e",
                                              "fused_rounds", "interpret"))
 def edge_relax_fused(dist, parent, frontier, deg, src, dst, w, tile_dst,
-                     tile_first, lb, ub, *, block_v: int = DEFAULT_BLOCK_V,
+                     tile_first, lb, ub, alt_lb=None, prune_ub=None,
+                     prune_infl=None, prune_tgt=None, *,
+                     block_v: int = DEFAULT_BLOCK_V,
                      tile_e: int = DEFAULT_TILE_E, fused_rounds: int = 4,
                      interpret: bool = True):
     """Run up to ``fused_rounds`` relaxation rounds in one invocation.
@@ -396,56 +453,75 @@ def edge_relax_fused(dist, parent, frontier, deg, src, dst, w, tile_dst,
                          f"(tile_e={tile_e})")
     if fused_rounds < 1:
         raise ValueError(f"fused_rounds must be >= 1, got {fused_rounds}")
-    lbub = jnp.stack([jnp.float32(lb), jnp.float32(ub)])
+    alt = alt_lb is not None
+    scal = [jnp.float32(lb), jnp.float32(ub)]
+    if alt:
+        scal += [jnp.float32(prune_ub), jnp.float32(prune_infl)]
+    lbub = jnp.stack(scal)
     # the bootstrap step tightens ub after every round — chaining rounds
     # in-kernel there would relax against a stale bound
     maxr = jnp.where(jnp.float32(lb) <= 0.0, 1, fused_rounds
                      ).astype(jnp.int32)
     n_out = dist.shape[0]
     nt = e // tile_e
-    whole = lambda shape: pl.BlockSpec(shape, lambda i, lu, mr: (0,))
+    whole = lambda shape: pl.BlockSpec(shape, lambda i, *_: (0,))
+    in_specs = ([whole((n_out,))] * 4 + [whole((e,))] * 3
+                + [whole((nt,))] * 2)
+    prefetch = [lbub, maxr[None]]
+    operands = [dist, parent, frontier.astype(jnp.int32), deg,
+                src, dst, w, tile_dst, tile_first.astype(jnp.int32)]
+    if alt:
+        prefetch.append(jnp.asarray(prune_tgt, jnp.int32)[None])
+        in_specs.append(whole((n_out,)))
+        operands.append(alt_lb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,      # lbub, maxr
+        num_scalar_prefetch=len(prefetch),   # lbub, maxr (+ tgt with ALT)
         grid=(1,),
-        in_specs=[whole((n_out,))] * 4 + [whole((e,))] * 3
-        + [whole((nt,))] * 2,
+        in_specs=in_specs,
         out_specs=(whole((n_out,)), whole((n_out,)), whole((n_out,)),
                    whole((8,))),
     )
     dist2, parent2, front2, cnt = pl.pallas_call(
         functools.partial(_fused_kernel, block_v=block_v, tile_e=tile_e,
-                          fused_cap=fused_rounds),
+                          fused_cap=fused_rounds, alt=alt),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((n_out,), jnp.float32),
                    jax.ShapeDtypeStruct((n_out,), jnp.int32),
                    jax.ShapeDtypeStruct((n_out,), jnp.int32),
                    jax.ShapeDtypeStruct((8,), jnp.int32)),
         interpret=interpret,
-    )(lbub, maxr[None], dist, parent, frontier.astype(jnp.int32), deg,
-      src, dst, w, tile_dst, tile_first.astype(jnp.int32))
+    )(*prefetch, *operands)
     return dist2, parent2, front2, cnt
 
 
-def _partials_kernel(lbub_ref, dist_ref, paths_ref, parent_ref,
-                     src_ref, dst_ref, w_ref, tdst_ref, tfirst_ref,
-                     val_ref, win_ref, cnt_ref, *, block_v: int,
-                     tile_e: int):
+def _partials_kernel(*refs, block_v: int, tile_e: int, alt: bool = False):
     """Single-round partials over a shard's whole slab set."""
+    if alt:
+        (lbub_ref, dist_ref, paths_ref, parent_ref, src_ref, dst_ref,
+         w_ref, tdst_ref, tfirst_ref, alt_ref, val_ref, win_ref,
+         cnt_ref) = refs
+        alt_lb, bound = alt_ref[...], lbub_ref[2]
+    else:
+        (lbub_ref, dist_ref, paths_ref, parent_ref, src_ref, dst_ref,
+         w_ref, tdst_ref, tfirst_ref, val_ref, win_ref, cnt_ref) = refs
+        alt_lb, bound = None, None
     lb = lbub_ref[0]
     ub = lbub_ref[1]
-    val, win, trav, rlx, sched_n = _tile_pass(
+    val, win, trav, rlx, prn, sched_n = _tile_pass(
         dist_ref[...], paths_ref[...], parent_ref[...], src_ref[...],
         dst_ref[...], w_ref[...], tdst_ref[...], tfirst_ref[...], lb, ub,
-        val_ref.shape[0], block_v=block_v, tile_e=tile_e, go=jnp.int32(1))
+        val_ref.shape[0], block_v=block_v, tile_e=tile_e, go=jnp.int32(1),
+        alt_lb=alt_lb, prune_bound=bound)
     val_ref[...] = val
     win_ref[...] = win
-    cnt_ref[...] = jnp.stack([trav, rlx, sched_n, jnp.int32(0)])
+    cnt_ref[...] = jnp.stack([trav, rlx, sched_n, prn])
 
 
 @functools.partial(jax.jit, static_argnames=("block_v", "tile_e",
                                              "n_dst_blocks", "interpret"))
 def edge_relax_partials(dist_src, paths_src, parent_src, src, dst, w,
-                        tile_dst, tile_first, lb, ub, *,
+                        tile_dst, tile_first, lb, ub,
+                        alt_lb=None, prune_bound=None, *,
                         block_v: int = DEFAULT_BLOCK_V,
                         tile_e: int = DEFAULT_TILE_E, n_dst_blocks: int = 1,
                         interpret: bool = True):
@@ -463,24 +539,34 @@ def edge_relax_partials(dist_src, paths_src, parent_src, src, dst, w,
     if e % tile_e != 0 or e == 0:
         raise ValueError(f"slab length {e} is not tile-aligned "
                          f"(tile_e={tile_e})")
-    lbub = jnp.stack([jnp.float32(lb), jnp.float32(ub)])
+    alt = alt_lb is not None
+    scal = [jnp.float32(lb), jnp.float32(ub)]
+    if alt:
+        scal.append(jnp.float32(prune_bound))
+    lbub = jnp.stack(scal)
     n_out = n_dst_blocks * block_v
     n_src = dist_src.shape[0]
     nt = e // tile_e
-    whole = lambda shape: pl.BlockSpec(shape, lambda i, lu: (0,))
+    whole = lambda shape: pl.BlockSpec(shape, lambda i, *_: (0,))
+    in_specs = ([whole((n_src,))] * 3 + [whole((e,))] * 3
+                + [whole((nt,))] * 2)
+    operands = [dist_src, paths_src.astype(jnp.int32), parent_src, src,
+                dst, w, tile_dst, tile_first.astype(jnp.int32)]
+    if alt:
+        in_specs.append(whole((n_out,)))
+        operands.append(alt_lb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,      # lbub
         grid=(1,),
-        in_specs=[whole((n_src,))] * 3 + [whole((e,))] * 3
-        + [whole((nt,))] * 2,
+        in_specs=in_specs,
         out_specs=(whole((n_out,)), whole((n_out,)), whole((4,))),
     )
     return pl.pallas_call(
-        functools.partial(_partials_kernel, block_v=block_v, tile_e=tile_e),
+        functools.partial(_partials_kernel, block_v=block_v, tile_e=tile_e,
+                          alt=alt),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((n_out,), jnp.float32),
                    jax.ShapeDtypeStruct((n_out,), jnp.int32),
                    jax.ShapeDtypeStruct((4,), jnp.int32)),
         interpret=interpret,
-    )(lbub, dist_src, paths_src.astype(jnp.int32), parent_src, src, dst, w,
-      tile_dst, tile_first.astype(jnp.int32))
+    )(lbub, *operands)

@@ -21,7 +21,7 @@ def relax_bucket(dist_block, frontier_block, src_local, dst_local, w,
                  tile_dst, tile_first, bucket_nonempty, lb, ub, *,
                  block_v: int = 512, n_dst_blocks: int = 1,
                  tile_e: int = 512, use_kernel: bool = True,
-                 interpret: bool = True):
+                 interpret: bool = True, alt_lb=None, prune_bound=None):
     """Dispatch: Pallas kernel (TPU hot path) or jnp reference fallback.
 
     Both paths return ``(vals, winners, n_tiles)`` over the full
@@ -33,11 +33,12 @@ def relax_bucket(dist_block, frontier_block, src_local, dst_local, w,
     if use_kernel:
         return edge_relax(dist_block, frontier_block, src_local, dst_local,
                           w, tile_dst, tile_first, bucket_nonempty, lb, ub,
-                          block_v=block_v, tile_e=tile_e,
-                          n_dst_blocks=n_dst_blocks, interpret=interpret)
+                          alt_lb, prune_bound, block_v=block_v,
+                          tile_e=tile_e, n_dst_blocks=n_dst_blocks,
+                          interpret=interpret)
     vals, wins = edge_relax_ref(dist_block, frontier_block, src_local,
-                                dst_local, w, lb, ub, block_v=block_v,
-                                n_dst_blocks=n_dst_blocks)
+                                dst_local, w, lb, ub, alt_lb, prune_bound,
+                                block_v=block_v, n_dst_blocks=n_dst_blocks)
     _, n_tiles = schedule_tiles(frontier_block, src_local, w, tile_first,
                                 tile_e)
     return vals, wins, n_tiles
@@ -46,18 +47,22 @@ def relax_bucket(dist_block, frontier_block, src_local, dst_local, w,
 def relax_fused(dist, parent, frontier, deg, src, dst, w, tile_dst,
                 tile_first, lb, ub, *, block_v: int = 512,
                 tile_e: int = 512, fused_rounds: int = 4,
-                use_kernel: bool = True, interpret: bool = True):
+                use_kernel: bool = True, interpret: bool = True,
+                alt_lb=None, prune_ub=None, prune_infl=None,
+                prune_tgt=None):
     """Dispatch for the multi-round fused megakernel (see
     :func:`..edge_relax.edge_relax_fused`); both paths are bitwise
     interchangeable, including the ``FUSED_COUNTERS`` vector."""
     if use_kernel:
         return edge_relax_fused(dist, parent, frontier, deg, src, dst, w,
-                                tile_dst, tile_first, lb, ub,
+                                tile_dst, tile_first, lb, ub, alt_lb,
+                                prune_ub, prune_infl, prune_tgt,
                                 block_v=block_v, tile_e=tile_e,
                                 fused_rounds=fused_rounds,
                                 interpret=interpret)
     return edge_relax_fused_ref(dist, parent, frontier, deg, src, dst, w,
-                                tile_dst, tile_first, lb, ub,
+                                tile_dst, tile_first, lb, ub, alt_lb,
+                                prune_ub, prune_infl, prune_tgt,
                                 block_v=block_v, tile_e=tile_e,
                                 fused_rounds=fused_rounds)
 
@@ -65,16 +70,19 @@ def relax_fused(dist, parent, frontier, deg, src, dst, w, tile_dst,
 def relax_partials(dist_src, paths_src, parent_src, src, dst, w, tile_dst,
                    tile_first, lb, ub, *, block_v: int = 512,
                    tile_e: int = 512, n_dst_blocks: int = 1,
-                   use_kernel: bool = True, interpret: bool = True):
+                   use_kernel: bool = True, interpret: bool = True,
+                   alt_lb=None, prune_bound=None):
     """Dispatch for the single-round whole-slab partials pass (see
     :func:`..edge_relax.edge_relax_partials`)."""
     if use_kernel:
         return edge_relax_partials(dist_src, paths_src, parent_src, src,
                                    dst, w, tile_dst, tile_first, lb, ub,
+                                   alt_lb, prune_bound,
                                    block_v=block_v, tile_e=tile_e,
                                    n_dst_blocks=n_dst_blocks,
                                    interpret=interpret)
     return edge_relax_partials_ref(dist_src, paths_src, parent_src, src,
                                    dst, w, tile_dst, tile_first, lb, ub,
+                                   alt_lb, prune_bound,
                                    block_v=block_v, tile_e=tile_e,
                                    n_dst_blocks=n_dst_blocks)

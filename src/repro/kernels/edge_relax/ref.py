@@ -15,13 +15,19 @@ from .edge_relax import INT_MAX
 
 
 def edge_relax_ref(dist_block, frontier_block, src_local, dst_local, w,
-                   lb, ub, *, block_v: int = 512, n_dst_blocks: int = 1):
+                   lb, ub, alt_lb=None, prune_bound=None, *,
+                   block_v: int = 512, n_dst_blocks: int = 1):
     """Returns ``(vals, winners)`` matching the Pallas kernel contract:
     per-destination min candidate plus the smallest block-local source id
-    achieving it (INT_MAX where no in-window candidate exists)."""
+    achieving it (INT_MAX where no in-window candidate exists).  With
+    ``alt_lb`` the kernel's ALT cut is mirrored on the value path:
+    candidates with ``cand + alt_lb[dst] > prune_bound`` never enter the
+    scatter-min."""
     n_out = n_dst_blocks * block_v
     cand = dist_block[src_local] + w
     ok = (frontier_block[src_local] > 0) & (cand >= lb) & (cand < ub)
+    if alt_lb is not None:
+        ok = ok & (cand + alt_lb[dst_local] <= prune_bound)
     cand = jnp.where(ok, cand, jnp.inf)
     best = jax.ops.segment_min(cand, dst_local, num_segments=n_out)
     win = jnp.where(ok & (cand <= best[dst_local]), src_local, INT_MAX)
@@ -29,19 +35,32 @@ def edge_relax_ref(dist_block, frontier_block, src_local, dst_local, w,
     return best, winner
 
 
-def _slab_counters(pa_src, w, dst, p_src, ok, tile_first, tile_e: int):
+def _slab_counters(pa_src, w, dst, p_src, ok, tile_first, tile_e: int,
+                   fail=None):
     """The fused kernels' logical counters, computed slab-wide (exact:
-    tiles outside the compacted schedule contribute zero to each)."""
+    tiles outside the compacted schedule contribute zero to each).
+
+    ``ok`` is the pre-prune in-window mask and ``fail`` the ALT cut
+    (None without ALT): ``n_trav`` counts all of ``ok``, ``n_relax`` the
+    parent-excluded survivors and ``n_pruned`` the parent-excluded cuts,
+    so ``n_relax(unpruned) == n_relax(pruned) + n_pruned`` per round."""
     nt = w.shape[0] // tile_e
     touched = pa_src & jnp.isfinite(w)
     active = touched.reshape(nt, tile_e).any(axis=1) | (tile_first > 0)
-    return (jnp.sum(ok.astype(jnp.int32)),
-            jnp.sum((ok & (dst != p_src)).astype(jnp.int32)),
-            jnp.sum(active.astype(jnp.int32)))
+    notpar = dst != p_src
+    if fail is None:
+        rlx = jnp.sum((ok & notpar).astype(jnp.int32))
+        prn = jnp.int32(0)
+    else:
+        rlx = jnp.sum((ok & notpar & ~fail).astype(jnp.int32))
+        prn = jnp.sum((ok & notpar & fail).astype(jnp.int32))
+    return (jnp.sum(ok.astype(jnp.int32)), rlx,
+            jnp.sum(active.astype(jnp.int32)), prn)
 
 
 def edge_relax_fused_ref(dist, parent, frontier, deg, src, dst, w,
-                         tile_dst, tile_first, lb, ub, *,
+                         tile_dst, tile_first, lb, ub, alt_lb=None,
+                         prune_ub=None, prune_infl=None, prune_tgt=None, *,
                          block_v: int = 512, tile_e: int = 512,
                          fused_rounds: int = 4):
     """Arrays-only twin of :func:`..edge_relax.edge_relax_fused`.
@@ -67,19 +86,28 @@ def edge_relax_fused_ref(dist, parent, frontier, deg, src, dst, w,
         pa_src = paths[src]
         cand = dist[src] + w
         ok = pa_src & (cand >= lb) & (cand < ub)
+        fail = None
+        if alt_lb is not None:
+            # the per-round bound recompute the fused kernel performs
+            # from its resident dist
+            bound = jnp.minimum(jnp.float32(prune_ub),
+                                dist[prune_tgt] * jnp.float32(prune_infl))
+            fail = cand + alt_lb[dst] > bound
+        trav, rlx, sched_n, prn = _slab_counters(
+            pa_src, w, dst, parent[src], ok, tile_first, tile_e, fail)
+        if fail is not None:
+            ok = ok & ~fail
         cand = jnp.where(ok, cand, jnp.inf)
         best = jax.ops.segment_min(cand, dst, num_segments=n_out)
         win = jnp.where(ok & (cand <= best[dst]), src, INT_MAX)
         winner = jax.ops.segment_min(win, dst, num_segments=n_out)
         improved = best < dist
-        trav, rlx, sched_n = _slab_counters(pa_src, w, dst, parent[src],
-                                            ok, tile_first, tile_e)
         cnt = cnt + jnp.stack([
             trav, rlx,
             jnp.sum(improved.astype(jnp.int32)),
             jnp.sum((improved & (deg > 1)).astype(jnp.int32)),
             jnp.any(front > 0).astype(jnp.int32),
-            sched_n, jnp.int32(1), jnp.int32(0)])
+            sched_n, jnp.int32(1), prn])
         go = (jnp.any(improved) & (r + 1 < maxr)).astype(jnp.int32)
         return (jnp.where(improved, best, dist),
                 jnp.where(improved, winner, parent),
@@ -92,9 +120,9 @@ def edge_relax_fused_ref(dist, parent, frontier, deg, src, dst, w,
 
 
 def edge_relax_partials_ref(dist_src, paths_src, parent_src, src, dst, w,
-                            tile_dst, tile_first, lb, ub, *,
-                            block_v: int = 512, tile_e: int = 512,
-                            n_dst_blocks: int = 1):
+                            tile_dst, tile_first, lb, ub, alt_lb=None,
+                            prune_bound=None, *, block_v: int = 512,
+                            tile_e: int = 512, n_dst_blocks: int = 1):
     """Arrays-only twin of :func:`..edge_relax.edge_relax_partials`:
     one-shot (min, winner) partials over a whole slab set plus the
     ``PARTIAL_COUNTERS`` vector."""
@@ -102,11 +130,16 @@ def edge_relax_partials_ref(dist_src, paths_src, parent_src, src, dst, w,
     pa_src = paths_src[src] > 0
     cand = dist_src[src] + w
     ok = pa_src & (cand >= lb) & (cand < ub)
+    fail = None
+    if alt_lb is not None:
+        fail = cand + alt_lb[dst] > prune_bound
+    trav, rlx, sched_n, prn = _slab_counters(
+        pa_src, w, dst, parent_src[src], ok, tile_first, tile_e, fail)
+    if fail is not None:
+        ok = ok & ~fail
     cand = jnp.where(ok, cand, jnp.inf)
     best = jax.ops.segment_min(cand, dst, num_segments=n_out)
     win = jnp.where(ok & (cand <= best[dst]), src, INT_MAX)
     winner = jax.ops.segment_min(win, dst, num_segments=n_out)
-    trav, rlx, sched_n = _slab_counters(pa_src, w, dst, parent_src[src],
-                                        ok, tile_first, tile_e)
-    cnt = jnp.stack([trav, rlx, sched_n, jnp.int32(0)])
+    cnt = jnp.stack([trav, rlx, sched_n, prn])
     return best, winner, cnt

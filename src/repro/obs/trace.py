@@ -59,6 +59,7 @@ TRACE_I32_COLUMNS = (
     "n_pull_trav",
     "n_relax",
     "n_updates",
+    "n_pruned",
 )
 
 # float32 columns: the stepping window at the start of the iteration and
@@ -77,8 +78,8 @@ TRACE_COLUMNS = TRACE_I32_COLUMNS + TRACE_F32_COLUMNS
 # reproduces the final SsspMetrics field exactly.
 TRACE_COUNTER_COLUMNS = (
     "n_rounds", "n_steps", "n_extended", "n_trav", "n_pull_trav",
-    "n_relax", "n_updates", "n_tiles_scanned", "n_tiles_dense",
-    "n_invocations",
+    "n_relax", "n_updates", "n_pruned", "n_tiles_scanned",
+    "n_tiles_dense", "n_invocations",
 )
 
 

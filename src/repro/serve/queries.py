@@ -126,10 +126,21 @@ def finalize(q: Query, deg: np.ndarray, dist: np.ndarray,
     if q.kind == "p2p":
         res.distance = float(dist[q.target])
         res.path = reconstruct_path(parent, q.source, q.target)
-        # entries <= dist[target] are settled (tentative values are >= the
-        # exit window's lb > dist[target]); mask the rest so the arrays
-        # never expose a non-final value
-        keep = dist <= dist[q.target]
+        if int(np.asarray(getattr(raw_metrics, "n_pruned", 0))) > 0:
+            # ALT-pruned run: the engine only guarantees dist[target] and
+            # its parent chain — an off-path vertex's final improvement
+            # may have been pruned (it provably could not better d(s,t)),
+            # leaving a stale value that still sits <= dist[target].
+            # Keep exactly the reconstructed path.
+            keep = np.zeros(dist.shape, bool)
+            if res.path is not None:
+                keep[np.asarray(res.path, np.int64)] = True
+            keep[q.source] = True
+        else:
+            # entries <= dist[target] are settled (tentative values are
+            # >= the exit window's lb > dist[target]); mask the rest so
+            # the arrays never expose a non-final value
+            keep = dist <= dist[q.target]
     elif q.kind == "bounded":
         keep = dist <= q.bound
     elif q.kind == "knear":

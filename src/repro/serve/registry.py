@@ -49,7 +49,7 @@ from typing import Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 import jax
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from ..core import relax
 from ..core.config import EngineConfig, resolve_devices
@@ -57,6 +57,7 @@ from ..core.distributed import (blocked_specs, graph_specs, shard_blocked,
                                 shard_graph, sssp_distributed_batch,
                                 ShardedGraph)
 from ..core.graph import DeviceGraph, HostGraph
+from ..core.landmarks import LandmarkSet, build_landmarks, hop_bfs
 from ..core.sssp import GOALS, sssp_batch
 from ..obs import profiling
 from ..obs.metrics import MetricsRegistry
@@ -83,30 +84,8 @@ class _StrongRef:
         return self._cb
 
 
-def _hop_bfs(row_ptr: np.ndarray, dst: np.ndarray, n: int,
-             root: int) -> np.ndarray:
-    """Hop distances from ``root`` (-1 where unreached), vectorized BFS."""
-    hop = np.full(n, -1, np.int64)
-    frontier = np.array([root], np.int64)
-    hop[frontier] = 0
-    level = 0
-    while frontier.size:
-        starts = row_ptr[frontier]
-        counts = row_ptr[frontier + 1] - starts
-        total = int(counts.sum())
-        if total == 0:
-            break
-        offsets = np.repeat(
-            starts - np.concatenate(([0], np.cumsum(counts)[:-1])), counts)
-        nbrs = dst[offsets + np.arange(total)]
-        nbrs = np.unique(nbrs[hop[nbrs] < 0])
-        level += 1
-        hop[nbrs] = level
-        frontier = nbrs
-    return hop
-
-
-def estimate_eccentricity(hg, n_landmarks: int = 4) -> np.ndarray:
+def estimate_eccentricity(hg, n_landmarks: int = 4,
+                          landmarks=None) -> np.ndarray:
     """Per-vertex eccentricity estimate, in hops (host-side, O(k(N + M))).
 
     One hop-BFS from a landmark ``L_i`` gives hop distances ``h_i(v)``;
@@ -121,17 +100,27 @@ def estimate_eccentricity(hg, n_landmarks: int = 4) -> np.ndarray:
     more stepping rounds, so grouping nearby estimates keeps a vmapped
     batch from paying one outlier's rounds.  Vertices disconnected from
     a landmark take ``2 * H_i + 1`` for it (worst bucket).
+
+    ``landmarks`` overrides the vantage points with explicit vertex ids
+    — an engine that already carries an ALT
+    :class:`~repro.core.landmarks.LandmarkSet` reuses its choices, so
+    the hint BFS and the ALT preprocessing agree on one landmark set.
     """
     n = hg.n
     if n == 0:
         return np.zeros(0, np.float32)
-    if n_landmarks < 1:
-        raise ValueError("n_landmarks must be >= 1")
     row_ptr = np.asarray(hg.row_ptr, np.int64)
     dst = np.asarray(hg.dst, np.int64)
-    deg = np.asarray(hg.deg)
-    # k distinct max-degree landmarks, ties broken by vertex id (stable)
-    landmarks = np.argsort(-deg, kind="stable")[:min(n_landmarks, n)]
+    if landmarks is None:
+        if n_landmarks < 1:
+            raise ValueError("n_landmarks must be >= 1")
+        deg = np.asarray(hg.deg)
+        # k distinct max-degree landmarks, ties broken by id (stable)
+        landmarks = np.argsort(-deg, kind="stable")[:min(n_landmarks, n)]
+    else:
+        landmarks = np.asarray(landmarks, np.int64)
+        if landmarks.size < 1:
+            raise ValueError("landmarks must be non-empty")
     # max over the landmarks that actually *reach* a vertex: on a
     # disconnected graph a foreign component's landmark would otherwise
     # contribute a flat disconnection constant that swamps the local
@@ -140,7 +129,7 @@ def estimate_eccentricity(hg, n_landmarks: int = 4) -> np.ndarray:
     ecc = np.full(n, -1, np.int64)
     worst = 1
     for lm in landmarks:
-        hop = _hop_bfs(row_ptr, dst, n, int(lm))
+        hop = hop_bfs(row_ptr, dst, n, int(lm))
         h_max = int(hop.max())
         ecc = np.where(hop >= 0, np.maximum(ecc, h_max + hop), ecc)
         worst = max(worst, 2 * h_max + 1)
@@ -168,13 +157,18 @@ class _EngineBase:
         self._batch_hint: Optional[np.ndarray] = None
         self._hint_lock = threading.Lock()
         self.generation = 0     # registry spec generation (stamped on build)
+        self.landmarks: Optional[LandmarkSet] = None   # ALT artifact
 
     @property
     def ecc_hint(self) -> np.ndarray:
         """Lazy landmark-BFS eccentricity estimates (only ecc-aware batch
-        formation reads these; FIFO consumers never pay the BFS)."""
+        formation reads these; FIFO consumers never pay the BFS).  An
+        engine carrying an ALT :class:`LandmarkSet` reuses its landmark
+        choices as the BFS vantage points."""
         if self._ecc_hint is None:
-            self._ecc_hint = estimate_eccentricity(self.host)
+            lm = (self.landmarks.landmarks
+                  if self.landmarks is not None else None)
+            self._ecc_hint = estimate_eccentricity(self.host, landmarks=lm)
         return self._ecc_hint
 
     @property
@@ -223,7 +217,8 @@ class GraphEngine(_EngineBase):
     def __init__(self, gid: str, hg, backend: str,
                  alpha: float, beta: float, device=None,
                  max_iters: int = 1_000_000, fused_rounds: int = 0,
-                 policy: str = "static", **backend_opts):
+                 policy: str = "static", landmarks=None,
+                 p2p_mode: str = "unidirectional", **backend_opts):
         super().__init__()
         self.gid = gid
         self.host = hg
@@ -231,9 +226,15 @@ class GraphEngine(_EngineBase):
         self.max_iters = max_iters
         self.fused_rounds = fused_rounds
         self.policy = policy
+        self.p2p_mode = p2p_mode
         g = hg.to_device() if isinstance(hg, HostGraph) else hg
         if device is not None:
             g = jax.device_put(g, device)
+            if landmarks is not None:
+                # device-affine engines keep the ALT matrix beside the
+                # graph so the jitted p2p batch never transfers it
+                landmarks = landmarks.placed(device)
+        self.landmarks = landmarks
         self.g: DeviceGraph = g
         self.backend = relax.get_backend(backend)
         layout = self.backend.prepare(self.g, **backend_opts)
@@ -252,13 +253,20 @@ class GraphEngine(_EngineBase):
         async, so a caller can overlap host-side work with the device
         computation (the scheduler's double buffering) and force them
         with ``np.asarray`` only when needed."""
+        alt = {}
+        if goal == "p2p" and self.landmarks is not None:
+            alt["landmarks"] = self.landmarks
+            if self.p2p_mode == "bidirectional":
+                # bidirectional validates as a config only with ALT on
+                alt["p2p_mode"] = self.p2p_mode
+                alt["use_alt"] = True
         return sssp_batch(
             self.g, np.asarray(sources, np.int32), backend=self.backend,
             layout=self.layout, alpha=self.alpha, beta=self.beta,
             max_iters=self.max_iters,
             fused_rounds=self.fused_rounds or None,
             policy=None if self.policy == "static" else self.policy,
-            goal=goal, goal_params=goal_params)
+            goal=goal, goal_params=goal_params, **alt)
 
 
 class ShardedGraphEngine(_EngineBase):
@@ -288,7 +296,7 @@ class ShardedGraphEngine(_EngineBase):
                  devices=None, version: str = "v2", fused_rounds: int = 0,
                  backend: str = "segment_min", capacity: int = 0,
                  max_iters: int = 1_000_000, policy: str = "static",
-                 **blocked_opts):
+                 landmarks=None, **blocked_opts):
         super().__init__()
         self.gid = gid
         self.host = hg
@@ -317,10 +325,17 @@ class ShardedGraphEngine(_EngineBase):
                 jax.device_put(x, NamedSharding(self.mesh, s))
                 for x, s in zip(arrays, blocked_specs("graph"))))
             self.blocked = (arrays, bmeta)
+        if landmarks is not None:
+            # the ALT matrix is replicated across the mesh: every shard
+            # prunes with the full per-vertex bound vector
+            landmarks = landmarks.placed(
+                NamedSharding(self.mesh, PartitionSpec()))
+        self.landmarks = landmarks
 
     def run_batch(self, sources, goal: str = "tree", goal_params=None):
         """Same contract as :meth:`GraphEngine.run_batch` (leading slot
         axis, device arrays); padding vertices are sliced off."""
+        lm = self.landmarks if goal == "p2p" else None
         dist, parent, metrics = sssp_distributed_batch(
             self.sg, np.asarray(sources, np.int32), self.mesh, ("graph",),
             version=self.version, fused_rounds=self.fused_rounds,
@@ -328,7 +343,7 @@ class ShardedGraphEngine(_EngineBase):
             alpha=self.alpha, beta=self.beta,
             policy=None if self.policy == "static" else self.policy,
             goal=goal, goal_params=goal_params, backend=self.backend,
-            blocked=self.blocked)
+            blocked=self.blocked, landmarks=lm)
         return dist[:, :self.n], parent[:, :self.n], metrics
 
 
@@ -473,6 +488,10 @@ class GraphRegistry:
         self._engines: "collections.OrderedDict[tuple, object]" \
             = collections.OrderedDict()
         self._building: Dict[tuple, Future] = {}
+        # per-gid ALT landmark sets (see repro.core.landmarks): built
+        # once per (gid, generation, params) and shared by every engine
+        # variant of the gid — backend/device replicas reuse one build
+        self._landmark_sets: Dict[str, LandmarkSet] = {}
         # the metrics registry is the shared sink for the whole serving
         # plane: schedulers/routers built on top of this registry default
         # to it, so one snapshot covers every layer
@@ -523,6 +542,10 @@ class GraphRegistry:
             self._gens[gid] = gen = self._gens.get(gid, 0) + 1
             for key in [k for k in self._engines if k[0] == gid]:
                 del self._engines[key]
+            # the ALT artifact belongs to the replaced spec: a rebuild
+            # against the new spec is forced by the generation stamp,
+            # dropping eagerly just frees the [L, N] matrix sooner
+            self._landmark_sets.pop(gid, None)
             # detach in-flight builds of the old spec: lookups from here
             # on start a fresh build of the new spec instead of attaching
             # to a stale future (the old build's owner only resolves its
@@ -678,6 +701,48 @@ class GraphRegistry:
         fut.set_result(eng)
         return eng
 
+    # ------------------------------------------------------------------
+    # ALT landmark sets
+    # ------------------------------------------------------------------
+
+    def landmark_set(self, gid: str, hg=None, *,
+                     n_landmarks: Optional[int] = None,
+                     strategy: Optional[str] = None) -> LandmarkSet:
+        """Get-or-build the gid's ALT :class:`LandmarkSet`.
+
+        The cache is per-gid and validated on every lookup against the
+        spec generation and the build parameters: a re-``register`` (new
+        generation) or a changed ``n_landmarks``/``landmark_strategy``
+        (a tuned overlay, say) rebuilds; otherwise every engine variant
+        of the gid — backends, device replicas, both tiers — shares one
+        ``[L, N]`` build.  ``hg`` avoids re-invoking a factory spec when
+        the caller already holds the host graph.
+        """
+        if n_landmarks is None:
+            n_landmarks = self.config.n_landmarks
+        if strategy is None:
+            strategy = self.config.landmark_strategy
+        with self._lock:
+            if gid not in self._specs:
+                raise KeyError(f"graph {gid!r} is not registered "
+                               f"(have: {sorted(self._specs)})")
+            gen = self._gens[gid]
+            spec = self._specs[gid]
+            lm = self._landmark_sets.get(gid)
+            if (lm is not None and lm.generation == gen
+                    and lm.params() == (min(n_landmarks, int(lm.D.shape[1])),
+                                        strategy)):
+                return lm
+        # build outside the lock (a tree-solve batch over the landmarks)
+        if hg is None:
+            hg = spec() if callable(spec) else spec
+        with profiling.annotate(f"repro:landmark_build:{gid}"):
+            lm = build_landmarks(hg, n_landmarks, strategy, generation=gen)
+        with self._lock:
+            if self._gens.get(gid) == gen:      # not re-registered mid-build
+                self._landmark_sets[gid] = lm
+        return lm
+
     def _build(self, gid, spec, backend, device, tier):
         with profiling.annotate(f"repro:engine_build:{gid}:{tier}"):
             return self._build_inner(gid, spec, backend, device, tier)
@@ -694,6 +759,10 @@ class GraphRegistry:
             if tuned_cfg != cfg:
                 cfg = tuned_cfg
                 self._tuned_builds.inc()
+        lm = None
+        if cfg.use_alt:
+            lm = self.landmark_set(gid, hg, n_landmarks=cfg.n_landmarks,
+                                   strategy=cfg.landmark_strategy)
         if tier == "sharded":
             # only the blocked layout's geometry opts apply mesh-side
             blocked_opts = {k: v for k, v in self.backend_opts.items()
@@ -713,7 +782,7 @@ class GraphRegistry:
                                       capacity=cfg.compact_capacity,
                                       max_iters=self.max_iters,
                                       backend=backend, policy=cfg.policy,
-                                      **blocked_opts)
+                                      landmarks=lm, **blocked_opts)
         backend_opts = dict(self.backend_opts)
         is_blocked = relax.get_backend(backend).name == "blocked_pallas"
         if is_blocked:
@@ -729,6 +798,7 @@ class GraphRegistry:
         return GraphEngine(gid, hg, backend, cfg.alpha, cfg.beta,
                            device=device, max_iters=self.max_iters,
                            fused_rounds=fused, policy=cfg.policy,
+                           landmarks=lm, p2p_mode=cfg.p2p_mode,
                            **backend_opts)
 
     def evict(self, gid: str, backend: Optional[str] = None,

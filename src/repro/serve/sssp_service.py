@@ -9,8 +9,9 @@ synchronous :class:`~repro.serve.scheduler.QueryScheduler` step per
 legacy endpoint scales across a mesh (and serves sharded-tier graphs —
 pass ``shard_threshold_n``/``shard_threshold_m`` through to the
 registry).  New code should use the registry/router/queries stack
-directly (multi-graph, async admission, p2p/bounded/k-nearest early-exit
-queries); this facade only speaks full shortest-path trees, FIFO.
+directly (multi-graph, async admission); this facade admits FIFO
+requests of any goal kind — mixed kinds batch as plan-compatible
+sub-batches, one fused batch per kind.
 """
 from __future__ import annotations
 
@@ -33,12 +34,25 @@ _GID = "default"
 
 @dataclasses.dataclass
 class SsspRequest:
-    """One shortest-path-tree query against the service's graph."""
+    """One shortest-path query against the service's graph.
+
+    ``kind`` defaults to the facade's historical full-tree query; p2p /
+    bounded / knear requests carry their goal parameter and may be
+    freely mixed in one submission wave — the scheduler forms
+    plan-compatible sub-batches (one fused batch per goal kind), so a
+    mixed queue costs extra batch steps, never an error."""
     rid: int
     source: int
+    kind: str = "tree"
+    target: Optional[int] = None           # p2p
+    bound: Optional[float] = None          # bounded
+    k: Optional[int] = None                # knear
     dist: Optional[np.ndarray] = None      # filled on completion
     parent: Optional[np.ndarray] = None
     metrics: Optional[dict] = None
+    distance: Optional[float] = None       # p2p: dist[target]
+    path: Optional[list] = None            # p2p: source..target ids
+    nearest: Optional[list] = None         # knear: [(vertex, dist)]
     error: Optional[Exception] = None      # set instead, on failure
 
     @property
@@ -136,7 +150,8 @@ class SsspService:
         return self.scheduler.n_batches
 
     def submit(self, req: SsspRequest) -> SsspRequest:
-        q = Query(gid=_GID, source=int(req.source))
+        q = Query(gid=_GID, source=int(req.source), kind=req.kind,
+                  target=req.target, bound=req.bound, k=req.k)
         fut = (self.router.submit(q) if self.router is not None
                else self.scheduler.submit(q))
         self._inflight.append((req, fut))
@@ -155,6 +170,9 @@ class SsspService:
                 req.dist = res.dist
                 req.parent = res.parent
                 req.metrics = res.metrics
+                req.distance = res.distance
+                req.path = res.path
+                req.nearest = res.nearest
         self._inflight = remaining
 
     def step(self) -> bool:

@@ -70,13 +70,20 @@ class TuneResult:
         return 1.0 - self.best_objective / self.baseline_objective
 
 
-def default_space(base: EngineConfig, n: int) -> dict:
+def default_space(base: EngineConfig, n: int, goal: str = "tree") -> dict:
     """The searched axes for ``base`` on an ``n``-vertex graph.
 
     Axes that the base engine cannot carry (blocked geometry on a
     segment_min engine, ``compact_capacity`` off v3) are omitted up
     front; individual invalid combinations that survive are caught per
     candidate and counted as ``invalid``.
+
+    ``goal="p2p"`` adds the goal-directed axes —
+    ``use_alt``/``n_landmarks``/``p2p_mode`` — which only move p2p
+    probes (ALT bounds need a target, so a tree objective cannot score
+    them).  Invalid combinations the sweep proposes (bidirectional
+    without ALT or off the static policy, bidirectional on a sharded
+    tier) are rejected by config validation and counted as ``invalid``.
     """
     space = {
         "alpha": (1.5, 3.0, 6.0, 12.0),
@@ -93,6 +100,11 @@ def default_space(base: EngineConfig, n: int) -> dict:
         space["tile_e"] = (None, 128, 512)
     if sharded and base.shard_version == "v3":
         space["compact_capacity"] = (0, 32, 128)
+    if goal == "p2p":
+        space["use_alt"] = (False, True)
+        space["n_landmarks"] = (4, 8, 16)
+        if not sharded:
+            space["p2p_mode"] = ("unidirectional", "bidirectional")
     return space
 
 
@@ -118,6 +130,31 @@ def _evaluate(graph, config: EngineConfig, sources,
     return np.stack(dists), np.stack(parents), obj
 
 
+def _evaluate_p2p(graph, config: EngineConfig, pairs):
+    """Score ``config`` on p2p probe pairs by the engine's own counters.
+
+    The trace plane stays off (``p2p_mode="bidirectional"`` forbids it),
+    so the objective is the raw work proxy ``n_rounds + n_relax`` summed
+    over the pairs.  Returns ``(distances [P], paths, objective)`` —
+    the p2p *contract* surface: ALT pruning deliberately leaves
+    off-path dist entries tentative, so full-array parity would reject
+    every pruned candidate; d(s, t) and the reconstructed path are what
+    must stay bitwise-stable.  Module-level so tests can monkeypatch.
+    """
+    from ..api import SolveSpec, Solver
+
+    dists, paths, cost = [], [], 0.0
+    with Solver.open(graph, config) as s:
+        for src, tgt in pairs:
+            res = s.solve(SolveSpec.p2p(int(src), int(tgt)))
+            dists.append(np.float32(res.distance()))
+            paths.append(res.paths())
+            m = res.metrics
+            cost += float(np.asarray(m.n_rounds)) \
+                + float(np.asarray(m.n_relax))
+    return np.asarray(dists), paths, cost
+
+
 def _probe_sources(graph, n_sources: int, rng) -> list:
     """Deterministic probe set: the max-degree vertex (the hard solve)
     plus seeded uniform picks."""
@@ -133,7 +170,7 @@ def _probe_sources(graph, n_sources: int, rng) -> list:
 
 def tune(graph, base: Optional[EngineConfig] = None, *, gid: str = "default",
          budget: int = 24, seed: int = 0, restarts: int = 1,
-         n_sources: int = 3, sources=None,
+         n_sources: int = 3, sources=None, goal: str = "tree",
          weights: ObjectiveWeights = DEFAULT_WEIGHTS,
          space: Optional[dict] = None, store: Optional[TunedStore] = None,
          metrics=None, jsonl_path=None,
@@ -148,13 +185,37 @@ def tune(graph, base: Optional[EngineConfig] = None, *, gid: str = "default",
     (even when it ties the default: the entry records the tune
     happened).  ``metrics``/``jsonl_path`` export the trajectory through
     the observability plane.
+
+    ``goal="p2p"`` tunes for point-to-point traffic instead: probes are
+    seeded (source, target) pairs scored by engine counters
+    (:func:`_evaluate_p2p`), the space gains the goal-directed
+    ``use_alt``/``n_landmarks``/``p2p_mode`` axes, and the parity gate
+    is the p2p contract — d(s, t) bitwise + the identical reconstructed
+    path (ALT pruning leaves off-path entries tentative by design).
     """
+    if goal not in ("tree", "p2p"):
+        raise ValueError(f"tune goal must be 'tree' or 'p2p', got {goal!r}")
     base = base if base is not None else EngineConfig()
     n = int(np.asarray(graph.deg).shape[0])
-    space = dict(space) if space is not None else default_space(base, n)
+    space = (dict(space) if space is not None
+             else default_space(base, n, goal))
     rng = np.random.default_rng(seed)
     srcs = (list(map(int, sources)) if sources is not None
             else _probe_sources(graph, n_sources, rng))
+    if goal == "p2p":
+        tgts = []
+        for s_ in srcs:
+            t_ = int(rng.integers(0, n))
+            while n > 1 and t_ == s_:
+                t_ = int(rng.integers(0, n))
+            tgts.append(t_)
+        pairs = list(zip(srcs, tgts))
+
+        def evaluate(cfg):
+            return _evaluate_p2p(graph, cfg, pairs)
+    else:
+        def evaluate(cfg):
+            return _evaluate(graph, cfg, srcs, weights, trace_capacity)
 
     if metrics is None:
         from ..obs.metrics import MetricsRegistry
@@ -173,6 +234,9 @@ def tune(graph, base: Optional[EngineConfig] = None, *, gid: str = "default",
                            labels={"gid": gid})
 
     trajectory = []
+    # trajectory rows show the overlay fields plus every searched axis
+    # (the p2p goal-directed axes are searched but not overlaid)
+    log_fields = tuple(dict.fromkeys(TUNED_FIELDS + tuple(space)))
 
     def log_row(row):
         trajectory.append(row)
@@ -182,16 +246,16 @@ def tune(graph, base: Optional[EngineConfig] = None, *, gid: str = "default",
                                     "seed": seed, "ts": time.time(), **row})
                         + "\n")
 
-    # baseline = incumbent: its dist/parent are the parity reference
-    ref_dist, ref_parent, base_obj = _evaluate(graph, base, srcs, weights,
-                                               trace_capacity)
+    # baseline = incumbent: its dist/parent (p2p: distances/paths) are
+    # the parity reference
+    ref_dist, ref_parent, base_obj = evaluate(base)
     c_cand.inc()
     g_best.set(base_obj)
     n_evals, n_par, n_inv = 1, 0, 0
     best, best_obj = base, base_obj
     log_row({"eval": 0, "origin": "baseline", "objective": base_obj,
              "accepted": True, "parity": True,
-             "config": {f: getattr(base, f) for f in TUNED_FIELDS}})
+             "config": {f: getattr(base, f) for f in log_fields}})
 
     def try_candidate(cand: EngineConfig, origin: str) -> bool:
         """Evaluate one candidate; returns whether it became the best."""
@@ -202,11 +266,12 @@ def tune(graph, base: Optional[EngineConfig] = None, *, gid: str = "default",
             n_inv += 1
             c_inv.inc()
             return False
-        d, p, obj = _evaluate(graph, cand, srcs, weights, trace_capacity)
+        d, p, obj = evaluate(cand)
         n_evals += 1
         c_cand.inc()
         parity = (np.array_equal(d, ref_dist)
-                  and np.array_equal(p, ref_parent))
+                  and (p == ref_parent if goal == "p2p"
+                       else np.array_equal(p, ref_parent)))
         accepted = parity and obj < best_obj - 1e-9
         if not parity:
             n_par += 1
@@ -217,7 +282,7 @@ def tune(graph, base: Optional[EngineConfig] = None, *, gid: str = "default",
             g_best.set(best_obj)
         log_row({"eval": n_evals - 1, "origin": origin, "objective": obj,
                  "accepted": accepted, "parity": parity,
-                 "config": {f: getattr(cand, f) for f in TUNED_FIELDS}})
+                 "config": {f: getattr(cand, f) for f in log_fields}})
         return accepted
 
     def replace_valid(cfg, **kw):
@@ -263,9 +328,12 @@ def tune(graph, base: Optional[EngineConfig] = None, *, gid: str = "default",
         n_parity_rejects=n_par, n_invalid=n_inv, seed=seed,
         trajectory=tuple(trajectory))
     if store is not None:
+        meta = {"seed": seed, "n_evals": n_evals, "sources": srcs,
+                "goal": goal}
+        if goal == "p2p":
+            meta["targets"] = tgts
         store.put(gid, graph, best, objective=best_obj, baseline=base_obj,
-                  meta={"seed": seed, "n_evals": n_evals,
-                        "sources": srcs})
+                  meta=meta)
     if jsonl_path:
         from ..obs.export import write_jsonl_snapshot
         write_jsonl_snapshot(metrics.snapshot(), jsonl_path,

@@ -34,7 +34,7 @@ TUNED_FIELDS = ("alpha", "beta", "policy", "fused_rounds",
 _STORE_VERSION = 1
 
 
-def graph_fingerprint(g) -> str:
+def graph_fingerprint(g, config: Optional[EngineConfig] = None) -> str:
     """Cheap content fingerprint of a Host/DeviceGraph.
 
     Hashes the structural shape (n, directed slot count), the degree
@@ -43,6 +43,14 @@ def graph_fingerprint(g) -> str:
     weights move at least one of these with overwhelming probability,
     while the fingerprint stays O(N) to compute and identical between
     the host and device forms of the same graph.
+
+    With ``config`` carrying ``use_alt=True``, the landmark-set
+    parameters (``n_landmarks``/``landmark_strategy``/``p2p_mode``) are
+    folded in as well: a winner tuned under ALT goal-directed pruning
+    was scored against *those* bounds, so it must read as stale — not
+    silently apply — when served with ALT off or a different landmark
+    set.  ALT-off configs leave the hash unchanged (pre-ALT store files
+    stay valid).
     """
     deg = np.asarray(g.deg)
     rtow = np.asarray(g.rtow, np.float32)
@@ -51,6 +59,10 @@ def graph_fingerprint(g) -> str:
     h.update(np.bincount(np.clip(deg, 0, 255), minlength=256)
              .astype(np.int64).tobytes())
     h.update(rtow.tobytes())
+    if config is not None and getattr(config, "use_alt", False):
+        h.update(repr(("alt", int(config.n_landmarks),
+                       str(config.landmark_strategy),
+                       str(config.p2p_mode))).encode())
     return h.hexdigest()[:16]
 
 
@@ -107,9 +119,11 @@ class TunedStore:
             objective: Optional[float] = None,
             baseline: Optional[float] = None, meta: Optional[dict] = None
             ) -> None:
-        """Record ``config`` as the winner for ``(gid, graph)``."""
+        """Record ``config`` as the winner for ``(gid, graph)``.  The
+        stored fingerprint folds the winner's own landmark-set
+        parameters (see :func:`graph_fingerprint`)."""
         entry = {
-            "fingerprint": graph_fingerprint(graph),
+            "fingerprint": graph_fingerprint(graph, config),
             "config": _config_to_json(config),
         }
         if objective is not None:
@@ -122,21 +136,26 @@ class TunedStore:
             self._load_locked()["entries"][gid] = entry
             self._save_locked()
 
-    def get(self, gid: str, graph=None) -> Optional[EngineConfig]:
+    def get(self, gid: str, graph=None,
+            config: Optional[EngineConfig] = None) -> Optional[EngineConfig]:
         """The tuned config for ``gid``, or ``None``.
 
         With ``graph`` given, the stored fingerprint must match the
         graph's current fingerprint — a stale entry (graph changed since
         the tune) returns ``None`` so callers fall back to defaults.
-        An entry whose stored config no longer constructs (field drift
-        across versions) also returns ``None``.
+        ``config`` is the *live serving* config: its landmark-set
+        parameters enter the fingerprint (see :func:`graph_fingerprint`),
+        so an entry tuned with ALT on never applies when serving with
+        ALT off or a different landmark set, and vice versa.  An entry
+        whose stored config no longer constructs (field drift across
+        versions) also returns ``None``.
         """
         with self._lock:
             entry = self._load_locked()["entries"].get(gid)
         if entry is None:
             return None
         if graph is not None and entry["fingerprint"] != \
-                graph_fingerprint(graph):
+                graph_fingerprint(graph, config):
             return None
         known = {f.name for f in dataclasses.fields(EngineConfig)}
         kwargs = {k: v for k, v in entry["config"].items() if k in known}
@@ -176,7 +195,7 @@ class TunedStore:
         progressively smaller overlays — params-only, then the original
         config — rather than failing the build.
         """
-        tuned = self.get(gid, graph)
+        tuned = self.get(gid, graph, config)
         if tuned is None:
             return config
         full = {f: getattr(tuned, f) for f in TUNED_FIELDS}
