@@ -359,6 +359,99 @@ def run_distributed(g, sources, alpha=3.0, beta=0.9, version="v2",
     return avg
 
 
+def make_edit_batch(g, frac: float, seed: int = 0):
+    """A reproducible mixed edit batch touching ``frac`` of the graph's
+    undirected edges: one third weight increases (x1.3), one third
+    decreases (x0.7), one third removals — the streaming-update
+    benchmark's workload shape.  Picks are deduplicated on the
+    undirected key so symmetrized duplicates never collide."""
+    from repro.delta import EdgeDelta
+
+    src = np.asarray(g.src, np.int64)
+    dst = np.asarray(g.dst, np.int64)
+    w = np.asarray(g.w, np.float32)
+    und = np.nonzero(src < dst)[0]
+    key = src[und] * int(g.n) + dst[und]
+    _, first = np.unique(key, return_index=True)
+    und = und[np.sort(first)]
+    n_edits = max(int(frac * und.size), 1)
+    rng = np.random.default_rng(seed)
+    pick = rng.choice(und, size=min(n_edits, und.size), replace=False)
+    n3 = max(pick.size // 3, 1)
+    rw = [(int(src[e]), int(dst[e]), float(np.float32(w[e]) * 1.3))
+          for e in pick[:n3]]
+    rw += [(int(src[e]), int(dst[e]), float(np.float32(w[e]) * 0.7))
+           for e in pick[n3:2 * n3]]
+    rem = [(int(src[e]), int(dst[e])) for e in pick[2 * n3:]]
+    return EdgeDelta(remove=rem, reweight=rw)
+
+
+def run_delta_repair(g, fracs=(0.01, 0.0025), seed=0):
+    """Streaming-update benchmark on one graph: per edit-batch fraction,
+    patch the graph + blocked layout in place and repair the previous
+    solve, against a from-scratch recompute on the patched graph.
+
+    Reports, per fraction: patch/repair/recompute wall times, the
+    relaxation counts of repair vs recompute (``relax_reduction`` is the
+    headline — repaired work / full work), the invalidated-vertex and
+    reseeded-frontier sizes, whether the patched blocked layout was
+    produced by the in-place fast path, and the bitwise dist+parent
+    parity verdict (repair must be indistinguishable from recompute).
+    """
+    from repro.core.sssp import prepare_layout, sssp
+    from repro.delta import patch_blocked_with, patch_host, repair
+
+    src_v = int(np.argmax(np.asarray(g.deg)))
+    dg = g.to_device()
+    d0, p0, _ = sssp(dg, src_v)
+    jax.block_until_ready(d0)
+    lay0 = prepare_layout(dg, "blocked")
+    out = []
+    for frac in fracs:
+        delta = make_edit_batch(g, frac, seed=seed)
+        t0 = time.perf_counter()
+        new_host, applied = patch_host(g, delta)
+        t_host = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        patch_blocked_with(lay0, g, new_host, applied)
+        t_layout = time.perf_counter() - t0
+        g_new = new_host.to_device()
+        # compile outside the timed region (first trace on new shapes)
+        d_f, p_f, m_f = sssp(g_new, src_v)
+        jax.block_until_ready(d_f)
+        t0 = time.perf_counter()
+        d_f, p_f, m_f = sssp(g_new, src_v)
+        jax.block_until_ready(d_f)
+        t_full = time.perf_counter() - t0
+        d_r, p_r, m_r, st = repair(g_new, new_host, d0, p0, applied)
+        jax.block_until_ready(d_r)
+        t0 = time.perf_counter()
+        d_r, p_r, m_r, st = repair(g_new, new_host, d0, p0, applied)
+        jax.block_until_ready(d_r)
+        t_repair = time.perf_counter() - t0
+        bitwise = (np.asarray(d_r).tobytes() == np.asarray(d_f).tobytes()
+                   and np.asarray(p_r).tobytes()
+                   == np.asarray(p_f).tobytes())
+        out.append({
+            "frac": frac,
+            "n_edits": applied.n_edits // 2,
+            "n_invalid": int(st.n_invalid),
+            "n_seeds": int(st.n_seeds),
+            "fast_path": bool(st.fast_path),
+            "patch_host_s": t_host,
+            "patch_layout_s": t_layout,
+            "time_s": t_repair,
+            "time_s_full": t_full,
+            "relax_repair": int(m_r.n_relax),
+            "relax_full": int(m_f.n_relax),
+            "relax_reduction": int(m_f.n_relax) / max(int(m_r.n_relax), 1),
+            "rounds_repair": int(m_r.n_rounds),
+            "rounds_full": int(m_f.n_rounds),
+            "bitwise_equal": bool(bitwise),
+        })
+    return out
+
+
 def run_baseline(kind, g, sources, delta=None):
     dg = g.to_device()
     fn = {

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run [--scale 14] [--sources 4]
         [--backend segment_min|blocked_pallas] [--batch 4]
         [--full-variants]
-        [--sections fig4,fig5,fig6,table3,backends,roofline,serving,p2p,tuner]
+        [--sections fig4,fig5,fig6,table3,backends,roofline,serving,p2p,
+         delta,tuner]
         [--open-loop]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per graph x metric) and
@@ -55,6 +56,18 @@ Sections:
              relax/round reduction ratios of the ALT rungs, and the
              one-off landmark build cost.  Committed as
              benchmarks/baselines/BENCH_p2p.json via --json
+  delta    — streaming graph updates (repro.delta) on the benchmark
+             suite: per edit-batch fraction (1% and 0.25% of undirected
+             edges, mixed increase/decrease/remove), in-place
+             patch_host + blocked-layout patch timings and incremental
+             repair vs from-scratch recompute on the patched graph —
+             relaxation counts, the relax_reduction headline, the
+             invalidated/reseeded set sizes, and the bitwise dist+parent
+             parity verdict (repair must be indistinguishable from a
+             recompute).  Committed as
+             benchmarks/baselines/BENCH_delta.json via --json; the
+             acceptance floor is >= 3x relax_reduction at the 0.25%
+             batch on Road and the kron analogue
   tuner    — the per-graph EngineConfig auto-tuner (repro.tune) on three
              graph families: default vs tuned trace objective, the
              reduction, bitwise dist/parent parity of the winner, and
@@ -296,6 +309,31 @@ def p2p(rows, scale, n_pairs=4, n_landmarks=8):
              time_s_bidi=m["time_s_bidi"])
 
 
+def delta(rows, scale, fracs=(0.01, 0.0025), seed=0):
+    """Streaming-update section (see
+    :func:`benchmarks.common.run_delta_repair`): per benchmark graph and
+    edit-batch fraction, in-place patch + incremental repair vs
+    from-scratch recompute, with bitwise parity."""
+    graphs = common.benchmark_graphs(scale)
+    print(f"# delta: edit batches {[f'{f:.2%}' for f in fracs]} on "
+          f"{len(graphs)} graphs, patch+repair vs recompute")
+    for name, make in graphs.items():
+        g = make()
+        for r in common.run_delta_repair(g, fracs=fracs, seed=seed):
+            emit(rows, f"delta/{name}/frac{r['frac']:g}", r["time_s"],
+                 n_edits=r["n_edits"], n_invalid=r["n_invalid"],
+                 n_seeds=r["n_seeds"], fast_path=int(r["fast_path"]),
+                 patch_host_ms=r["patch_host_s"] * 1e3,
+                 patch_layout_ms=r["patch_layout_s"] * 1e3,
+                 time_s_full=r["time_s_full"],
+                 relax_repair=r["relax_repair"],
+                 relax_full=r["relax_full"],
+                 relax_reduction=r["relax_reduction"],
+                 rounds_repair=r["rounds_repair"],
+                 rounds_full=r["rounds_full"],
+                 bitwise_equal=int(r["bitwise_equal"]))
+
+
 def tuner(rows, scale, budget=14, seed=0):
     """Per-graph EngineConfig auto-tuner (``repro.tune``) on three graph
     families: default vs tuned trace objective + reduction, winner's
@@ -525,6 +563,8 @@ def main() -> None:
                     n_queries=args.queries, open_loop=args.open_loop)
     if "p2p" in sections:
         run_section("p2p", p2p, args.scale)
+    if "delta" in sections:
+        run_section("delta", delta, args.scale)
     if "tuner" in sections:
         run_section("tuner", tuner, args.scale,
                     budget=args.tune_budget)

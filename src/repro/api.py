@@ -45,6 +45,7 @@ tier-1 CI rejects internal calls to them.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Optional, Tuple, Union
 
 import numpy as np
@@ -499,6 +500,7 @@ class Solver:
         self._router = QueryRouter(self._registry,
                                    devices=r.resolve_devices(),
                                    config=self.config)
+        self._router_started = False      # submit() starts workers lazily
 
     # ------------------------------------------------------------------
     # solving
@@ -655,6 +657,115 @@ class Solver:
         return SolveResult(spec=spec, dist=dist, parent=parent,
                            metrics=metrics, deg=self.deg, tier=self.tier,
                            served_by=served)
+
+    # ------------------------------------------------------------------
+    # async sessions + streaming deltas (routed tier)
+    # ------------------------------------------------------------------
+
+    def submit(self, spec: SolveSpec):
+        """Submit a spec asynchronously; returns a
+        :class:`concurrent.futures.Future` resolving to the
+        :class:`SolveResult`.
+
+        Routed tier only: the first ``submit`` starts the router's
+        background workers (one per device plus the mesh scheduler), and
+        every slot of the spec is enqueued without a synchronous drain —
+        the workers batch and serve them while the caller keeps going.
+        Per-slot queries of a batched spec may land in different fused
+        batches (even on different devices); the future resolves once
+        every slot has.  ``solve()`` remains the synchronous path and
+        may be freely mixed with in-flight submissions.
+        """
+        from concurrent.futures import Future
+        from .serve.queries import Query
+        if self._closed:
+            raise RuntimeError("solver is closed")
+        if not isinstance(spec, SolveSpec):
+            raise TypeError(f"expected SolveSpec, got {type(spec)}")
+        if self.tier != "routed":
+            raise ConfigError(
+                f"submit() needs the routed tier (async serving plane); "
+                f"this session resolved tier={self.tier!r} — open with "
+                f"tier='routed' or use solve()")
+        spec.check_bounds(self.n)
+        if not self._router_started:
+            # idempotent: start() on live schedulers is a no-op
+            self._router.start()
+            self._router_started = True
+        params = spec.slot_params()
+        srcs = spec.sources if spec.batched else (spec.sources,)
+        futs = []
+        for i, s in enumerate(srcs):
+            kw = {}
+            if spec.kind == "p2p":
+                kw["target"] = int(params[i])
+            elif spec.kind == "bounded":
+                kw["bound"] = float(params[i])
+            elif spec.kind == "knear":
+                kw["k"] = int(params[i])
+            futs.append(self._router.submit(
+                Query(gid=self.gid, source=int(s), kind=spec.kind, **kw)))
+        agg: Future = Future()
+        agg.set_running_or_notify_cancel()
+        remaining = [len(futs)]
+        lock = threading.Lock()
+
+        def _one_done(_f):
+            with lock:
+                remaining[0] -= 1
+                last = remaining[0] == 0
+            if agg.done():
+                return
+            exc = _f.exception()
+            if exc is not None:
+                agg.set_exception(exc)
+                return
+            if not last:
+                return
+            try:
+                results = [f.result() for f in futs]
+                if spec.batched:
+                    dist = np.stack([r.dist for r in results])
+                    parent = np.stack([r.parent for r in results])
+                    metrics = [r.metrics for r in results]
+                    served = [r.served_by for r in results]
+                else:
+                    (r,) = results
+                    dist, parent, metrics, served = (
+                        r.dist, r.parent, r.metrics, r.served_by)
+                agg.set_result(SolveResult(
+                    spec=spec, dist=dist, parent=parent, metrics=metrics,
+                    deg=self.deg, tier=self.tier, served_by=served))
+            except BaseException as e:      # defensive: never hang agg
+                if not agg.done():
+                    agg.set_exception(e)
+
+        for f in futs:
+            f.add_done_callback(_one_done)
+        return agg
+
+    def apply_delta(self, edits) -> dict:
+        """Apply an :class:`~repro.delta.EdgeDelta` to the session's graph
+        in place (routed tier): delegates to
+        :meth:`~repro.serve.registry.GraphRegistry.apply_delta` — cached
+        engines get their layouts patched (not rebuilt), placed replicas
+        are reused, and queries submitted afterwards serve the patched
+        graph.  Single/sharded sessions hold immutable prebuilt state;
+        patch those directly with :mod:`repro.delta`
+        (``patch_blocked`` / ``patch_sharded`` / ``repair``) or reopen.
+        """
+        if self._closed:
+            raise RuntimeError("solver is closed")
+        if self.tier != "routed":
+            raise ConfigError(
+                f"apply_delta() needs the routed tier; tier={self.tier!r} "
+                f"sessions own immutable prebuilt layouts — use "
+                f"repro.delta.patch_blocked/patch_sharded/repair, or "
+                f"reopen the session on the patched graph")
+        report = self._registry.apply_delta(self.gid, edits)
+        self._host = report["host"]
+        self.deg = np.asarray(report["host"].deg)
+        return report
 
     # ------------------------------------------------------------------
     # lifecycle / introspection

@@ -164,6 +164,11 @@ class EngineConfig:
     registry_capacity: int = 4
     max_pending: Optional[int] = None
     ecc_batching: bool = True
+    # streaming deltas: cumulative directed-edit fraction (edits / m) a
+    # graph may accumulate before its perf artifacts (ALT landmark sets,
+    # tuned-config overlays) stop being reused; repairs stay bitwise
+    # regardless — the budget only gates *heuristic* artifact reuse
+    delta_staleness_budget: float = 0.05
     # observability: per-round solve traces (repro.obs.trace)
     trace: bool = False
     trace_capacity: int = 256
@@ -210,6 +215,8 @@ class EngineConfig:
                 raise ConfigError(f"{name} must be >= 1 (or None)")
         if self.trace_capacity < 1:
             raise ConfigError("trace_capacity must be >= 1")
+        if not 0.0 <= self.delta_staleness_budget <= 1.0:
+            raise ConfigError("delta_staleness_budget must be in [0, 1]")
         if self.p2p_mode not in P2P_MODES:
             raise ConfigError(f"unknown p2p_mode {self.p2p_mode!r}; "
                               f"expected one of {P2P_MODES}")

@@ -847,6 +847,207 @@ def _v1_body(n_pad, block, axes, params, max_iters, goal="tree", batch=False,
     return run
 
 
+# ---------------------------------------------------------------------------
+# incremental repair (repro.delta): lean Bellman loops over the shards
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=64)
+def _build_repair_engine(mesh, axes, version, block, n_pad, max_iters,
+                         capacity):
+    """Build + jit one distributed *repair* engine.
+
+    The repair loop is the stepping engines' relaxation round with the
+    window pinned to ``[0, +inf)`` and no step transitions: each round
+    relaxes the current frontier through the shard's segment-min partial
+    and the version's collective merge (v1 replicated ``pmin``, v2 dense
+    ``all_to_all`` exchange, v3 frontier-compacted exchange), and the
+    next frontier is exactly the vertices the round improved.  Fed a
+    valid upper-bound state (see :func:`repair_distributed`), the
+    fixpoint dist/parent are bitwise-identical to a from-scratch solve —
+    the same primitives, merge rule, and tie-breaks as the full engines.
+    """
+    axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
+    axis_sizes = tuple(mesh.shape[a] for a in axis_names)
+    p = n_pad // block
+    in_specs = (graph_specs(axes), P(), P(), P())
+    out_specs = (P(), P(), P()) if version == "v1" \
+        else (P(axes), P(axes), P())
+
+    def run_v1(sg: ShardedGraph, dist0, parent0, frontier0):
+        src = sg.src.reshape(-1)
+        dst = sg.dst.reshape(-1)
+        w = sg.w.reshape(-1)
+        deg = jax.lax.all_gather(sg.deg.reshape(-1), axes, tiled=True)
+
+        def body(c):
+            dist, parent, frontier, metrics, iters, _ = c
+            paths = relax.leaf_pruned(frontier, dist, deg)
+            cand, in_window, active = relax.edge_candidates(
+                dist[src], paths[src], parent[src], dst, w,
+                jnp.float32(0.0), INF)
+            best = jax.lax.pmin(
+                relax.segment_partial_min(cand, dst, n_pad), axes)
+            winner = jax.lax.pmin(
+                relax.winner_partial(cand, active, src, dst, best, n_pad),
+                axes)
+            dist2, parent2, improved = relax.apply_updates(dist, parent,
+                                                           best, winner)
+            metrics = metrics._replace(
+                n_rounds=metrics.n_rounds
+                + jnp.where(jnp.any(frontier), 1, 0),
+                n_trav=metrics.n_trav + jax.lax.psum(
+                    jnp.sum(in_window.astype(jnp.int32)), axes),
+                n_relax=metrics.n_relax + jax.lax.psum(
+                    jnp.sum(active.astype(jnp.int32)), axes),
+                n_updates=metrics.n_updates
+                + jnp.sum(improved.astype(jnp.int32)),
+                n_extended=metrics.n_extended
+                + jnp.sum((improved & (deg > 1)).astype(jnp.int32)))
+            # dist/frontier are replicated in v1: a local any is global
+            go = jnp.any(improved).astype(jnp.int32)
+            return dist2, parent2, improved, metrics, iters + 1, go
+
+        def cond(c):
+            # the go flag is carried: collectives may not appear in a
+            # while_loop cond (and jnp.any is local-only elsewhere)
+            return (c[5] > 0) & (c[4] < max_iters)
+
+        init = (dist0, parent0, frontier0, _zero_metrics(), jnp.int32(0),
+                jnp.any(frontier0).astype(jnp.int32))
+        out = jax.lax.while_loop(cond, body, init)
+        return out[0], out[1], out[3]
+
+    def run_v2(sg: ShardedGraph, dist0, parent0, frontier0):
+        me = jnp.int32(0)
+        for name, size in zip(axis_names, axis_sizes):
+            me = me * size + jax.lax.axis_index(name)
+        base = me * block
+        src = sg.src.reshape(-1)
+        dst = sg.dst.reshape(-1)
+        w = sg.w.reshape(-1)
+        deg_l = sg.deg.reshape(-1)
+        src_l = src - base
+        dist_l = jax.lax.dynamic_slice(dist0, (base,), (block,))
+        parent_l = jax.lax.dynamic_slice(parent0, (base,), (block,))
+        frontier_l = jax.lax.dynamic_slice(frontier0, (base,), (block,))
+
+        def dense_exchange(best_g, win_g):
+            recv_v = jax.lax.all_to_all(best_g.reshape(p, block), axes,
+                                        split_axis=0, concat_axis=0)
+            recv_w = jax.lax.all_to_all(win_g.reshape(p, block), axes,
+                                        split_axis=0, concat_axis=0)
+            return relax.combine_block_partials(recv_v, recv_w)
+
+        def compact_exchange(best_g, win_g):
+            cap = capacity
+            rows_v = best_g.reshape(p, block)
+            rows_w = win_g.reshape(p, block)
+            n_finite = jnp.sum(jnp.isfinite(rows_v), axis=1)
+            overflow = jax.lax.pmax(
+                jnp.any(n_finite > cap).astype(jnp.int32), axes) > 0
+
+            def compact(_):
+                neg, idx = jax.lax.top_k(-rows_v, cap)
+                vals = -neg
+                srcs = jnp.take_along_axis(rows_w, idx, axis=1)
+                rv = jax.lax.all_to_all(vals, axes, split_axis=0,
+                                        concat_axis=0)
+                ri = jax.lax.all_to_all(idx, axes, split_axis=0,
+                                        concat_axis=0)
+                rs = jax.lax.all_to_all(srcs, axes, split_axis=0,
+                                        concat_axis=0)
+                return relax.segment_min_with_winner(
+                    rv.reshape(-1), jnp.isfinite(rv.reshape(-1)),
+                    rs.reshape(-1), ri.reshape(-1), block)
+
+            return jax.lax.cond(overflow,
+                                lambda _: dense_exchange(best_g, win_g),
+                                compact, None)
+
+        merge = compact_exchange if capacity else dense_exchange
+
+        def body(c):
+            dist_l, parent_l, frontier_l, metrics, iters, _ = c
+            paths = relax.leaf_pruned(frontier_l, dist_l, deg_l)
+            cand, in_window, active = relax.edge_candidates(
+                dist_l[src_l], paths[src_l], parent_l[src_l], dst, w,
+                jnp.float32(0.0), INF)
+            best_g, win_g = relax.segment_min_with_winner(cand, active,
+                                                          src, dst, n_pad)
+            best_l, winner_l = merge(best_g, win_g)
+            dist2, parent2, improved = relax.apply_updates(
+                dist_l, parent_l, best_l, winner_l)
+            any_front = jax.lax.pmax(
+                jnp.any(frontier_l).astype(jnp.int32), axes)
+            go = jax.lax.pmax(jnp.any(improved).astype(jnp.int32), axes)
+            metrics = metrics._replace(
+                n_rounds=metrics.n_rounds + any_front,
+                n_trav=metrics.n_trav + jax.lax.psum(
+                    jnp.sum(in_window.astype(jnp.int32)), axes),
+                n_relax=metrics.n_relax + jax.lax.psum(
+                    jnp.sum(active.astype(jnp.int32)), axes),
+                n_updates=metrics.n_updates + jax.lax.psum(
+                    jnp.sum(improved.astype(jnp.int32)), axes),
+                n_extended=metrics.n_extended + jax.lax.psum(
+                    jnp.sum((improved & (deg_l > 1)).astype(jnp.int32)),
+                    axes))
+            return dist2, parent2, improved, metrics, iters + 1, go
+
+        def cond(c):
+            return (c[5] > 0) & (c[4] < max_iters)
+
+        go0 = jax.lax.pmax(jnp.any(frontier_l).astype(jnp.int32), axes)
+        init = (dist_l, parent_l, frontier_l, _zero_metrics(),
+                jnp.int32(0), go0)
+        out = jax.lax.while_loop(cond, body, init)
+        return out[0], out[1], out[3]
+
+    body = run_v1 if version == "v1" else run_v2
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return jax.jit(fn)
+
+
+def repair_distributed(sg: ShardedGraph, dist, parent, frontier, mesh,
+                       axes=("graph",), *, version="v2",
+                       max_iters: int = 1_000_000, capacity: int = 0):
+    """Incremental repair of a distributed SSSP state after an edge delta.
+
+    ``dist``/``parent``/``frontier`` are the host-invalidated tentative
+    state over the true (or padded) vertex range, as produced by
+    :func:`repro.delta.repair_state` from an
+    :class:`~repro.delta.AppliedDelta`: invalidated subtree entries reset
+    to ``(+inf, -1)`` and the frontier seeded from vertices incident to
+    the changed edges.  The engine re-relaxes to fixpoint with the
+    version's collective merge (see :func:`_build_repair_engine`); the
+    result is bitwise-identical to a from-scratch
+    :func:`sssp_distributed` solve on the patched graph, at a cost
+    proportional to the delta's blast radius.
+
+    Returns ``(dist, parent, metrics)`` over the padded ``n_pad`` range
+    (slice ``[:n]`` for the true vertices); metrics count only the
+    repair's own relaxation work.
+    """
+    if version not in ("v1", "v2", "v3"):
+        raise ValueError(f"unknown version {version!r}; expected "
+                         "v1/v2/v3")
+    p, _ = sg.src.shape
+    block = int(sg.deg.shape[1])
+    n_pad = int(p) * block
+    dist = jnp.asarray(dist, jnp.float32)
+    pad = n_pad - dist.shape[0]
+    dist = jnp.pad(dist, (0, pad), constant_values=jnp.inf)
+    parent = jnp.pad(jnp.asarray(parent, jnp.int32), (0, pad),
+                     constant_values=-1)
+    frontier = jnp.pad(jnp.asarray(frontier, bool), (0, pad))
+    axes_key = axes if isinstance(axes, str) else tuple(axes)
+    cap = (capacity or max(block // 16, 8)) if version == "v3" else 0
+    fn = _build_repair_engine(mesh, axes_key, version, block, n_pad,
+                              max_iters, cap)
+    with profiling.annotate(f"repro:repair_dist_dispatch:{version}"):
+        return fn(sg, dist, parent, frontier)
+
+
 # --- v2 -------------------------------------------------------------------
 
 def _v2_body(n_pad, block, axes, params, max_iters, fused_rounds,

@@ -93,6 +93,11 @@ def _weight_quantile_lut(w: np.ndarray, ratio_num: int = RATIO_NUM) -> np.ndarra
     return np.quantile(w, qs).astype(np.float32)
 
 
+# public name for out-of-module builders (repro.delta patches the CSR and
+# must recompute the LUT bitwise-identically to build_csr: float64 in)
+weight_quantile_lut = _weight_quantile_lut
+
+
 def build_csr(n: int, eu: np.ndarray, ev: np.ndarray, ew: np.ndarray,
               symmetrize: bool = True) -> HostGraph:
     """Build the preprocessed CSR from an undirected edge list.

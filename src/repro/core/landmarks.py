@@ -45,7 +45,8 @@ from .config import LANDMARK_STRATEGIES, ConfigError
 from .graph import DeviceGraph, HostGraph
 from .relax import AltData
 
-__all__ = ["hop_bfs", "LandmarkSet", "build_landmarks", "select_landmarks"]
+__all__ = ["hop_bfs", "LandmarkSet", "build_landmarks", "select_landmarks",
+           "save", "load"]
 
 # one f32 ulp-scale rounding unit; the slack budget per landmark-sum is
 # delta = _EPS * (2 H + 64): a path of h hops accumulates at most
@@ -154,6 +155,12 @@ class LandmarkSet:
     sym: bool
     max_hops: int
     generation: int = -1
+    # a stale set survived an increase/remove-only edge delta: its old
+    # distances are still admissible *lower* bounds on the new graph
+    # (d_old <= d_new), but the reverse difference and the seeded d(s,t)
+    # upper bound are not — alt_data drops to forward-only bounds by
+    # reporting sym=0 (alt_seed_ub then returns +inf; see relax.py)
+    stale: bool = False
 
     @property
     def n_landmarks(self) -> int:
@@ -169,7 +176,8 @@ class LandmarkSet:
         """The traced pytree a solve carries through ``jit``."""
         return AltData(D=self.D,
                        delta=jnp.float32(self.delta),
-                       sym=jnp.float32(1.0 if self.sym else 0.0))
+                       sym=jnp.float32(
+                           1.0 if (self.sym and not self.stale) else 0.0))
 
     def params(self) -> tuple:
         """The build parameters a cache / tuned-config fingerprint must
@@ -182,6 +190,31 @@ class LandmarkSet:
         import jax
         return dataclasses.replace(
             self, D=jax.device_put(self.D, sharding))
+
+
+def save(lm: LandmarkSet, path) -> None:
+    """Persist a :class:`LandmarkSet` to ``path`` (``.npz``).
+
+    ``generation``/``stale`` are registry-session state and are not
+    persisted; a loaded set starts unmanaged (``generation=-1``) and
+    fresh.  Callers key the file by graph fingerprint + build params
+    (the registry's disk cache does) so a stale file is simply never
+    looked up.
+    """
+    np.savez(path, landmarks=lm.landmarks, D=np.asarray(lm.D),
+             strategy=np.asarray(lm.strategy), sym=np.asarray(lm.sym),
+             max_hops=np.asarray(lm.max_hops))
+
+
+def load(path) -> LandmarkSet:
+    """Load a :class:`LandmarkSet` saved by :func:`save`."""
+    with np.load(path, allow_pickle=False) as z:
+        return LandmarkSet(
+            landmarks=z["landmarks"].astype(np.int64),
+            D=jnp.asarray(z["D"], jnp.float32),
+            strategy=str(z["strategy"][()]),
+            sym=bool(z["sym"][()]),
+            max_hops=int(z["max_hops"][()]))
 
 
 def build_landmarks(g: Union[DeviceGraph, HostGraph],

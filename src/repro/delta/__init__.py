@@ -1,0 +1,26 @@
+"""Streaming graph updates: edge deltas, in-place layout patching, and
+incremental SSSP repair.
+
+The cost model: a small edit batch should cost its blast radius, not a
+full rebuild + recompute.  ``EdgeDelta`` describes the batch;
+``patch_host`` / ``patch_blocked`` / ``patch_sharded`` patch each layout
+in place (bitwise-equal to a from-scratch rebuild); ``repair_state`` +
+``repair`` (or ``repro.core.distributed.repair_distributed``) re-relax
+only from the vertices the delta touches, bitwise-identical to a
+from-scratch solve.  ``GraphRegistry.apply_delta`` drives all of it for
+served graphs.
+"""
+from .edits import (AppliedDelta, EdgeDelta, KIND_ADD, KIND_DECREASE,
+                    KIND_INCREASE, KIND_REMOVE, KIND_SAME)
+from .patch import (patch_blocked, patch_blocked_with, patch_host,
+                    patch_sharded, patch_sharded_with)
+from .repair import RepairStats, repair, repair_state
+
+__all__ = [
+    "AppliedDelta", "EdgeDelta",
+    "KIND_ADD", "KIND_DECREASE", "KIND_INCREASE", "KIND_REMOVE",
+    "KIND_SAME",
+    "patch_blocked", "patch_blocked_with", "patch_host", "patch_sharded",
+    "patch_sharded_with",
+    "RepairStats", "repair", "repair_state",
+]

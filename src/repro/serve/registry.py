@@ -41,6 +41,9 @@ traffic arrives.
 from __future__ import annotations
 
 import collections
+import copy
+import dataclasses
+import os
 import threading
 import time
 import weakref
@@ -51,6 +54,7 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from ..core import landmarks as landmarks_mod
 from ..core import relax
 from ..core.config import EngineConfig, resolve_devices
 from ..core.distributed import (blocked_specs, graph_specs, shard_blocked,
@@ -58,7 +62,9 @@ from ..core.distributed import (blocked_specs, graph_specs, shard_blocked,
                                 ShardedGraph)
 from ..core.graph import DeviceGraph, HostGraph
 from ..core.landmarks import LandmarkSet, build_landmarks, hop_bfs
-from ..core.sssp import GOALS, sssp_batch
+from ..core.sssp import GOALS, repair_relax, sssp_batch
+from ..delta import (patch_blocked_with, patch_host, patch_sharded_with,
+                     repair_state)
 from ..obs import profiling
 from ..obs.metrics import MetricsRegistry
 
@@ -434,7 +440,8 @@ class GraphRegistry:
                  shard_devices=None, shard_version: Optional[str] = None,
                  shard_backend: Optional[str] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 tuned=None, **backend_opts):
+                 tuned=None, landmark_dir=None,
+                 result_cache_capacity: int = 8, **backend_opts):
         # the config is the one option surface — loose kwargs (other than
         # capacity, which sizes this cache) must stay unset alongside it;
         # from_loose is the shared sentinel gate, so loose kwargs build
@@ -506,6 +513,40 @@ class GraphRegistry:
         self._tuned_builds = self.metrics.counter(
             "sssp_registry_tuned_builds_total",
             help="Engines built with a TunedStore override applied")
+        # on-disk LandmarkSet cache (next to tuned configs): files keyed
+        # by gid + graph fingerprint + build params, so a cold start on
+        # an unchanged graph skips the batched landmark tree solve
+        self._landmark_dir = (os.fspath(landmark_dir)
+                              if landmark_dir is not None else None)
+        self._lm_disk = {
+            op: self.metrics.counter(
+                f"sssp_landmarks_disk_{op}_total",
+                help=f"LandmarkSet disk-cache {op}")
+            for op in ("loads", "saves")}
+        # streaming deltas (repro.delta): per-gid cumulative directed-edit
+        # fraction + whether every delta so far was increase/remove-only
+        # (the condition for stale-landmark admissibility), and a bounded
+        # per-gid cache of full-tree solve states that apply_delta
+        # *repairs* instead of evicting
+        if result_cache_capacity < 1:
+            raise ValueError("result_cache_capacity must be >= 1")
+        self.result_cache_capacity = result_cache_capacity
+        self._delta_frac: Dict[str, float] = {}
+        self._delta_safe: Dict[str, bool] = {}
+        self._result_cache: Dict[str, "collections.OrderedDict"] = {}
+        self._delta_counters = {
+            name: self.metrics.counter(f"sssp_delta_{name}_total", help=h)
+            for name, h in (
+                ("applied", "Edge-delta batches applied"),
+                ("edges", "Directed edge edits applied"),
+                ("layout_patches", "Cached engines patched in place"),
+                ("repaired", "Cached solve states incrementally repaired"),
+                ("reseeded", "Frontier vertices re-seeded by repairs"),
+                ("landmarks_kept",
+                 "LandmarkSets kept (stale) within the staleness budget"),
+                ("landmarks_dropped",
+                 "LandmarkSets dropped by deltas beyond the budget"),
+            )}
 
     # ------------------------------------------------------------------
     # specs + tiers
@@ -546,6 +587,11 @@ class GraphRegistry:
             # against the new spec is forced by the generation stamp,
             # dropping eagerly just frees the [L, N] matrix sooner
             self._landmark_sets.pop(gid, None)
+            # a fresh spec resets the delta ledger and the repairable
+            # result cache (cached states belong to the replaced graph)
+            self._delta_frac.pop(gid, None)
+            self._delta_safe.pop(gid, None)
+            self._result_cache.pop(gid, None)
             # detach in-flight builds of the old spec: lookups from here
             # on start a fresh build of the new spec instead of attaching
             # to a stale future (the old build's owner only resolves its
@@ -736,12 +782,41 @@ class GraphRegistry:
         # build outside the lock (a tree-solve batch over the landmarks)
         if hg is None:
             hg = spec() if callable(spec) else spec
-        with profiling.annotate(f"repro:landmark_build:{gid}"):
-            lm = build_landmarks(hg, n_landmarks, strategy, generation=gen)
+        path = self._landmark_path(gid, hg, n_landmarks, strategy)
+        if path is not None and os.path.exists(path):
+            # disk hit: the filename's graph fingerprint just matched, so
+            # the saved set was built for this exact graph + params
+            lm = dataclasses.replace(landmarks_mod.load(path),
+                                     generation=gen)
+            self._lm_disk["loads"].inc()
+        else:
+            with profiling.annotate(f"repro:landmark_build:{gid}"):
+                lm = build_landmarks(hg, n_landmarks, strategy,
+                                     generation=gen)
+            if path is not None:
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                landmarks_mod.save(lm, path)
+                self._lm_disk["saves"].inc()
         with self._lock:
             if self._gens.get(gid) == gen:      # not re-registered mid-build
                 self._landmark_sets[gid] = lm
         return lm
+
+    def _landmark_path(self, gid, hg, n_landmarks, strategy):
+        """Disk-cache path for a gid's LandmarkSet (None when no
+        ``landmark_dir``).  Keyed by graph fingerprint + build params —
+        any delta moves the fingerprint, so a patched graph simply never
+        matches the old file and rebuilds (then saves) a fresh one."""
+        if self._landmark_dir is None:
+            return None
+        from ..tune.store import graph_fingerprint
+        safe_gid = "".join(c if c.isalnum() or c in "-_" else "_"
+                           for c in gid)
+        k = min(int(n_landmarks), int(hg.n))
+        return os.path.join(
+            self._landmark_dir,
+            f"landmarks_{safe_gid}_{graph_fingerprint(hg)}"
+            f"_{k}_{strategy}.npz")
 
     def _build(self, gid, spec, backend, device, tier):
         with profiling.annotate(f"repro:engine_build:{gid}:{tier}"):
@@ -754,8 +829,14 @@ class GraphRegistry:
         # back inside TunedStore.apply, so the build never fails on it
         cfg = self.config
         if self.tuned is not None:
-            tuned_cfg = self.tuned.apply(gid, hg, cfg,
-                                         n=int(hg.n), m=int(hg.m))
+            # a graph still inside its delta staleness budget keeps its
+            # tuned overlay (perf-only, bitwise-gated) even though the
+            # fingerprint moved with the patch
+            with self._lock:
+                frac = self._delta_frac.get(gid, 0.0)
+            stale_ok = 0.0 < frac <= self.config.delta_staleness_budget
+            tuned_cfg = self.tuned.apply(gid, hg, cfg, n=int(hg.n),
+                                         m=int(hg.m), allow_stale=stale_ok)
             if tuned_cfg != cfg:
                 cfg = tuned_cfg
                 self._tuned_builds.inc()
@@ -807,6 +888,196 @@ class GraphRegistry:
         key, _ = self._resolve(gid, backend, device)
         with self._lock:
             return self._engines.pop(key, None) is not None
+
+    # ------------------------------------------------------------------
+    # streaming deltas (repro.delta): patch + repair instead of rebuild
+    # ------------------------------------------------------------------
+
+    def delta_frac(self, gid: str) -> float:
+        """Cumulative directed-edit fraction (edits / m) the gid has
+        absorbed since its last :meth:`register` (the staleness ledger)."""
+        with self._lock:
+            return self._delta_frac.get(gid, 0.0)
+
+    def cache_result(self, gid: str, source: int, dist, parent) -> None:
+        """Cache a **full-tree** solve state for delta repair.
+
+        :meth:`apply_delta` repairs cached states in place instead of
+        evicting them, keeping them bitwise-identical to from-scratch
+        solves on the patched graph.  Tree goals only: an early-exit
+        goal (p2p/bounded/knear) stops with tentative entries beyond its
+        horizon, and repairing such a state would relax it toward the
+        full-tree fixpoint — no longer the early-exit answer.  LRU per
+        gid, at most ``result_cache_capacity`` sources.
+        """
+        dist = np.asarray(dist, np.float32).copy()
+        parent = np.asarray(parent, np.int32).copy()
+        with self._lock:
+            if gid not in self._specs:
+                raise KeyError(f"graph {gid!r} is not registered "
+                               f"(have: {sorted(self._specs)})")
+            cache = self._result_cache.setdefault(
+                gid, collections.OrderedDict())
+            cache[int(source)] = (dist, parent)
+            cache.move_to_end(int(source))
+            while len(cache) > self.result_cache_capacity:
+                cache.popitem(last=False)
+
+    def cached_result(self, gid: str, source: int):
+        """``(dist, parent)`` numpy arrays for a cached tree solve, or
+        ``None``; marks the entry MRU."""
+        with self._lock:
+            cache = self._result_cache.get(gid)
+            if cache is None or int(source) not in cache:
+                return None
+            cache.move_to_end(int(source))
+            return cache[int(source)]
+
+    def apply_delta(self, gid: str, edits) -> dict:
+        """Apply an :class:`~repro.delta.EdgeDelta` to ``gid`` *in place*.
+
+        The streaming counterpart of :meth:`register`: one host-side
+        patch (:func:`repro.delta.patch_host`) is shared by every cached
+        engine of the gid — each backend/placement/tier gets its layout
+        patched rather than rebuilt (single-device blocked layouts
+        through :func:`repro.delta.patch_blocked_with`, sharded slabs
+        through :func:`repro.delta.patch_sharded_with`; patched layouts
+        are bitwise-identical to a from-scratch rebuild).  Cached tree
+        states (:meth:`cache_result`) are incrementally repaired,
+        bitwise-identical to from-scratch solves on the patched graph.
+
+        Unlike :meth:`register`, the generation is **not** bumped and
+        invalidation listeners do **not** fire: a router's placed
+        replicas stay placed and receive the patched engines (one patch,
+        N placements — no per-replica re-bucketing).  Engines are
+        replaced as patched shallow copies, so an in-flight batch on the
+        old object stays internally consistent.
+
+        Perf artifacts follow ``config.delta_staleness_budget``
+        (cumulative directed edits / m): the gid's ALT LandmarkSet
+        survives increase/remove-only deltas within budget — marked
+        ``stale``, which drops it to forward-difference bounds (old
+        distances stay admissible lower bounds, see
+        :class:`~repro.core.landmarks.LandmarkSet`) — and TunedStore
+        overlays keep applying within budget.  Beyond the budget (or
+        after any add/decrease) the LandmarkSet is dropped and rebuilds
+        lazily.  Holds the registry lock for the patch; returns a report
+        dict (``n_edits``/``engines_patched``/``results_repaired``/
+        ``delta_frac``/``landmarks``/``host``/``applied``).
+        """
+        with self._lock:
+            if gid not in self._specs:
+                raise KeyError(f"graph {gid!r} is not registered "
+                               f"(have: {sorted(self._specs)})")
+            spec = self._specs[gid]
+            if callable(spec):
+                spec = spec()
+            if isinstance(spec, DeviceGraph):
+                spec = HostGraph(
+                    n=int(spec.n), src=np.asarray(spec.src),
+                    dst=np.asarray(spec.dst), w=np.asarray(spec.w),
+                    row_ptr=np.asarray(spec.row_ptr),
+                    deg=np.asarray(spec.deg), rtow=np.asarray(spec.rtow),
+                    max_w=float(spec.max_w))
+            old_host = spec
+            with profiling.annotate(f"repro:apply_delta:{gid}"):
+                new_host, applied = patch_host(old_host, edits)
+                self._specs[gid] = new_host
+                # in-flight builds saw the old spec; the spec-identity
+                # guard in engine() keeps their product out of the cache
+                for key in [k for k in self._building if k[0] == gid]:
+                    del self._building[key]
+                frac = (self._delta_frac.get(gid, 0.0)
+                        + applied.n_edits / max(old_host.m, 1))
+                self._delta_frac[gid] = frac
+                safe = self._delta_safe.get(gid, True) and applied.safe_stale
+                self._delta_safe[gid] = safe
+                keep_lm = safe and frac <= self.config.delta_staleness_budget
+                lm = self._landmark_sets.get(gid)
+                if lm is not None:
+                    if keep_lm:
+                        self._landmark_sets[gid] = dataclasses.replace(
+                            lm, stale=True)
+                        self._delta_counters["landmarks_kept"].inc()
+                    else:
+                        self._landmark_sets.pop(gid, None)
+                        self._delta_counters["landmarks_dropped"].inc()
+                n_patched = 0
+                for key in [k for k in self._engines if k[0] == gid]:
+                    eng = self._patch_engine(self._engines[key], old_host,
+                                             new_host, applied, keep_lm)
+                    self._engines[key] = eng    # same key: LRU position kept
+                    n_patched += 1
+                n_repaired = 0
+                cache = self._result_cache.get(gid)
+                if cache:
+                    g_new = new_host.to_device()
+                    for source in list(cache):
+                        dist, parent = cache[source]
+                        d_i, p_i, f0, st = repair_state(new_host, dist,
+                                                        parent, applied)
+                        d2, p2, _ = repair_relax(g_new, d_i, p_i, f0,
+                                                 max_iters=self.max_iters)
+                        cache[source] = (np.asarray(d2), np.asarray(p2))
+                        self._delta_counters["reseeded"].inc(st.n_seeds)
+                        n_repaired += 1
+                    self._delta_counters["repaired"].inc(n_repaired)
+                self._delta_counters["applied"].inc()
+                self._delta_counters["edges"].inc(applied.n_edits)
+                self._delta_counters["layout_patches"].inc(n_patched)
+        return {"gid": gid, "n_edits": applied.n_edits,
+                "engines_patched": n_patched,
+                "results_repaired": n_repaired, "delta_frac": frac,
+                "landmarks": ("stale" if lm is not None and keep_lm
+                              else "dropped" if lm is not None else "none"),
+                "host": new_host, "applied": applied}
+
+    def _patch_engine(self, eng, old_host, new_host, applied, keep_lm):
+        """Patched shallow copy of a cached engine (either tier).
+
+        The copy shares the hint state (eccentricity estimates are
+        scheduling heuristics; a small delta barely moves them) and gets
+        new graph/layout buffers; the original object is left untouched
+        for any batch already running on it.
+        """
+        eng = copy.copy(eng)
+        eng.host = new_host
+        eng.deg = np.asarray(new_host.deg)
+        if eng.landmarks is not None:
+            eng.landmarks = (dataclasses.replace(eng.landmarks, stale=True)
+                             if keep_lm else None)
+        if eng.tier == "sharded":
+            sg = patch_sharded_with(eng.sg, new_host, applied)
+            eng.sg = ShardedGraph(*(
+                jax.device_put(x, NamedSharding(eng.mesh, s))
+                for x, s in zip(sg, graph_specs("graph"))))
+            if eng.blocked is not None:
+                # per-shard blocked slabs: full re-bucket for now (the
+                # uniform-n_tiles stacked layout couples every shard's
+                # tile budget; an in-place patcher is a follow-up)
+                _, bmeta = eng.blocked
+                arrays, bmeta = shard_blocked(
+                    new_host, len(eng.devices), block_v=bmeta.block_v,
+                    tile_e=bmeta.tile_e, use_kernel=bmeta.use_kernel,
+                    interpret=bmeta.interpret)
+                arrays = type(arrays)(*(
+                    jax.device_put(x, NamedSharding(eng.mesh, s))
+                    for x, s in zip(arrays, blocked_specs("graph"))))
+                eng.blocked = (arrays, bmeta)
+            return eng
+        g = new_host.to_device()
+        if eng.device is not None:
+            g = jax.device_put(g, eng.device)
+        eng.g = g
+        if eng.backend.name == "blocked_pallas":
+            layout = patch_blocked_with(eng.layout, old_host, new_host,
+                                        applied)
+            if eng.device is not None:
+                layout = jax.device_put(layout, eng.device)
+            eng.layout = layout
+        else:
+            eng.layout = eng.backend.prepare(eng.g)
+        return eng
 
     # ------------------------------------------------------------------
     # warmup

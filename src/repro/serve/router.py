@@ -309,6 +309,14 @@ class QueryRouter:
         Runs in the re-registering thread; each build goes through the
         registry's per-key build futures, so queries racing the rebuild
         simply share it instead of serving a second cold build.
+
+        Streaming edits never reach this hook:
+        :meth:`GraphRegistry.apply_delta` patches every cached engine in
+        place — per-device replicas included, each under its existing
+        ``(gid, backend, device)`` cache key — without bumping the
+        generation or firing listeners.  One host-side patch serves all
+        N placements; ``n_rebuilds`` stays flat across deltas (the
+        rebuild-per-replica path is reserved for full re-registers).
         """
         try:
             tier = self.registry.tier(gid)

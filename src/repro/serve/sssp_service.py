@@ -194,6 +194,20 @@ class SsspService:
         self._collect()
         return steps
 
+    def apply_delta(self, edits) -> dict:
+        """Apply an :class:`~repro.delta.EdgeDelta` to the service's graph
+        in place (see :meth:`GraphRegistry.apply_delta`): layouts are
+        patched rather than rebuilt, cached tree states repaired, and —
+        routed — every placed replica receives the patched engine without
+        a rebuild.  Returns the registry's report dict.  ``self.g`` (the
+        sync facade's exposed device graph) is refreshed to the patched
+        engine's graph."""
+        report = self.registry.apply_delta(_GID, edits)
+        if self.router is None and self.g is not None:
+            self.g = self.registry.engine(_GID).g
+        self.n = int(report["host"].n)
+        return report
+
     # ------------------------------------------------------------------
     # observability
     # ------------------------------------------------------------------

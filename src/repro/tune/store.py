@@ -137,7 +137,8 @@ class TunedStore:
             self._save_locked()
 
     def get(self, gid: str, graph=None,
-            config: Optional[EngineConfig] = None) -> Optional[EngineConfig]:
+            config: Optional[EngineConfig] = None, *,
+            allow_stale: bool = False) -> Optional[EngineConfig]:
         """The tuned config for ``gid``, or ``None``.
 
         With ``graph`` given, the stored fingerprint must match the
@@ -149,13 +150,20 @@ class TunedStore:
         ALT off or a different landmark set, and vice versa.  An entry
         whose stored config no longer constructs (field drift across
         versions) also returns ``None``.
+
+        ``allow_stale`` skips the fingerprint check: a tuned config is a
+        perf-only overlay (every winner is bitwise-parity gated), so a
+        graph within its delta staleness budget
+        (:attr:`~repro.core.config.EngineConfig.delta_staleness_budget`)
+        can keep serving the slightly-mistuned winner instead of
+        dropping to defaults.
         """
         with self._lock:
             entry = self._load_locked()["entries"].get(gid)
         if entry is None:
             return None
-        if graph is not None and entry["fingerprint"] != \
-                graph_fingerprint(graph, config):
+        if not allow_stale and graph is not None and \
+                entry["fingerprint"] != graph_fingerprint(graph, config):
             return None
         known = {f.name for f in dataclasses.fields(EngineConfig)}
         kwargs = {k: v for k, v in entry["config"].items() if k in known}
@@ -183,8 +191,8 @@ class TunedStore:
         return existed
 
     def apply(self, gid: str, graph, config: EngineConfig, *,
-              n: Optional[int] = None, m: Optional[int] = None
-              ) -> EngineConfig:
+              n: Optional[int] = None, m: Optional[int] = None,
+              allow_stale: bool = False) -> EngineConfig:
         """Overlay the tuned perf fields onto ``config`` (fresh lookup).
 
         Only :data:`TUNED_FIELDS` move — tier, devices, thresholds, and
@@ -193,9 +201,10 @@ class TunedStore:
         an overlay the target config cannot carry (e.g. blocked geometry
         onto a segment_min engine after a backend change) falls back to
         progressively smaller overlays — params-only, then the original
-        config — rather than failing the build.
+        config — rather than failing the build.  ``allow_stale`` forwards
+        to :meth:`get` (delta-staleness-budgeted reuse).
         """
-        tuned = self.get(gid, graph, config)
+        tuned = self.get(gid, graph, config, allow_stale=allow_stale)
         if tuned is None:
             return config
         full = {f: getattr(tuned, f) for f in TUNED_FIELDS}
